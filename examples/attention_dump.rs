@@ -1,0 +1,114 @@
+//! Figure 6 reproduction: attention matrices from a model's Q, K —
+//! softmax vs YOSO-m realizations (first 64 tokens), as CSV heat maps.
+//!
+//! Uses the pure-Rust encoder over a trained checkpoint when one exists
+//! (`results/checkpoints/pretrain_yoso_32.ckpt`, produced by the
+//! pretrain_e2e example), else freshly initialized weights.
+//!
+//! Run: `cargo run --release --example attention_dump`
+
+use std::io::Write;
+use std::path::Path;
+use yoso::attention::SoftmaxAttention;
+use yoso::data::glue_synth::{GlueGenerator, GlueTask};
+use yoso::lsh::{collision_probability, Hasher, HyperplaneHasher};
+use yoso::model::encoder::{pad_to, Encoder, EncoderConfig};
+use yoso::model::ParamSet;
+use yoso::runtime::Runtime;
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+fn write_matrix(path: &str, m: &Mat) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for i in 0..m.rows {
+        let row: Vec<String> = m.row(i).iter().map(|x| format!("{x:.5}")).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_vis = 64usize;
+    std::fs::create_dir_all("results")?;
+
+    // model weights: trained checkpoint if available
+    let ckpt = Path::new("results/checkpoints/pretrain_yoso_32.ckpt");
+    let params: ParamSet = if ckpt.exists() {
+        println!("using trained checkpoint {ckpt:?}");
+        yoso::train::checkpoint::load(ckpt)?
+    } else {
+        println!("no checkpoint found; using initialized weights \
+                  (run `cargo run --release --example pretrain_e2e` first \
+                  for the trained-figure variant)");
+        let rt = Runtime::open(Path::new("artifacts"))?;
+        ParamSet::init_for(rt.manifest.get("train_pretrain_yoso_32")?, 0)
+    };
+
+    let cfg = EncoderConfig::base(2048, 128, 3);
+    let enc = Encoder::new(cfg, &params);
+
+    // a real input sequence from the synthetic corpus
+    let gen = GlueGenerator::new(GlueTask::Qnli, 128, 9);
+    let ex = gen.example(0);
+    let (ids, segs) = pad_to(&ex.input_ids, &ex.segment_ids, 128);
+
+    let mut rng = Rng::new(0);
+    let (q, k) = enc.layer_qk(1, &ids, &segs, 0, &SoftmaxAttention, &mut rng);
+
+    // softmax attention matrix (first n_vis tokens)
+    let mut scores = q.matmul_t(&k);
+    scores.scale(1.0 / (q.cols as f32).sqrt());
+    scores.softmax_rows();
+    let softmax_vis = Mat::from_fn(n_vis, n_vis, |i, j| scores.at(i, j));
+    write_matrix("results/fig6_softmax.csv", &softmax_vis)?;
+
+    // YOSO expectation + realizations
+    let tau = 8;
+    let qn = q.unit_rows();
+    let kn = k.unit_rows();
+    let mut expect = Mat::zeros(n_vis, n_vis);
+    for i in 0..n_vis {
+        for j in 0..n_vis {
+            let sim = yoso::tensor::linalg::dot(qn.row(i), kn.row(j));
+            expect.set(i, j, collision_probability(sim as f64, tau) as f32);
+        }
+    }
+    write_matrix("results/fig6_yoso_e.csv", &expect)?;
+
+    for m in [16usize, 64] {
+        let hasher = HyperplaneHasher::new(&mut rng, m, q.cols, tau as usize);
+        let cq = hasher.hash_all(&qn);
+        let ck = hasher.hash_all(&kn);
+        let n = qn.rows;
+        let mut bhat = Mat::zeros(n_vis, n_vis);
+        for h in 0..m {
+            for i in 0..n_vis {
+                for j in 0..n_vis {
+                    if cq[h * n + i] == ck[h * n + j] {
+                        let cur = bhat.at(i, j);
+                        bhat.set(i, j, cur + 1.0 / m as f32);
+                    }
+                }
+            }
+        }
+        write_matrix(&format!("results/fig6_yoso_{m}.csv"), &bhat)?;
+        // pattern-preservation score: correlation with the expectation
+        let mut num = 0.0f64;
+        let mut da = 0.0f64;
+        let mut db = 0.0f64;
+        let ma = expect.data.iter().map(|&x| x as f64).sum::<f64>()
+            / expect.data.len() as f64;
+        let mb = bhat.data.iter().map(|&x| x as f64).sum::<f64>()
+            / bhat.data.len() as f64;
+        for (&a, &b) in expect.data.iter().zip(&bhat.data) {
+            num += (a as f64 - ma) * (b as f64 - mb);
+            da += (a as f64 - ma).powi(2);
+            db += (b as f64 - mb).powi(2);
+        }
+        println!("yoso-{m} vs YOSO-E pattern correlation: {:.4}",
+                 num / (da.sqrt() * db.sqrt()).max(1e-12));
+    }
+
+    println!("attention matrices -> results/fig6_{{softmax,yoso_e,yoso_16,yoso_64}}.csv");
+    Ok(())
+}

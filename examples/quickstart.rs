@@ -1,0 +1,64 @@
+//! Quickstart: the YOSO public API in five minutes.
+//!
+//! 1. pure-Rust YOSO attention vs exact softmax on random data;
+//! 2. convergence of YOSO-m to YOSO-E as m grows;
+//! 3. (if `make artifacts` has run) executing the Pallas-lowered YOSO
+//!    attention op through the PJRT runtime.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+use yoso::attention::{Attention, SoftmaxAttention, YosoAttention, YosoE};
+use yoso::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
+use yoso::runtime::Runtime;
+use yoso::tensor::Mat;
+use yoso::util::stats::radians_between;
+use yoso::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+    let (n, d) = (256, 64);
+    let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+
+    // 1. softmax vs YOSO
+    let softmax = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+    let yoso = YosoAttention::new(8, 32, false).forward(&q, &k, &v, &mut rng);
+    println!("softmax out[0][..4]  = {:?}", &softmax.row(0)[..4]);
+    println!("yoso-32 out[0][..4]  = {:?}", &yoso.row(0)[..4]);
+
+    // 2. YOSO-m -> YOSO-E convergence
+    let expectation = YosoE { tau: 8 }.forward(&q, &k, &v, &mut rng);
+    println!("\nconvergence to YOSO-E (mean radians, lower is better):");
+    for m in [8usize, 16, 32, 64, 128] {
+        let est = YosoAttention::new(8, m, false).forward(&q, &k, &v, &mut rng);
+        let err: f64 = (0..n)
+            .map(|i| radians_between(est.row(i), expectation.row(i)))
+            .sum::<f64>()
+            / n as f64;
+        println!("  m = {m:>3}: {err:.4} rad");
+    }
+
+    // 3. the AOT path (optional)
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        println!("\nexecuting Pallas-lowered attn_yoso_m8_n256 via PJRT:");
+        let rt = Runtime::open(artifacts)?;
+        let art = rt.artifact("attn_yoso_m8_n256")?;
+        let inputs = vec![
+            f32_literal(&q.data, &[n, d])?,
+            f32_literal(&k.data, &[n, d])?,
+            f32_literal(&v.data, &[n, d])?,
+            i32_literal(&[7], &[])?,
+        ];
+        let out = art.execute(&inputs)?;
+        let y = to_f32_vec(&out[0])?;
+        println!("  artifact out[..4] = {:?}", &y[..4]);
+        println!("  (row norm: {:.4})",
+                 y[..d].iter().map(|x| x * x).sum::<f32>().sqrt());
+    } else {
+        println!("\n(run `make artifacts` to also demo the PJRT path)");
+    }
+    Ok(())
+}

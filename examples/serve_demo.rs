@@ -1,0 +1,80 @@
+//! Serving demo: dynamic-batched inference over the AOT forward artifact,
+//! with a warmup phase (artifact compilation) excluded from the reported
+//! latencies, an open-loop arrival process, and a latency/throughput
+//! report — the serving-coordinator path of the stack.
+//!
+//! Run: `cargo run --release --example serve_demo`
+//! Env: YOSO_SERVE_REQUESTS (default 512), YOSO_SERVE_VARIANT (yoso_32)
+
+use std::path::PathBuf;
+use std::time::Duration;
+use yoso::data::glue_synth::{GlueGenerator, GlueTask};
+use yoso::serve::{BatchPolicy, ServerHandle};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    yoso::util::log::init_from_env();
+    let n_requests = env_usize("YOSO_SERVE_REQUESTS", 512);
+    let variant =
+        std::env::var("YOSO_SERVE_VARIANT").unwrap_or_else(|_| "yoso_32".into());
+
+    let handle = ServerHandle::spawn(
+        PathBuf::from("artifacts"),
+        format!("fwd_glue_{variant}"),
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(4) },
+        42,
+        None,
+    );
+
+    let gen = GlueGenerator::new(GlueTask::Qnli, 128, 7);
+
+    // warmup: first request triggers artifact compilation
+    println!("warming up (compiles fwd_glue_{variant})...");
+    let ex = gen.example(u64::MAX - 1);
+    handle.submit(ex.input_ids, ex.segment_ids).recv()?;
+
+    println!("driving {n_requests} requests (open loop)...");
+    let t = yoso::util::Timer::start();
+    let mut receivers = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let ex = gen.example(i as u64);
+        receivers.push(handle.submit(ex.input_ids, ex.segment_ids));
+        // open-loop arrivals: a small gap every few requests
+        if i % 4 == 3 {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut class_counts = [0usize; 3];
+    for rx in receivers {
+        let resp = rx.recv()?;
+        latencies.push(resp.total_ms);
+        let arg = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        class_counts[arg.min(2)] += 1;
+    }
+    let wall = t.elapsed_secs();
+    let stats = handle.shutdown()?;
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| yoso::util::stats::percentile(&latencies, q);
+    println!("\n=== serving report (fwd_glue_{variant}) ===");
+    println!("requests        {n_requests} in {wall:.2} s  ->  {:.1} req/s",
+             n_requests as f64 / wall);
+    println!("batches         {} (mean occupancy {:.1})", stats.batches,
+             stats.requests as f64 / stats.batches.max(1) as f64);
+    println!("latency ms      p50 {:.2}  p90 {:.2}  p99 {:.2}",
+             pct(0.5), pct(0.9), pct(0.99));
+    println!("queue wait ms   p50 {:.2}  p99 {:.2}",
+             stats.queue_latency.p50, stats.queue_latency.p99);
+    println!("class counts    {class_counts:?}");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package: L1 Pallas kernels, L2 JAX model, AOT lowering.
+
+Never imported at runtime — the Rust coordinator consumes only the HLO-text
+artifacts this package emits (`make artifacts`).
+"""

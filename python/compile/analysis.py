@@ -1,0 +1,131 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives no TPU wallclock, so the kernel performance targets
+(DESIGN.md / EXPERIMENTS.md §Perf L1) are *structural*: per-block VMEM
+working set from the BlockSpecs, and MXU utilization estimated from the
+contraction shapes against the 128x128 systolic array. This module
+computes those numbers from the same parameters the kernels use, so the
+claims are reproducible:
+
+    cd python && python -m compile.analysis        # prints + JSON
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+MXU_LANES = 128          # systolic array dimension
+VMEM_BUDGET = 16 << 20   # ~16 MiB per core
+F32 = 4
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    mxu_utilization: float
+    flops_per_block: int
+    notes: str
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _mxu_util(m: int, k: int, n: int) -> float:
+    """Utilization of a (m,k)@(k,n) matmul on a 128x128 MXU: fraction of
+    lanes occupied by the contraction and output tiles, averaged over the
+    k-loop (padding waste when dims < 128)."""
+    def occ(dim):
+        return min(dim, MXU_LANES) / MXU_LANES
+    return occ(m) * occ(n) * occ(min(k, MXU_LANES)) ** 0  # k streams; m,n pad
+
+
+def forward_table_kernel(block_n: int, d: int, tau: int) -> KernelEstimate:
+    """yoso.py::_table_kernel — H += onehot(codes)^T V per (hash, tile)."""
+    n_buckets = 1 << tau
+    vmem = (block_n * 1 * F32          # codes tile (int32)
+            + block_n * d * F32        # value tile
+            + n_buckets * d * F32      # resident table
+            + block_n * n_buckets * F32)  # onehot intermediate
+    # contraction: (n_buckets, block_n) @ (block_n, d)
+    util = _mxu_util(n_buckets, block_n, d)
+    flops = 2 * n_buckets * block_n * d
+    return KernelEstimate(
+        name=f"yoso_fwd_table(bn={block_n},d={d},tau={tau})",
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        flops_per_block=flops,
+        notes="scatter realized as one-hot MXU contraction; cost "
+              "data-independent (Remark 3)",
+    )
+
+
+def forward_gather_kernel(block_n: int, d: int, tau: int) -> KernelEstimate:
+    """yoso.py::_gather_kernel — Y += onehot(codes) H per (tile, hash)."""
+    n_buckets = 1 << tau
+    vmem = (block_n * F32
+            + n_buckets * d * F32
+            + block_n * d * F32
+            + block_n * n_buckets * F32)
+    util = _mxu_util(block_n, n_buckets, d)
+    flops = 2 * block_n * n_buckets * d
+    return KernelEstimate(
+        name=f"yoso_fwd_gather(bn={block_n},d={d},tau={tau})",
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        flops_per_block=flops,
+        notes="gather realized as one-hot MXU contraction",
+    )
+
+
+def backward_outer_table_kernel(block_n: int, d: int, dv: int,
+                                tau: int) -> KernelEstimate:
+    """yoso_grad.py::_grad_table_kernel — T += onehot^T (V (x) K)."""
+    n_buckets = 1 << tau
+    vmem = (block_n * F32
+            + block_n * (d + dv) * F32
+            + block_n * dv * d * F32        # outer-product tile
+            + n_buckets * dv * d * F32)     # resident table slab
+    util = _mxu_util(n_buckets, block_n, dv * d)
+    flops = 2 * n_buckets * block_n * dv * d
+    return KernelEstimate(
+        name=f"yoso_bwd_table(bn={block_n},d={d},dv={dv},tau={tau})",
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        flops_per_block=flops,
+        notes="Eq.(4) outer-product tables; shrink the dv*d block axis "
+              "via BlockSpec if the slab exceeds budget",
+    )
+
+
+def analyze(block_n: int = 128, d: int = 64, tau: int = 8) -> dict:
+    kernels = [
+        forward_table_kernel(block_n, d, tau),
+        forward_gather_kernel(block_n, d, tau),
+        backward_outer_table_kernel(block_n, d, d, tau),
+    ]
+    report = {
+        "params": {"block_n": block_n, "d": d, "tau": tau,
+                   "vmem_budget_bytes": VMEM_BUDGET},
+        "kernels": [k.to_dict() for k in kernels],
+        "all_within_vmem": all(k.vmem_bytes <= VMEM_BUDGET for k in kernels),
+    }
+    return report
+
+
+def main() -> None:
+    report = analyze()
+    for k in report["kernels"]:
+        print(f"{k['name']:48s} VMEM {k['vmem_bytes']/1024:9.1f} KiB  "
+              f"MXU {k['mxu_utilization']:.2f}  "
+              f"{k['flops_per_block']/1e6:7.2f} MFLOP/block",
+              file=sys.stderr)
+    print(f"within 16 MiB VMEM budget: {report['all_within_vmem']}",
+          file=sys.stderr)
+    print(json.dumps(report, indent=1))
+
+
+if __name__ == "__main__":
+    main()

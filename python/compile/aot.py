@@ -1,0 +1,363 @@
+"""AOT lowering: JAX (L2, calling L1 kernels) -> HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is a flat positional function over f32/i32 literals. The
+ABI (input order, shapes, dtypes; output order) is recorded in
+``artifacts/manifest.json`` which the Rust runtime parses.
+
+Run: ``cd python && python -m compile.aot --out ../artifacts [--only REGEX]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .attention_zoo import AttnConfig
+from .kernels import ref
+from .kernels.hashing import gaussian_rotations, hash_codes
+from .kernels.yoso import yoso_e_pallas, yoso_sampled_pallas
+from . import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Model configurations (the three artifact families)
+# ---------------------------------------------------------------------------
+
+PRETRAIN_BATCH = 16
+LRA_BATCH = 8
+
+BASE_ENCODER = dict(n_layers=2, d_model=128, n_heads=2, d_ff=512)
+
+PRETRAIN_CFG = dict(vocab_size=2048, max_len=128, n_classes=3,
+                    **BASE_ENCODER)
+LRA_CFG = dict(vocab_size=256, max_len=256, n_classes=10, **BASE_ENCODER)
+
+ATTN = {
+    # Table 2 variants (pretrain / GLUE family)
+    "softmax":      AttnConfig(kind="softmax"),
+    "yoso_e":       AttnConfig(kind="yoso_e", tau=8, backward="lower"),
+    "star_yoso_e":  AttnConfig(kind="yoso_e", tau=8, backward="exact"),
+    "yoso_16":      AttnConfig(kind="yoso", tau=8, n_hashes=16),
+    "yoso_32":      AttnConfig(kind="yoso", tau=8, n_hashes=32),
+    "yoso_64":      AttnConfig(kind="yoso", tau=8, n_hashes=64),
+    "star_yoso_16": AttnConfig(kind="yoso", tau=8, n_hashes=16,
+                               backward="exact"),
+    "star_yoso_32": AttnConfig(kind="yoso", tau=8, n_hashes=32,
+                               backward="exact"),
+    "yoso_c_16":    AttnConfig(kind="yoso", tau=8, n_hashes=16, conv_size=9),
+    # extra eval-time hash counts (Figure 5)
+    "yoso_8":       AttnConfig(kind="yoso", tau=8, n_hashes=8),
+    "yoso_128":     AttnConfig(kind="yoso", tau=8, n_hashes=128),
+    # Table 3 baselines (LRA family)
+    "none":         AttnConfig(kind="none"),
+    "nystrom":      AttnConfig(kind="nystrom", landmarks=16),
+    "longformer":   AttnConfig(kind="longformer", window=32),
+    "linformer":    AttnConfig(kind="linformer", linformer_k=64),
+    "reformer":     AttnConfig(kind="reformer", tau=6, n_hashes=2),
+    "performer":    AttnConfig(kind="performer", performer_features=64),
+    "linear":       AttnConfig(kind="linear"),
+    "star_yoso_c_16": AttnConfig(kind="yoso", tau=8, n_hashes=16,
+                                 conv_size=9, backward="exact"),
+}
+
+PRETRAIN_TRAIN = ["softmax", "yoso_e", "star_yoso_e", "yoso_16", "yoso_32",
+                  "yoso_64", "star_yoso_16", "star_yoso_32", "yoso_c_16"]
+PRETRAIN_EVAL = ["softmax", "yoso_e", "yoso_8", "yoso_16", "yoso_32",
+                 "yoso_64", "yoso_128", "yoso_c_16"]
+GLUE_VARIANTS = ["softmax", "yoso_e", "yoso_16", "yoso_32", "yoso_64",
+                 "star_yoso_16", "star_yoso_32"]
+LRA_VARIANTS = ["none", "softmax", "yoso_e", "yoso_32", "star_yoso_16",
+                "yoso_c_16", "star_yoso_c_16", "nystrom", "longformer",
+                "linformer", "reformer", "performer", "linear"]
+
+
+def make_cfg(base: dict, attn_name: str) -> M.ModelConfig:
+    return M.ModelConfig(attn=ATTN[attn_name], **base)
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    kind: str                  # train_step | eval_step | forward | attention
+    family: str                # pretrain | glue | lra | attn
+    attention: str
+    fn: object                 # callable to lower
+    example_args: list         # ShapeDtypeStructs
+    inputs: list               # [{name, shape, dtype}]
+    outputs: list              # [{name, shape, dtype}]
+    config: dict
+
+
+def _dtype_str(s):
+    return "f32" if s.dtype == jnp.float32 else "i32"
+
+
+def spec_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": _dtype_str(s)}
+
+
+def train_step_artifact(family: str, base: dict, attn_name: str,
+                        task: str, batch: int) -> Artifact:
+    cfg = make_cfg(base, attn_name)
+    specs = M.param_specs(cfg)
+    n_params = len(specs)
+    step_fn = M.make_train_step(cfg, task)
+
+    def flat_fn(*args):
+        p = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        rest = args[3 * n_params:]
+        n_batch = len(M.batch_spec(cfg, task))
+        batch_arrays = list(rest[:n_batch])
+        step, seed, lr = rest[n_batch:]
+        new_p, new_m, new_v, metrics = step_fn(p, m, v, batch_arrays,
+                                               step, seed, lr)
+        return (*new_p, *new_m, *new_v, metrics)
+
+    param_structs = [f32(shape) for _, shape in specs]
+    batch_structs = []
+    batch_names = []
+    for bname, bshape, bdtype in M.batch_spec(cfg, task, batch):
+        batch_structs.append(i32(bshape) if bdtype == "i32" else f32(bshape))
+        batch_names.append(bname)
+    scalars = [i32(()), i32(()), f32(())]
+    example = param_structs * 3 + batch_structs + scalars
+
+    inputs = ([spec_entry(f"param:{n}", f32(s)) for n, s in specs]
+              + [spec_entry(f"adam_m:{n}", f32(s)) for n, s in specs]
+              + [spec_entry(f"adam_v:{n}", f32(s)) for n, s in specs]
+              + [spec_entry(f"batch:{n}", s)
+                 for n, s in zip(batch_names, batch_structs)]
+              + [spec_entry("step", i32(())), spec_entry("seed", i32(())),
+                 spec_entry("lr", f32(()))])
+    outputs = ([spec_entry(f"param:{n}", f32(s)) for n, s in specs]
+               + [spec_entry(f"adam_m:{n}", f32(s)) for n, s in specs]
+               + [spec_entry(f"adam_v:{n}", f32(s)) for n, s in specs]
+               + [spec_entry("metrics", f32((8,)))])
+
+    return Artifact(
+        name=f"train_{family}_{attn_name}", kind="train_step", family=family,
+        attention=attn_name, fn=flat_fn, example_args=example,
+        inputs=inputs, outputs=outputs,
+        config=dict(task=task, batch=batch, n_params=n_params,
+                    **{k: v for k, v in base.items()}))
+
+
+def eval_step_artifact(family: str, base: dict, attn_name: str,
+                       task: str, batch: int) -> Artifact:
+    cfg = make_cfg(base, attn_name)
+    specs = M.param_specs(cfg)
+    n_params = len(specs)
+    step_fn = M.make_eval_step(cfg, task)
+
+    def flat_fn(*args):
+        p = list(args[:n_params])
+        rest = args[n_params:]
+        n_batch = len(M.batch_spec(cfg, task))
+        batch_arrays = list(rest[:n_batch])
+        (seed,) = rest[n_batch:]
+        return (step_fn(p, batch_arrays, seed),)
+
+    param_structs = [f32(shape) for _, shape in specs]
+    batch_structs = []
+    batch_names = []
+    for bname, bshape, bdtype in M.batch_spec(cfg, task, batch):
+        batch_structs.append(i32(bshape) if bdtype == "i32" else f32(bshape))
+        batch_names.append(bname)
+    example = param_structs + batch_structs + [i32(())]
+
+    inputs = ([spec_entry(f"param:{n}", f32(s)) for n, s in specs]
+              + [spec_entry(f"batch:{n}", s)
+                 for n, s in zip(batch_names, batch_structs)]
+              + [spec_entry("seed", i32(()))])
+    outputs = [spec_entry("metrics", f32((8,)))]
+
+    return Artifact(
+        name=f"eval_{family}_{attn_name}", kind="eval_step", family=family,
+        attention=attn_name, fn=flat_fn, example_args=example,
+        inputs=inputs, outputs=outputs,
+        config=dict(task=task, batch=batch, n_params=n_params,
+                    **{k: v for k, v in base.items()}))
+
+
+def forward_artifact(family: str, base: dict, attn_name: str, task: str,
+                     batch: int) -> Artifact:
+    cfg = make_cfg(base, attn_name)
+    specs = M.param_specs(cfg)
+    n_params = len(specs)
+    fwd = M.make_forward(cfg, task)
+
+    def flat_fn(*args):
+        p = list(args[:n_params])
+        input_ids, segment_ids, seed = args[n_params:]
+        return (fwd(p, input_ids, segment_ids, seed),)
+
+    n = cfg.max_len
+    example = ([f32(shape) for _, shape in specs]
+               + [i32((batch, n)), i32((batch, n)), i32(())])
+    out_shape = ((batch, n, cfg.vocab_size) if task == "pretrain"
+                 else (batch, cfg.n_classes))
+    inputs = ([spec_entry(f"param:{nm}", f32(s)) for nm, s in specs]
+              + [spec_entry("batch:input_ids", i32((batch, n))),
+                 spec_entry("batch:segment_ids", i32((batch, n))),
+                 spec_entry("seed", i32(()))])
+    outputs = [spec_entry("logits", f32(out_shape))]
+    return Artifact(
+        name=f"fwd_{family}_{attn_name}", kind="forward", family=family,
+        attention=attn_name, fn=flat_fn, example_args=example,
+        inputs=inputs, outputs=outputs,
+        config=dict(task=task, batch=batch, n_params=n_params,
+                    **{k: v for k, v in base.items()}))
+
+
+def attention_op_artifact(name: str, variant: str, n: int, d: int,
+                          tau: int, m: int) -> Artifact:
+    """Standalone attention ops lowered *through the Pallas kernels* —
+    the L1 -> HLO path the Rust runtime executes directly."""
+
+    if variant == "softmax":
+        def flat_fn(q, k, v, seed):
+            return (ref.softmax_attention(q, k, v),)
+    elif variant == "yoso_e_pallas":
+        def flat_fn(q, k, v, seed):
+            qn, kn = ref.unit_rows(q), ref.unit_rows(k)
+            return (yoso_e_pallas(qn, kn, v, tau, normalize=True),)
+    elif variant == "yoso_pallas":
+        def flat_fn(q, k, v, seed):
+            qn, kn = ref.unit_rows(q), ref.unit_rows(k)
+            key = jax.random.fold_in(jax.random.PRNGKey(3), seed)
+            rot = gaussian_rotations(key, m, d, tau)
+            cq = hash_codes(qn, rot)
+            ck = hash_codes(kn, rot)
+            return (yoso_sampled_pallas(v, cq, ck, tau, normalize=True),)
+    else:
+        raise ValueError(variant)
+
+    example = [f32((n, d)), f32((n, d)), f32((n, d)), i32(())]
+    inputs = [spec_entry("q", f32((n, d))), spec_entry("k", f32((n, d))),
+              spec_entry("v", f32((n, d))), spec_entry("seed", i32(()))]
+    outputs = [spec_entry("out", f32((n, d)))]
+    return Artifact(name=name, kind="attention", family="attn",
+                    attention=variant, fn=flat_fn, example_args=example,
+                    inputs=inputs, outputs=outputs,
+                    config=dict(n=n, d=d, tau=tau, m=m))
+
+
+def build_artifact_list() -> list[Artifact]:
+    arts: list[Artifact] = []
+    for a in PRETRAIN_TRAIN:
+        arts.append(train_step_artifact("pretrain", PRETRAIN_CFG, a,
+                                        "pretrain", PRETRAIN_BATCH))
+    for a in PRETRAIN_EVAL:
+        arts.append(eval_step_artifact("pretrain", PRETRAIN_CFG, a,
+                                       "pretrain", PRETRAIN_BATCH))
+    for a in GLUE_VARIANTS:
+        arts.append(train_step_artifact("glue", PRETRAIN_CFG, a, "cls",
+                                        PRETRAIN_BATCH))
+        arts.append(eval_step_artifact("glue", PRETRAIN_CFG, a, "cls",
+                                       PRETRAIN_BATCH))
+    for a in LRA_VARIANTS:
+        arts.append(train_step_artifact("lra", LRA_CFG, a, "cls", LRA_BATCH))
+        arts.append(eval_step_artifact("lra", LRA_CFG, a, "cls", LRA_BATCH))
+    # Serving path: classification forward (GLUE-shaped) + MLM forward.
+    for a in ["softmax", "yoso_32"]:
+        arts.append(forward_artifact("glue", PRETRAIN_CFG, a, "cls",
+                                     PRETRAIN_BATCH))
+    arts.append(forward_artifact("pretrain", PRETRAIN_CFG, "yoso_32",
+                                 "pretrain", PRETRAIN_BATCH))
+    # Pallas attention ops (n, d chosen to match LRA head dims).
+    arts.append(attention_op_artifact("attn_softmax_n256", "softmax",
+                                      256, 64, 8, 8))
+    arts.append(attention_op_artifact("attn_yoso_e_n256", "yoso_e_pallas",
+                                      256, 64, 8, 8))
+    arts.append(attention_op_artifact("attn_yoso_m8_n256", "yoso_pallas",
+                                      256, 64, 8, 8))
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names")
+    args = ap.parse_args()
+
+    import os
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": {}}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    # Incremental: keep entries for artifacts we skip via --only.
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            try:
+                manifest = json.load(fh)
+            except json.JSONDecodeError:
+                manifest = {"artifacts": {}}
+
+    arts = build_artifact_list()
+    pat = re.compile(args.only) if args.only else None
+    for art in arts:
+        if pat and not pat.search(art.name):
+            continue
+        t0 = time.time()
+        # keep_unused: the manifest ABI lists every input; without it jax
+        # drops parameters an artifact doesn't read (e.g. the classifier
+        # head in a pretrain eval step) and the Rust side's positional
+        # buffer list would mismatch.
+        lowered = jax.jit(art.fn, keep_unused=True).lower(*art.example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{art.name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][art.name] = {
+            "file": fname, "kind": art.kind, "family": art.family,
+            "attention": art.attention, "config": art.config,
+            "inputs": art.inputs, "outputs": art.outputs,
+        }
+        print(f"lowered {art.name:34s} {len(text)/1e6:6.2f} MB "
+              f"in {time.time()-t0:5.1f}s", file=sys.stderr)
+
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

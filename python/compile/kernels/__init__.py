@@ -1,0 +1,4 @@
+"""L1: Pallas kernels for YOSO attention (hashing, forward, backward) and
+the pure-jnp oracle (`ref`)."""
+
+from . import hashing, ref, yoso, yoso_grad  # noqa: F401

@@ -1,0 +1,194 @@
+"""LSH hash-code computation (L1).
+
+Two projection families, both producing packed hyperplane codes
+``codes[h, i] in [0, 2^tau)`` for ``m`` independent hashes over ``n``
+unit-norm vectors:
+
+* **Gaussian** — the textbook SimHash: ``sign(x @ R_h)`` with
+  ``R_h ~ N(0, 1)^{d x tau}``. Reference implementation, exact collision
+  probability ``(1 - theta/pi)^tau``.
+
+* **Fast Hadamard (Andoni et al., 2015)** — the paper's speed-up: replace
+  the dense ``d x tau`` projection with the ``H D3 H D2 H D1`` construction
+  (``H`` the Walsh–Hadamard transform, ``D_i`` random sign diagonals), cost
+  ``O(tau log2 d)`` per token instead of ``O(tau d)``.
+
+Both are provided as pure-jnp functions and as Pallas kernels. The Pallas
+kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and tile the token axis with a ``BlockSpec`` so the VMEM
+working set stays at one (block_n, d) tile plus the code tile —
+see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# All Pallas kernels in this repo run in interpreter mode: the CPU PJRT
+# client executes plain HLO; real-TPU lowering would emit Mosaic calls.
+INTERPRET = True
+
+DEFAULT_BLOCK_N = 128
+
+
+# ---------------------------------------------------------------------------
+# Parameter sampling (build-time; the Rust coordinator passes only a seed)
+# ---------------------------------------------------------------------------
+
+def gaussian_rotations(key: jax.Array, m: int, d: int, tau: int) -> jnp.ndarray:
+    """(m, d, tau) i.i.d. standard-normal hyperplanes."""
+    return jax.random.normal(key, (m, d, tau), dtype=jnp.float32)
+
+
+def hadamard_signs(key: jax.Array, m: int, d: int,
+                   rounds: int = 3) -> jnp.ndarray:
+    """(m, rounds, d) Rademacher sign diagonals for the HD_r construction."""
+    bits = jax.random.bernoulli(key, 0.5, (m, rounds, d))
+    return jnp.where(bits, 1.0, -1.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference
+# ---------------------------------------------------------------------------
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a trailing tau-axis of {0,1} into int32 codes."""
+    tau = bits.shape[-1]
+    powers = (2 ** jnp.arange(tau, dtype=jnp.int32))
+    return jnp.sum(bits.astype(jnp.int32) * powers, axis=-1)
+
+
+def hash_codes(x: jnp.ndarray, rotations: jnp.ndarray) -> jnp.ndarray:
+    """Packed Gaussian SimHash codes.
+
+    x: (n, d); rotations: (m, d, tau). Returns (m, n) int32.
+    """
+    proj = jnp.einsum("nd,mdt->mnt", x, rotations)
+    return pack_bits(proj >= 0.0)
+
+
+def hadamard_transform(x: jnp.ndarray) -> jnp.ndarray:
+    """Walsh–Hadamard transform along the last axis (power-of-two length).
+
+    Unnormalized butterfly; only signs are consumed so scaling is irrelevant.
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"Hadamard needs power-of-two dim, got {d}"
+    h = 1
+    while h < d:
+        x = x.reshape(x.shape[:-1] + (d // (2 * h), 2, h))
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        x = x.reshape(x.shape[:-3] + (d,))
+        h *= 2
+    return x
+
+
+def hash_codes_hadamard(x: jnp.ndarray, signs: jnp.ndarray,
+                        tau: int) -> jnp.ndarray:
+    """Packed codes via the fast H D_r ... H D_1 projection.
+
+    x: (n, d); signs: (m, rounds, d). Takes the first ``tau`` coordinates'
+    signs of the rotated vector as the hyperplane bits. Returns (m, n) int32.
+    """
+    def one_hash(s):  # s: (rounds, d)
+        y = x
+        for r in range(s.shape[0]):
+            y = hadamard_transform(y * s[r][None, :])
+        return pack_bits(y[:, :tau] >= 0.0)
+
+    return jax.vmap(one_hash)(signs)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _gaussian_code_kernel(x_ref, rot_ref, out_ref, *, tau: int):
+    """One (hash, token-block) grid cell: project, threshold, pack.
+
+    x_ref:   (block_n, d)   VMEM tile of inputs
+    rot_ref: (1, d, tau)    this hash's hyperplanes (broadcast over blocks)
+    out_ref: (1, block_n)   packed int32 codes
+    """
+    proj = jnp.dot(x_ref[...], rot_ref[0],
+                   preferred_element_type=jnp.float32)     # (block_n, tau)
+    bits = (proj >= 0.0).astype(jnp.int32)
+    powers = (2 ** jax.lax.iota(jnp.int32, tau))[None, :]  # (1, tau)
+    out_ref[0, :] = jnp.sum(bits * powers, axis=-1)
+
+
+def hash_codes_pallas(x: jnp.ndarray, rotations: jnp.ndarray,
+                      block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """Pallas Gaussian SimHash: grid (m, n/block_n); codes (m, n) int32.
+
+    The rotation tile is re-fetched per hash (index_map ignores the token
+    axis), so VMEM holds one (block_n, d) input tile + one (d, tau) rotation
+    tile + one (1, block_n) code tile at a time.
+    """
+    n, d = x.shape
+    m, _, tau = rotations.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    grid = (m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_gaussian_code_kernel, tau=tau),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda h, i: (i, 0)),
+            pl.BlockSpec((1, d, tau), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda h, i: (h, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=INTERPRET,
+    )(x, rotations.reshape(m, d, tau))
+
+
+def _hadamard_code_kernel(x_ref, signs_ref, out_ref, *, tau: int, d: int,
+                          rounds: int):
+    """Butterfly Hadamard stages entirely in the VMEM tile, then pack.
+
+    x_ref:     (block_n, d)
+    signs_ref: (1, rounds, d)
+    out_ref:   (1, block_n)
+    """
+    y = x_ref[...]
+    for r in range(rounds):
+        y = y * signs_ref[0, r, :][None, :]
+        # In-register butterfly: log2(d) stages of stride-h add/sub.
+        h = 1
+        while h < d:
+            y = y.reshape(-1, d // (2 * h), 2, h)
+            a = y[:, :, 0, :]
+            b = y[:, :, 1, :]
+            y = jnp.stack([a + b, a - b], axis=-2).reshape(-1, d)
+            h *= 2
+    bits = (y[:, :tau] >= 0.0).astype(jnp.int32)
+    powers = (2 ** jax.lax.iota(jnp.int32, tau))[None, :]
+    out_ref[0, :] = jnp.sum(bits * powers, axis=-1)
+
+
+def hash_codes_hadamard_pallas(x: jnp.ndarray, signs: jnp.ndarray, tau: int,
+                               block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """Pallas fast-Hadamard SimHash. x: (n, d); signs: (m, rounds, d)."""
+    n, d = x.shape
+    m, rounds, _ = signs.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    grid = (m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_hadamard_code_kernel, tau=tau, d=d, rounds=rounds),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda h, i: (i, 0)),
+            pl.BlockSpec((1, rounds, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda h, i: (h, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=INTERPRET,
+    )(x, signs)

@@ -1,0 +1,178 @@
+"""Pure-jnp oracle for YOSO attention.
+
+Everything in this module is the *mathematical definition* — quadratic,
+materializing the full n x n Bernoulli / collision-probability matrices —
+used as the correctness reference for the Pallas kernels in `yoso.py`,
+`yoso_grad.py` and `hashing.py`, and for the YOSO-E ("infinite hashes")
+model variant.
+
+Notation follows the paper (Zeng et al., ICML 2021):
+
+  sim      = Q K^T                       (unit-norm rows, so sim in [-1, 1])
+  E[B]_ij  = (1 - arccos(sim_ij)/pi)^tau   -- collision probability of tau
+                                             concatenated hyperplane hashes
+  YOSO     = B(Q, K) V                   (one realization per hash)
+  YOSO-E   = E[B] V                      (expectation, "infinite hashes")
+  N-YOSO   = l2-normalize(YOSO)          (row-wise, replaces softmax's D_P)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Keep arccos away from the poles where its derivative blows up; the paper's
+# backward lower bound (Eq. 4) exists precisely because of this pole.
+_SIM_EPS = 1e-6
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-6) -> jnp.ndarray:
+    """Row-wise l2 normalization; safe (value *and* gradient) at zero rows.
+
+    A YOSO-m query that collides with no key yields an exactly-zero row;
+    sqrt has an infinite derivative at 0, so the eps lives *inside* the
+    square root to keep the backward pass finite.
+    """
+    norm = jnp.sqrt(jnp.sum(x * x, axis=axis, keepdims=True) + eps * eps)
+    return x / norm
+
+
+def unit_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Project each row onto the unit sphere (the paper's Remark 1 via the
+    simpler l2-normalization the experiments actually use)."""
+    return l2_normalize(x)
+
+
+def collision_probability(sim: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """E[B]_ij = (1 - arccos(sim)/pi)^tau for sim in [-1, 1]."""
+    sim = jnp.clip(sim, -1.0 + _SIM_EPS, 1.0 - _SIM_EPS)
+    return (1.0 - jnp.arccos(sim) / jnp.pi) ** tau
+
+
+def collision_probability_grad(sim: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """d/dsim of the collision probability (Eq. 3's weight factor):
+
+        tau * (1 - arccos(sim)/pi)^(tau-1) / (pi * sqrt(1 - sim^2))
+
+    Diverges as |sim| -> 1; callers clip. This is the *YOSO weighting.
+    """
+    sim = jnp.clip(sim, -1.0 + _SIM_EPS, 1.0 - _SIM_EPS)
+    base = 1.0 - jnp.arccos(sim) / jnp.pi
+    return tau * base ** (tau - 1) / (jnp.pi * jnp.sqrt(1.0 - sim * sim))
+
+
+def collision_probability_grad_lower_bound(sim: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """The paper's numerically-safe lower bound (tau/2) * E[B] used for the
+    YOSO backward pass (Eq. 4)."""
+    return 0.5 * tau * collision_probability(sim, tau)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def yoso_e_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     tau: int, normalize: bool = True) -> jnp.ndarray:
+    """YOSO-E: expectation attention. q, k: (n, d) unit rows; v: (n, dv)."""
+    weights = collision_probability(q @ k.T, tau)
+    out = weights @ v
+    return l2_normalize(out) if normalize else out
+
+
+def bernoulli_matrix(codes_q: jnp.ndarray, codes_k: jnp.ndarray) -> jnp.ndarray:
+    """Realized Bernoulli matrices from packed hash codes.
+
+    codes_q, codes_k: (m, n) int32 — per-hash packed codes in [0, 2^tau).
+    Returns (m, n, n) float32 with B[h, i, j] = 1[codes_q[h,i] == codes_k[h,j]].
+    """
+    return (codes_q[:, :, None] == codes_k[:, None, :]).astype(jnp.float32)
+
+
+def yoso_sampled_attention(v: jnp.ndarray, codes_q: jnp.ndarray,
+                           codes_k: jnp.ndarray,
+                           normalize: bool = True) -> jnp.ndarray:
+    """YOSO-m with explicit code realizations (naive n^2 comparison).
+
+    Output_i = (1/m) sum_h sum_j 1[f_h(Q_i) = f_h(K_j)] V_j.
+    """
+    b = bernoulli_matrix(codes_q, codes_k)          # (m, n, n)
+    out = jnp.mean(b @ v[None, :, :], axis=0)       # (n, dv)
+    return l2_normalize(out) if normalize else out
+
+
+# ---------------------------------------------------------------------------
+# Backward (expectation forms — the oracle for the sampled estimators)
+# ---------------------------------------------------------------------------
+
+def yoso_e_grad_v(q: jnp.ndarray, k: jnp.ndarray, g: jnp.ndarray,
+                  tau: int) -> jnp.ndarray:
+    """nabla_V L = E[B(Q,K)]^T G (paper: B(K,Q) applied to the cotangent)."""
+    return collision_probability(q @ k.T, tau).T @ g
+
+
+def yoso_e_grad_q_lower_bound(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              g: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """Eq. (4) in expectation: [(G V^T) . (tau/2) E[B]] K."""
+    w = collision_probability_grad_lower_bound(q @ k.T, tau)
+    return ((g @ v.T) * w) @ k
+
+
+def yoso_e_grad_k_lower_bound(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              g: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """Symmetric counterpart of Eq. (4) for K: [(V G^T) . (tau/2) E[B]^T] Q."""
+    w = collision_probability_grad_lower_bound(q @ k.T, tau)
+    return ((v @ g.T) * w.T) @ q
+
+
+def yoso_e_grad_q_exact(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        g: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """Eq. (3): the true (clipped) derivative weighting — the *YOSO variant."""
+    w = collision_probability_grad(q @ k.T, tau)
+    return ((g @ v.T) * w) @ k
+
+
+def yoso_e_grad_k_exact(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        g: jnp.ndarray, tau: int) -> jnp.ndarray:
+    w = collision_probability_grad(q @ k.T, tau)
+    return ((v @ g.T) * w.T) @ q
+
+
+# ---------------------------------------------------------------------------
+# Backward (sampled forms — what the LSH-table kernels estimate)
+# ---------------------------------------------------------------------------
+
+def yoso_sampled_grad_v(g: jnp.ndarray, codes_q: jnp.ndarray,
+                        codes_k: jnp.ndarray) -> jnp.ndarray:
+    """nabla_V ~= (1/m) sum_h B_h^T G."""
+    b = bernoulli_matrix(codes_q, codes_k)
+    return jnp.mean(jnp.einsum("hij,il->hjl", b, g), axis=0)
+
+
+def yoso_sampled_grad_q(k: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                        codes_q: jnp.ndarray, codes_k: jnp.ndarray,
+                        tau: int) -> jnp.ndarray:
+    """Sampled Eq. (4): [(G V^T) . (tau/2) B-hat] K with B-hat = mean_h B_h."""
+    bhat = jnp.mean(bernoulli_matrix(codes_q, codes_k), axis=0)
+    return ((g @ v.T) * (0.5 * tau * bhat)) @ k
+
+
+def yoso_sampled_grad_k(q: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                        codes_q: jnp.ndarray, codes_k: jnp.ndarray,
+                        tau: int) -> jnp.ndarray:
+    bhat = jnp.mean(bernoulli_matrix(codes_q, codes_k), axis=0)
+    return ((v @ g.T) * (0.5 * tau * bhat.T)) @ q
+
+
+# ---------------------------------------------------------------------------
+# Softmax reference (the baseline the paper approximates)
+# ---------------------------------------------------------------------------
+
+def softmax_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      scale: float | None = None) -> jnp.ndarray:
+    """Standard scaled-dot-product attention; the exact baseline."""
+    d = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
+    p = jnp.asarray(q @ k.T) * scale
+    p = p - jnp.max(p, axis=-1, keepdims=True)
+    w = jnp.exp(p)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w @ v

@@ -1,0 +1,188 @@
+"""YOSO-Attention forward kernels (L1, Pallas).
+
+The paper's GPU algorithm (Fig. 3) scatter-adds each value ``V_j`` into a
+hash-table bucket ``H[f(K_j)]`` and gathers ``Y_i = H[f(Q_i)]`` — atomics
+plus gathers. TPUs have no efficient scatter, so the Pallas port
+re-expresses both steps as MXU contractions over one-hot code matrices
+(DESIGN.md §Hardware-Adaptation):
+
+    table  H_h = onehot(f_h(K))^T V          (2^tau, dv) = (2^tau, n)(n, dv)
+    output Y   = 1/m sum_h onehot(f_h(Q)) H_h
+
+Equality of *packed* codes is exactly the conjunction of tau hyperplane
+collisions, so the Bernoulli realizations are exact, and the cost is
+data-independent (no bucket-skew pathology — the same property Remark 3
+claims for the sum-table trick on GPU).
+
+Both kernels tile the token axis with BlockSpec; the bucket table lives in
+VMEM for the duration of one hash (2^tau x dv floats; tau <= 9, dv <= 64
+=> at most 128 KiB) and is accumulated across token tiles via revisited
+output blocks (the revisit axis is the innermost grid axis, so the block
+stays resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .hashing import INTERPRET, DEFAULT_BLOCK_N
+
+
+def _onehot(codes: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """(n,) int32 -> (n, n_buckets) f32 one-hot, via broadcast compare."""
+    iota = jax.lax.iota(jnp.int32, n_buckets)[None, :]
+    return (codes[:, None] == iota).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: bucket tables  H[h] = onehot(codes_k[h])^T V
+# ---------------------------------------------------------------------------
+
+def _table_kernel(codes_ref, v_ref, table_ref, *, n_buckets: int):
+    """Grid (m, n/block_n), token axis innermost: accumulate one hash table.
+
+    codes_ref: (1, block_n) int32   this hash's key codes for the tile
+    v_ref:     (block_n, dv)        value tile
+    table_ref: (1, n_buckets, dv)   resident accumulator for hash h
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    oh = _onehot(codes_ref[0, :], n_buckets)                  # (bn, 2^tau)
+    table_ref[0, :, :] += jnp.dot(oh.T, v_ref[...],
+                                  preferred_element_type=jnp.float32)
+
+
+def build_tables_pallas(v: jnp.ndarray, codes_k: jnp.ndarray, tau: int,
+                        block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """(m, 2^tau, dv) value-sum tables from key codes. v: (n, dv)."""
+    n, dv = v.shape
+    m = codes_k.shape[0]
+    n_buckets = 1 << tau
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        functools.partial(_table_kernel, n_buckets=n_buckets),
+        grid=(m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda h, i: (h, i)),
+            pl.BlockSpec((block_n, dv), lambda h, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_buckets, dv), lambda h, i: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_buckets, dv), jnp.float32),
+        interpret=INTERPRET,
+    )(codes_k, v)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: query gather  Y = 1/m sum_h onehot(codes_q[h]) H[h]
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(codes_ref, table_ref, out_ref, *, n_buckets: int,
+                   inv_m: float):
+    """Grid (n/block_n, m), hash axis innermost: one output tile resident.
+
+    codes_ref: (1, block_n) int32   this hash's query codes for the tile
+    table_ref: (1, n_buckets, dv)   hash h's bucket table
+    out_ref:   (block_n, dv)        resident output accumulator
+    """
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    oh = _onehot(codes_ref[0, :], n_buckets)                  # (bn, 2^tau)
+    out_ref[...] += inv_m * jnp.dot(oh, table_ref[0, :, :],
+                                    preferred_element_type=jnp.float32)
+
+
+def gather_pallas(tables: jnp.ndarray, codes_q: jnp.ndarray,
+                  block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """Y (n, dv) from tables (m, 2^tau, dv) and query codes (m, n)."""
+    m, n_buckets, dv = tables.shape
+    n = codes_q.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, n_buckets=n_buckets,
+                          inv_m=1.0 / m),
+        grid=(n // block_n, m),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, h: (h, i)),
+            pl.BlockSpec((1, n_buckets, dv), lambda i, h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, dv), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        interpret=INTERPRET,
+    )(codes_q, tables)
+
+
+def yoso_sampled_pallas(v: jnp.ndarray, codes_q: jnp.ndarray,
+                        codes_k: jnp.ndarray, tau: int,
+                        normalize: bool = True,
+                        block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """YOSO-m forward: B(Q,K) V estimated from m code realizations.
+
+    v: (n, dv); codes_q, codes_k: (m, n) int32 packed codes.
+    Linear in n: O(n m dv) time, O(m 2^tau dv) table memory.
+    """
+    tables = build_tables_pallas(v, codes_k, tau, block_n)
+    out = gather_pallas(tables, codes_q, block_n)
+    return ref.l2_normalize(out) if normalize else out
+
+
+# ---------------------------------------------------------------------------
+# YOSO-E (expectation) — quadratic but exact, blocked over both token axes
+# ---------------------------------------------------------------------------
+
+def _yoso_e_kernel(q_ref, k_ref, v_ref, out_ref, *, tau: int):
+    """Grid (n/bn_q, n/bn_k), key axis innermost.
+
+    q_ref: (bn_q, d); k_ref: (bn_k, d); v_ref: (bn_k, dv);
+    out_ref: (bn_q, dv) resident accumulator across key tiles.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sim = jnp.dot(q_ref[...], k_ref[...].T,
+                  preferred_element_type=jnp.float32)
+    sim = jnp.clip(sim, -1.0 + 1e-6, 1.0 - 1e-6)
+    w = (1.0 - jnp.arccos(sim) / jnp.pi) ** tau
+    out_ref[...] += jnp.dot(w, v_ref[...],
+                            preferred_element_type=jnp.float32)
+
+
+def yoso_e_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, tau: int,
+                  normalize: bool = True,
+                  block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """Expectation attention E[B(Q,K)] V, tiled like flash-attention."""
+    n, d = q.shape
+    dv = v.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n, n // block_n)
+    out = pl.pallas_call(
+        functools.partial(_yoso_e_kernel, tau=tau),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, dv), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, dv), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k, v)
+    return ref.l2_normalize(out) if normalize else out

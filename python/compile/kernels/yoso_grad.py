@@ -1,0 +1,331 @@
+"""YOSO-Attention backward kernels and the trainable custom-VJP op (L1).
+
+Backward estimators from the paper, all linear in n:
+
+* ``nabla_V  ~= (1/m) sum_h B_h(K, Q) G`` — the forward kernel with the
+  query/key roles swapped (Sec. 3.3).
+
+* ``nabla_Q  ~= [(G V^T) . (tau/2) B-hat] K`` — Eq. (4), the numerically
+  safe lower bound of the collision-probability derivative. Decomposed
+  per the paper into d LSH-Bernoulli-sampling subroutines, which in the
+  one-hot-matmul formulation becomes *outer-product* bucket tables:
+
+      T_h[c] = sum_{j: f_h(K_j)=c}  V_j (x) K_j         (2^tau, dv, d)
+      nabla_Q_i = tau/(2m) sum_h sum_l G_il T_h[f_h(Q_i)][l, :]
+
+  ``nabla_K`` is the mirror image with (G (x) Q) tables gathered at key
+  codes — the same two kernels serve both directions.
+
+VMEM note: one outer-product table block is 2^tau * dv * d floats
+(tau=8, dv=d=64 -> 4 MiB), within the ~16 MiB VMEM budget; the paper's
+"reuse the table d^2 times" memory trick corresponds to shrinking the
+block along the flattened (dv*d) axis, which BlockSpec supports — we keep
+the full slab since it fits.
+
+The ``make_yoso_attention`` factory assembles a ``jax.custom_vjp`` op:
+sampled Bernoulli forward + the estimators above as the VJP, so an entire
+train step (L2) lowers into one HLO module with no quadratic tensor
+anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .hashing import INTERPRET, DEFAULT_BLOCK_N, hash_codes
+from .yoso import build_tables_pallas, gather_pallas, _onehot
+
+
+# ---------------------------------------------------------------------------
+# nabla_V — forward kernels, roles swapped
+# ---------------------------------------------------------------------------
+
+def grad_v_pallas(g: jnp.ndarray, codes_q: jnp.ndarray, codes_k: jnp.ndarray,
+                  tau: int, block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """nabla_V = (1/m) sum_h onehot(codes_k)_h [onehot(codes_q)_h^T G]."""
+    tables = build_tables_pallas(g, codes_q, tau, block_n)
+    return gather_pallas(tables, codes_k, block_n)
+
+
+# ---------------------------------------------------------------------------
+# nabla_Q / nabla_K — outer-product bucket tables
+# ---------------------------------------------------------------------------
+
+def _grad_table_kernel(codes_ref, a_ref, b_ref, table_ref, *,
+                       n_buckets: int):
+    """Accumulate T[c] += sum_j 1[codes_j = c] a_j (x) b_j.
+
+    codes_ref: (1, block_n) int32; a_ref: (block_n, da); b_ref: (block_n, db)
+    table_ref: (1, n_buckets, da * db), resident across token tiles.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    bn, da = a_ref.shape
+    db = b_ref.shape[1]
+    outer = (a_ref[...][:, :, None] * b_ref[...][:, None, :])
+    outer = outer.reshape(bn, da * db)
+    oh = _onehot(codes_ref[0, :], n_buckets)
+    table_ref[0, :, :] += jnp.dot(oh.T, outer,
+                                  preferred_element_type=jnp.float32)
+
+
+def build_outer_tables_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                              codes: jnp.ndarray, tau: int,
+                              block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """(m, 2^tau, da*db) tables of sum of outer products a_j (x) b_j."""
+    n, da = a.shape
+    db = b.shape[1]
+    m = codes.shape[0]
+    n_buckets = 1 << tau
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        functools.partial(_grad_table_kernel, n_buckets=n_buckets),
+        grid=(m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda h, i: (h, i)),
+            pl.BlockSpec((block_n, da), lambda h, i: (i, 0)),
+            pl.BlockSpec((block_n, db), lambda h, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_buckets, da * db),
+                               lambda h, i: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_buckets, da * db), jnp.float32),
+        interpret=INTERPRET,
+    )(codes, a, b)
+
+
+def _grad_gather_kernel(codes_ref, w_ref, table_ref, out_ref, *,
+                        n_buckets: int, da: int, db: int, scale: float):
+    """out_i += scale * sum_l w_il T[f(x_i)][l, :].
+
+    codes_ref: (1, block_n); w_ref: (block_n, da);
+    table_ref: (1, n_buckets, da*db); out_ref: (block_n, db).
+    """
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bn = w_ref.shape[0]
+    oh = _onehot(codes_ref[0, :], n_buckets)
+    rows = jnp.dot(oh, table_ref[0, :, :],
+                   preferred_element_type=jnp.float32)     # (bn, da*db)
+    rows = rows.reshape(bn, da, db)
+    out_ref[...] += scale * jnp.einsum("il,ild->id", w_ref[...], rows)
+
+
+def gather_outer_tables_pallas(tables: jnp.ndarray, w: jnp.ndarray,
+                               codes: jnp.ndarray, da: int, db: int,
+                               scale: float,
+                               block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """(n, db) gradient rows from outer-product tables. w: (n, da)."""
+    m, n_buckets, _ = tables.shape
+    n = codes.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        functools.partial(_grad_gather_kernel, n_buckets=n_buckets,
+                          da=da, db=db, scale=scale),
+        grid=(n // block_n, m),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, h: (h, i)),
+            pl.BlockSpec((block_n, da), lambda i, h: (i, 0)),
+            pl.BlockSpec((1, n_buckets, da * db), lambda i, h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, db), lambda i, h: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, db), jnp.float32),
+        interpret=INTERPRET,
+    )(codes, w, tables)
+
+
+def grad_q_pallas(k: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                  codes_q: jnp.ndarray, codes_k: jnp.ndarray, tau: int,
+                  block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """Sampled Eq. (4): tables of V (x) K at key codes, gathered by G at
+    query codes, scaled by tau/(2m)."""
+    m = codes_q.shape[0]
+    dv = v.shape[1]
+    d = k.shape[1]
+    tables = build_outer_tables_pallas(v, k, codes_k, tau, block_n)
+    return gather_outer_tables_pallas(tables, g, codes_q, dv, d,
+                                      scale=0.5 * tau / m, block_n=block_n)
+
+
+def grad_k_pallas(q: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                  codes_q: jnp.ndarray, codes_k: jnp.ndarray, tau: int,
+                  block_n: int = DEFAULT_BLOCK_N) -> jnp.ndarray:
+    """Mirror of Eq. (4): tables of G (x) Q at query codes, gathered by V
+    at key codes."""
+    m = codes_q.shape[0]
+    dv = v.shape[1]
+    d = q.shape[1]
+    tables = build_outer_tables_pallas(g, q, codes_q, tau, block_n)
+    return gather_outer_tables_pallas(tables, v, codes_k, dv, d,
+                                      scale=0.5 * tau / m, block_n=block_n)
+
+
+# ---------------------------------------------------------------------------
+# Trainable op: sampled forward + estimator VJP
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_yoso_attention(tau: int, impl: str = "jnp"):
+    """Build the custom-VJP YOSO op for a given tau / implementation.
+
+    Returns ``fn(q, k, v, rotations) -> Y`` (unnormalized B-hat V estimate;
+    callers apply ``ref.l2_normalize`` so the normalization gradient is
+    exact autodiff). ``rotations``: (m, d, tau) hyperplanes; the number of
+    hashes m is the leading axis.
+
+    ``impl`` selects the realization of the *identical* estimator:
+
+    * "dense"   — materialize B-hat = mean_h 1[f_h(Q)=f_h(K)] once and use
+                  plain matmuls. O(n^2 m) but tiny constants; the fastest
+                  realization at the small n the CPU train-step artifacts
+                  run at. This is what the fused train steps lower.
+    * "scatter" — the paper's linear-in-n bucket-table algorithm via XLA
+                  segment-scatter (CPU's native equivalent of Fig. 3).
+    * "pallas"  — the L1 Pallas kernels (one-hot MXU contractions; the TPU
+                  realization, interpret=True here).
+
+    All three agree to float tolerance (pytest: test_kernels.py,
+    test_impl_equivalence).
+    """
+    if impl not in ("dense", "jnp", "scatter", "pallas"):
+        raise ValueError(f"unknown impl {impl!r}")
+    if impl == "jnp":            # backwards-compatible alias
+        impl = "scatter"
+
+    n_buckets = 1 << tau
+
+    def scatter_tables(x, codes):
+        """(m, 2^tau, dx) bucket sums via segment-scatter, vmapped over m.
+
+        On CPU-XLA scatter is the cheap realization of the paper's
+        ``H[f(K_j)] += V_j``; the Pallas kernels realize the same table as
+        one-hot MXU contractions for TPU (DESIGN.md §Hardware-Adaptation).
+        """
+        return jax.vmap(
+            lambda c: jax.ops.segment_sum(x, c, num_segments=n_buckets)
+        )(codes)
+
+    def table_attention(x, codes_in, codes_out):
+        """mean_h gather(segment_sum(x, codes_in[h]), codes_out[h])."""
+        tables = scatter_tables(x, codes_in)            # (m, 2^tau, dx)
+        gathered = jax.vmap(lambda t, c: t[c])(tables, codes_out)
+        return jnp.mean(gathered, axis=0)
+
+    def bhat_matrix(codes_q, codes_k):
+        """mean_h 1[codes_q[h,i] == codes_k[h,j]] — (n, n) f32."""
+        return jnp.mean(
+            (codes_q[:, :, None] == codes_k[:, None, :]).astype(jnp.float32),
+            axis=0)
+
+    def fwd_impl(q, k, v, rotations):
+        codes_q = hash_codes(q, rotations)
+        codes_k = hash_codes(k, rotations)
+        if impl == "pallas":
+            from .yoso import yoso_sampled_pallas
+            y = yoso_sampled_pallas(v, codes_q, codes_k, tau,
+                                    normalize=False)
+        elif impl == "dense":
+            y = bhat_matrix(codes_q, codes_k) @ v
+        else:
+            y = table_attention(v, codes_k, codes_q)
+        return y, codes_q, codes_k
+
+    @jax.custom_vjp
+    def yoso_attention(q, k, v, rotations):
+        y, _, _ = fwd_impl(q, k, v, rotations)
+        return y
+
+    def vjp_fwd(q, k, v, rotations):
+        y, codes_q, codes_k = fwd_impl(q, k, v, rotations)
+        return y, (q, k, v, rotations, codes_q, codes_k)
+
+    def vjp_bwd(res, g):
+        q, k, v, rotations, codes_q, codes_k = res
+        m = codes_q.shape[0]
+        if impl == "pallas":
+            dv_ = grad_v_pallas(g, codes_q, codes_k, tau)
+            dq = grad_q_pallas(k, v, g, codes_q, codes_k, tau)
+            dk = grad_k_pallas(q, v, g, codes_q, codes_k, tau)
+        elif impl == "dense":
+            bhat = bhat_matrix(codes_q, codes_k)
+            dv_ = bhat.T @ g
+            w = (0.5 * tau) * bhat
+            dq = ((g @ v.T) * w) @ k
+            dk = ((v @ g.T) * w.T) @ q
+        else:
+            n, d = q.shape
+            dv_dim = v.shape[1]
+            # nabla_V: forward with roles swapped.
+            dv_ = table_attention(g, codes_q, codes_k)
+            scale = 0.5 * tau / m
+            # nabla_Q: outer-product tables V (x) K at key codes, gathered
+            # at query codes and contracted with G (Eq. 4, sampled).
+            vk = (v[:, :, None] * k[:, None, :]).reshape(n, dv_dim * d)
+            t_vk = scatter_tables(vk, codes_k)          # (m, 2^tau, dv*d)
+            rows = jax.vmap(lambda t, c: t[c])(t_vk, codes_q)
+            rows = rows.reshape(m, n, dv_dim, d)
+            dq = scale * jnp.einsum("il,hild->id", g, rows)
+            # nabla_K: G (x) Q tables at query codes, gathered by V.
+            gq = (g[:, :, None] * q[:, None, :]).reshape(n, dv_dim * d)
+            t_gq = scatter_tables(gq, codes_q)
+            rows_k = jax.vmap(lambda t, c: t[c])(t_gq, codes_k)
+            rows_k = rows_k.reshape(m, n, dv_dim, d)
+            dk = scale * jnp.einsum("jl,hjld->jd", v, rows_k)
+        return dq, dk, dv_, jnp.zeros_like(rotations)
+
+    yoso_attention.defvjp(vjp_fwd, vjp_bwd)
+    return yoso_attention
+
+
+@functools.lru_cache(maxsize=None)
+def make_yoso_e_attention(tau: int, backward: str = "exact"):
+    """YOSO-E (expectation) op. ``backward``:
+
+    * "autodiff" — plain clipped autodiff through the collision probability.
+    * "exact"    — Eq. (3) weighting (the *YOSO estimator's expectation).
+    * "lower"    — Eq. (4) lower-bound weighting (the YOSO estimator's
+                   expectation); what YOSO-E-trained models in the paper use
+                   to stay consistent with the sampled backward.
+    """
+    if backward == "autodiff":
+        def fn(q, k, v):
+            return ref.yoso_e_attention(q, k, v, tau, normalize=False)
+        return fn
+
+    if backward not in ("exact", "lower"):
+        raise ValueError(f"unknown backward {backward!r}")
+
+    @jax.custom_vjp
+    def yoso_e(q, k, v):
+        return ref.yoso_e_attention(q, k, v, tau, normalize=False)
+
+    def vjp_fwd(q, k, v):
+        return yoso_e(q, k, v), (q, k, v)
+
+    def vjp_bwd(res, g):
+        q, k, v = res
+        dv_ = ref.yoso_e_grad_v(q, k, g, tau)
+        if backward == "exact":
+            dq = ref.yoso_e_grad_q_exact(q, k, v, g, tau)
+            dk = ref.yoso_e_grad_k_exact(q, k, v, g, tau)
+        else:
+            dq = ref.yoso_e_grad_q_lower_bound(q, k, v, g, tau)
+            dk = ref.yoso_e_grad_k_lower_bound(q, k, v, g, tau)
+        return dq, dk, dv_
+
+    yoso_e.defvjp(vjp_fwd, vjp_bwd)
+    return yoso_e

@@ -1,0 +1,355 @@
+"""L2: BERT-style transformer encoder with pluggable attention (JAX).
+
+Pure-functional model: parameters are an *ordered* list of named arrays so
+the Rust coordinator can marshal them positionally (the order is recorded
+in the artifact manifest). The model calls the L1 kernels through
+`attention_zoo`, and `train_step` fuses forward + backward + AdamW into a
+single jittable function that `aot.py` lowers to one HLO module.
+
+Tasks:
+  * pretrain — MLM + SOP (the paper's §4.1 setup, ALBERT-style SOP)
+  * cls      — single-sequence classification (LRA-style, GLUE-style)
+
+Batch conventions (all int32 unless noted):
+  pretrain: input_ids (b, n), segment_ids (b, n), mlm_labels (b, n)
+            [-1 = unmasked], sop_labels (b,)
+  cls:      input_ids (b, n), segment_ids (b, n), labels (b,)
+Scalars fed at runtime: step (i32), seed (i32), lr (f32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .attention_zoo import (AttnConfig, attention_fn,
+                            depthwise_conv_residual,
+                            needs_linformer_params)
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 2048
+    max_len: int = 128
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    d_ff: int = 512
+    n_segments: int = 2
+    n_classes: int = 3          # classifier head width (cls task)
+    attn: AttnConfig = AttnConfig()
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the positional ABI of every artifact."""
+    d, ff, n = cfg.d_model, cfg.d_ff, cfg.max_len
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab_size, d)),
+        ("pos_emb", (n, d)),
+        ("seg_emb", (cfg.n_segments, d)),
+        ("emb_ln_g", (d,)),
+        ("emb_ln_b", (d,)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "ff1_w", (d, ff)), (p + "ff1_b", (ff,)),
+            (p + "ff2_w", (ff, d)), (p + "ff2_b", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+        ]
+        if needs_linformer_params(cfg.attn):
+            specs += [(p + "lin_e", (n, cfg.attn.linformer_k)),
+                      (p + "lin_f", (n, cfg.attn.linformer_k))]
+        if cfg.attn.conv_size > 0:
+            specs += [(p + "conv_k", (cfg.n_heads, cfg.attn.conv_size))]
+    specs += [
+        ("mlm_w", (d, d)), ("mlm_b", (d,)),
+        ("mlm_ln_g", (d,)), ("mlm_ln_b", (d,)),
+        ("mlm_out_b", (cfg.vocab_size,)),       # decoder ties tok_emb
+        ("pool_w", (d, d)), ("pool_b", (d,)),
+        ("sop_w", (d, 2)), ("sop_b", (2,)),
+        ("cls_w", (d, cfg.n_classes)), ("cls_b", (cfg.n_classes,)),
+    ]
+    return specs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> list[jnp.ndarray]:
+    """Truncated-normal(0.02) matrices, zero biases, unit LN gains."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        short = name.split(".")[-1]
+        if short.endswith("_g") or short in ("ln1_g", "ln2_g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif short.startswith("b") or short.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif short == "conv_k":
+            # identity-ish depthwise kernel: small noise around a center tap
+            k = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+            params.append(k.at[:, shape[1] // 2].add(1.0))
+        else:
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def params_dict(cfg: ModelConfig, flat: list[jnp.ndarray]) -> dict:
+    names = [n for n, _ in param_specs(cfg)]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Modules
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def multi_head_attention(p: dict, prefix: str, cfg: ModelConfig,
+                         x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """x: (n, d_model) -> (n, d_model). vmaps the zoo fn over heads."""
+    n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p[prefix + "wq"] + p[prefix + "bq"]).reshape(n, h, dh)
+    k = (x @ p[prefix + "wk"] + p[prefix + "bk"]).reshape(n, h, dh)
+    v = (x @ p[prefix + "wv"] + p[prefix + "bv"]).reshape(n, h, dh)
+    q, k, v = (t.transpose(1, 0, 2) for t in (q, k, v))   # (h, n, dh)
+
+    fn = attention_fn(cfg.attn)
+    keys = jax.random.split(key, h)
+    if needs_linformer_params(cfg.attn):
+        e, f = p[prefix + "lin_e"], p[prefix + "lin_f"]
+        out = jax.vmap(lambda qh, kh, vh, kk: fn(qh, kh, vh, cfg.attn, kk,
+                                                 proj_e=e, proj_f=f)
+                       )(q, k, v, keys)
+    else:
+        out = jax.vmap(lambda qh, kh, vh, kk: fn(qh, kh, vh, cfg.attn, kk)
+                       )(q, k, v, keys)
+
+    if cfg.attn.conv_size > 0:
+        out = out + depthwise_conv_residual(v, p[prefix + "conv_k"])
+
+    out = out.transpose(1, 0, 2).reshape(n, d)
+    return out @ p[prefix + "wo"] + p[prefix + "bo"]
+
+
+def encoder(p: dict, cfg: ModelConfig, input_ids: jnp.ndarray,
+            segment_ids: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """One sequence (n,) -> hidden states (n, d_model). Post-LN BERT."""
+    n = input_ids.shape[0]
+    x = (p["tok_emb"][input_ids]
+         + p["pos_emb"][:n]
+         + p["seg_emb"][segment_ids])
+    x = layer_norm(x, p["emb_ln_g"], p["emb_ln_b"])
+    for i in range(cfg.n_layers):
+        prefix = f"layer{i}."
+        key, sub = jax.random.split(key)
+        a = multi_head_attention(p, prefix, cfg, x, sub)
+        x = layer_norm(x + a, p[prefix + "ln1_g"], p[prefix + "ln1_b"])
+        hidden = jax.nn.gelu(x @ p[prefix + "ff1_w"] + p[prefix + "ff1_b"])
+        f = hidden @ p[prefix + "ff2_w"] + p[prefix + "ff2_b"]
+        x = layer_norm(x + f, p[prefix + "ln2_g"], p[prefix + "ln2_b"])
+    return x
+
+
+def mlm_logits(p: dict, hidden: jnp.ndarray) -> jnp.ndarray:
+    """BERT MLM head with tied decoder: (n, d) -> (n, vocab)."""
+    t = jax.nn.gelu(hidden @ p["mlm_w"] + p["mlm_b"])
+    t = layer_norm(t, p["mlm_ln_g"], p["mlm_ln_b"])
+    return t @ p["tok_emb"].T + p["mlm_out_b"]
+
+
+def pooled(p: dict, hidden: jnp.ndarray) -> jnp.ndarray:
+    """[CLS] pooler: tanh dense on the first token."""
+    return jnp.tanh(hidden[0] @ p["pool_w"] + p["pool_b"])
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+def _log_softmax(x):
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    return x - jnp.log(jnp.sum(jnp.exp(x), axis=-1, keepdims=True))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  weights: jnp.ndarray):
+    """Weighted token CE. logits (..., c); labels (...); weights (...)."""
+    logp = _log_softmax(logits)
+    picked = jnp.take_along_axis(logp, labels[..., None].clip(0), axis=-1)
+    losses = -picked[..., 0] * weights
+    total = jnp.sum(weights)
+    return jnp.sum(losses) / jnp.maximum(total, 1.0), total
+
+
+def pretrain_losses(p: dict, cfg: ModelConfig, batch: dict, key: jax.Array):
+    """Batched MLM + SOP loss and metrics. Returns (loss, metrics[8])."""
+    b = batch["input_ids"].shape[0]
+    keys = jax.random.split(key, b)
+    hidden = jax.vmap(lambda ids, seg, kk: encoder(p, cfg, ids, seg, kk)
+                      )(batch["input_ids"], batch["segment_ids"], keys)
+    logits = jax.vmap(lambda hh: mlm_logits(p, hh))(hidden)   # (b, n, vocab)
+    labels = batch["mlm_labels"]
+    weights = (labels >= 0).astype(jnp.float32)
+    mlm_loss, n_masked = cross_entropy(logits, labels, weights)
+    mlm_correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels.clip(0)) * weights)
+
+    pool = jax.vmap(lambda hh: pooled(p, hh))(hidden)          # (b, d)
+    sop_logits = pool @ p["sop_w"] + p["sop_b"]                # (b, 2)
+    sop_loss, _ = cross_entropy(sop_logits, batch["sop_labels"],
+                                jnp.ones((b,), jnp.float32))
+    sop_correct = jnp.sum(
+        (jnp.argmax(sop_logits, axis=-1) == batch["sop_labels"]
+         ).astype(jnp.float32))
+
+    loss = mlm_loss + sop_loss
+    metrics = jnp.stack([
+        loss, mlm_loss, sop_loss, mlm_correct, n_masked, sop_correct,
+        jnp.float32(b), jnp.float32(0.0)])
+    return loss, metrics
+
+
+def cls_losses(p: dict, cfg: ModelConfig, batch: dict, key: jax.Array):
+    """Batched sequence-classification loss. Returns (loss, metrics[8])."""
+    b = batch["input_ids"].shape[0]
+    keys = jax.random.split(key, b)
+    hidden = jax.vmap(lambda ids, seg, kk: encoder(p, cfg, ids, seg, kk)
+                      )(batch["input_ids"], batch["segment_ids"], keys)
+    pool = jax.vmap(lambda hh: pooled(p, hh))(hidden)
+    logits = pool @ p["cls_w"] + p["cls_b"]                    # (b, c)
+    loss, _ = cross_entropy(logits, batch["labels"],
+                            jnp.ones((b,), jnp.float32))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == batch["labels"]
+                       ).astype(jnp.float32))
+    metrics = jnp.stack([
+        loss, loss, jnp.float32(0.0), correct, jnp.float32(b),
+        jnp.float32(0.0), jnp.float32(b), jnp.float32(0.0)])
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# AdamW + train/eval step builders
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+WEIGHT_DECAY = 0.01
+WARMUP_STEPS = 100
+
+
+def adamw_update(params, grads, m, v, step, lr):
+    """One AdamW step over the flat param list (decay on matrices only)."""
+    step_f = step.astype(jnp.float32) + 1.0
+    lr_t = lr * jnp.minimum(1.0, step_f / WARMUP_STEPS)
+    b1c = 1.0 - ADAM_B1 ** step_f
+    b2c = 1.0 - ADAM_B2 ** step_f
+    new_p, new_m, new_v = [], [], []
+    for pi, gi, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+        update = (mi / b1c) / (jnp.sqrt(vi / b2c) + ADAM_EPS)
+        if pi.ndim >= 2:
+            update = update + WEIGHT_DECAY * pi
+        new_p.append(pi - lr_t * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def _loss_fn_for(task: str) -> Callable:
+    return {"pretrain": pretrain_losses, "cls": cls_losses}[task]
+
+
+def make_train_step(cfg: ModelConfig, task: str):
+    """(params, m, v, *batch, step, seed, lr) -> (params', m', v', metrics).
+
+    Flat positional signature so the HLO artifact's ABI is a plain list of
+    literals — see `aot.py` and the manifest for the exact order.
+    """
+    loss_fn = _loss_fn_for(task)
+    batch_keys = batch_spec(cfg, task)
+
+    def train_step(params, m, v, batch_arrays, step, seed, lr):
+        batch = dict(zip([k for k, _, _ in batch_keys], batch_arrays))
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+
+        def scalar_loss(ps):
+            p = params_dict(cfg, ps)
+            loss, metrics = loss_fn(p, cfg, batch, key)
+            return loss, metrics
+
+        grads, metrics = jax.grad(scalar_loss, has_aux=True)(params)
+        new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr)
+        return new_p, new_m, new_v, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, task: str):
+    """(params, *batch, seed) -> metrics[8]."""
+    loss_fn = _loss_fn_for(task)
+    batch_keys = batch_spec(cfg, task)
+
+    def eval_step(params, batch_arrays, seed):
+        batch = dict(zip([k for k, _, _ in batch_keys], batch_arrays))
+        key = jax.random.fold_in(jax.random.PRNGKey(1), seed)
+        p = params_dict(cfg, params)
+        _, metrics = loss_fn(p, cfg, batch, key)
+        return metrics
+
+    return eval_step
+
+
+def make_forward(cfg: ModelConfig, task: str):
+    """Serving entrypoint: (params, input_ids, segment_ids, seed) -> logits."""
+    def forward(params, input_ids, segment_ids, seed):
+        p = params_dict(cfg, params)
+        key = jax.random.fold_in(jax.random.PRNGKey(2), seed)
+        b = input_ids.shape[0]
+        keys = jax.random.split(key, b)
+        hidden = jax.vmap(lambda ids, seg, kk: encoder(p, cfg, ids, seg, kk)
+                          )(input_ids, segment_ids, keys)
+        if task == "pretrain":
+            return jax.vmap(lambda hh: mlm_logits(p, hh))(hidden)
+        pool = jax.vmap(lambda hh: pooled(p, hh))(hidden)
+        return pool @ p["cls_w"] + p["cls_b"]
+
+    return forward
+
+
+def batch_spec(cfg: ModelConfig, task: str,
+               batch_size: int = 0) -> list[tuple[str, tuple, str]]:
+    """(name, shape-with-batch-placeholder, dtype) for each batch array.
+
+    batch_size = 0 leaves a symbolic 'B' the caller substitutes.
+    """
+    b, n = batch_size, cfg.max_len
+    if task == "pretrain":
+        return [("input_ids", (b, n), "i32"), ("segment_ids", (b, n), "i32"),
+                ("mlm_labels", (b, n), "i32"), ("sop_labels", (b,), "i32")]
+    if task == "cls":
+        return [("input_ids", (b, n), "i32"), ("segment_ids", (b, n), "i32"),
+                ("labels", (b,), "i32")]
+    raise ValueError(task)

@@ -1,0 +1,108 @@
+"""AOT pipeline tests: artifact registry, ABI specs, HLO lowering."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_artifact_list_covers_experiment_index():
+    arts = aot.build_artifact_list()
+    names = {a.name for a in arts}
+    # Table 2 variants
+    for v in aot.PRETRAIN_TRAIN:
+        assert f"train_pretrain_{v}" in names
+    # Figure 5 eval sweep
+    for v in aot.PRETRAIN_EVAL:
+        assert f"eval_pretrain_{v}" in names
+    # Table 3 variants (train + eval)
+    for v in aot.LRA_VARIANTS:
+        assert f"train_lra_{v}" in names
+        assert f"eval_lra_{v}" in names
+    # serving + pallas attention ops
+    assert "fwd_glue_yoso_32" in names
+    assert "attn_yoso_m8_n256" in names
+    # no duplicates
+    assert len(names) == len(arts)
+
+
+def test_train_step_abi_counts():
+    art = next(a for a in aot.build_artifact_list()
+               if a.name == "train_pretrain_yoso_16")
+    n_params = art.config["n_params"]
+    # inputs: 3 * params + 4 batch + 3 scalars
+    assert len(art.inputs) == 3 * n_params + 4 + 3
+    # outputs: 3 * params + metrics
+    assert len(art.outputs) == 3 * n_params + 1
+    assert art.outputs[-1]["name"] == "metrics"
+    assert art.outputs[-1]["shape"] == [8]
+    # ABI order: params, adam_m, adam_v
+    assert art.inputs[0]["name"].startswith("param:")
+    assert art.inputs[n_params]["name"].startswith("adam_m:")
+    assert art.inputs[2 * n_params]["name"].startswith("adam_v:")
+    assert art.inputs[-1]["name"] == "lr"
+
+
+def test_example_args_match_input_specs():
+    for art in aot.build_artifact_list():
+        assert len(art.example_args) == len(art.inputs), art.name
+        for struct, spec in zip(art.example_args, art.inputs):
+            assert list(struct.shape) == spec["shape"], (art.name, spec)
+
+
+@pytest.mark.parametrize("name", ["attn_softmax_n256", "eval_lra_none"])
+def test_lowering_produces_parseable_hlo(name):
+    art = next(a for a in aot.build_artifact_list() if a.name == name)
+    lowered = jax.jit(art.fn, keep_unused=True).lower(*art.example_args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # one parameter per ABI input (keep_unused guarantees this)
+    assert text.count("parameter(") >= len(art.inputs)
+    assert "ROOT" in text
+
+
+def test_linformer_artifact_has_projection_params():
+    art = next(a for a in aot.build_artifact_list()
+               if a.name == "train_lra_linformer")
+    names = [s["name"] for s in art.inputs]
+    assert "param:layer0.lin_e" in names
+    assert "param:layer1.lin_f" in names
+
+
+def test_conv_variant_has_kernel_params():
+    art = next(a for a in aot.build_artifact_list()
+               if a.name == "train_pretrain_yoso_c_16")
+    names = [s["name"] for s in art.inputs]
+    assert "param:layer0.conv_k" in names
+
+
+def test_attention_config_registry_consistent():
+    for name, cfg in aot.ATTN.items():
+        if name.startswith("star_"):
+            assert cfg.backward == "exact", name
+        if name.startswith(("yoso_", "star_yoso_")) and name[-1].isdigit():
+            m = int(name.rsplit("_", 1)[1])
+            assert cfg.n_hashes == m, name
+        if "_c_" in name:
+            assert cfg.conv_size > 0, name
+
+
+def test_eval_metrics_consistent_between_batches():
+    """Same params + same batch -> identical metrics (determinism)."""
+    cfg = aot.make_cfg(aot.PRETRAIN_CFG, "softmax")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ev = jax.jit(M.make_eval_step(cfg, "pretrain"))
+    import numpy as np
+    rng = np.random.default_rng(0)
+    b, n = 4, cfg.max_len
+    ids = jnp.asarray(rng.integers(5, 100, size=(b, n)).astype(np.int32))
+    seg = jnp.zeros((b, n), jnp.int32)
+    labels = jnp.where(jnp.asarray(rng.random((b, n))) < 0.15, ids, -1)
+    sop = jnp.zeros((b,), jnp.int32)
+    m1 = ev(params, [ids, seg, labels, sop], jnp.int32(3))
+    m2 = ev(params, [ids, seg, labels, sop], jnp.int32(3))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))

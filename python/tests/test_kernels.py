@@ -1,0 +1,232 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref`).
+
+hypothesis sweeps shapes (n, d, dv, m, tau) and block sizes; every Pallas
+kernel must agree with the quadratic reference to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hashing, ref, yoso, yoso_grad
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-4
+
+
+def make_inputs(seed, n, d, dv, m, tau):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = ref.unit_rows(jax.random.normal(ks[0], (n, d)))
+    k = ref.unit_rows(jax.random.normal(ks[1], (n, d)))
+    v = jax.random.normal(ks[2], (n, dv))
+    g = jax.random.normal(ks[3], (n, dv))
+    rot = hashing.gaussian_rotations(ks[4], m, d, tau)
+    return q, k, v, g, rot
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([32, 64, 128, 256]),    # n
+    st.sampled_from([8, 16, 32, 64]),       # d (power of two for hadamard)
+    st.sampled_from([8, 16, 32]),           # dv
+    st.integers(min_value=1, max_value=8),  # m
+    st.integers(min_value=2, max_value=8),  # tau
+    st.integers(min_value=0, max_value=3),  # seed
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_gaussian_codes_pallas_matches_ref(params):
+    n, d, dv, m, tau, seed = params
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+    ref_codes = hashing.hash_codes(q, rot)
+    pal_codes = hashing.hash_codes_pallas(q, rot, block_n=min(64, n))
+    assert ref_codes.shape == (m, n)
+    assert bool(jnp.all(ref_codes == pal_codes))
+    assert int(jnp.max(pal_codes)) < (1 << tau)
+    assert int(jnp.min(pal_codes)) >= 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape_strategy)
+def test_hadamard_codes_pallas_matches_ref(params):
+    n, d, dv, m, tau, seed = params
+    tau = min(tau, d)
+    q, *_ = make_inputs(seed, n, d, dv, m, tau)
+    signs = hashing.hadamard_signs(jax.random.PRNGKey(seed + 100), m, d)
+    ref_codes = hashing.hash_codes_hadamard(q, signs, tau)
+    pal_codes = hashing.hash_codes_hadamard_pallas(q, signs, tau,
+                                                   block_n=min(64, n))
+    assert bool(jnp.all(ref_codes == pal_codes))
+
+
+def test_hadamard_transform_is_orthogonal_involution():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 32))
+    hh = hashing.hadamard_transform(hashing.hadamard_transform(x))
+    np.testing.assert_allclose(np.asarray(hh), np.asarray(x) * 32,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hadamard_codes_have_hyperplane_statistics():
+    """HDx rotation preserves angles approximately: collision rate between a
+    vector and itself must be 1, and between orthogonal vectors ~ 2^-tau."""
+    d, m, tau = 64, 256, 4
+    x = ref.unit_rows(jax.random.normal(jax.random.PRNGKey(0), (2, d)))
+    signs = hashing.hadamard_signs(jax.random.PRNGKey(1), m, d)
+    codes = hashing.hash_codes_hadamard(x, signs, tau)
+    self_collisions = jnp.mean((codes[:, 0] == codes[:, 0]).astype(jnp.float32))
+    assert float(self_collisions) == 1.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_yoso_sampled_forward_matches_ref(params):
+    n, d, dv, m, tau, seed = params
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+    cq = hashing.hash_codes(q, rot)
+    ck = hashing.hash_codes(k, rot)
+    y_ref = ref.yoso_sampled_attention(v, cq, ck, normalize=False)
+    y_pal = yoso.yoso_sampled_pallas(v, cq, ck, tau, normalize=False,
+                                     block_n=min(64, n))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=ATOL * n)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_yoso_e_pallas_matches_ref(params):
+    n, d, dv, m, tau, seed = params
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+    y_ref = ref.yoso_e_attention(q, k, v, tau, normalize=False)
+    y_pal = yoso.yoso_e_pallas(q, k, v, tau, normalize=False,
+                               block_n=min(64, n))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=ATOL * n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape_strategy)
+def test_grad_v_pallas_matches_ref(params):
+    n, d, dv, m, tau, seed = params
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+    cq = hashing.hash_codes(q, rot)
+    ck = hashing.hash_codes(k, rot)
+    gv_ref = ref.yoso_sampled_grad_v(g, cq, ck)
+    gv_pal = yoso_grad.grad_v_pallas(g, cq, ck, tau, block_n=min(64, n))
+    np.testing.assert_allclose(np.asarray(gv_pal), np.asarray(gv_ref),
+                               atol=ATOL * n)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape_strategy)
+def test_grad_qk_pallas_matches_ref(params):
+    n, d, dv, m, tau, seed = params
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+    cq = hashing.hash_codes(q, rot)
+    ck = hashing.hash_codes(k, rot)
+    gq_ref = ref.yoso_sampled_grad_q(k, v, g, cq, ck, tau)
+    gq_pal = yoso_grad.grad_q_pallas(k, v, g, cq, ck, tau,
+                                     block_n=min(64, n))
+    np.testing.assert_allclose(np.asarray(gq_pal), np.asarray(gq_ref),
+                               atol=ATOL * n)
+    gk_ref = ref.yoso_sampled_grad_k(q, v, g, cq, ck, tau)
+    gk_pal = yoso_grad.grad_k_pallas(q, v, g, cq, ck, tau,
+                                     block_n=min(64, n))
+    np.testing.assert_allclose(np.asarray(gk_pal), np.asarray(gk_ref),
+                               atol=ATOL * n)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_custom_vjp_op_matches_sampled_estimators(impl):
+    n, d, dv, m, tau, seed = 128, 32, 16, 4, 6, 0
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+    cq = hashing.hash_codes(q, rot)
+    ck = hashing.hash_codes(k, rot)
+    fn = yoso_grad.make_yoso_attention(tau, impl)
+    y = fn(q, k, v, rot)
+    y_ref = ref.yoso_sampled_attention(v, cq, ck, normalize=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3)
+    dq, dk, dv_ = jax.grad(
+        lambda q, k, v: jnp.sum(fn(q, k, v, rot) * g), argnums=(0, 1, 2)
+    )(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(dq), np.asarray(ref.yoso_sampled_grad_q(k, v, g, cq, ck, tau)),
+        atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(dk), np.asarray(ref.yoso_sampled_grad_k(q, v, g, cq, ck, tau)),
+        atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(dv_), np.asarray(ref.yoso_sampled_grad_v(g, cq, ck)),
+        atol=1e-3)
+
+
+def test_yoso_e_backward_variants():
+    """The three YOSO-E backward modes must match their ref formulas."""
+    n, d, dv, m, tau, seed = 64, 16, 16, 1, 6, 1
+    q, k, v, g, rot = make_inputs(seed, n, d, dv, m, tau)
+
+    for backward, (gq_fn, gk_fn) in {
+        "exact": (ref.yoso_e_grad_q_exact, ref.yoso_e_grad_k_exact),
+        "lower": (ref.yoso_e_grad_q_lower_bound, ref.yoso_e_grad_k_lower_bound),
+    }.items():
+        fn = yoso_grad.make_yoso_e_attention(tau, backward)
+        dq, dk, dv_ = jax.grad(
+            lambda q, k, v: jnp.sum(fn(q, k, v) * g), argnums=(0, 1, 2)
+        )(q, k, v)
+        np.testing.assert_allclose(np.asarray(dq),
+                                   np.asarray(gq_fn(q, k, v, g, tau)),
+                                   atol=1e-4, err_msg=backward)
+        np.testing.assert_allclose(np.asarray(dk),
+                                   np.asarray(gk_fn(q, k, v, g, tau)),
+                                   atol=1e-4, err_msg=backward)
+        np.testing.assert_allclose(np.asarray(dv_),
+                                   np.asarray(ref.yoso_e_grad_v(q, k, g, tau)),
+                                   atol=1e-4, err_msg=backward)
+
+
+# ---------------------------------------------------------------------------
+# Statistical properties of the estimator itself
+# ---------------------------------------------------------------------------
+
+def test_sampled_attention_is_unbiased():
+    """Mean of YOSO-m over many rotation draws converges to YOSO-E."""
+    n, d, dv, tau = 32, 16, 8, 4
+    q, k, v, g, _ = make_inputs(0, n, d, dv, 1, tau)
+    m_total = 2048
+    rot = hashing.gaussian_rotations(jax.random.PRNGKey(9), m_total, d, tau)
+    cq = hashing.hash_codes(q, rot)
+    ck = hashing.hash_codes(k, rot)
+    y_mc = ref.yoso_sampled_attention(v, cq, ck, normalize=False)
+    y_e = ref.yoso_e_attention(q, k, v, tau, normalize=False)
+    # Monte-Carlo error ~ 1/sqrt(m_total); allow 5 sigma-ish slack.
+    err = np.max(np.abs(np.asarray(y_mc) - np.asarray(y_e)))
+    assert err < 0.35 * np.sqrt(n) / np.sqrt(m_total) * 5, err
+
+
+def test_collision_probability_bounds_and_monotonicity():
+    sims = jnp.linspace(-0.999, 0.999, 201)
+    for tau in (1, 2, 4, 8):
+        p = np.asarray(ref.collision_probability(sims, tau))
+        assert np.all(p >= 0) and np.all(p <= 1)
+        assert np.all(np.diff(p) > 0)       # monotonic in similarity
+        # lower bound property: (tau/2) p <= true derivative on [-1, 1]
+        lb = np.asarray(ref.collision_probability_grad_lower_bound(sims, tau))
+        grad = np.asarray(ref.collision_probability_grad(sims, tau))
+        assert np.all(lb <= grad + 1e-5)
+
+
+def test_variance_bounded_by_mean():
+    """Remark 2(b): var[B] = p(1-p) <= p — approximation error controllable."""
+    sims = jnp.linspace(-0.999, 0.999, 101)
+    p = np.asarray(ref.collision_probability(sims, 8))
+    var = p * (1 - p)
+    assert np.all(var <= p + 1e-7)
+
+
+def test_l2_normalize_safe_at_zero():
+    z = jnp.zeros((3, 4))
+    out = np.asarray(ref.l2_normalize(z))
+    assert np.all(np.isfinite(out)) and np.all(out == 0)

@@ -1,0 +1,137 @@
+"""L2 model tests: shapes, attention zoo, train-step learning, ABI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import ATTN, LRA_CFG, PRETRAIN_CFG, make_cfg
+from compile.attention_zoo import AttnConfig, attention_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_batch(cfg, task, b, seed=0):
+    rng = np.random.default_rng(seed)
+    n = cfg.max_len
+    ids = rng.integers(5, cfg.vocab_size, size=(b, n)).astype(np.int32)
+    seg = np.zeros((b, n), np.int32)
+    if task == "pretrain":
+        labels = np.where(rng.random((b, n)) < 0.15, ids, -1).astype(np.int32)
+        sop = rng.integers(0, 2, size=(b,)).astype(np.int32)
+        return [jnp.asarray(x) for x in (ids, seg, labels, sop)]
+    labels = rng.integers(0, cfg.n_classes, size=(b,)).astype(np.int32)
+    return [jnp.asarray(x) for x in (ids, seg, labels)]
+
+
+@pytest.mark.parametrize("kind", ["softmax", "none", "yoso", "yoso_e",
+                                  "linear", "performer", "longformer",
+                                  "reformer", "nystrom"])
+def test_attention_zoo_shapes_and_grads(kind):
+    cfg = AttnConfig(kind=kind, tau=6, n_hashes=4, landmarks=8, window=8,
+                     performer_features=16)
+    fn = attention_fn(cfg)
+    n, d = 32, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (n, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    out = fn(q, k, v, cfg, jax.random.PRNGKey(3))
+    assert out.shape == (n, d)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # differentiable
+    g = jax.grad(lambda q: jnp.sum(fn(q, k, v, cfg, jax.random.PRNGKey(3))))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_linformer_needs_projections():
+    cfg = AttnConfig(kind="linformer", linformer_k=8)
+    fn = attention_fn(cfg)
+    n, d = 16, 8
+    q = jnp.ones((n, d))
+    e = jnp.ones((n, 8)) / 8.0
+    out = fn(q, q, q, cfg, jax.random.PRNGKey(0), proj_e=e, proj_f=e)
+    assert out.shape == (n, d)
+
+
+def test_param_specs_cover_init():
+    cfg = make_cfg(PRETRAIN_CFG, "yoso_16")
+    specs = M.param_specs(cfg)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    assert len(specs) == len(params)
+    for (name, shape), p in zip(specs, params):
+        assert p.shape == shape, name
+    # conv variant adds per-layer kernels
+    cfg_c = make_cfg(PRETRAIN_CFG, "yoso_c_16")
+    assert len(M.param_specs(cfg_c)) == len(specs) + cfg.n_layers
+    # linformer adds projections
+    cfg_l = make_cfg(LRA_CFG, "linformer")
+    names = [n for n, _ in M.param_specs(cfg_l)]
+    assert "layer0.lin_e" in names and "layer1.lin_f" in names
+
+
+@pytest.mark.parametrize("variant", ["softmax", "yoso_16", "yoso_e",
+                                     "nystrom", "performer", "none"])
+def test_train_step_learns(variant):
+    base = LRA_CFG if variant in ("nystrom", "performer", "none") else PRETRAIN_CFG
+    task = "cls" if base is LRA_CFG else "pretrain"
+    cfg = make_cfg(base, variant)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(M.make_train_step(cfg, task))
+    batch = rand_batch(cfg, task, 4)
+    losses = []
+    state = (params, m, v)
+    for s in range(8):
+        out = step(*state, batch, jnp.int32(s), jnp.int32(s), jnp.float32(2e-3))
+        state = out[:3]
+        losses.append(float(out[3][0]))
+    assert np.isfinite(losses).all(), variant
+    assert losses[-1] < losses[0], (variant, losses)
+
+
+def test_eval_step_metrics_layout():
+    cfg = make_cfg(PRETRAIN_CFG, "softmax")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ev = jax.jit(M.make_eval_step(cfg, "pretrain"))
+    batch = rand_batch(cfg, "pretrain", 4)
+    metrics = ev(params, batch, jnp.int32(0))
+    assert metrics.shape == (8,)
+    # batch size recorded in slot 6
+    assert float(metrics[6]) == 4.0
+
+
+def test_forward_logits_shape():
+    cfg = make_cfg(PRETRAIN_CFG, "yoso_16")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    fwd = jax.jit(M.make_forward(cfg, "cls"))
+    ids = jnp.ones((2, cfg.max_len), jnp.int32)
+    seg = jnp.zeros((2, cfg.max_len), jnp.int32)
+    logits = fwd(params, ids, seg, jnp.int32(0))
+    assert logits.shape == (2, cfg.n_classes)
+
+
+def test_adamw_moves_toward_gradient():
+    params = [jnp.ones((4,))]
+    grads = [jnp.ones((4,))]
+    m = [jnp.zeros((4,))]
+    v = [jnp.zeros((4,))]
+    new_p, new_m, new_v = M.adamw_update(params, grads, m, v,
+                                         jnp.int32(500), jnp.float32(0.1))
+    assert bool(jnp.all(new_p[0] < params[0]))
+    assert bool(jnp.all(new_m[0] > 0))
+    assert bool(jnp.all(new_v[0] > 0))
+
+
+def test_attention_determinism_given_seed():
+    cfg = make_cfg(PRETRAIN_CFG, "yoso_16")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ev = jax.jit(M.make_eval_step(cfg, "pretrain"))
+    batch = rand_batch(cfg, "pretrain", 2)
+    a = ev(params, batch, jnp.int32(5))
+    b = ev(params, batch, jnp.int32(5))
+    c = ev(params, batch, jnp.int32(6))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))

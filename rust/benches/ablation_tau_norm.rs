@@ -1,0 +1,123 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. **τ (hyperplanes per hash)** — controls the attention-weight decay
+//!    rate (paper §3.2, Remark 3). Sweep τ and report (a) the sharpness
+//!    of the expected attention (entropy of E[B] rows), (b) the
+//!    approximation error of YOSO-32 against YOSO-E, (c) forward time.
+//! 2. **ℓ2 output normalization (N-YOSO)** — the paper argues it replaces
+//!    the softmax row normalization without hurting performance. Compare
+//!    the *direction* of normalized vs unnormalized outputs: they must be
+//!    identical (normalization is a positive row scaling), and the
+//!    normalized output must be unit-length.
+//! 3. **fast-Hadamard vs Gaussian projection** — the §3.2 speed-up:
+//!    equal estimator quality at lower hashing cost.
+
+use std::io::Write;
+use yoso::attention::{YosoAttention, YosoE};
+use yoso::bench_support::bench;
+use yoso::tensor::Mat;
+use yoso::util::stats::radians_between;
+use yoso::util::Rng;
+
+fn mean_row_entropy(w: &Mat) -> f64 {
+    let mut total = 0.0;
+    for i in 0..w.rows {
+        let sum: f64 = w.row(i).iter().map(|&x| x as f64).sum();
+        let mut h = 0.0;
+        for &x in w.row(i) {
+            let p = (x as f64 / sum).max(1e-12);
+            h -= p * p.ln();
+        }
+        total += h;
+    }
+    total / w.rows as f64
+}
+
+fn main() {
+    let (n, d) = (512usize, 64usize);
+    let mut rng = Rng::new(0);
+    let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let mut qn = k.clone();
+    for x in qn.data.iter_mut() {
+        *x += 0.8 * rng.normal();
+    }
+    let q = qn.unit_rows();
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = std::fs::File::create("results/ablation_tau.csv").unwrap();
+    writeln!(csv, "tau,row_entropy,yoso32_radians,forward_ms").unwrap();
+
+    println!("Ablation 1 — tau sweep (n = {n}, d = {d}, m = 32)\n");
+    println!("{:>4} {:>14} {:>16} {:>12}", "tau", "row entropy",
+             "rad(E, yoso-32)", "fwd ms");
+    let mut entropies = Vec::new();
+    for tau in [2usize, 4, 6, 8, 10] {
+        // (a) sharpness of the expectation
+        let e_attn = YosoE { tau };
+        let mut w = q.matmul_t(&k);
+        for x in w.data.iter_mut() {
+            *x = yoso::lsh::collision_probability(*x as f64, tau as u32) as f32;
+        }
+        let entropy = mean_row_entropy(&w);
+        // (b) estimator error at m = 32
+        let e = e_attn.forward_raw(&q, &k, &v);
+        let est = YosoAttention::new(tau, 32, false).forward_raw(&q, &k, &v, &mut rng);
+        let err: f64 = (0..n)
+            .map(|i| radians_between(est.row(i), e.row(i)))
+            .sum::<f64>()
+            / n as f64;
+        // (c) forward time
+        let attn = YosoAttention::new(tau, 32, false);
+        let mut r2 = Rng::new(1);
+        let t = bench("tau", 1, 3, || {
+            std::hint::black_box(attn.forward_raw(&q, &k, &v, &mut r2));
+        });
+        println!("{tau:>4} {entropy:>14.3} {err:>16.4} {:>12.2}",
+                 t.summary.mean * 1e3);
+        writeln!(csv, "{tau},{entropy},{err},{}", t.summary.mean * 1e3).unwrap();
+        entropies.push(entropy);
+    }
+    // higher tau -> sharper attention (lower entropy), monotone
+    for w in entropies.windows(2) {
+        assert!(w[1] < w[0], "entropy must fall with tau: {entropies:?}");
+    }
+
+    println!("\nAblation 2 — l2 normalization (N-YOSO)\n");
+    let raw = YosoAttention::new(8, 32, false);
+    let mut r = Rng::new(42);
+    let y_raw = raw.forward_raw(&q, &k, &v, &mut r);
+    let mut y_norm = y_raw.clone();
+    y_norm.l2_normalize_rows();
+    let mut max_angle: f64 = 0.0;
+    for i in 0..n {
+        let norm: f32 = y_norm.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(norm <= 1.0 + 1e-4);
+        if y_raw.row(i).iter().any(|&x| x != 0.0) {
+            max_angle = max_angle.max(radians_between(y_raw.row(i), y_norm.row(i)));
+        }
+    }
+    println!("max direction change under l2 normalization: {max_angle:.2e} rad");
+    println!("(normalization rescales rows only — information-preserving, \
+              as the paper argues)");
+    assert!(max_angle < 1e-3);
+
+    println!("\nAblation 3 — Gaussian vs fast-Hadamard projection (m = 64)\n");
+    let e = YosoE { tau: 6 }.forward_raw(&q, &k, &v);
+    for (label, fast) in [("gaussian", false), ("hadamard", true)] {
+        let attn = YosoAttention::new(6, 64, fast);
+        let mut r = Rng::new(5);
+        let est = attn.forward_raw(&q, &k, &v, &mut r);
+        let err: f64 = (0..n)
+            .map(|i| radians_between(est.row(i), e.row(i)))
+            .sum::<f64>()
+            / n as f64;
+        let mut r2 = Rng::new(6);
+        let t = bench(label, 1, 3, || {
+            std::hint::black_box(attn.forward_raw(&q, &k, &v, &mut r2));
+        });
+        println!("{label:<10} rad(E) = {err:.4}   fwd = {:.2} ms",
+                 t.summary.mean * 1e3);
+    }
+    println!("\n-> results/ablation_tau.csv");
+}

@@ -1,0 +1,70 @@
+//! Figure 5: the effect of the number of hashes *at inference time*.
+//!
+//! Train once with YOSO-32, then evaluate the same parameters with
+//! m in {8, 16, 32, 64, 128} and with YOSO-E (expectation — "infinite
+//! hashes"). The paper's shape: MLM perplexity / SOP loss decrease
+//! monotonically toward the YOSO-E value as m grows.
+//!
+//! Env: YOSO_F5_STEPS (default 80).
+
+use std::io::Write;
+use std::path::Path;
+use yoso::data::corpus::{CorpusConfig, CorpusGenerator};
+use yoso::data::mlm::{MlmConfig, PretrainStream};
+use yoso::data::tokenizer::WordTokenizer;
+use yoso::metrics::Recorder;
+use yoso::runtime::Runtime;
+use yoso::train::trainer::eval_artifact;
+use yoso::train::{PretrainSource, Trainer};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    yoso::util::log::init_from_env();
+    let steps = env_usize("YOSO_F5_STEPS", 80);
+    let rt = Runtime::open(Path::new("artifacts"))?;
+    let src = PretrainSource {
+        stream: PretrainStream::new(
+            CorpusGenerator::new(CorpusConfig::default()),
+            WordTokenizer { n_words: 2000 },
+            MlmConfig::default(),
+            42,
+        ),
+    };
+
+    println!("Figure 5 — training yoso_32 for {steps} steps, then sweeping \
+              inference-time hashes\n");
+    let mut trainer = Trainer::new(&rt, "train_pretrain_yoso_32", None, 42, None)?;
+    let mut rec = Recorder::new();
+    trainer.run(&src, steps, 1e-3, 0, 0, steps / 4, &mut rec)?;
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = std::fs::File::create("results/fig5_inference_hashes.csv")?;
+    writeln!(csv, "eval_setting,mlm_ppl,mlm_acc,sop_acc")?;
+
+    println!("{:<12} {:>10} {:>9} {:>9}", "inference", "MLM ppl", "MLM acc",
+             "SOP acc");
+    let mut ppls = Vec::new();
+    for setting in ["yoso_8", "yoso_16", "yoso_32", "yoso_64", "yoso_128",
+                    "yoso_e"] {
+        let art = rt.artifact(&format!("eval_pretrain_{setting}"))?;
+        let eval = eval_artifact(&art, &trainer.params, &src, 6)?;
+        println!(
+            "{:<12} {:>10.2} {:>9.3} {:>9.3}",
+            setting, eval.mlm_perplexity, eval.accuracy, eval.sop_accuracy
+        );
+        writeln!(csv, "{setting},{},{},{}", eval.mlm_perplexity, eval.accuracy,
+                 eval.sop_accuracy)?;
+        ppls.push(eval.mlm_perplexity);
+    }
+    println!("\n-> results/fig5_inference_hashes.csv");
+
+    // shape check: ppl at m=128 should beat ppl at m=8
+    assert!(
+        ppls[4] <= ppls[0] * 1.05,
+        "more hashes at inference should not hurt: {ppls:?}"
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Figure 7: running time and peak memory vs sequence length for YOSO
+//! and every baseline, per instance (one head, d = 64), with each
+//! method's paper hyperparameters (§4.2/§4.3).
+//!
+//! Writes results/fig7_efficiency.csv (method,n,ms,peak_bytes,model_bytes)
+//! and prints the two panels. The paper's shape to reproduce: softmax
+//! grows quadratically and runs out of budget first; the efficient
+//! methods stay near-linear; YOSO has the lowest memory profile.
+
+use std::io::Write;
+use yoso::attention::by_name;
+use yoso::bench_support::{bench, human_bytes, peak_bytes, reset_peak, CountingAlloc};
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let d = 64;
+    let methods = ["softmax", "yoso_32", "yoso_e", "nystrom", "longformer",
+                   "linformer", "reformer", "performer"];
+    let ns = [512usize, 1024, 2048, 4096];
+
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = std::fs::File::create("results/fig7_efficiency.csv").unwrap();
+    writeln!(csv, "method,n,time_ms,peak_bytes,model_bytes").unwrap();
+
+    println!("Figure 7 — per-instance forward time (ms) and peak memory\n");
+    print!("{:<12}", "method");
+    for n in ns {
+        print!("{:>9}n={n:<6}", "");
+    }
+    println!();
+
+    let mut rng = Rng::new(0);
+    for method in methods {
+        let mut time_row = format!("{method:<12}");
+        let mut mem_row = format!("{:<12}", "");
+        for &n in &ns {
+            // quadratic methods get expensive; still measurable at 4096
+            let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+            let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+            let v = Mat::randn(n, d, 1.0, &mut rng);
+            let mut ctor_rng = Rng::new(7);
+            let attn = by_name(method, &mut ctor_rng, d);
+            let mut run_rng = Rng::new(9);
+            reset_peak();
+            let iters = if n >= 2048 { 3 } else { 5 };
+            let r = bench(method, 1, iters, || {
+                std::hint::black_box(attn.forward(&q, &k, &v, &mut run_rng));
+            });
+            let peak = peak_bytes();
+            writeln!(
+                csv,
+                "{method},{n},{},{},{}",
+                r.summary.mean * 1e3,
+                peak,
+                attn.workspace_bytes(n, d)
+            )
+            .unwrap();
+            time_row += &format!(" {:>13.2}", r.summary.mean * 1e3);
+            mem_row += &format!(" {:>13}", human_bytes(attn.workspace_bytes(n, d)));
+        }
+        println!("{time_row}");
+        println!("{mem_row}");
+    }
+    println!("\n-> results/fig7_efficiency.csv");
+
+    // the headline shape assertions
+    let mut check = |method: &str, n: usize| -> f64 {
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let mut ctor_rng = Rng::new(7);
+        let attn = by_name(method, &mut ctor_rng, d);
+        let mut run_rng = Rng::new(9);
+        bench(method, 1, 3, || {
+            std::hint::black_box(attn.forward(&q, &k, &v, &mut run_rng));
+        })
+        .summary
+        .mean
+    };
+    let sm = check("softmax", 4096);
+    let yo = check("yoso_32", 4096);
+    println!("\nsoftmax/yoso-32 time ratio at n=4096: {:.1}x (paper: ~10x class)",
+             sm / yo);
+}

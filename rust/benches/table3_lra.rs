@@ -1,0 +1,71 @@
+//! Table 3: LRA-style long-sequence accuracy across attention variants.
+//!
+//! Five synthetic LRA tasks (real ListOps grammar, byte-level text,
+//! retrieval pairs, pixel images, pathfinder grids — data/lra.rs) at
+//! n = 256, trained per (task, variant) through the fused HLO train
+//! steps. Shape to reproduce: attention helps over "none"; YOSO is
+//! comparable to softmax/Nyströmformer/Longformer and ahead of
+//! Performer/Reformer at this scale.
+//!
+//! Env: YOSO_T3_STEPS (default 40), YOSO_T3_FULL=1 for all 13 variants.
+
+use std::io::Write;
+use std::path::Path;
+use yoso::data::lra::{LraGenerator, LraTask};
+use yoso::metrics::Recorder;
+use yoso::runtime::Runtime;
+use yoso::train::{ClsSource, Trainer};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    yoso::util::log::init_from_env();
+    let steps = env_usize("YOSO_T3_STEPS", 40);
+    let full = std::env::var("YOSO_T3_FULL").is_ok();
+    let variants: Vec<&str> = if full {
+        vec!["none", "softmax", "yoso_e", "yoso_32", "star_yoso_16",
+             "yoso_c_16", "star_yoso_c_16", "nystrom", "longformer",
+             "linformer", "reformer", "performer", "linear"]
+    } else {
+        vec!["none", "softmax", "yoso_e", "yoso_32", "nystrom", "performer"]
+    };
+    let tasks = LraTask::all();
+
+    let rt = Runtime::open(Path::new("artifacts"))?;
+    std::fs::create_dir_all("results")?;
+    let mut csv = std::fs::File::create("results/table3_lra.csv")?;
+    writeln!(csv, "variant,task,accuracy")?;
+
+    println!("Table 3 — LRA-style accuracy ({steps} steps per cell, n = 256)\n");
+    print!("{:<16}", "variant");
+    for t in &tasks {
+        print!("{:>11}", t.name());
+    }
+    println!("{:>9}", "avg");
+
+    for variant in &variants {
+        print!("{variant:<16}");
+        let mut sum = 0.0;
+        for task in &tasks {
+            let mut trainer = Trainer::new(
+                &rt,
+                &format!("train_lra_{variant}"),
+                Some(&format!("eval_lra_{variant}")),
+                42,
+                None,
+            )?;
+            let src = ClsSource::Lra(LraGenerator::new(*task, 256, 42));
+            let mut rec = Recorder::new();
+            trainer.run(&src, steps, 2e-3, 0, 0, 0, &mut rec)?;
+            let eval = trainer.evaluate(&src, 4)?;
+            writeln!(csv, "{variant},{},{}", task.name(), eval.accuracy)?;
+            print!("{:>11.3}", eval.accuracy);
+            sum += eval.accuracy;
+        }
+        println!("{:>9.3}", sum / tasks.len() as f64);
+    }
+    println!("\n-> results/table3_lra.csv");
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! Linear Transformer (Katharopoulos et al., 2020): kernelized attention
+//! with the elu(x)+1 feature map — O(n * d^2), the simplest linear
+//! baseline in the paper's §2.2 taxonomy.
+
+use super::Attention;
+use crate::tensor::{linalg, Mat};
+use crate::util::Rng;
+
+pub struct LinearTransformer;
+
+fn elu1(x: f32) -> f32 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp() // elu(x) + 1 = exp(x) for x <= 0
+    }
+}
+
+impl Attention for LinearTransformer {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        let phi_q = q.map(elu1); // (n, d)
+        let phi_k = k.map(elu1);
+        // kv = phi_k^T v : (d, dv); ksum = sum_j phi_k_j : (d,)
+        let kv = phi_k.t().matmul(v);
+        let mut ksum = vec![0.0f32; phi_k.cols];
+        for j in 0..phi_k.rows {
+            for (s, x) in ksum.iter_mut().zip(phi_k.row(j)) {
+                *s += x;
+            }
+        }
+        let mut out = phi_q.matmul(&kv); // (n, dv)
+        for i in 0..out.rows {
+            let z = linalg::dot(phi_q.row(i), &ksum).max(1e-6);
+            let inv = 1.0 / z;
+            for x in out.row_mut(i) {
+                *x *= inv;
+            }
+        }
+        out
+    }
+
+    fn workspace_bytes(&self, _n: usize, d: usize) -> usize {
+        (d * d + d) * 4
+    }
+}
+
+/// Depthwise convolution residual on values — the YOSO-C / Nyströmformer
+/// augmentation (§4.2): one 1-D filter applied along the token axis,
+/// added to the attention output.
+pub fn depthwise_conv_residual(v: &Mat, kernel: &[f32]) -> Mat {
+    let n = v.rows;
+    let dv = v.cols;
+    let ks = kernel.len();
+    let half = ks / 2;
+    let mut out = Mat::zeros(n, dv);
+    for i in 0..n {
+        for (t, &w) in kernel.iter().enumerate() {
+            let j = i as isize + t as isize - half as isize;
+            if j < 0 || j >= n as isize {
+                continue;
+            }
+            let src = v.row(j as usize);
+            let dst = out.row_mut(i);
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += w * s;
+            }
+        }
+    }
+    out
+}
+
+/// YOSO-C: sampled YOSO attention plus a depthwise conv residual.
+pub struct YosoConv {
+    pub inner: super::yoso::YosoAttention,
+    pub kernel: Vec<f32>,
+}
+
+impl YosoConv {
+    pub fn new(tau: usize, m: usize, conv_size: usize, rng: &mut Rng) -> Self {
+        let mut kernel: Vec<f32> = (0..conv_size).map(|_| 0.02 * rng.normal()).collect();
+        kernel[conv_size / 2] += 1.0; // identity-ish init, as in L2
+        YosoConv { inner: super::yoso::YosoAttention::new(tau, m, false), kernel }
+    }
+}
+
+impl Attention for YosoConv {
+    fn name(&self) -> &'static str {
+        "yoso_c"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, rng: &mut Rng) -> Mat {
+        let mut out = self.inner.forward_raw(q, k, v, rng);
+        out.add_assign(&depthwise_conv_residual(v, &self.kernel));
+        out.l2_normalize_rows();
+        out
+    }
+
+    fn workspace_bytes(&self, n: usize, d: usize) -> usize {
+        self.inner.workspace_bytes(n, d) + n * d * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SoftmaxAttention;
+
+    #[test]
+    fn constant_values_are_preserved() {
+        // convex weights: constant V maps to the same constant
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(32, 8, 1.0, &mut rng);
+        let k = Mat::randn(32, 8, 1.0, &mut rng);
+        let v = Mat::from_fn(32, 8, |_, _| 2.0);
+        let out = LinearTransformer.forward(&q, &k, &v, &mut rng);
+        for x in &out.data {
+            assert!((x - 2.0).abs() < 1e-4, "{x}");
+        }
+    }
+
+    #[test]
+    fn tracks_softmax_at_low_temperature() {
+        // with small-magnitude q/k both reduce to near-uniform averaging
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(24, 8, 0.05, &mut rng);
+        let k = Mat::randn(24, 8, 0.05, &mut rng);
+        let v = Mat::randn(24, 8, 1.0, &mut rng);
+        let a = LinearTransformer.forward(&q, &k, &v, &mut rng);
+        let b = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+        assert!(a.max_abs_diff(&b) < 0.05, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn conv_identity_kernel_is_identity() {
+        let mut rng = Rng::new(2);
+        let v = Mat::randn(16, 4, 1.0, &mut rng);
+        let out = depthwise_conv_residual(&v, &[0.0, 1.0, 0.0]);
+        assert!(out.max_abs_diff(&v) < 1e-6);
+    }
+
+    #[test]
+    fn conv_shift_kernel_shifts() {
+        let mut rng = Rng::new(3);
+        let v = Mat::randn(16, 4, 1.0, &mut rng);
+        // kernel [1, 0, 0] with center at index 1 takes the previous row
+        let out = depthwise_conv_residual(&v, &[1.0, 0.0, 0.0]);
+        for i in 1..16 {
+            for j in 0..4 {
+                assert!((out.at(i, j) - v.at(i - 1, j)).abs() < 1e-6);
+            }
+        }
+        // first row had no left neighbor
+        assert!(out.row(0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn yoso_c_finite_and_unit() {
+        let mut rng = Rng::new(4);
+        let q = Mat::randn(64, 16, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(64, 16, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(64, 16, 1.0, &mut rng);
+        let yc = YosoConv::new(6, 8, 9, &mut rng);
+        let out = yc.forward(&q, &k, &v, &mut rng);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        for i in 0..out.rows {
+            let norm: f32 = out.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(norm <= 1.0 + 1e-4);
+        }
+    }
+}

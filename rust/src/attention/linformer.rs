@@ -1,0 +1,97 @@
+//! Linformer (Wang et al., 2020): project keys/values along the sequence
+//! axis to a fixed dimension k, then exact softmax over the projected
+//! sequence — O(n * k).
+
+use super::Attention;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+pub struct Linformer {
+    pub k_proj: usize,
+    /// (max_n, k) shared projection; rows beyond the current n are unused.
+    proj: Mat,
+}
+
+impl Linformer {
+    pub fn new(rng: &mut Rng, k_proj: usize, _d: usize) -> Self {
+        // Shared E = F projection as in the paper's most efficient setting.
+        // Sized lazily up to 16k tokens.
+        let max_n = 16384;
+        let std = 1.0 / (k_proj as f32).sqrt();
+        Linformer { k_proj, proj: Mat::randn(max_n, k_proj, std, rng) }
+    }
+
+    fn project(&self, x: &Mat) -> Mat {
+        // (k, n) @ (n, d) using the first n rows of proj
+        let n = x.rows;
+        let mut out = Mat::zeros(self.k_proj, x.cols);
+        for i in 0..n {
+            let w = self.proj.row(i);
+            let xr = x.row(i);
+            for (kk, wk) in w.iter().enumerate().take(self.k_proj) {
+                let dst = out.row_mut(kk);
+                for (d, xv) in dst.iter_mut().zip(xr) {
+                    *d += wk * xv;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Attention for Linformer {
+    fn name(&self) -> &'static str {
+        "linformer"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        let kp = self.project(k); // (kproj, d)
+        let vp = self.project(v); // (kproj, dv)
+        let mut scores = q.matmul_t(&kp); // (n, kproj)
+        scores.scale(1.0 / (q.cols as f32).sqrt());
+        scores.softmax_rows();
+        scores.matmul(&vp)
+    }
+
+    fn workspace_bytes(&self, n: usize, d: usize) -> usize {
+        (n * self.k_proj + 2 * self.k_proj * d) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape_and_finite() {
+        let mut rng = Rng::new(0);
+        let lin = Linformer::new(&mut rng, 32, 16);
+        let q = Mat::randn(128, 16, 1.0, &mut rng);
+        let k = Mat::randn(128, 16, 1.0, &mut rng);
+        let v = Mat::randn(128, 16, 1.0, &mut rng);
+        let out = lin.forward(&q, &k, &v, &mut rng);
+        assert_eq!((out.rows, out.cols), (128, 16));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn output_is_convex_combination_of_projected_values() {
+        // Softmax rows are convex weights over the *projected* values, so
+        // every output entry lies within that column's projected range.
+        let mut rng = Rng::new(1);
+        let lin = Linformer::new(&mut rng, 16, 8);
+        let q = Mat::randn(64, 8, 1.0, &mut rng);
+        let k = Mat::randn(64, 8, 1.0, &mut rng);
+        let v = Mat::randn(64, 8, 1.0, &mut rng);
+        let vp = lin.project(&v);
+        let out = lin.forward(&q, &k, &v, &mut rng);
+        for j in 0..8 {
+            let lo = (0..vp.rows).map(|i| vp.at(i, j)).fold(f32::INFINITY, f32::min);
+            let hi = (0..vp.rows).map(|i| vp.at(i, j)).fold(f32::NEG_INFINITY, f32::max);
+            for i in 0..out.rows {
+                let x = out.at(i, j);
+                assert!(x >= lo - 1e-4 && x <= hi + 1e-4, "({i},{j}): {x} not in [{lo},{hi}]");
+            }
+        }
+    }
+}

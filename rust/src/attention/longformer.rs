@@ -1,0 +1,91 @@
+//! Longformer (Beltagy et al., 2020): sliding-window attention, the true
+//! O(n * w) banded kernel (each query attends to +-window neighbors).
+
+use super::Attention;
+use crate::tensor::{linalg, Mat};
+use crate::util::Rng;
+
+pub struct Longformer {
+    pub window: usize,
+}
+
+impl Attention for Longformer {
+    fn name(&self) -> &'static str {
+        "longformer"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        let n = q.rows;
+        let d = q.cols;
+        let dv = v.cols;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = Mat::zeros(n, dv);
+        let mut scores = vec![0.0f32; 2 * self.window + 1];
+        for i in 0..n {
+            let lo = i.saturating_sub(self.window);
+            let hi = (i + self.window + 1).min(n);
+            let qrow = q.row(i);
+            let mut mx = f32::NEG_INFINITY;
+            for (s, j) in (lo..hi).enumerate() {
+                scores[s] = linalg::dot(qrow, k.row(j)) * scale;
+                mx = mx.max(scores[s]);
+            }
+            let mut z = 0.0;
+            for s in scores.iter_mut().take(hi - lo) {
+                *s = (*s - mx).exp();
+                z += *s;
+            }
+            let orow = out.row_mut(i);
+            for (s, j) in (lo..hi).enumerate() {
+                linalg::axpy(scores[s] / z, v.row(j), orow);
+            }
+        }
+        out
+    }
+
+    fn workspace_bytes(&self, _n: usize, _d: usize) -> usize {
+        (2 * self.window + 1) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SoftmaxAttention;
+
+    #[test]
+    fn full_window_equals_softmax() {
+        // window >= n reproduces exact softmax attention — the same
+        // property the paper notes for Longformer at 512/512.
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(24, 8, 1.0, &mut rng);
+        let k = Mat::randn(24, 8, 1.0, &mut rng);
+        let v = Mat::randn(24, 8, 1.0, &mut rng);
+        let full = Longformer { window: 24 }.forward(&q, &k, &v, &mut rng);
+        let exact = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+        assert!(full.max_abs_diff(&exact) < 1e-4);
+    }
+
+    #[test]
+    fn out_of_window_tokens_ignored() {
+        // Values far outside the window must not influence the output.
+        let mut rng = Rng::new(1);
+        let n = 64;
+        let q = Mat::randn(n, 8, 1.0, &mut rng);
+        let k = Mat::randn(n, 8, 1.0, &mut rng);
+        let mut v1 = Mat::randn(n, 8, 1.0, &mut rng);
+        let mut v2 = v1.clone();
+        // perturb a value 40 positions away from token 0
+        for j in 0..8 {
+            v2.set(50, j, 100.0);
+        }
+        let a1 = Longformer { window: 4 }.forward(&q, &k, &v1, &mut rng);
+        let a2 = Longformer { window: 4 }.forward(&q, &k, &v2, &mut rng);
+        for j in 0..8 {
+            assert_eq!(a1.at(0, j), a2.at(0, j));
+        }
+        // but it does influence its neighbors
+        assert!(a1.max_abs_diff(&a2) > 0.1);
+        v1.set(0, 0, v1.at(0, 0)); // silence unused-mut lint path
+    }
+}

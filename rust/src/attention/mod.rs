@@ -1,0 +1,126 @@
+//! Pure-Rust attention library: YOSO and every baseline the paper
+//! compares against (§4.2), all behind one trait.
+//!
+//! This library is the substrate for the efficiency study (Figure 7 /
+//! Table 1), the approximation studies (Figures 1, 6, 8), and the
+//! serving path's CPU fallback. Training gradients live in the L2 HLO
+//! artifacts; these implementations are forward-only.
+//!
+//! Every implementation reports its theoretical auxiliary-memory
+//! footprint (`workspace_bytes`) so the memory curves of Figure 7 can be
+//! reproduced both analytically and via the counting allocator in
+//! `bench_support`.
+
+pub mod linear;
+pub mod linformer;
+pub mod longformer;
+pub mod nystrom;
+pub mod performer;
+pub mod reformer;
+pub mod softmax;
+pub mod yoso;
+
+pub use linear::{LinearTransformer, YosoConv};
+pub use linformer::Linformer;
+pub use longformer::Longformer;
+pub use nystrom::Nystromformer;
+pub use performer::Performer;
+pub use reformer::Reformer;
+pub use softmax::SoftmaxAttention;
+pub use yoso::{YosoAttention, YosoE};
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Self-attention over per-head matrices. q, k: (n, d); v: (n, dv).
+pub trait Attention {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Compute the attention output (n, dv).
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, rng: &mut Rng) -> Mat;
+
+    /// Theoretical auxiliary memory (bytes) beyond inputs/outputs for a
+    /// sequence length n and head dim d — the Figure 7 memory model.
+    fn workspace_bytes(&self, n: usize, d: usize) -> usize;
+}
+
+/// Identity mixing (the LRA "None" row).
+pub struct NoneAttention;
+
+impl Attention for NoneAttention {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn forward(&self, _q: &Mat, _k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        v.clone()
+    }
+
+    fn workspace_bytes(&self, _n: usize, _d: usize) -> usize {
+        0
+    }
+}
+
+/// Construct a variant by name with the paper's §4.2 hyperparameters.
+pub fn by_name(name: &str, rng: &mut Rng, d: usize) -> Box<dyn Attention> {
+    match name {
+        "softmax" => Box::new(SoftmaxAttention),
+        "none" => Box::new(NoneAttention),
+        "yoso_e" => Box::new(YosoE { tau: 8 }),
+        "linear" => Box::new(LinearTransformer),
+        name if name.starts_with("yoso_fast_") => {
+            // fast-Hadamard projection variant (the paper's §3.2 speed-up)
+            let m: usize = name["yoso_fast_".len()..].parse().unwrap_or(32);
+            Box::new(YosoAttention::new(8, m, true))
+        }
+        name if name.starts_with("yoso_c_") => {
+            let m: usize = name["yoso_c_".len()..].parse().unwrap_or(16);
+            Box::new(YosoConv::new(8, m, 9, rng))
+        }
+        name if name.starts_with("yoso_") => {
+            let m: usize = name["yoso_".len()..].parse().unwrap_or(32);
+            Box::new(YosoAttention::new(8, m, false))
+        }
+        "linformer" => Box::new(Linformer::new(rng, 256, d)),
+        "performer" => Box::new(Performer { n_features: 256 }),
+        "longformer" => Box::new(Longformer { window: 256 }),
+        "reformer" => Box::new(Reformer { rounds: 2, bucket_bits: 6 }),
+        "nystrom" => Box::new(Nystromformer { landmarks: 64 }),
+        other => panic!("unknown attention variant {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize, d: usize) -> (Mat, Mat, Mat, Rng) {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        (q, k, v, rng)
+    }
+
+    #[test]
+    fn all_variants_produce_finite_output() {
+        let (q, k, v, mut rng) = setup(64, 32);
+        for name in ["softmax", "none", "yoso_e", "yoso_16", "yoso_fast_16",
+                     "yoso_c_16", "linear", "linformer", "performer",
+                     "longformer", "reformer", "nystrom"] {
+            let mut r2 = Rng::new(1);
+            let attn = by_name(name, &mut r2, 32);
+            let out = attn.forward(&q, &k, &v, &mut rng);
+            assert_eq!((out.rows, out.cols), (64, 32), "{name}");
+            assert!(out.data.iter().all(|x| x.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let (q, k, v, mut rng) = setup(16, 8);
+        let out = NoneAttention.forward(&q, &k, &v, &mut rng);
+        assert_eq!(out, v);
+    }
+}

@@ -1,0 +1,134 @@
+//! Nyströmformer (Xiong et al., 2021): landmark-based attention with an
+//! iterative (Newton–Schulz) pseudo-inverse — O(n * l).
+
+use super::Attention;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+pub struct Nystromformer {
+    pub landmarks: usize,
+}
+
+fn softmax_scaled(mut scores: Mat, scale: f32) -> Mat {
+    scores.scale(scale);
+    scores.softmax_rows();
+    scores
+}
+
+/// Newton–Schulz pseudo-inverse, 6 iterations as in the paper.
+fn pinv_ns(a: &Mat) -> Mat {
+    let l = a.rows;
+    let max_col: f32 = (0..l)
+        .map(|j| (0..l).map(|i| a.at(i, j).abs()).sum::<f32>())
+        .fold(0.0, f32::max);
+    let max_row: f32 = (0..l)
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+        .fold(0.0, f32::max);
+    let mut z = a.t();
+    z.scale(1.0 / (max_col * max_row));
+    let eye = Mat::from_fn(l, l, |i, j| if i == j { 1.0 } else { 0.0 });
+    for _ in 0..6 {
+        // z <- 0.25 z (13 I - az (15 I - az (7 I - az))), az = a z
+        // (cubic Newton–Schulz from Xiong et al.; fixed point az = I)
+        let az = a.matmul(&z);
+        let az2 = az.matmul(&az);
+        let az3 = az2.matmul(&az);
+        let mut bracket = Mat::zeros(l, l);
+        for idx in 0..l * l {
+            bracket.data[idx] = 13.0 * eye.data[idx] - 15.0 * az.data[idx]
+                + 7.0 * az2.data[idx]
+                - az3.data[idx];
+        }
+        z = z.matmul(&bracket);
+        z.scale(0.25);
+    }
+    z
+}
+
+impl Attention for Nystromformer {
+    fn name(&self) -> &'static str {
+        "nystrom"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        let n = q.rows;
+        let d = q.cols;
+        let l = self.landmarks.min(n);
+        let seg = n / l;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // segment-mean landmarks
+        let mk_landmarks = |x: &Mat| {
+            Mat::from_fn(l, d, |i, j| {
+                let lo = i * seg;
+                let hi = if i == l - 1 { n } else { (i + 1) * seg };
+                (lo..hi).map(|r| x.at(r, j)).sum::<f32>() / (hi - lo) as f32
+            })
+        };
+        let ql = mk_landmarks(q);
+        let kl = mk_landmarks(k);
+
+        let f = softmax_scaled(q.matmul_t(&kl), scale); // (n, l)
+        let a = softmax_scaled(ql.matmul_t(&kl), scale); // (l, l)
+        let b = softmax_scaled(ql.matmul_t(k), scale); // (l, n)
+
+        let z = pinv_ns(&a);
+        let bv = b.matmul(v); // (l, dv)
+        let zbv = z.matmul(&bv); // (l, dv)
+        f.matmul(&zbv)
+    }
+
+    fn workspace_bytes(&self, n: usize, d: usize) -> usize {
+        let l = self.landmarks;
+        (2 * n * l + 3 * l * l + 2 * l * d) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SoftmaxAttention;
+
+    #[test]
+    fn pinv_of_identity_is_identity() {
+        let eye = Mat::from_fn(8, 8, |i, j| if i == j { 1.0 } else { 0.0 });
+        let z = pinv_ns(&eye);
+        assert!(z.max_abs_diff(&eye) < 1e-3);
+    }
+
+    #[test]
+    fn pinv_inverts_diagonally_dominant() {
+        let mut rng = Rng::new(0);
+        let mut a = Mat::randn(6, 6, 0.05, &mut rng);
+        for i in 0..6 {
+            let x = a.at(i, i);
+            a.set(i, i, x + 1.0);
+        }
+        let z = pinv_ns(&a);
+        let prod = a.matmul(&z);
+        let eye = Mat::from_fn(6, 6, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert!(prod.max_abs_diff(&eye) < 1e-2, "{}", prod.max_abs_diff(&eye));
+    }
+
+    #[test]
+    fn landmarks_equal_n_recovers_softmax_approximately() {
+        let mut rng = Rng::new(1);
+        let n = 32;
+        let q = Mat::randn(n, 8, 0.7, &mut rng);
+        let k = Mat::randn(n, 8, 0.7, &mut rng);
+        let v = Mat::randn(n, 8, 1.0, &mut rng);
+        let ny = Nystromformer { landmarks: n }.forward(&q, &k, &v, &mut rng);
+        let sm = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+        assert!(ny.max_abs_diff(&sm) < 0.15, "{}", ny.max_abs_diff(&sm));
+    }
+
+    #[test]
+    fn finite_on_long_sequences() {
+        let mut rng = Rng::new(2);
+        let q = Mat::randn(512, 16, 1.0, &mut rng);
+        let k = Mat::randn(512, 16, 1.0, &mut rng);
+        let v = Mat::randn(512, 16, 1.0, &mut rng);
+        let out = Nystromformer { landmarks: 64 }.forward(&q, &k, &v, &mut rng);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

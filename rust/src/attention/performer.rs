@@ -1,0 +1,106 @@
+//! Performer (Choromanski et al., 2021): FAVOR+ positive random features
+//! approximating the softmax kernel — O(n * r * d).
+
+use super::Attention;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+pub struct Performer {
+    pub n_features: usize,
+}
+
+impl Performer {
+    fn features(&self, x: &Mat, w: &Mat) -> Mat {
+        // phi(x) = exp(w.x - |x|^2/2 - max_row) / sqrt(r)
+        let mut proj = x.matmul_t(w); // (n, r)
+        let r = self.n_features as f32;
+        for i in 0..x.rows {
+            let sq: f32 = x.row(i).iter().map(|a| a * a).sum::<f32>() * 0.5;
+            let row = proj.row_mut(i);
+            let mx = row
+                .iter()
+                .map(|p| p - sq)
+                .fold(f32::NEG_INFINITY, f32::max);
+            for p in row.iter_mut() {
+                *p = ((*p - sq) - mx).exp() / r.sqrt();
+            }
+        }
+        proj
+    }
+}
+
+impl Attention for Performer {
+    fn name(&self) -> &'static str {
+        "performer"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, rng: &mut Rng) -> Mat {
+        let d = q.cols;
+        let w = Mat::randn(self.n_features, d, 1.0, rng);
+        let scale = (d as f32).powf(-0.25);
+        let qs = q.map(|x| x * scale);
+        let ks = k.map(|x| x * scale);
+        let phi_q = self.features(&qs, &w); // (n, r)
+        let phi_k = self.features(&ks, &w); // (n, r)
+
+        let kv = phi_k.t().matmul(v); // (r, dv)
+        let mut out = phi_q.matmul(&kv); // (n, dv)
+        // normalizer z = phi_q . sum_j phi_k_j
+        let mut ksum = vec![0.0f32; self.n_features];
+        for j in 0..phi_k.rows {
+            for (s, x) in ksum.iter_mut().zip(phi_k.row(j)) {
+                *s += x;
+            }
+        }
+        for i in 0..out.rows {
+            let z: f32 = crate::tensor::linalg::dot(phi_q.row(i), &ksum);
+            let inv = 1.0 / z.max(1e-6);
+            for x in out.row_mut(i) {
+                *x *= inv;
+            }
+        }
+        out
+    }
+
+    fn workspace_bytes(&self, n: usize, d: usize) -> usize {
+        (2 * n * self.n_features + self.n_features * d) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SoftmaxAttention;
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        // FAVOR+ weights are positive and normalized, so constant values
+        // must map to (approximately) the same constant.
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(64, 16, 1.0, &mut rng);
+        let k = Mat::randn(64, 16, 1.0, &mut rng);
+        let v = Mat::from_fn(64, 8, |_, _| 3.0);
+        let out = Performer { n_features: 128 }.forward(&q, &k, &v, &mut rng);
+        for x in &out.data {
+            assert!((x - 3.0).abs() < 1e-3, "{x}");
+        }
+    }
+
+    #[test]
+    fn approximates_softmax_with_many_features() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(32, 8, 0.5, &mut rng);
+        let k = Mat::randn(32, 8, 0.5, &mut rng);
+        let v = Mat::randn(32, 8, 1.0, &mut rng);
+        let exact = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+        // average over feature draws
+        let mut acc = Mat::zeros(32, 8);
+        let reps = 20;
+        for _ in 0..reps {
+            let est = Performer { n_features: 512 }.forward(&q, &k, &v, &mut rng);
+            acc.add_assign(&est);
+        }
+        acc.scale(1.0 / reps as f32);
+        assert!(acc.max_abs_diff(&exact) < 0.25, "{}", acc.max_abs_diff(&exact));
+    }
+}

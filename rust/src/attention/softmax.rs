@@ -1,0 +1,75 @@
+//! Exact softmax attention — the O(n^2) baseline the paper approximates.
+
+use super::Attention;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+pub struct SoftmaxAttention;
+
+impl Attention for SoftmaxAttention {
+    fn name(&self) -> &'static str {
+        "softmax"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        let mut scores = q.matmul_t(k); // (n, n)
+        scores.scale(1.0 / (q.cols as f32).sqrt());
+        scores.softmax_rows();
+        scores.matmul(v)
+    }
+
+    fn workspace_bytes(&self, n: usize, _d: usize) -> usize {
+        n * n * 4 // the full attention matrix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_when_keys_identical() {
+        // If all keys are identical, attention output = mean-ish of values
+        // (every row of the softmax matrix is uniform).
+        let mut rng = Rng::new(0);
+        let n = 8;
+        let d = 4;
+        let q = Mat::randn(n, d, 1.0, &mut rng);
+        let k = Mat::from_fn(n, d, |_, j| if j == 0 { 1.0 } else { 0.0 });
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let out = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+        let mut mean = vec![0.0f32; d];
+        for i in 0..n {
+            for j in 0..d {
+                mean[j] += v.at(i, j) / n as f32;
+            }
+        }
+        for i in 0..n {
+            for j in 0..d {
+                assert!((out.at(i, j) - mean[j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sharp_peak_selects_matching_value() {
+        // Query exactly equal to one key (scaled up) attends mostly there.
+        let d = 16;
+        let n = 8;
+        let mut rng = Rng::new(1);
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let mut q = Mat::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                q.set(i, j, k.at(i, j) * 40.0);
+            }
+        }
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let out = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+        for i in 0..n {
+            for j in 0..d {
+                assert!((out.at(i, j) - v.at(i, j)).abs() < 0.15);
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! YOSO attention: the paper's Figure-3 algorithm, verbatim.
+//!
+//! For each of m hashes: hash keys, scatter-add each value row into the
+//! bucket table `H[f(K_j)] += V_j` (size 2^tau x dv, *independent* of
+//! bucket skew — Remark 3), then gather `Y_i += H[f(Q_i)]`. Averaging
+//! over hashes and l2-normalizing gives N-YOSO. The table is reused
+//! across hashes, so auxiliary memory is O(2^tau * dv), the paper's
+//! memory-optimized variant.
+//!
+//! `YosoE` computes the expectation (infinite hashes) exactly — O(n^2) —
+//! and is the reference for Figures 1, 6, 8.
+
+use super::Attention;
+use crate::lsh::{collision_probability, Hasher, HyperplaneHasher,
+                 HadamardHasher};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Sampled YOSO-m attention.
+pub struct YosoAttention {
+    pub tau: usize,
+    pub m: usize,
+    /// Use the fast-Hadamard projection (requires d to be a power of two).
+    pub fast_hash: bool,
+    /// l2-normalize the output rows (N-YOSO). On by default.
+    pub normalize: bool,
+}
+
+impl YosoAttention {
+    pub fn new(tau: usize, m: usize, fast_hash: bool) -> Self {
+        YosoAttention { tau, m, fast_hash, normalize: true }
+    }
+
+    /// Forward pass returning the raw (unnormalized) B-hat V estimate.
+    /// Queries and keys may differ in count (cross-attention / probes).
+    pub fn forward_raw(&self, q: &Mat, k: &Mat, v: &Mat, rng: &mut Rng) -> Mat {
+        let nq = q.rows;
+        let nk = k.rows;
+        let d = q.cols;
+        let dv = v.cols;
+        assert_eq!(k.cols, d);
+        assert_eq!(v.rows, nk);
+
+        let qn = q.unit_rows();
+        let kn = k.unit_rows();
+        let (codes_q, codes_k) = if self.fast_hash {
+            let hasher = HadamardHasher::new(rng, self.m, d, self.tau);
+            (hasher.hash_all(&qn), hasher.hash_all(&kn))
+        } else {
+            let hasher = HyperplaneHasher::new(rng, self.m, d, self.tau);
+            (hasher.hash_all(&qn), hasher.hash_all(&kn))
+        };
+
+        let n_buckets = 1usize << self.tau;
+        let mut table = vec![0.0f32; n_buckets * dv]; // reused across hashes
+        let mut out = Mat::zeros(nq, dv);
+        let inv_m = 1.0 / self.m as f32;
+
+        for h in 0..self.m {
+            table.fill(0.0);
+            // scatter: H[f(K_j)] += V_j
+            for j in 0..nk {
+                let b = codes_k[h * nk + j] as usize;
+                let dst = &mut table[b * dv..(b + 1) * dv];
+                let src = v.row(j);
+                for (t, s) in dst.iter_mut().zip(src) {
+                    *t += s;
+                }
+            }
+            // gather: Y_i += H[f(Q_i)] / m
+            for i in 0..nq {
+                let b = codes_q[h * nq + i] as usize;
+                let src = &table[b * dv..(b + 1) * dv];
+                let dst = out.row_mut(i);
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += inv_m * s;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Attention for YosoAttention {
+    fn name(&self) -> &'static str {
+        "yoso"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, rng: &mut Rng) -> Mat {
+        let mut out = self.forward_raw(q, k, v, rng);
+        if self.normalize {
+            out.l2_normalize_rows();
+        }
+        out
+    }
+
+    fn workspace_bytes(&self, n: usize, d: usize) -> usize {
+        // reused bucket table + packed codes for both sides
+        (1 << self.tau) * d * 4 + 2 * self.m * n * 4
+    }
+}
+
+/// Expectation attention E[B(Q,K)] V — "YOSO-E", infinite hashes.
+pub struct YosoE {
+    pub tau: usize,
+}
+
+impl YosoE {
+    pub fn forward_raw(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let qn = q.unit_rows();
+        let kn = k.unit_rows();
+        let mut w = qn.matmul_t(&kn);
+        for x in w.data.iter_mut() {
+            *x = collision_probability(*x as f64, self.tau as u32) as f32;
+        }
+        w.matmul(v)
+    }
+}
+
+impl Attention for YosoE {
+    fn name(&self) -> &'static str {
+        "yoso_e"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _rng: &mut Rng) -> Mat {
+        let mut out = self.forward_raw(q, k, v);
+        out.l2_normalize_rows();
+        out
+    }
+
+    fn workspace_bytes(&self, n: usize, _d: usize) -> usize {
+        n * n * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::radians_between;
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat, Rng) {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        (q, k, v, rng)
+    }
+
+    #[test]
+    fn sampled_converges_to_expectation() {
+        // Core estimator property: YOSO-m -> YOSO-E as m grows.
+        let (q, k, v, mut rng) = setup(48, 16, 0);
+        let e = YosoE { tau: 4 }.forward_raw(&q, &k, &v);
+        let mut errs = Vec::new();
+        for m in [8usize, 64, 512] {
+            let y = YosoAttention::new(4, m, false).forward_raw(&q, &k, &v, &mut rng);
+            let err: f64 = (0..q.rows)
+                .map(|i| radians_between(y.row(i), e.row(i)))
+                .sum::<f64>()
+                / q.rows as f64;
+            errs.push(err);
+        }
+        assert!(errs[2] < errs[0], "error should shrink with m: {errs:?}");
+        assert!(errs[2] < 0.2, "m=512 should be close: {errs:?}");
+    }
+
+    #[test]
+    fn bucket_table_matches_naive_bernoulli() {
+        // The table scatter/gather must equal the naive n^2 realization
+        // with the same codes. We re-derive codes with the same RNG seed.
+        let (q, k, v, _) = setup(32, 16, 3);
+        let tau = 5;
+        let m = 7;
+        let mut rng1 = Rng::new(99);
+        let y = YosoAttention::new(tau, m, false).forward_raw(&q, &k, &v, &mut rng1);
+
+        let mut rng2 = Rng::new(99);
+        let hasher = HyperplaneHasher::new(&mut rng2, m, 16, tau);
+        let cq = hasher.hash_all(&q.unit_rows());
+        let ck = hasher.hash_all(&k.unit_rows());
+        let n = 32;
+        let mut naive = Mat::zeros(n, v.cols);
+        for h in 0..m {
+            for i in 0..n {
+                for j in 0..n {
+                    if cq[h * n + i] == ck[h * n + j] {
+                        for l in 0..v.cols {
+                            naive.data[i * v.cols + l] += v.at(j, l) / m as f32;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(y.max_abs_diff(&naive) < 1e-4);
+    }
+
+    #[test]
+    fn hadamard_variant_close_to_gaussian_in_expectation() {
+        let (q, k, v, mut rng) = setup(64, 32, 5);
+        let e = YosoE { tau: 4 }.forward_raw(&q, &k, &v);
+        let y = YosoAttention::new(4, 256, true).forward_raw(&q, &k, &v, &mut rng);
+        let err: f64 = (0..q.rows)
+            .map(|i| radians_between(y.row(i), e.row(i)))
+            .sum::<f64>()
+            / q.rows as f64;
+        assert!(err < 0.35, "hadamard-based estimate too far: {err}");
+    }
+
+    #[test]
+    fn normalized_output_is_unit() {
+        let (q, k, v, mut rng) = setup(32, 16, 7);
+        let out = YosoAttention::new(6, 16, false).forward(&q, &k, &v, &mut rng);
+        for i in 0..out.rows {
+            let norm: f32 = out.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(norm < 1.0 + 1e-4); // unit or (rarely) zero row
+        }
+    }
+
+    #[test]
+    fn workspace_independent_of_bucket_skew() {
+        // All keys identical => one bucket holds everything; table size
+        // must not change (the Remark-3 property).
+        let a = YosoAttention::new(8, 4, false);
+        assert_eq!(a.workspace_bytes(512, 64), a.workspace_bytes(512, 64));
+        let (q, _, v, mut rng) = setup(64, 16, 9);
+        let k_skewed = Mat::from_fn(64, 16, |_, j| if j == 0 { 1.0 } else { 0.0 });
+        let out = a.forward(&q, &k_skewed, &v, &mut rng);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,135 @@
+//! Bench harness (offline registry has no criterion): warmup + timed
+//! iterations with percentile reporting, plus a counting global allocator
+//! for peak-memory measurement (the Figure 7 memory axis).
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Counting allocator: tracks live and peak heap bytes. Install in a
+/// bench binary with:
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: yoso::bench_support::CountingAlloc = yoso::bench_support::CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) };
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+/// Reset the peak to the current live size and return a probe.
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Peak heap bytes since the last `reset_peak`.
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Timed benchmark: `warmup` unmeasured runs, then `iters` measured runs.
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub peak_bytes: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.3} ms  p50 {:>10.3}  p90 {:>10.3}  peak {:>10}",
+            self.name,
+            self.summary.mean * 1e3,
+            self.summary.p50 * 1e3,
+            self.summary.p90 * 1e3,
+            human_bytes(self.peak_bytes),
+        )
+    }
+}
+
+pub fn human_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Run a benchmark, measuring wall time and peak allocations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    reset_peak();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_secs());
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&times),
+        peak_bytes: peak_bytes().saturating_sub(live_bytes()),
+    }
+}
+
+/// Choose iteration count so a bench takes roughly `budget_secs`.
+pub fn calibrate_iters<F: FnMut()>(mut f: F, budget_secs: f64) -> usize {
+    let t = Timer::start();
+    f();
+    let one = t.elapsed_secs().max(1e-9);
+    ((budget_secs / one).round() as usize).clamp(3, 1000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let r = bench("noop-ish", 1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.summary.n, 10);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert!(human_bytes(2048).contains("KiB"));
+        assert!(human_bytes(5 << 20).contains("MiB"));
+    }
+
+    #[test]
+    fn calibrate_bounds() {
+        let it = calibrate_iters(|| std::thread::sleep(std::time::Duration::from_micros(10)), 0.01);
+        assert!((3..=1000).contains(&it));
+    }
+}

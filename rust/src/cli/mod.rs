@@ -1,0 +1,117 @@
+//! Hand-rolled CLI argument parser (offline registry has no clap).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional args,
+//! with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (std::env::args().skip(1) at the
+    /// call site). Tokens after `--` are positional verbatim.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        let mut raw = false;
+        while let Some(tok) = iter.next() {
+            if raw {
+                args.positional.push(tok);
+            } else if tok == "--" {
+                raw = true;
+            } else if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: a bare `--flag` followed by a non-dashed token consumes it
+        // as a value; flags must be last or use `--flag=` (documented).
+        let a = parse("train pos1 --steps 100 --lr=0.001 --verbose");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!((a.get_f64("lr", 0.0) - 0.001).abs() < 1e-12);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("also-missing", "d"), "d");
+        assert!(!a.has_flag("nope"));
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse("cmd -- --not-an-option");
+        assert_eq!(a.positional, vec!["cmd", "--not-an-option"]);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // a trailing --flag followed by a positional consumes it as value;
+        // flags must either be last or use --flag= form. Document behavior.
+        let a = parse("--check --steps 5");
+        assert!(a.has_flag("check"));
+        assert_eq!(a.get_usize("steps", 0), 5);
+    }
+}

@@ -1,0 +1,181 @@
+//! Typed run configuration, loadable from JSON files and overridable from
+//! the CLI — the launcher's single source of truth.
+
+use crate::cli::Args;
+use crate::json::{parse, Value};
+use std::path::Path;
+
+/// Which experiment family an invocation drives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// artifact directory (default "artifacts")
+    pub artifacts_dir: String,
+    /// results directory for CSV/JSON outputs (default "results")
+    pub results_dir: String,
+    /// checkpoint directory
+    pub checkpoint_dir: String,
+    pub seed: u64,
+    pub train: TrainConfig,
+    pub serve: ServeConfig,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// attention variant name as in the manifest (e.g. "yoso_32")
+    pub variant: String,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub lr: f64,
+    pub log_every: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub workers: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+            checkpoint_dir: "results/checkpoints".into(),
+            seed: 42,
+            train: TrainConfig {
+                variant: "yoso_32".into(),
+                steps: 200,
+                eval_every: 50,
+                eval_batches: 8,
+                lr: 1e-3,
+                log_every: 10,
+            },
+            serve: ServeConfig { max_batch: 16, max_wait_ms: 5, workers: 1 },
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; missing fields keep defaults.
+    pub fn from_file(path: &Path) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&v);
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, v: &Value) {
+        if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
+            self.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = v.get("results_dir").and_then(Value::as_str) {
+            self.results_dir = s.to_string();
+        }
+        if let Some(s) = v.get("checkpoint_dir").and_then(Value::as_str) {
+            self.checkpoint_dir = s.to_string();
+        }
+        if let Some(n) = v.get("seed").and_then(Value::as_i64) {
+            self.seed = n as u64;
+        }
+        if let Some(t) = v.get("train") {
+            if let Some(s) = t.get("variant").and_then(Value::as_str) {
+                self.train.variant = s.to_string();
+            }
+            if let Some(n) = t.get("steps").and_then(Value::as_usize) {
+                self.train.steps = n;
+            }
+            if let Some(n) = t.get("eval_every").and_then(Value::as_usize) {
+                self.train.eval_every = n;
+            }
+            if let Some(n) = t.get("eval_batches").and_then(Value::as_usize) {
+                self.train.eval_batches = n;
+            }
+            if let Some(n) = t.get("log_every").and_then(Value::as_usize) {
+                self.train.log_every = n;
+            }
+            if let Some(f) = t.get("lr").and_then(Value::as_f64) {
+                self.train.lr = f;
+            }
+        }
+        if let Some(s) = v.get("serve") {
+            if let Some(n) = s.get("max_batch").and_then(Value::as_usize) {
+                self.serve.max_batch = n;
+            }
+            if let Some(n) = s.get("max_wait_ms").and_then(Value::as_usize) {
+                self.serve.max_wait_ms = n as u64;
+            }
+            if let Some(n) = s.get("workers").and_then(Value::as_usize) {
+                self.serve.workers = n;
+            }
+        }
+    }
+
+    /// CLI overrides (take precedence over file values).
+    pub fn apply_args(&mut self, args: &Args) {
+        if let Some(s) = args.get("artifacts") {
+            self.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = args.get("results") {
+            self.results_dir = s.to_string();
+        }
+        if let Some(s) = args.get("variant") {
+            self.train.variant = s.to_string();
+        }
+        self.seed = args.get_usize("seed", self.seed as usize) as u64;
+        self.train.steps = args.get_usize("steps", self.train.steps);
+        self.train.eval_every = args.get_usize("eval-every", self.train.eval_every);
+        self.train.eval_batches =
+            args.get_usize("eval-batches", self.train.eval_batches);
+        self.train.lr = args.get_f64("lr", self.train.lr);
+        self.train.log_every = args.get_usize("log-every", self.train.log_every);
+        self.serve.max_batch = args.get_usize("max-batch", self.serve.max_batch);
+        self.serve.max_wait_ms =
+            args.get_usize("max-wait-ms", self.serve.max_wait_ms as usize) as u64;
+        self.serve.workers = args.get_usize("workers", self.serve.workers);
+    }
+
+    /// Resolve config: optional --config file, then CLI overrides.
+    pub fn resolve(args: &Args) -> anyhow::Result<RunConfig> {
+        let mut cfg = match args.get("config") {
+            Some(path) => RunConfig::from_file(Path::new(path))?,
+            None => RunConfig::default(),
+        };
+        cfg.apply_args(args);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_json_then_cli() {
+        let mut cfg = RunConfig::default();
+        let v = parse(
+            r#"{"seed": 9, "train": {"steps": 77, "lr": 0.5, "variant": "softmax"}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.train.steps, 77);
+        assert_eq!(cfg.train.variant, "softmax");
+        let args = Args::parse(
+            "--steps 5 --variant yoso_16".split_whitespace().map(String::from),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.train.steps, 5);
+        assert_eq!(cfg.train.variant, "yoso_16");
+        assert_eq!(cfg.seed, 9); // untouched by CLI
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&parse(r#"{"train": {}}"#).unwrap());
+        assert_eq!(cfg.train.steps, RunConfig::default().train.steps);
+    }
+}

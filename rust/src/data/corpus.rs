@@ -1,0 +1,155 @@
+//! "synthlang": a synthetic Zipf–Markov language.
+//!
+//! Substitute for BookCorpus/Wikipedia (see DESIGN.md). Properties that
+//! matter for the MLM/SOP pretraining signal:
+//!
+//! * Zipfian unigram distribution (like natural text);
+//! * deterministic-ish bigram structure (`succ(w)` follows w with
+//!   probability `coherence`) so MLM is learnable above the unigram
+//!   entropy floor;
+//! * sentence segmentation with topic drift so Sentence-Order-Prediction
+//!   is learnable: within a document, consecutive sentences share a topic
+//!   offset that advances slowly.
+
+use crate::util::rng::{Rng, Zipf};
+
+pub struct CorpusConfig {
+    pub vocab_words: usize,
+    /// probability the next token is `succ(prev)` rather than a fresh draw
+    pub coherence: f64,
+    pub sentence_len: (usize, usize),
+    pub sentences_per_doc: (usize, usize),
+    /// number of latent topics; tokens are biased toward a topic block
+    pub topics: usize,
+    pub zipf_s: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab_words: 2000,
+            coherence: 0.55,
+            sentence_len: (6, 24),
+            sentences_per_doc: (4, 12),
+            topics: 16,
+            zipf_s: 1.1,
+        }
+    }
+}
+
+/// A document is a list of sentences; a sentence a list of word ids in
+/// [0, vocab_words).
+pub struct Document {
+    pub sentences: Vec<Vec<u32>>,
+}
+
+pub struct CorpusGenerator {
+    cfg: CorpusConfig,
+    zipf: Zipf,
+}
+
+impl CorpusGenerator {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let zipf = Zipf::new(cfg.vocab_words, cfg.zipf_s);
+        CorpusGenerator { cfg, zipf }
+    }
+
+    /// Deterministic successor function: the learnable bigram structure.
+    pub fn succ(&self, w: u32) -> u32 {
+        ((w as u64 * 7 + 3) % self.cfg.vocab_words as u64) as u32
+    }
+
+    fn topic_word(&self, base: usize, topic: usize) -> u32 {
+        // shift a zipf draw into the topic's block of the vocabulary
+        let block = self.cfg.vocab_words / self.cfg.topics;
+        ((topic * block + base % block) % self.cfg.vocab_words) as u32
+    }
+
+    pub fn sentence(&self, rng: &mut Rng, topic: usize) -> Vec<u32> {
+        let (lo, hi) = self.cfg.sentence_len;
+        let len = rng.range(lo, hi + 1);
+        let mut out = Vec::with_capacity(len);
+        let mut prev: Option<u32> = None;
+        for _ in 0..len {
+            let w = match prev {
+                Some(p) if rng.uniform_f64() < self.cfg.coherence => self.succ(p),
+                _ => self.topic_word(self.zipf.sample(rng), topic),
+            };
+            out.push(w);
+            prev = Some(w);
+        }
+        out
+    }
+
+    pub fn document(&self, rng: &mut Rng) -> Document {
+        let (lo, hi) = self.cfg.sentences_per_doc;
+        let n = rng.range(lo, hi + 1);
+        let mut topic = rng.below(self.cfg.topics);
+        let mut sentences = Vec::with_capacity(n);
+        for _ in 0..n {
+            sentences.push(self.sentence(rng, topic));
+            // slow topic drift
+            if rng.uniform_f64() < 0.25 {
+                topic = (topic + 1) % self.cfg.topics;
+            }
+        }
+        Document { sentences }
+    }
+
+    pub fn vocab_words(&self) -> usize {
+        self.cfg.vocab_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentences_within_length_bounds() {
+        let g = CorpusGenerator::new(CorpusConfig::default());
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let s = g.sentence(&mut rng, 3);
+            assert!((6..=24).contains(&s.len()));
+            assert!(s.iter().all(|&w| (w as usize) < 2000));
+        }
+    }
+
+    #[test]
+    fn bigram_structure_present() {
+        // with coherence 0.55, succ(prev) should follow prev far more
+        // often than chance (1/vocab).
+        let g = CorpusGenerator::new(CorpusConfig::default());
+        let mut rng = Rng::new(1);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let s = g.sentence(&mut rng, 0);
+            for w in s.windows(2) {
+                total += 1;
+                if w[1] == g.succ(w[0]) {
+                    hits += 1;
+                }
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        assert!(rate > 0.4, "successor rate {rate}");
+    }
+
+    #[test]
+    fn documents_have_multiple_sentences() {
+        let g = CorpusGenerator::new(CorpusConfig::default());
+        let mut rng = Rng::new(2);
+        let d = g.document(&mut rng);
+        assert!(d.sentences.len() >= 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = CorpusGenerator::new(CorpusConfig::default());
+        let a = g.document(&mut Rng::new(7)).sentences;
+        let b = g.document(&mut Rng::new(7)).sentences;
+        assert_eq!(a, b);
+    }
+}

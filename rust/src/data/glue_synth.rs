@@ -1,0 +1,226 @@
+//! Synthetic GLUE-style downstream tasks (substitute for MRPC, SST-2,
+//! QNLI, QQP, MNLI — see DESIGN.md).
+//!
+//! Each task reuses the pretraining vocabulary/corpus so fine-tuning from
+//! a pretrained checkpoint measures exactly what Table 2 measures: does
+//! the attention approximation hurt transfer? Tasks:
+//!
+//! * `mrpc` / `qqp` — paraphrase detection: pair (s, s') where s' is a
+//!   light perturbation of s (positive) or an unrelated sentence
+//!   (negative).
+//! * `sst2`  — "sentiment": the sentence's topic block determines the
+//!   label (topic blocks act as sentiment lexica).
+//! * `qnli`  — question/answer relevance: pair shares topic or not.
+//! * `mnli`  — 3-way: paraphrase / same-topic / unrelated.
+
+use super::corpus::{CorpusConfig, CorpusGenerator};
+use super::tokenizer::{build_input, WordTokenizer};
+use super::ClsExample;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlueTask {
+    Mrpc,
+    Sst2,
+    Qnli,
+    Qqp,
+    Mnli,
+}
+
+impl GlueTask {
+    pub fn all() -> [GlueTask; 5] {
+        [GlueTask::Mrpc, GlueTask::Sst2, GlueTask::Qnli, GlueTask::Qqp, GlueTask::Mnli]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Mrpc => "mrpc",
+            GlueTask::Sst2 => "sst2",
+            GlueTask::Qnli => "qnli",
+            GlueTask::Qqp => "qqp",
+            GlueTask::Mnli => "mnli",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            GlueTask::Mnli => 3,
+            _ => 2,
+        }
+    }
+
+    /// F1 is reported for MRPC/QQP in the paper; accuracy elsewhere.
+    pub fn metric(&self) -> &'static str {
+        match self {
+            GlueTask::Mrpc | GlueTask::Qqp => "f1",
+            _ => "accuracy",
+        }
+    }
+}
+
+pub struct GlueGenerator {
+    gen: CorpusGenerator,
+    tok: WordTokenizer,
+    pub seq_len: usize,
+    base: Rng,
+    task: GlueTask,
+}
+
+impl GlueGenerator {
+    pub fn new(task: GlueTask, seq_len: usize, seed: u64) -> Self {
+        let cfg = CorpusConfig::default();
+        let n_words = cfg.vocab_words;
+        GlueGenerator {
+            gen: CorpusGenerator::new(cfg),
+            tok: WordTokenizer { n_words },
+            seq_len,
+            base: Rng::new(seed),
+            task,
+        }
+    }
+
+    /// Perturb ~20% of tokens to build a paraphrase.
+    fn perturb(&self, s: &[u32], rng: &mut Rng) -> Vec<u32> {
+        s.iter()
+            .map(|&w| {
+                if rng.bernoulli(0.2) {
+                    self.gen.succ(w)
+                } else {
+                    w
+                }
+            })
+            .collect()
+    }
+
+    pub fn example(&self, index: u64) -> ClsExample {
+        let mut rng = self.base.fold_in(index);
+        let topic = rng.below(16);
+        let s1 = self.gen.sentence(&mut rng, topic);
+        match self.task {
+            GlueTask::Sst2 => {
+                // label = topic parity: a topic-lexicon signal
+                let label = (topic % 2) as i32;
+                let ids = self.tok.encode(&s1);
+                let (input_ids, segment_ids) = build_input(&ids, None, self.seq_len);
+                ClsExample { input_ids, segment_ids, label }
+            }
+            GlueTask::Mrpc | GlueTask::Qqp => {
+                let positive = rng.bernoulli(0.5);
+                let s2 = if positive {
+                    self.perturb(&s1, &mut rng)
+                } else {
+                    let other_topic = rng.below(16);
+                    self.gen.sentence(&mut rng, other_topic)
+                };
+                let (input_ids, segment_ids) = build_input(
+                    &self.tok.encode(&s1),
+                    Some(&self.tok.encode(&s2)),
+                    self.seq_len,
+                );
+                ClsExample { input_ids, segment_ids, label: positive as i32 }
+            }
+            GlueTask::Qnli => {
+                let related = rng.bernoulli(0.5);
+                let s2 = if related {
+                    self.gen.sentence(&mut rng, topic)
+                } else {
+                    self.gen.sentence(&mut rng, (topic + 8) % 16)
+                };
+                let (input_ids, segment_ids) = build_input(
+                    &self.tok.encode(&s1),
+                    Some(&self.tok.encode(&s2)),
+                    self.seq_len,
+                );
+                ClsExample { input_ids, segment_ids, label: related as i32 }
+            }
+            GlueTask::Mnli => {
+                let class = rng.below(3) as i32;
+                let s2 = match class {
+                    0 => self.perturb(&s1, &mut rng),                     // entail
+                    1 => self.gen.sentence(&mut rng, topic),              // neutral
+                    _ => self.gen.sentence(&mut rng, (topic + 8) % 16),   // contra
+                };
+                let (input_ids, segment_ids) = build_input(
+                    &self.tok.encode(&s1),
+                    Some(&self.tok.encode(&s2)),
+                    self.seq_len,
+                );
+                ClsExample { input_ids, segment_ids, label: class }
+            }
+        }
+    }
+
+    pub fn batch(&self, start: u64, b: usize) -> super::ClsBatch {
+        let ex: Vec<_> = (0..b).map(|i| self.example(start + i as u64)).collect();
+        super::collate_cls(&ex, self.seq_len)
+    }
+}
+
+/// F1 score for binary predictions (positive class = 1).
+pub fn f1_score(preds: &[i32], labels: &[i32]) -> f64 {
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fn_ = 0.0;
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fn_ += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fn_);
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        for task in GlueTask::all() {
+            let g = GlueGenerator::new(task, 128, 3);
+            for i in 0..20 {
+                let ex = g.example(i);
+                assert!(ex.input_ids.len() <= 128, "{task:?}");
+                assert!((ex.label as usize) < task.n_classes(), "{task:?}");
+                assert_eq!(ex.input_ids.len(), ex.segment_ids.len());
+            }
+        }
+    }
+
+    #[test]
+    fn examples_deterministic() {
+        let g = GlueGenerator::new(GlueTask::Mrpc, 128, 5);
+        assert_eq!(g.example(9).input_ids, g.example(9).input_ids);
+    }
+
+    #[test]
+    fn pair_tasks_have_two_segments() {
+        let g = GlueGenerator::new(GlueTask::Qqp, 128, 5);
+        let ex = g.example(0);
+        assert!(ex.segment_ids.contains(&1));
+        let g2 = GlueGenerator::new(GlueTask::Sst2, 128, 5);
+        assert!(!g2.example(0).segment_ids.contains(&1));
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let g = GlueGenerator::new(GlueTask::Qnli, 128, 5);
+        let pos = (0..200).filter(|&i| g.example(i).label == 1).count();
+        assert!((60..140).contains(&pos), "{pos}");
+    }
+
+    #[test]
+    fn f1_known_values() {
+        assert_eq!(f1_score(&[1, 1, 0, 0], &[1, 1, 0, 0]), 1.0);
+        assert_eq!(f1_score(&[0, 0], &[1, 1]), 0.0);
+        let f = f1_score(&[1, 1, 1, 0], &[1, 0, 1, 1]);
+        assert!((f - 2.0 * (2.0 / 3.0) * (2.0 / 3.0) / (4.0 / 3.0)).abs() < 1e-9);
+    }
+}

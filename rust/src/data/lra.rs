@@ -1,0 +1,262 @@
+//! LRA-style long-sequence task suite (Tay et al., 2021), synthesized at
+//! our sequence budget (n = 256, vocab = 256, 10-way max) — see DESIGN.md
+//! for the substitution rationale. Five tasks mirroring the benchmark:
+//!
+//! * `listops`    — real ListOps grammar (see `listops.rs`), 10 classes.
+//! * `text`       — byte-level "sentiment": class-dependent byte-bigram
+//!                  distributions, 2 classes.
+//! * `retrieval`  — document matching: two byte docs, same-source or not,
+//!                  packed as a segment pair, 2 classes.
+//! * `image`      — 16x16 grayscale procedural patterns (oriented
+//!                  gratings), pixel sequence, 10 classes.
+//! * `pathfinder` — 16x16 grid: are the two endpoints connected by the
+//!                  drawn path? 2 classes.
+
+use super::listops::{generate as gen_listops, ListOpsConfig, Token};
+use super::special;
+use super::tokenizer::{build_input, ByteTokenizer};
+use super::ClsExample;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LraTask {
+    ListOps,
+    Text,
+    Retrieval,
+    Image,
+    Pathfinder,
+}
+
+impl LraTask {
+    pub fn all() -> [LraTask; 5] {
+        [LraTask::ListOps, LraTask::Text, LraTask::Retrieval, LraTask::Image,
+         LraTask::Pathfinder]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LraTask::ListOps => "listops",
+            LraTask::Text => "text",
+            LraTask::Retrieval => "retrieval",
+            LraTask::Image => "image",
+            LraTask::Pathfinder => "pathfinder",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            LraTask::ListOps | LraTask::Image => 10,
+            _ => 2,
+        }
+    }
+}
+
+pub struct LraGenerator {
+    pub task: LraTask,
+    pub seq_len: usize,
+    base: Rng,
+    tok: ByteTokenizer,
+}
+
+const GRID: usize = 16;
+
+impl LraGenerator {
+    pub fn new(task: LraTask, seq_len: usize, seed: u64) -> Self {
+        LraGenerator { task, seq_len, base: Rng::new(seed), tok: ByteTokenizer { vocab: 256 } }
+    }
+
+    pub fn example(&self, index: u64) -> ClsExample {
+        let mut rng = self.base.fold_in(index);
+        match self.task {
+            LraTask::ListOps => self.listops(&mut rng),
+            LraTask::Text => self.text(&mut rng),
+            LraTask::Retrieval => self.retrieval(&mut rng),
+            LraTask::Image => self.image(&mut rng),
+            LraTask::Pathfinder => self.pathfinder(&mut rng),
+        }
+    }
+
+    pub fn batch(&self, start: u64, b: usize) -> super::ClsBatch {
+        let ex: Vec<_> = (0..b).map(|i| self.example(start + i as u64)).collect();
+        super::collate_cls(&ex, self.seq_len)
+    }
+
+    fn listops(&self, rng: &mut Rng) -> ClsExample {
+        let cfg = ListOpsConfig {
+            max_tokens: self.seq_len - 8,
+            ..Default::default()
+        };
+        let (tokens, value) = gen_listops(&cfg, rng);
+        let ids: Vec<i32> = tokens
+            .iter()
+            .map(|t| t.id() as i32 + special::FIRST_WORD)
+            .collect();
+        debug_assert!(Token::ALPHABET + special::FIRST_WORD as usize <= 256);
+        let (input_ids, segment_ids) = build_input(&ids, None, self.seq_len);
+        ClsExample { input_ids, segment_ids, label: value as i32 }
+    }
+
+    /// Class-dependent byte-bigram "language": class c biases transitions
+    /// toward (prev * (3 + c)) % 200.
+    fn class_bytes(&self, rng: &mut Rng, class: usize, len: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len);
+        let mut prev: u8 = rng.below(200) as u8;
+        for _ in 0..len {
+            let next = if rng.bernoulli(0.6) {
+                ((prev as usize * (3 + class) + 1) % 200) as u8
+            } else {
+                rng.below(200) as u8
+            };
+            out.push(next);
+            prev = next;
+        }
+        out
+    }
+
+    fn text(&self, rng: &mut Rng) -> ClsExample {
+        let class = rng.below(2);
+        let bytes = self.class_bytes(rng, class, self.seq_len - 2);
+        let ids = self.tok.encode(&bytes);
+        let (input_ids, segment_ids) = build_input(&ids, None, self.seq_len);
+        ClsExample { input_ids, segment_ids, label: class as i32 }
+    }
+
+    fn retrieval(&self, rng: &mut Rng) -> ClsExample {
+        let same = rng.bernoulli(0.5);
+        let class_a = rng.below(8);
+        let class_b = if same { class_a } else { (class_a + 1 + rng.below(7)) % 8 };
+        let half = (self.seq_len - 3) / 2;
+        let a = self.class_bytes(rng, class_a, half);
+        let b = self.class_bytes(rng, class_b, half);
+        let (input_ids, segment_ids) = build_input(
+            &self.tok.encode(&a),
+            Some(&self.tok.encode(&b)),
+            self.seq_len,
+        );
+        ClsExample { input_ids, segment_ids, label: same as i32 }
+    }
+
+    /// Oriented sinusoidal grating; class determines frequency+angle.
+    fn image(&self, rng: &mut Rng) -> ClsExample {
+        let class = rng.below(10);
+        let angle = class as f32 * std::f32::consts::PI / 10.0;
+        let freq = 0.5 + (class % 5) as f32 * 0.35;
+        let phase = rng.uniform() * std::f32::consts::TAU;
+        let mut bytes = Vec::with_capacity(GRID * GRID);
+        for y in 0..GRID {
+            for x in 0..GRID {
+                let u = x as f32 * angle.cos() + y as f32 * angle.sin();
+                let val = ((u * freq + phase).sin() * 0.5 + 0.5) * 200.0
+                    + rng.normal() * 10.0;
+                bytes.push(val.clamp(0.0, 199.0) as u8);
+            }
+        }
+        let ids = self.tok.encode(&bytes);
+        let (input_ids, segment_ids) = build_input(&ids, None, self.seq_len);
+        ClsExample { input_ids, segment_ids, label: class as i32 }
+    }
+
+    /// Random-walk path rendering; positive = endpoints on one path.
+    fn pathfinder(&self, rng: &mut Rng) -> ClsExample {
+        let mut grid = [[0u8; GRID]; GRID];
+        let connected = rng.bernoulli(0.5);
+
+        let walk = |grid: &mut [[u8; GRID]; GRID], rng: &mut Rng, steps: usize| {
+            let mut x = rng.below(GRID);
+            let mut y = rng.below(GRID);
+            let start = (x, y);
+            for _ in 0..steps {
+                grid[y][x] = 1;
+                match rng.below(4) {
+                    0 if x + 1 < GRID => x += 1,
+                    1 if x > 0 => x -= 1,
+                    2 if y + 1 < GRID => y += 1,
+                    _ if y > 0 => y -= 1,
+                    _ => {}
+                }
+            }
+            grid[y][x] = 1;
+            (start, (x, y))
+        };
+
+        let (e1, e2) = if connected {
+            let (a, b) = walk(&mut grid, rng, 40);
+            (a, b)
+        } else {
+            let (a, _) = walk(&mut grid, rng, 18);
+            // second, disjoint-ish walk; endpoints from different walks
+            let (_, b) = walk(&mut grid, rng, 18);
+            (a, b)
+        };
+        // mark endpoints with a distinct intensity
+        grid[e1.1][e1.0] = 2;
+        grid[e2.1][e2.0] = 2;
+
+        let bytes: Vec<u8> = grid
+            .iter()
+            .flat_map(|row| row.iter().map(|&c| c * 90))
+            .collect();
+        let ids = self.tok.encode(&bytes);
+        let (input_ids, segment_ids) = build_input(&ids, None, self.seq_len);
+        ClsExample { input_ids, segment_ids, label: connected as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_valid_shapes_and_labels() {
+        for task in LraTask::all() {
+            let g = LraGenerator::new(task, 256, 1);
+            for i in 0..10 {
+                let ex = g.example(i);
+                assert!(ex.input_ids.len() <= 256, "{task:?}");
+                assert_eq!(ex.input_ids.len(), ex.segment_ids.len());
+                assert!((ex.label as usize) < task.n_classes(), "{task:?}");
+                assert!(ex.input_ids.iter().all(|&t| (0..256).contains(&t)),
+                        "{task:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_index() {
+        for task in LraTask::all() {
+            let g = LraGenerator::new(task, 256, 2);
+            assert_eq!(g.example(5).input_ids, g.example(5).input_ids);
+        }
+    }
+
+    #[test]
+    fn image_fills_sequence() {
+        let g = LraGenerator::new(LraTask::Image, 256, 3);
+        let ex = g.example(0);
+        // 16x16 pixels fill most of the 256 budget (+CLS/SEP, truncated)
+        assert!(ex.input_ids.len() >= 250);
+    }
+
+    #[test]
+    fn retrieval_has_two_segments() {
+        let g = LraGenerator::new(LraTask::Retrieval, 256, 4);
+        assert!(g.example(0).segment_ids.contains(&1));
+    }
+
+    #[test]
+    fn labels_balanced_binary_tasks() {
+        for task in [LraTask::Text, LraTask::Retrieval, LraTask::Pathfinder] {
+            let g = LraGenerator::new(task, 256, 5);
+            let pos = (0..200).filter(|&i| g.example(i).label == 1).count();
+            assert!((60..140).contains(&pos), "{task:?}: {pos}");
+        }
+    }
+
+    #[test]
+    fn batch_abi_shape() {
+        let g = LraGenerator::new(LraTask::ListOps, 256, 6);
+        let b = g.batch(0, 8);
+        assert_eq!(b.input_ids.len(), 8 * 256);
+        assert_eq!(b.labels.len(), 8);
+    }
+}

@@ -1,0 +1,197 @@
+//! MLM masking (BERT 80/10/10) and SOP (sentence-order prediction) pair
+//! construction over synthlang documents — the paper's §4.1 pretraining
+//! objectives (SOP from ALBERT instead of NSP, as in the paper).
+
+use super::corpus::CorpusGenerator;
+use super::special;
+use super::tokenizer::WordTokenizer;
+use super::PretrainExample;
+use crate::util::Rng;
+
+pub struct MlmConfig {
+    pub mask_prob: f32,
+    pub seq_len: usize,
+    pub vocab_size: usize,
+}
+
+impl Default for MlmConfig {
+    fn default() -> Self {
+        MlmConfig { mask_prob: 0.15, seq_len: 128, vocab_size: 2048 }
+    }
+}
+
+/// Apply BERT masking in place; returns the MLM label vector.
+/// 80% -> [MASK], 10% -> random token, 10% -> unchanged.
+pub fn apply_masking(
+    ids: &mut [i32],
+    cfg: &MlmConfig,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let mut labels = vec![-1i32; ids.len()];
+    for (i, tok) in ids.iter_mut().enumerate() {
+        if *tok < special::FIRST_WORD {
+            continue; // never mask special tokens / padding
+        }
+        if rng.bernoulli(cfg.mask_prob) {
+            labels[i] = *tok;
+            let r = rng.uniform();
+            if r < 0.8 {
+                *tok = special::MASK;
+            } else if r < 0.9 {
+                *tok = rng.range(special::FIRST_WORD as usize, cfg.vocab_size) as i32;
+            } // else leave unchanged
+        }
+    }
+    labels
+}
+
+/// Build one SOP pretraining example from a document: two consecutive
+/// sentence groups, order swapped with p=0.5 (label 1 = swapped).
+pub fn make_pretrain_example(
+    gen: &CorpusGenerator,
+    tok: &WordTokenizer,
+    cfg: &MlmConfig,
+    rng: &mut Rng,
+) -> PretrainExample {
+    let doc = gen.document(rng);
+    let n_sent = doc.sentences.len();
+    let split = (n_sent / 2).max(1);
+    let first: Vec<i32> = doc.sentences[..split]
+        .iter()
+        .flat_map(|s| tok.encode(s))
+        .collect();
+    let second: Vec<i32> = doc.sentences[split..]
+        .iter()
+        .flat_map(|s| tok.encode(s))
+        .collect();
+
+    let swap = rng.bernoulli(0.5);
+    let (a, b) = if swap { (&second, &first) } else { (&first, &second) };
+    let (mut ids, segs) =
+        super::tokenizer::build_input(a, Some(b), cfg.seq_len);
+    let mlm_labels = {
+        let mut l = apply_masking(&mut ids, cfg, rng);
+        l.truncate(ids.len());
+        l
+    };
+    PretrainExample {
+        input_ids: ids,
+        segment_ids: segs,
+        mlm_labels,
+        sop_label: if swap { 1 } else { 0 },
+    }
+}
+
+/// Infinite pretraining stream with deterministic per-index examples.
+pub struct PretrainStream {
+    gen: CorpusGenerator,
+    tok: WordTokenizer,
+    cfg: MlmConfig,
+    base: Rng,
+}
+
+impl PretrainStream {
+    pub fn new(gen: CorpusGenerator, tok: WordTokenizer, cfg: MlmConfig, seed: u64) -> Self {
+        PretrainStream { gen, tok, cfg, base: Rng::new(seed) }
+    }
+
+    /// The i-th example (stable across calls — resumable training).
+    pub fn example(&self, index: u64) -> PretrainExample {
+        let mut rng = self.base.fold_in(index);
+        make_pretrain_example(&self.gen, &self.tok, &self.cfg, &mut rng)
+    }
+
+    pub fn batch(&self, start_index: u64, batch: usize) -> super::PretrainBatch {
+        let examples: Vec<_> =
+            (0..batch).map(|i| self.example(start_index + i as u64)).collect();
+        super::collate_pretrain(&examples, self.cfg.seq_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn stream() -> PretrainStream {
+        PretrainStream::new(
+            CorpusGenerator::new(CorpusConfig::default()),
+            WordTokenizer { n_words: 2000 },
+            MlmConfig::default(),
+            7,
+        )
+    }
+
+    #[test]
+    fn masking_rate_near_target() {
+        let mut rng = Rng::new(0);
+        let cfg = MlmConfig::default();
+        let mut masked = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let mut ids: Vec<i32> = (0..100)
+                .map(|_| rng.range(special::FIRST_WORD as usize, 2048) as i32)
+                .collect();
+            let labels = apply_masking(&mut ids, &cfg, &mut rng);
+            masked += labels.iter().filter(|&&l| l >= 0).count();
+            total += 100;
+        }
+        let rate = masked as f64 / total as f64;
+        assert!((rate - 0.15).abs() < 0.02, "mask rate {rate}");
+    }
+
+    #[test]
+    fn special_tokens_never_masked() {
+        let mut rng = Rng::new(1);
+        let cfg = MlmConfig::default();
+        let mut ids = vec![special::CLS, special::SEP, special::PAD];
+        let labels = apply_masking(&mut ids, &cfg, &mut rng);
+        assert_eq!(ids, vec![special::CLS, special::SEP, special::PAD]);
+        assert!(labels.iter().all(|&l| l == -1));
+    }
+
+    #[test]
+    fn labels_record_original_token() {
+        let mut rng = Rng::new(2);
+        let cfg = MlmConfig { mask_prob: 1.0, ..MlmConfig::default() };
+        let orig: Vec<i32> = (5..55).collect();
+        let mut ids = orig.clone();
+        let labels = apply_masking(&mut ids, &cfg, &mut rng);
+        for (l, o) in labels.iter().zip(&orig) {
+            assert_eq!(l, o);
+        }
+    }
+
+    #[test]
+    fn examples_deterministic_and_indexed() {
+        let s = stream();
+        let a = s.example(42);
+        let b = s.example(42);
+        assert_eq!(a.input_ids, b.input_ids);
+        assert_eq!(a.sop_label, b.sop_label);
+        let c = s.example(43);
+        assert_ne!(a.input_ids, c.input_ids);
+    }
+
+    #[test]
+    fn batch_shapes_match_abi() {
+        let s = stream();
+        let b = s.batch(0, 16);
+        assert_eq!(b.input_ids.len(), 16 * 128);
+        assert_eq!(b.mlm_labels.len(), 16 * 128);
+        assert_eq!(b.sop_labels.len(), 16);
+        // both SOP classes appear in a large sample
+        let mut counts = [0, 0];
+        for i in 0..64 {
+            counts[s.example(i).sop_label as usize] += 1;
+        }
+        assert!(counts[0] > 10 && counts[1] > 10, "{counts:?}");
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let s = stream();
+        let b = s.batch(0, 8);
+        assert!(b.input_ids.iter().all(|&t| (0..2048).contains(&t)));
+    }
+}

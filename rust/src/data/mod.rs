@@ -1,0 +1,133 @@
+//! Data substrate: synthetic corpus ("synthlang"), tokenizer, MLM/SOP
+//! batch construction, synthetic GLUE-style tasks, and the LRA-style
+//! long-sequence task suite (including a real ListOps generator).
+//!
+//! Substitution note (DESIGN.md): the paper pretrains on BookCorpus +
+//! Wikipedia and evaluates on GLUE/LRA. Those corpora are not available
+//! here; each generator below synthesizes a task with the same *shape*
+//! (sequence statistics, label structure, learnable signal) so that the
+//! relative ordering of attention variants — what the paper's tables
+//! test — is preserved.
+
+pub mod corpus;
+pub mod glue_synth;
+pub mod listops;
+pub mod lra;
+pub mod mlm;
+pub mod tokenizer;
+
+/// Special token ids shared by all vocabularies.
+pub mod special {
+    pub const PAD: i32 = 0;
+    pub const CLS: i32 = 1;
+    pub const SEP: i32 = 2;
+    pub const MASK: i32 = 3;
+    pub const UNK: i32 = 4;
+    /// First id available for real tokens.
+    pub const FIRST_WORD: i32 = 5;
+}
+
+/// A classification example: token ids + segment ids + label.
+#[derive(Clone, Debug)]
+pub struct ClsExample {
+    pub input_ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    pub label: i32,
+}
+
+/// A pretraining example: masked ids, MLM labels (-1 = unmasked), SOP label.
+#[derive(Clone, Debug)]
+pub struct PretrainExample {
+    pub input_ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    pub mlm_labels: Vec<i32>,
+    pub sop_label: i32,
+}
+
+/// Batches are struct-of-arrays matching the artifact ABI.
+#[derive(Clone, Debug, Default)]
+pub struct ClsBatch {
+    pub input_ids: Vec<i32>,   // (b * n)
+    pub segment_ids: Vec<i32>, // (b * n)
+    pub labels: Vec<i32>,      // (b)
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PretrainBatch {
+    pub input_ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    pub mlm_labels: Vec<i32>,
+    pub sop_labels: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+pub fn collate_cls(examples: &[ClsExample], seq_len: usize) -> ClsBatch {
+    let b = examples.len();
+    let mut out = ClsBatch {
+        input_ids: Vec::with_capacity(b * seq_len),
+        segment_ids: Vec::with_capacity(b * seq_len),
+        labels: Vec::with_capacity(b),
+        batch: b,
+        seq_len,
+    };
+    for ex in examples {
+        push_padded(&mut out.input_ids, &ex.input_ids, seq_len, special::PAD);
+        push_padded(&mut out.segment_ids, &ex.segment_ids, seq_len, 0);
+        out.labels.push(ex.label);
+    }
+    out
+}
+
+pub fn collate_pretrain(examples: &[PretrainExample], seq_len: usize) -> PretrainBatch {
+    let b = examples.len();
+    let mut out = PretrainBatch {
+        input_ids: Vec::with_capacity(b * seq_len),
+        segment_ids: Vec::with_capacity(b * seq_len),
+        mlm_labels: Vec::with_capacity(b * seq_len),
+        sop_labels: Vec::with_capacity(b),
+        batch: b,
+        seq_len,
+    };
+    for ex in examples {
+        push_padded(&mut out.input_ids, &ex.input_ids, seq_len, special::PAD);
+        push_padded(&mut out.segment_ids, &ex.segment_ids, seq_len, 0);
+        push_padded(&mut out.mlm_labels, &ex.mlm_labels, seq_len, -1);
+        out.sop_labels.push(ex.sop_label);
+    }
+    out
+}
+
+fn push_padded(dst: &mut Vec<i32>, src: &[i32], len: usize, pad: i32) {
+    dst.extend(src.iter().take(len));
+    for _ in src.len()..len {
+        dst.push(pad);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collate_pads_and_truncates() {
+        let ex = ClsExample {
+            input_ids: vec![1, 2, 3],
+            segment_ids: vec![0, 0, 0],
+            label: 1,
+        };
+        let b = collate_cls(&[ex.clone(), ex], 5);
+        assert_eq!(b.input_ids.len(), 10);
+        assert_eq!(&b.input_ids[..5], &[1, 2, 3, special::PAD, special::PAD]);
+
+        let long = ClsExample {
+            input_ids: (0..10).collect(),
+            segment_ids: vec![0; 10],
+            label: 0,
+        };
+        let b2 = collate_cls(&[long], 4);
+        assert_eq!(b2.input_ids, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tokenizer: maps corpus word ids / raw bytes into model token ids,
+//! reserving the special-token block.
+//!
+//! synthlang words are already integers, so the "tokenizer" is an offset
+//! map plus vocabulary bounds checking; the byte-level tokenizer (LRA
+//! Text/Image tasks) maps bytes into the same reserved-id scheme. Both
+//! share the `Tokenizer` trait so the pipeline is source-agnostic.
+
+use super::special;
+
+pub trait Tokenizer {
+    /// Total vocabulary size including special tokens.
+    fn vocab_size(&self) -> usize;
+
+    /// Encode a raw symbol (word id or byte) to a model token id.
+    fn encode_symbol(&self, sym: u32) -> i32;
+}
+
+/// Word-id tokenizer for synthlang.
+pub struct WordTokenizer {
+    pub n_words: usize,
+}
+
+impl Tokenizer for WordTokenizer {
+    fn vocab_size(&self) -> usize {
+        self.n_words + special::FIRST_WORD as usize
+    }
+
+    fn encode_symbol(&self, sym: u32) -> i32 {
+        if (sym as usize) < self.n_words {
+            sym as i32 + special::FIRST_WORD
+        } else {
+            special::UNK
+        }
+    }
+}
+
+impl WordTokenizer {
+    /// Encode a sentence (list of word ids).
+    pub fn encode(&self, words: &[u32]) -> Vec<i32> {
+        words.iter().map(|&w| self.encode_symbol(w)).collect()
+    }
+}
+
+/// Byte tokenizer for LRA-style byte-level tasks: byte b -> id, clamped to
+/// a vocabulary of `vocab` ids (bytes above the budget map to UNK).
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn encode_symbol(&self, sym: u32) -> i32 {
+        let id = sym as i32 + special::FIRST_WORD;
+        if (id as usize) < self.vocab {
+            id
+        } else {
+            special::UNK
+        }
+    }
+}
+
+impl ByteTokenizer {
+    pub fn encode(&self, bytes: &[u8]) -> Vec<i32> {
+        bytes.iter().map(|&b| self.encode_symbol(b as u32)).collect()
+    }
+}
+
+/// Build `[CLS] a [SEP]` or `[CLS] a [SEP] b [SEP]` with segment ids.
+pub fn build_input(a: &[i32], b: Option<&[i32]>, max_len: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut ids = Vec::with_capacity(max_len);
+    let mut segs = Vec::with_capacity(max_len);
+    ids.push(special::CLS);
+    segs.push(0);
+    for &t in a {
+        if ids.len() + 1 >= max_len {
+            break;
+        }
+        ids.push(t);
+        segs.push(0);
+    }
+    ids.push(special::SEP);
+    segs.push(0);
+    if let Some(b) = b {
+        for &t in b {
+            if ids.len() + 1 >= max_len {
+                break;
+            }
+            ids.push(t);
+            segs.push(1);
+        }
+        ids.push(special::SEP);
+        segs.push(1);
+    }
+    (ids, segs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_encoding_offsets() {
+        let t = WordTokenizer { n_words: 100 };
+        assert_eq!(t.encode_symbol(0), special::FIRST_WORD);
+        assert_eq!(t.encode_symbol(99), 99 + special::FIRST_WORD);
+        assert_eq!(t.encode_symbol(100), special::UNK);
+        assert_eq!(t.vocab_size(), 105);
+    }
+
+    #[test]
+    fn byte_encoding_within_vocab() {
+        let t = ByteTokenizer { vocab: 256 };
+        assert_eq!(t.encode_symbol(0), special::FIRST_WORD);
+        // bytes above vocab - FIRST_WORD map to UNK
+        assert_eq!(t.encode_symbol(255), special::UNK);
+        assert_eq!(t.encode(&[0, 1]), vec![5, 6]);
+    }
+
+    #[test]
+    fn build_pair_input() {
+        let (ids, segs) = build_input(&[10, 11], Some(&[20]), 16);
+        assert_eq!(ids, vec![special::CLS, 10, 11, special::SEP, 20, special::SEP]);
+        assert_eq!(segs, vec![0, 0, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn build_input_respects_max_len() {
+        let a: Vec<i32> = (10..200).collect();
+        let (ids, segs) = build_input(&a, None, 32);
+        assert!(ids.len() <= 32);
+        assert_eq!(ids.len(), segs.len());
+        assert_eq!(*ids.last().unwrap(), special::SEP);
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal JSON substrate (the offline registry has no serde).
+//!
+//! Full RFC 8259 parser + emitter over an owned [`Value`] tree. Used for
+//! the artifact manifest, config files, and results emission. Not
+//! performance-critical: the largest document is the ~100 KB manifest.
+
+mod emit;
+mod parse;
+
+pub use emit::to_string_pretty;
+pub use parse::{parse, ParseError};
+
+use std::collections::BTreeMap;
+
+/// Owned JSON value. Object keys are sorted (BTreeMap) so emission is
+/// deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|f| {
+            if f >= 0.0 && f.fract() == 0.0 {
+                Some(f as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field access; None for non-objects / missing keys.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Chained path access: `v.path(&["config", "batch"])`.
+    pub fn path(&self, keys: &[&str]) -> Option<&Value> {
+        let mut cur = self;
+        for k in keys {
+            cur = cur.get(k)?;
+        }
+        Some(cur)
+    }
+
+    pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Object(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    pub fn array_of_f64(xs: &[f64]) -> Value {
+        Value::Array(xs.iter().map(|x| Value::Number(*x)).collect())
+    }
+
+    pub fn str(s: &str) -> Value {
+        Value::String(s.to_string())
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Number(v)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Number(v as f64)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::String(v.to_string())
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": "hi\n", "d": true}, "e": null}"#;
+        let v = parse(src).unwrap();
+        let emitted = to_string_pretty(&v);
+        let v2 = parse(&emitted).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn path_access() {
+        let v = parse(r#"{"x": {"y": {"z": 7}}}"#).unwrap();
+        assert_eq!(v.path(&["x", "y", "z"]).unwrap().as_i64(), Some(7));
+        assert!(v.path(&["x", "nope"]).is_none());
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"n": 3, "s": "t", "b": false, "a": [1]}"#).unwrap();
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 1);
+        assert!(v.get("n").unwrap().as_str().is_none());
+    }
+}

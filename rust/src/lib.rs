@@ -1,0 +1,36 @@
+//! # yoso — linear-cost self-attention via LSH Bernoulli sampling
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of
+//! *"You Only Sample (Almost) Once: Linear Cost Self-Attention Via
+//! Bernoulli Sampling"* (Zeng et al., ICML 2021).
+//!
+//! Layers:
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): LSH hashing and
+//!   the YOSO forward/backward estimators, lowered into the HLO artifacts.
+//! * **L2** — JAX model (`python/compile/model.py`): BERT-style encoder
+//!   with a pluggable attention zoo; fused train/eval/forward steps
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: config + CLI, data pipeline, PJRT runtime that
+//!   loads the artifacts, training orchestrator, serving coordinator with
+//!   dynamic batching, a pure-Rust attention library (YOSO + every
+//!   baseline) for the efficiency/approximation studies, metrics,
+//!   checkpointing.
+//!
+//! Python never runs at request time: after `make artifacts`, the `yoso`
+//! binary is self-contained.
+
+pub mod attention;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod json;
+pub mod lsh;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;

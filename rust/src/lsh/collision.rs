@@ -1,0 +1,90 @@
+//! Collision-probability math (paper Figure 2 and Eqs. 3-4).
+
+use std::f64::consts::PI;
+
+const SIM_EPS: f64 = 1e-9;
+
+/// E[B]_ij = (1 - arccos(sim)/pi)^tau.
+pub fn collision_probability(sim: f64, tau: u32) -> f64 {
+    let sim = sim.clamp(-1.0 + SIM_EPS, 1.0 - SIM_EPS);
+    (1.0 - sim.acos() / PI).powi(tau as i32)
+}
+
+/// True derivative d/dsim (Eq. 3 weight). Diverges at |sim| -> 1.
+pub fn collision_probability_grad(sim: f64, tau: u32) -> f64 {
+    let sim = sim.clamp(-1.0 + SIM_EPS, 1.0 - SIM_EPS);
+    let base = 1.0 - sim.acos() / PI;
+    tau as f64 * base.powi(tau as i32 - 1) / (PI * (1.0 - sim * sim).sqrt())
+}
+
+/// The paper's numerically-safe lower bound (tau/2) * E[B] (Eq. 4).
+pub fn collision_probability_grad_lower_bound(sim: f64, tau: u32) -> f64 {
+    0.5 * tau as f64 * collision_probability(sim, tau)
+}
+
+/// Softmax-style attention weight exp(tau * (sim - 1)) — the curve the
+/// paper compares against in Figure 2.
+pub fn exp_weight(sim: f64, tau: u32) -> f64 {
+    (tau as f64 * (sim - 1.0)).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        // sim is clamped away from the poles, so "1.0" lands at 1 - eps.
+        assert!((collision_probability(1.0, 8) - 1.0).abs() < 1e-3);
+        assert!(collision_probability(-1.0, 8) < 1e-6);
+    }
+
+    #[test]
+    fn monotonic_increasing() {
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let sim = -1.0 + 2.0 * i as f64 / 100.0;
+            let p = collision_probability(sim, 4);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn lower_bound_holds_everywhere() {
+        for tau in [1u32, 2, 4, 8, 12] {
+            for i in 0..200 {
+                let sim = -0.999 + 1.998 * i as f64 / 199.0;
+                let lb = collision_probability_grad_lower_bound(sim, tau);
+                let g = collision_probability_grad(sim, tau);
+                assert!(lb <= g + 1e-9, "tau={tau} sim={sim} lb={lb} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_is_derivative() {
+        // finite differences
+        let tau = 6;
+        for sim in [-0.8, -0.2, 0.0, 0.4, 0.9] {
+            let h = 1e-6;
+            let fd = (collision_probability(sim + h, tau)
+                - collision_probability(sim - h, tau))
+                / (2.0 * h);
+            let an = collision_probability_grad(sim, tau);
+            assert!(
+                (fd - an).abs() / an.max(1e-9) < 1e-3,
+                "sim={sim}: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_bounded_by_mean() {
+        for i in 0..100 {
+            let sim = -0.99 + 1.98 * i as f64 / 99.0;
+            let p = collision_probability(sim, 8);
+            assert!(p * (1.0 - p) <= p + 1e-12);
+        }
+    }
+}

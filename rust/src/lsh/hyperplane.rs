@@ -1,0 +1,118 @@
+//! Gaussian hyperplane LSH (SimHash, Charikar 2002).
+//!
+//! For unit vectors u, v: P[sign(r.u) = sign(r.v)] = 1 - theta(u,v)/pi
+//! per hyperplane; concatenating tau hyperplanes gives the paper's
+//! collision probability (1 - theta/pi)^tau.
+
+use super::Hasher;
+use crate::tensor::{linalg, Mat};
+use crate::util::Rng;
+
+/// m independent hashes, each the concatenation of tau Gaussian
+/// hyperplanes. Rotations stored as (m*tau, d) rows for cache-friendly
+/// projection.
+pub struct HyperplaneHasher {
+    pub tau: usize,
+    pub m: usize,
+    pub d: usize,
+    planes: Mat, // (m * tau, d)
+}
+
+impl HyperplaneHasher {
+    pub fn new(rng: &mut Rng, m: usize, d: usize, tau: usize) -> Self {
+        assert!(tau <= 24, "packed codes use u32; tau too large");
+        HyperplaneHasher { tau, m, d, planes: Mat::randn(m * tau, d, 1.0, rng) }
+    }
+
+    /// Hash one vector for hash function `h`.
+    pub fn hash_one(&self, x: &[f32], h: usize) -> u32 {
+        let mut code = 0u32;
+        for t in 0..self.tau {
+            let plane = self.planes.row(h * self.tau + t);
+            if linalg::dot(plane, x) >= 0.0 {
+                code |= 1 << t;
+            }
+        }
+        code
+    }
+}
+
+impl Hasher for HyperplaneHasher {
+    fn tau(&self) -> usize {
+        self.tau
+    }
+
+    fn n_hashes(&self) -> usize {
+        self.m
+    }
+
+    fn hash_all(&self, x: &Mat) -> Vec<u32> {
+        assert_eq!(x.cols, self.d);
+        let n = x.rows;
+        let mut codes = vec![0u32; self.m * n];
+        for i in 0..n {
+            let row = x.row(i);
+            for h in 0..self.m {
+                codes[h * n + i] = self.hash_one(row, h);
+            }
+        }
+        codes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::collision::collision_probability;
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(0);
+        let hasher = HyperplaneHasher::new(&mut rng, 4, 16, 6);
+        let x = Mat::randn(32, 16, 1.0, &mut rng).unit_rows();
+        let codes = hasher.hash_all(&x);
+        assert_eq!(codes.len(), 4 * 32);
+        assert!(codes.iter().all(|&c| c < 64));
+    }
+
+    #[test]
+    fn identical_vectors_always_collide() {
+        let mut rng = Rng::new(1);
+        let hasher = HyperplaneHasher::new(&mut rng, 8, 16, 8);
+        let x = Mat::randn(1, 16, 1.0, &mut rng).unit_rows();
+        let a = hasher.hash_all(&x);
+        let b = hasher.hash_all(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empirical_collision_rate_matches_theory() {
+        // Monte-Carlo over many hashes: the empirical collision frequency
+        // of a fixed pair must approach (1 - theta/pi)^tau.
+        let mut rng = Rng::new(2);
+        let d = 24;
+        let tau = 4;
+        let m = 4000;
+        let hasher = HyperplaneHasher::new(&mut rng, m, d, tau);
+        // build a pair at a known angle
+        let mut x = Mat::zeros(2, d);
+        x.set(0, 0, 1.0);
+        let angle = 0.9f32; // radians
+        x.set(1, 0, angle.cos());
+        x.set(1, 1, angle.sin());
+        let codes = hasher.hash_all(&x);
+        let n = 2;
+        let mut hits = 0usize;
+        for h in 0..m {
+            if codes[h * n] == codes[h * n + 1] {
+                hits += 1;
+            }
+        }
+        let emp = hits as f64 / m as f64;
+        let theory = collision_probability(angle.cos() as f64, tau as u32);
+        assert!(
+            (emp - theory).abs() < 0.03,
+            "empirical {emp:.4} vs theory {theory:.4}"
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! LSH substrate: hyperplane (SimHash) hashing, the fast-Hadamard
+//! approximated random projection (Andoni et al., 2015), and the
+//! collision-probability math of the paper (Figure 2).
+
+pub mod collision;
+pub mod hadamard;
+pub mod hyperplane;
+
+pub use collision::{collision_probability, collision_probability_grad,
+                    collision_probability_grad_lower_bound};
+pub use hadamard::HadamardHasher;
+pub use hyperplane::HyperplaneHasher;
+
+/// Common interface: map each row of `x` (n, d) to a packed code in
+/// [0, 2^tau) for each of `m` independent hashes. Output layout: (m, n).
+pub trait Hasher {
+    fn tau(&self) -> usize;
+    fn n_hashes(&self) -> usize;
+    /// codes[h * n + i] = f_h(x_i)
+    fn hash_all(&self, x: &crate::tensor::Mat) -> Vec<u32>;
+}

@@ -1,0 +1,224 @@
+//! `yoso` — launcher CLI for the YOSO reproduction.
+//!
+//! Subcommands:
+//!   info                          list artifacts and their ABIs
+//!   train    --family pretrain --variant yoso_32 [--steps N --lr F]
+//!   finetune --task mrpc --variant yoso_32 --checkpoint PATH
+//!   lra      --task listops --variant yoso_32
+//!   serve    --variant yoso_32 [--requests N]   demo serving run
+//!
+//! Config: defaults < --config file.json < CLI flags (see config module).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use yoso::cli::Args;
+use yoso::config::RunConfig;
+use yoso::data::corpus::{CorpusConfig, CorpusGenerator};
+use yoso::data::glue_synth::{GlueGenerator, GlueTask};
+use yoso::data::lra::{LraGenerator, LraTask};
+use yoso::data::mlm::{MlmConfig, PretrainStream};
+use yoso::data::tokenizer::WordTokenizer;
+use yoso::info;
+use yoso::metrics::Recorder;
+use yoso::runtime::Runtime;
+use yoso::serve::{BatchPolicy, ServerHandle};
+use yoso::train::{ClsSource, PretrainSource, Trainer};
+
+fn main() -> Result<()> {
+    yoso::util::log::init_from_env();
+    let args = Args::from_env();
+    let cfg = RunConfig::resolve(&args)?;
+    match args.positional.first().map(String::as_str) {
+        Some("info") => cmd_info(&cfg),
+        Some("train") => cmd_train(&args, &cfg),
+        Some("finetune") => cmd_finetune(&args, &cfg),
+        Some("lra") => cmd_lra(&args, &cfg),
+        Some("serve") => cmd_serve(&args, &cfg),
+        other => {
+            eprintln!(
+                "usage: yoso <info|train|finetune|lra|serve> [flags]\n\
+                 got: {other:?}\nsee rust/src/main.rs header for flags"
+            );
+            bail!("unknown subcommand");
+        }
+    }
+}
+
+fn pretrain_source(seed: u64) -> PretrainSource {
+    PretrainSource {
+        stream: PretrainStream::new(
+            CorpusGenerator::new(CorpusConfig::default()),
+            WordTokenizer { n_words: 2000 },
+            MlmConfig::default(),
+            seed,
+        ),
+    }
+}
+
+fn cmd_info(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::open(Path::new(&cfg.artifacts_dir))?;
+    println!("{:<34} {:>10} {:>8} {:>8}  attention", "artifact", "kind", "inputs",
+             "outputs");
+    for (name, spec) in &rt.manifest.artifacts {
+        println!(
+            "{:<34} {:>10} {:>8} {:>8}  {}",
+            name,
+            spec.kind,
+            spec.inputs.len(),
+            spec.outputs.len(),
+            spec.attention
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let family = args.get_or("family", "pretrain").to_string();
+    let variant = &cfg.train.variant;
+    let rt = Runtime::open(Path::new(&cfg.artifacts_dir))?;
+    let train_name = format!("train_{family}_{variant}");
+    let eval_name = format!("eval_{family}_{variant}");
+    let eval = rt.manifest.get(&eval_name).ok().map(|_| eval_name.as_str());
+
+    let mut trainer = Trainer::new(&rt, &train_name, eval, cfg.seed, None)?;
+    info!(
+        "training {train_name}: {} params ({} tensors)",
+        trainer.param_template.total_elements(),
+        trainer.param_template.len()
+    );
+    let source = pretrain_source(cfg.seed);
+    let mut rec = Recorder::new();
+    trainer.run(
+        &source,
+        cfg.train.steps,
+        cfg.train.lr,
+        cfg.train.eval_every,
+        cfg.train.eval_batches,
+        cfg.train.log_every,
+        &mut rec,
+    )?;
+    let results = PathBuf::from(&cfg.results_dir);
+    rec.write_csv(&results.join(format!("train_{family}_{variant}.csv")))?;
+    let ckpt = PathBuf::from(&cfg.checkpoint_dir)
+        .join(format!("{family}_{variant}.ckpt"));
+    trainer.save_checkpoint(&ckpt)?;
+    info!("checkpoint -> {ckpt:?}");
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let task_name = args.get_or("task", "mrpc");
+    let task = GlueTask::all()
+        .into_iter()
+        .find(|t| t.name() == task_name)
+        .with_context(|| format!("unknown GLUE task {task_name}"))?;
+    let variant = &cfg.train.variant;
+    let rt = Runtime::open(Path::new(&cfg.artifacts_dir))?;
+
+    let init = match args.get("checkpoint") {
+        Some(p) => Some(yoso::train::checkpoint::load(Path::new(p))?),
+        None => None,
+    };
+    let train_name = format!("train_glue_{variant}");
+    let eval_name = format!("eval_glue_{variant}");
+    let mut trainer =
+        Trainer::new(&rt, &train_name, Some(&eval_name), cfg.seed, init)?;
+    let source = ClsSource::Glue(GlueGenerator::new(task, 128, cfg.seed));
+    let mut rec = Recorder::new();
+    trainer.run(
+        &source,
+        cfg.train.steps,
+        cfg.train.lr,
+        cfg.train.eval_every,
+        cfg.train.eval_batches,
+        cfg.train.log_every,
+        &mut rec,
+    )?;
+    let eval = trainer.evaluate(&source, cfg.train.eval_batches)?;
+    println!(
+        "finetune {task_name} {variant}: acc {:.4} (metric: {})",
+        eval.accuracy,
+        task.metric()
+    );
+    rec.write_csv(
+        &PathBuf::from(&cfg.results_dir)
+            .join(format!("glue_{task_name}_{variant}.csv")),
+    )?;
+    Ok(())
+}
+
+fn cmd_lra(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let task_name = args.get_or("task", "listops");
+    let task = LraTask::all()
+        .into_iter()
+        .find(|t| t.name() == task_name)
+        .with_context(|| format!("unknown LRA task {task_name}"))?;
+    let variant = &cfg.train.variant;
+    let rt = Runtime::open(Path::new(&cfg.artifacts_dir))?;
+    let mut trainer = Trainer::new(
+        &rt,
+        &format!("train_lra_{variant}"),
+        Some(&format!("eval_lra_{variant}")),
+        cfg.seed,
+        None,
+    )?;
+    let source = ClsSource::Lra(LraGenerator::new(task, 256, cfg.seed));
+    let mut rec = Recorder::new();
+    trainer.run(
+        &source,
+        cfg.train.steps,
+        cfg.train.lr,
+        cfg.train.eval_every,
+        cfg.train.eval_batches,
+        cfg.train.log_every,
+        &mut rec,
+    )?;
+    let eval = trainer.evaluate(&source, cfg.train.eval_batches)?;
+    println!("lra {task_name} {variant}: accuracy {:.4}", eval.accuracy);
+    rec.write_csv(
+        &PathBuf::from(&cfg.results_dir)
+            .join(format!("lra_{task_name}_{variant}.csv")),
+    )?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let variant = &cfg.train.variant;
+    let n_requests = args.get_usize("requests", 256);
+    let artifact = format!("fwd_glue_{variant}");
+    let handle = ServerHandle::spawn(
+        PathBuf::from(&cfg.artifacts_dir),
+        artifact.clone(),
+        BatchPolicy {
+            max_batch: cfg.serve.max_batch,
+            max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
+        },
+        cfg.seed,
+        args.get("checkpoint").map(PathBuf::from),
+    );
+
+    // drive a synthetic open-loop workload
+    let gen = GlueGenerator::new(GlueTask::Qnli, 128, cfg.seed + 1);
+    let mut receivers = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let ex = gen.example(i as u64);
+        receivers.push(handle.submit(ex.input_ids, ex.segment_ids));
+        if i % 8 == 7 {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+    }
+    let mut got = 0usize;
+    for rx in receivers {
+        if rx.recv().is_ok() {
+            got += 1;
+        }
+    }
+    let stats = handle.shutdown()?;
+    println!(
+        "served {}/{} requests in {} batches | p50 {:.1} ms p99 {:.1} ms | \
+         {:.1} req/s (artifact {artifact})",
+        got, stats.requests, stats.batches, stats.latency.p50,
+        stats.latency.p99, stats.throughput_rps
+    );
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Run metrics: named counters/gauges, step logs, and CSV/JSON emission
+//! for the benchmark harness and the trainer.
+
+use crate::json::{to_string_pretty, Value};
+use crate::util::stats::Welford;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Accumulates scalar series keyed by name; writes CSV / JSON reports.
+#[derive(Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<(f64, f64)>>, // name -> (x, y)
+    aggregates: BTreeMap<String, Welford>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Append one (x, y) point to a named series (e.g. step -> loss).
+    pub fn push(&mut self, name: &str, x: f64, y: f64) {
+        self.series.entry(name.to_string()).or_default().push((x, y));
+        self.aggregates.entry(name.to_string()).or_default().push(y);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&[(f64, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        self.aggregates.get(name).map(|w| w.mean())
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.series.get(name).and_then(|v| v.last()).map(|(_, y)| *y)
+    }
+
+    /// Write every series into one long-format CSV: series,x,y
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "series,x,y")?;
+        for (name, points) in &self.series {
+            for (x, y) in points {
+                writeln!(f, "{name},{x},{y}")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Summaries as a JSON object {name: {mean, n, last}}.
+    pub fn to_json(&self) -> Value {
+        let mut obj = BTreeMap::new();
+        for (name, w) in &self.aggregates {
+            obj.insert(
+                name.clone(),
+                Value::object(vec![
+                    ("mean", Value::Number(w.mean())),
+                    ("std", Value::Number(w.std())),
+                    ("n", Value::Number(w.count() as f64)),
+                    ("last", Value::Number(self.last(name).unwrap_or(f64::NAN))),
+                ]),
+            );
+        }
+        Value::Object(obj)
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, to_string_pretty(&self.to_json()))
+    }
+}
+
+/// Format a fixed-width table row for terminal reports.
+pub fn table_row(cells: &[String], widths: &[usize]) -> String {
+    let mut out = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        out.push_str(&format!("{c:>w$} ", w = w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_aggregate() {
+        let mut r = Recorder::new();
+        r.push("loss", 0.0, 4.0);
+        r.push("loss", 1.0, 2.0);
+        assert_eq!(r.mean("loss"), Some(3.0));
+        assert_eq!(r.last("loss"), Some(2.0));
+        assert_eq!(r.series("loss").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn csv_roundtrip_format() {
+        let mut r = Recorder::new();
+        r.push("a", 1.0, 2.0);
+        let dir = std::env::temp_dir().join("yoso_metrics_test");
+        let path = dir.join("out.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("series,x,y"));
+        assert!(text.contains("a,1,2"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,280 @@
+//! Pure-Rust inference encoder (forward only) over the attention library.
+//!
+//! Consumes a `ParamSet` (freshly initialized or loaded from a training
+//! checkpoint) and runs the same post-LN BERT architecture as the L2
+//! model. Used by the serving CPU fallback, the attention-matrix dump
+//! (Figure 6), and the efficiency study's full-model rows.
+
+use super::params::ParamSet;
+use crate::attention::Attention;
+use crate::data::special;
+use crate::tensor::{gelu, Mat};
+use crate::util::Rng;
+
+pub struct EncoderConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_len: usize,
+    pub n_classes: usize,
+}
+
+impl EncoderConfig {
+    /// The shared encoder geometry of all artifact families.
+    pub fn base(vocab_size: usize, max_len: usize, n_classes: usize) -> Self {
+        EncoderConfig {
+            n_layers: 2,
+            d_model: 128,
+            n_heads: 2,
+            d_ff: 512,
+            vocab_size,
+            max_len,
+            n_classes,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+pub struct Encoder<'a> {
+    pub cfg: EncoderConfig,
+    params: std::collections::BTreeMap<&'a str, (&'a [usize], &'a [f32])>,
+}
+
+impl<'a> Encoder<'a> {
+    pub fn new(cfg: EncoderConfig, params: &'a ParamSet) -> Encoder<'a> {
+        Encoder { cfg, params: params.by_name() }
+    }
+
+    fn p(&self, name: &str) -> (&[usize], &[f32]) {
+        *self
+            .params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    fn mat(&self, name: &str) -> Mat {
+        let (shape, data) = self.p(name);
+        assert_eq!(shape.len(), 2, "{name} not a matrix");
+        Mat::from_vec(shape[0], shape[1], data.to_vec())
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        self.p(name).1
+    }
+
+    /// Dense layer: x @ W + b.
+    fn dense(&self, x: &Mat, w: &str, b: &str) -> Mat {
+        let wm = self.mat(w);
+        let bias = self.vec(b);
+        let mut out = x.matmul(&wm);
+        for i in 0..out.rows {
+            for (o, bb) in out.row_mut(i).iter_mut().zip(bias) {
+                *o += bb;
+            }
+        }
+        out
+    }
+
+    /// Token + position + segment embeddings, layer-normed. ids: (n,).
+    pub fn embed(&self, ids: &[i32], segs: &[i32]) -> Mat {
+        let d = self.cfg.d_model;
+        let (_, tok) = self.p("tok_emb");
+        let (_, pos) = self.p("pos_emb");
+        let (_, seg) = self.p("seg_emb");
+        let n = ids.len();
+        let mut x = Mat::zeros(n, d);
+        for i in 0..n {
+            let t = ids[i].max(0) as usize;
+            let s = segs[i].max(0) as usize;
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = tok[t * d + j] + pos[i * d + j] + seg[s * d + j];
+            }
+        }
+        x.layer_norm(self.vec("emb_ln_g"), self.vec("emb_ln_b"))
+    }
+
+    /// Full encoder forward for one sequence.
+    pub fn forward(&self, ids: &[i32], segs: &[i32], attn: &dyn Attention,
+                   rng: &mut Rng) -> Mat {
+        let mut x = self.embed(ids, segs);
+        for l in 0..self.cfg.n_layers {
+            x = self.layer(l, &x, attn, rng);
+        }
+        x
+    }
+
+    fn layer(&self, l: usize, x: &Mat, attn: &dyn Attention, rng: &mut Rng) -> Mat {
+        let p = |s: &str| format!("layer{l}.{s}");
+        let n = x.rows;
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+
+        let q = self.dense(x, &p("wq"), &p("bq"));
+        let k = self.dense(x, &p("wk"), &p("bk"));
+        let v = self.dense(x, &p("wv"), &p("bv"));
+
+        // per-head attention
+        let mut concat = Mat::zeros(n, self.cfg.d_model);
+        for head in 0..h {
+            let slice = |m: &Mat| {
+                Mat::from_fn(n, dh, |i, j| m.at(i, head * dh + j))
+            };
+            let (qh, kh, vh) = (slice(&q), slice(&k), slice(&v));
+            let out = attn.forward(&qh, &kh, &vh, rng);
+            for i in 0..n {
+                for j in 0..dh {
+                    concat.set(i, head * dh + j, out.at(i, j));
+                }
+            }
+        }
+        let a = self.dense(&concat, &p("wo"), &p("bo"));
+
+        // post-LN residual
+        let mut res = x.clone();
+        res.add_assign(&a);
+        let x1 = res.layer_norm(self.vec(&p("ln1_g")), self.vec(&p("ln1_b")));
+
+        let hidden = self.dense(&x1, &p("ff1_w"), &p("ff1_b")).map(gelu);
+        let f = self.dense(&hidden, &p("ff2_w"), &p("ff2_b"));
+        let mut res2 = x1.clone();
+        res2.add_assign(&f);
+        res2.layer_norm(self.vec(&p("ln2_g")), self.vec(&p("ln2_b")))
+    }
+
+    /// [CLS] pooler + classifier logits.
+    pub fn classify(&self, ids: &[i32], segs: &[i32], attn: &dyn Attention,
+                    rng: &mut Rng) -> Vec<f32> {
+        let hidden = self.forward(ids, segs, attn, rng);
+        let cls = Mat::from_vec(1, self.cfg.d_model, hidden.row(0).to_vec());
+        let mut pooled = self.dense(&cls, "pool_w", "pool_b");
+        for x in pooled.data.iter_mut() {
+            *x = x.tanh();
+        }
+        let logits = self.dense(&pooled, "cls_w", "cls_b");
+        logits.data
+    }
+
+    /// Per-head (q, k) projections of layer `l` — the Figure 6 probe.
+    pub fn layer_qk(&self, l: usize, ids: &[i32], segs: &[i32], head: usize,
+                    attn: &dyn Attention, rng: &mut Rng) -> (Mat, Mat) {
+        let mut x = self.embed(ids, segs);
+        for li in 0..l {
+            x = self.layer(li, &x, attn, rng);
+        }
+        let p = |s: &str| format!("layer{l}.{s}");
+        let q = self.dense(&x, &p("wq"), &p("bq"));
+        let k = self.dense(&x, &p("wk"), &p("bk"));
+        let dh = self.cfg.d_head();
+        let n = x.rows;
+        let qh = Mat::from_fn(n, dh, |i, j| q.at(i, head * dh + j));
+        let kh = Mat::from_fn(n, dh, |i, j| k.at(i, head * dh + j));
+        (qh, kh)
+    }
+}
+
+/// Pad/truncate ids+segs to a model length.
+pub fn pad_to(ids: &[i32], segs: &[i32], len: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut i = ids.to_vec();
+    let mut s = segs.to_vec();
+    i.resize(len, special::PAD);
+    s.resize(len, 0);
+    i.truncate(len);
+    s.truncate(len);
+    (i, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SoftmaxAttention;
+    use crate::runtime::manifest::{ArtifactSpec, Dtype, IoSpec};
+
+    fn fake_spec() -> ArtifactSpec {
+        // build the param list the same way the ABI would for the base
+        // encoder at vocab 64, n 16, classes 3
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let d = cfg.d_model;
+        let mut inputs = Vec::new();
+        let mut add = |name: &str, shape: Vec<usize>| {
+            inputs.push(IoSpec {
+                name: format!("param:{name}"),
+                shape,
+                dtype: Dtype::F32,
+            });
+        };
+        add("tok_emb", vec![cfg.vocab_size, d]);
+        add("pos_emb", vec![cfg.max_len, d]);
+        add("seg_emb", vec![2, d]);
+        add("emb_ln_g", vec![d]);
+        add("emb_ln_b", vec![d]);
+        for l in 0..cfg.n_layers {
+            for (n, s) in [
+                ("wq", vec![d, d]), ("bq", vec![d]),
+                ("wk", vec![d, d]), ("bk", vec![d]),
+                ("wv", vec![d, d]), ("bv", vec![d]),
+                ("wo", vec![d, d]), ("bo", vec![d]),
+                ("ln1_g", vec![d]), ("ln1_b", vec![d]),
+                ("ff1_w", vec![d, cfg.d_ff]), ("ff1_b", vec![cfg.d_ff]),
+                ("ff2_w", vec![cfg.d_ff, d]), ("ff2_b", vec![d]),
+                ("ln2_g", vec![d]), ("ln2_b", vec![d]),
+            ] {
+                add(&format!("layer{l}.{n}"), s);
+            }
+        }
+        add("mlm_w", vec![d, d]);
+        add("mlm_b", vec![d]);
+        add("mlm_ln_g", vec![d]);
+        add("mlm_ln_b", vec![d]);
+        add("mlm_out_b", vec![cfg.vocab_size]);
+        add("pool_w", vec![d, d]);
+        add("pool_b", vec![d]);
+        add("sop_w", vec![d, 2]);
+        add("sop_b", vec![2]);
+        add("cls_w", vec![d, 3]);
+        add("cls_b", vec![3]);
+        ArtifactSpec {
+            name: "fake".into(),
+            file: "/dev/null".into(),
+            kind: "train_step".into(),
+            family: "test".into(),
+            attention: "softmax".into(),
+            inputs,
+            outputs: vec![],
+            config: Default::default(),
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let spec = fake_spec();
+        let params = ParamSet::init_for(&spec, 0);
+        let enc = Encoder::new(EncoderConfig::base(64, 16, 3), &params);
+        let ids: Vec<i32> = (0..16).map(|i| (i % 60) + 5).collect();
+        let segs = vec![0i32; 16];
+        let mut rng = Rng::new(1);
+        let h = enc.forward(&ids, &segs, &SoftmaxAttention, &mut rng);
+        assert_eq!((h.rows, h.cols), (16, 128));
+        assert!(h.data.iter().all(|x| x.is_finite()));
+        let logits = enc.classify(&ids, &segs, &SoftmaxAttention, &mut rng);
+        assert_eq!(logits.len(), 3);
+    }
+
+    #[test]
+    fn qk_probe_shapes() {
+        let spec = fake_spec();
+        let params = ParamSet::init_for(&spec, 0);
+        let enc = Encoder::new(EncoderConfig::base(64, 16, 3), &params);
+        let ids = vec![5i32; 16];
+        let segs = vec![0i32; 16];
+        let mut rng = Rng::new(2);
+        let (q, k) = enc.layer_qk(1, &ids, &segs, 0, &SoftmaxAttention, &mut rng);
+        assert_eq!((q.rows, q.cols), (16, 64));
+        assert_eq!((k.rows, k.cols), (16, 64));
+    }
+}

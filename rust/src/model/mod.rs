@@ -1,0 +1,9 @@
+//! Model-side L3 components: parameter initialization matching the L2
+//! `init_params` exactly (so Rust-initialized training reproduces the
+//! Python-initialized runs), and a pure-Rust inference encoder over the
+//! attention library (serving fallback + analysis figures).
+
+pub mod encoder;
+pub mod params;
+
+pub use params::{init_param, ParamSet};

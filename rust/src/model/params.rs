@@ -1,0 +1,121 @@
+//! Parameter initialization + named parameter sets.
+//!
+//! Mirrors `python/compile/model.py::init_params` *rule-for-rule*:
+//! * layer-norm gains (`*_g`) -> ones
+//! * biases (`b*` / `*_b`)    -> zeros
+//! * depthwise conv kernels   -> 0.02 noise + unit center tap
+//! * everything else          -> N(0, 0.02^2)
+//!
+//! (The random values differ from jax's — only the *distribution* must
+//! match; artifacts take parameters as inputs, so any init works.)
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// Initialize one parameter by name + shape.
+pub fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let count: usize = shape.iter().product();
+    let short = name.rsplit('.').next().unwrap_or(name);
+    if short.ends_with("_g") {
+        vec![1.0; count]
+    } else if short.starts_with('b') || short.ends_with("_b") {
+        vec![0.0; count]
+    } else if short == "conv_k" {
+        // (heads, conv_size): noise + center tap 1.0
+        let conv = shape[1];
+        let mut v: Vec<f32> = (0..count).map(|_| 0.02 * rng.normal()).collect();
+        for h in 0..shape[0] {
+            v[h * conv + conv / 2] += 1.0;
+        }
+        v
+    } else {
+        (0..count).map(|_| 0.02 * rng.normal()).collect()
+    }
+}
+
+/// Ordered, named parameter tensors (ABI order from the manifest).
+#[derive(Clone, Debug, Default)]
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Initialize from an artifact's `param:*` input slots.
+    pub fn init_for(spec: &ArtifactSpec, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut set = ParamSet::default();
+        for io in spec.inputs_with_prefix("param:") {
+            let name = io.name.trim_start_matches("param:").to_string();
+            set.values.push(init_param(&name, &io.shape, &mut rng));
+            set.names.push(name);
+            set.shapes.push(io.shape.clone());
+        }
+        set
+    }
+
+    /// Zeroed clone (Adam moment buffers).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            names: self.names.clone(),
+            shapes: self.shapes.clone(),
+            values: self.values.iter().map(|v| vec![0.0; v.len()]).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+
+    /// Name-indexed view.
+    pub fn by_name(&self) -> BTreeMap<&str, (&[usize], &[f32])> {
+        self.names
+            .iter()
+            .zip(self.shapes.iter().zip(&self.values))
+            .map(|(n, (s, v))| (n.as_str(), (s.as_slice(), v.as_slice())))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_rules() {
+        let mut rng = Rng::new(0);
+        assert!(init_param("layer0.ln1_g", &[4], &mut rng).iter().all(|&x| x == 1.0));
+        assert!(init_param("layer0.bq", &[4], &mut rng).iter().all(|&x| x == 0.0));
+        assert!(init_param("mlm_out_b", &[4], &mut rng).iter().all(|&x| x == 0.0));
+        let w = init_param("layer0.wq", &[64, 64], &mut rng);
+        let std = (w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.005, "{std}");
+        let conv = init_param("layer0.conv_k", &[2, 9], &mut rng);
+        assert!((conv[4] - 1.0).abs() < 0.1);
+        assert!((conv[9 + 4] - 1.0).abs() < 0.1);
+        assert!(conv[0].abs() < 0.1);
+    }
+
+    #[test]
+    fn zeros_like_preserves_structure() {
+        let p = ParamSet {
+            names: vec!["a".into()],
+            shapes: vec![vec![2, 2]],
+            values: vec![vec![1.0; 4]],
+        };
+        let z = p.zeros_like();
+        assert_eq!(z.values[0], vec![0.0; 4]);
+        assert_eq!(z.names, p.names);
+        assert_eq!(p.total_elements(), 4);
+    }
+}

@@ -1,0 +1,52 @@
+//! A compiled artifact: HLO text -> PJRT executable, with ABI-checked
+//! execution.
+
+use super::manifest::ArtifactSpec;
+use anyhow::{ensure, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load + compile the artifact's HLO text on the given client.
+    pub fn load(client: &PjRtClient, spec: ArtifactSpec) -> Result<Artifact> {
+        let path = spec
+            .file
+            .to_str()
+            .context("artifact path not utf-8")?
+            .to_string();
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Artifact { spec, exe })
+    }
+
+    /// Execute with positional literals; returns the flattened output
+    /// tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, ABI wants {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let result = self.exe.execute::<Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outputs = tuple.to_tuple()?;
+        ensure!(
+            outputs.len() == self.spec.outputs.len(),
+            "{}: got {} outputs, ABI wants {}",
+            self.spec.name,
+            outputs.len(),
+            self.spec.outputs.len()
+        );
+        Ok(outputs)
+    }
+}

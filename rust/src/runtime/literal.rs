@@ -1,0 +1,71 @@
+//! Literal marshaling helpers: typed host arrays <-> xla::Literal,
+//! validated against IoSpecs.
+
+use super::manifest::{Dtype, IoSpec};
+use anyhow::{ensure, Result};
+use xla::Literal;
+
+/// Build an f32 literal with the given shape.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let count: usize = shape.iter().product();
+    ensure!(data.len() == count, "f32 literal: {} vs {:?}", data.len(), shape);
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal with the given shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let count: usize = shape.iter().product();
+    ensure!(data.len() == count, "i32 literal: {} vs {:?}", data.len(), shape);
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build a literal for a spec slot from f32 or i32 host data.
+pub enum HostArray<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+pub fn literal_for_spec(spec: &IoSpec, data: HostArray) -> Result<Literal> {
+    match (spec.dtype, data) {
+        (Dtype::F32, HostArray::F32(d)) => f32_literal(d, &spec.shape),
+        (Dtype::I32, HostArray::I32(d)) => i32_literal(d, &spec.shape),
+        _ => anyhow::bail!("dtype mismatch for slot {}", spec.name),
+    }
+}
+
+/// Read an f32 literal back to host.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let s = f32_literal(&[7.5], &[]).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+        let i = i32_literal(&[3], &[]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0], &[2]).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest: the ABI contract between `aot.py` and the runtime.
+
+use crate::json::{parse, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype in the artifact ABI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn from_str(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(anyhow!("unknown dtype {other}")),
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .context("io spec name")?
+                .to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Value::as_array)
+                .context("io spec shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::from_str(
+                v.get("dtype").and_then(Value::as_str).context("dtype")?,
+            )?,
+        })
+    }
+}
+
+/// One artifact's full ABI + metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub family: String,
+    pub attention: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub config: BTreeMap<String, Value>,
+}
+
+impl ArtifactSpec {
+    /// Number of model parameters (inputs named `param:*`).
+    pub fn n_params(&self) -> usize {
+        self.inputs.iter().filter(|s| s.name.starts_with("param:")).count()
+    }
+
+    /// Input slots with a given prefix, in ABI order.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|s| s.name.starts_with(prefix)).collect()
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(Value::as_usize)
+    }
+}
+
+/// The parsed manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let v = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut artifacts = BTreeMap::new();
+        let entries = v
+            .get("artifacts")
+            .and_then(Value::as_object)
+            .context("manifest missing 'artifacts'")?;
+        for (name, entry) in entries {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(
+                    entry.get("file").and_then(Value::as_str).context("file")?,
+                ),
+                kind: entry
+                    .get("kind")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                family: entry
+                    .get("family")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                attention: entry
+                    .get("attention")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: entry
+                    .get("inputs")
+                    .and_then(Value::as_array)
+                    .context("inputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: entry
+                    .get("outputs")
+                    .and_then(Value::as_array)
+                    .context("outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                config: entry
+                    .get("config")
+                    .and_then(Value::as_object)
+                    .cloned()
+                    .unwrap_or_default(),
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Names filtered by kind/family.
+    pub fn names_where(&self, kind: &str, family: &str) -> Vec<&str> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == kind && a.family == family)
+            .map(|a| a.name.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("yoso_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"toy": {
+                "file": "toy.hlo.txt", "kind": "train_step",
+                "family": "pretrain", "attention": "yoso_16",
+                "config": {"batch": 16, "n_params": 2},
+                "inputs": [
+                  {"name": "param:a", "shape": [2, 3], "dtype": "f32"},
+                  {"name": "param:b", "shape": [3], "dtype": "f32"},
+                  {"name": "batch:ids", "shape": [4, 8], "dtype": "i32"},
+                  {"name": "step", "shape": [], "dtype": "i32"}
+                ],
+                "outputs": [{"name": "metrics", "shape": [8], "dtype": "f32"}]
+            }}}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_spec() {
+        let dir = fake_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.n_params(), 2);
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[2].dtype, Dtype::I32);
+        assert_eq!(a.inputs[3].element_count(), 1);
+        assert_eq!(a.config_usize("batch"), Some(16));
+        assert_eq!(m.names_where("train_step", "pretrain"), vec!["toy"]);
+        assert!(m.get("missing").is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

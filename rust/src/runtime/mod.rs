@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by `make artifacts`
+//! and executes them from the coordinator hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax >= 0.5
+//! emits 64-bit instruction ids in serialized protos which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifact;
+pub mod literal;
+pub mod manifest;
+pub mod registry;
+
+pub use artifact::Artifact;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use registry::Runtime;

@@ -1,0 +1,46 @@
+//! Runtime = PJRT client + manifest + lazily compiled artifact cache.
+
+use super::artifact::Artifact;
+use super::manifest::Manifest;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use xla::PjRtClient;
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// CPU-PJRT runtime over an artifact directory.
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        crate::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Get (compiling on first use) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(a));
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let t = crate::util::Timer::start();
+        let artifact = Arc::new(Artifact::load(&self.client, spec)?);
+        crate::info!("compiled {} in {:.1}s", name, t.elapsed_secs());
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&artifact));
+        Ok(artifact)
+    }
+}

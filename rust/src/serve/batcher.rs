@@ -1,0 +1,104 @@
+//! Dynamic batching policy: max-batch-or-max-wait, the same policy the
+//! serving systems the paper's efficiency claims target (vLLM-style
+//! routers) use for non-autoregressive models.
+
+use super::Request;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+pub struct Batcher {
+    pub policy: BatchPolicy,
+}
+
+impl Batcher {
+    /// Collect the next batch. Blocks for the first request; then drains
+    /// until max_batch or until the first request has aged max_wait.
+    /// Returns None when the channel is closed and drained.
+    pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
+        let first = rx.recv().ok()?;
+        let deadline = Instant::now() + self.policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(_) => break, // timeout or disconnect: ship what we have
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req() -> (Request, std::sync::mpsc::Receiver<super::super::Response>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                input_ids: vec![1, 2, 3],
+                segment_ids: vec![0, 0, 0],
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for _ in 0..5 {
+            let (r, k) = req();
+            keep.push(k);
+            tx.send(r).unwrap();
+        }
+        let b = Batcher {
+            policy: BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(50) },
+        };
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch2 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn respects_max_wait() {
+        let (tx, rx) = channel();
+        let (r, _k) = req();
+        tx.send(r).unwrap();
+        let b = Batcher {
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(10) },
+        };
+        let t = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_on_closed_channel() {
+        let (tx, rx) = channel::<Request>();
+        drop(tx);
+        let b = Batcher { policy: BatchPolicy::default() };
+        assert!(b.next_batch(&rx).is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Serving coordinator: request queue -> dynamic batcher -> PJRT
+//! executor, vLLM-router style.
+//!
+//! PJRT handles are not `Send`, so the server *owns* its Runtime on a
+//! dedicated thread; clients talk to it through channels. The batcher
+//! collects requests until either `max_batch` is reached or the oldest
+//! request has waited `max_wait_ms` — the standard dynamic-batching
+//! policy — then pads the batch to the artifact's fixed batch size and
+//! executes one forward.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use server::{ServerHandle, ServeStats};
+
+/// One inference request: token ids + segments for a single sequence.
+#[derive(Debug)]
+pub struct Request {
+    pub input_ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    /// where to deliver the logits
+    pub reply: std::sync::mpsc::Sender<Response>,
+    pub enqueued: std::time::Instant,
+}
+
+/// Logits for one sequence plus timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+}

@@ -1,0 +1,167 @@
+//! The serving loop: owns the PJRT runtime on its thread, pulls dynamic
+//! batches, pads to the artifact's fixed batch size, executes, and
+//! delivers per-sequence logits.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::{Request, Response};
+use crate::data::special;
+use crate::model::ParamSet;
+use crate::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
+use crate::runtime::Runtime;
+use crate::util::stats::Summary;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+use xla::Literal;
+
+/// Client-side handle: submit sequences, receive logits.
+pub struct ServerHandle {
+    tx: Sender<Request>,
+    join: Option<std::thread::JoinHandle<Result<ServeStats>>>,
+}
+
+/// Aggregate serving statistics, returned at shutdown.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub latency: Summary,
+    pub queue_latency: Summary,
+    pub throughput_rps: f64,
+}
+
+impl ServerHandle {
+    /// Spawn the server thread. `checkpoint` (optional) initializes model
+    /// weights; otherwise fresh-initialized weights serve (useful for
+    /// latency benchmarking).
+    pub fn spawn(
+        artifacts_dir: PathBuf,
+        artifact_name: String,
+        policy: BatchPolicy,
+        seed: u64,
+        checkpoint: Option<PathBuf>,
+    ) -> ServerHandle {
+        let (tx, rx) = channel::<Request>();
+        let join = std::thread::spawn(move || {
+            serve_loop(artifacts_dir, artifact_name, policy, seed, checkpoint, rx)
+        });
+        ServerHandle { tx, join: Some(join) }
+    }
+
+    /// Submit one sequence; returns the response receiver.
+    pub fn submit(&self, input_ids: Vec<i32>, segment_ids: Vec<i32>)
+        -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let _ = self.tx.send(Request {
+            input_ids,
+            segment_ids,
+            reply,
+            enqueued: Instant::now(),
+        });
+        rx
+    }
+
+    /// Close the queue and collect stats.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        drop(self.tx);
+        self.join
+            .take()
+            .expect("already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))?
+    }
+}
+
+fn serve_loop(
+    artifacts_dir: PathBuf,
+    artifact_name: String,
+    policy: BatchPolicy,
+    seed: u64,
+    checkpoint: Option<PathBuf>,
+    rx: Receiver<Request>,
+) -> Result<ServeStats> {
+    let runtime = Runtime::open(&artifacts_dir)?;
+    let artifact = runtime.artifact(&artifact_name)?;
+    let spec = &artifact.spec;
+    let ids_slot = spec
+        .inputs
+        .iter()
+        .find(|s| s.name == "batch:input_ids")
+        .context("forward artifact needs batch:input_ids")?;
+    let (abi_batch, seq_len) = (ids_slot.shape[0], ids_slot.shape[1]);
+
+    // model weights: checkpoint or fresh init
+    let params = match checkpoint {
+        Some(path) => crate::train::checkpoint::load(&path)?,
+        None => ParamSet::init_for(spec, seed),
+    };
+    let param_lits: Vec<Literal> = params
+        .values
+        .iter()
+        .zip(&params.shapes)
+        .map(|(v, s)| f32_literal(v, s))
+        .collect::<Result<_>>()?;
+
+    let batcher = Batcher { policy };
+    let mut latencies = Vec::new();
+    let mut queue_latencies = Vec::new();
+    let mut n_requests = 0usize;
+    let mut n_batches = 0usize;
+    let started = Instant::now();
+
+    while let Some(batch) = batcher.next_batch(&rx) {
+        let exec_start = Instant::now();
+        n_batches += 1;
+        // pad the dynamic batch to the ABI batch size
+        let mut ids = vec![special::PAD; abi_batch * seq_len];
+        let mut segs = vec![0i32; abi_batch * seq_len];
+        for (row, req) in batch.iter().enumerate() {
+            for (j, &t) in req.input_ids.iter().take(seq_len).enumerate() {
+                ids[row * seq_len + j] = t;
+            }
+            for (j, &t) in req.segment_ids.iter().take(seq_len).enumerate() {
+                segs[row * seq_len + j] = t;
+            }
+        }
+        let mut inputs: Vec<Literal> = param_lits.iter().cloned().collect();
+        inputs.push(i32_literal(&ids, &[abi_batch, seq_len])?);
+        inputs.push(i32_literal(&segs, &[abi_batch, seq_len])?);
+        inputs.push(i32_literal(&[n_batches as i32], &[])?);
+
+        let outputs = artifact.execute(&inputs)?;
+        let logits = to_f32_vec(&outputs[0])?;
+        let per_row = logits.len() / abi_batch;
+
+        for (row, req) in batch.into_iter().enumerate() {
+            n_requests += 1;
+            let queue_ms =
+                (exec_start - req.enqueued).as_secs_f64() * 1e3;
+            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            latencies.push(total_ms);
+            queue_latencies.push(queue_ms);
+            let _ = req.reply.send(Response {
+                logits: logits[row * per_row..(row + 1) * per_row].to_vec(),
+                queue_ms,
+                total_ms,
+            });
+        }
+    }
+
+    let elapsed = started.elapsed().as_secs_f64();
+    Ok(ServeStats {
+        requests: n_requests,
+        batches: n_batches,
+        latency: if latencies.is_empty() {
+            Summary::of(&[0.0])
+        } else {
+            Summary::of(&latencies)
+        },
+        queue_latency: if queue_latencies.is_empty() {
+            Summary::of(&[0.0])
+        } else {
+            Summary::of(&queue_latencies)
+        },
+        throughput_rps: n_requests as f64 / elapsed.max(1e-9),
+    })
+}

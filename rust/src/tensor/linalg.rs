@@ -1,0 +1,128 @@
+//! Cache-blocked matmul kernels.
+//!
+//! The pure-Rust attention library's hot loop. `matmul_into` computes
+//! C = A @ B with k-panel blocking so the B panel stays in L1/L2;
+//! `matmul_nt_into` computes C = A @ B^T directly off B's rows (the
+//! common attention pattern Q K^T) — both autovectorize well with
+//! `-C target-cpu` defaults and avoid any allocation.
+
+use super::Mat;
+
+const BLOCK_K: usize = 64;
+
+/// C = A @ B. C must be pre-zeroed with the right shape.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "out dims");
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    c.data.fill(0.0);
+    for kb in (0..k).step_by(BLOCK_K) {
+        let kend = (kb + BLOCK_K).min(k);
+        for i in 0..n {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * m..(i + 1) * m];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * m..(kk + 1) * m];
+                // innermost loop vectorizes: crow += aik * brow
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C = A @ B^T (B stored row-major, i.e. dot products of rows).
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out dims");
+    let k = a.cols;
+    for i in 0..a.rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
+        for j in 0..b.rows {
+            let brow = &b.data[j * k..(j + 1) * k];
+            crow[j] = dot(arow, brow);
+        }
+    }
+}
+
+/// Unrolled dot product (4-wide accumulators help LLVM vectorize).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(0);
+        for (n, k, m) in [(3, 5, 7), (16, 64, 16), (33, 129, 65)] {
+            let a = Mat::randn(n, k, 1.0, &mut rng);
+            let b = Mat::randn(k, m, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "({n},{k},{m})");
+        }
+    }
+
+    #[test]
+    fn dot_matches_sum() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), expect);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+}

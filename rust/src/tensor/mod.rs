@@ -1,0 +1,269 @@
+//! Minimal f32 matrix/tensor substrate for the pure-Rust attention
+//! library and model (row-major, owned storage).
+//!
+//! This is deliberately small: the L3 hot paths need dense matmul,
+//! row-wise softmax/layernorm/l2-normalize, transpose, and elementwise
+//! ops — nothing more. The HLO artifacts cover everything gradient-
+//! shaped; this substrate powers inference, the efficiency benchmarks
+//! (Figure 7 / Table 1), and the approximation studies (Figures 1, 6, 8).
+
+pub mod linalg;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std^2) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut crate::util::Rng) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() * std);
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// self @ other, cache-blocked (see `linalg::matmul_into`).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        linalg::matmul_into(self, other, &mut out);
+        out
+    }
+
+    /// self @ other^T without materializing the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.rows);
+        linalg::matmul_nt_into(self, other, &mut out);
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Row-wise softmax in place.
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Row-wise l2 normalization in place (gradient-safe eps inside sqrt,
+    /// mirroring the L1 kernels).
+    pub fn l2_normalize_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let norm =
+                (row.iter().map(|x| x * x).sum::<f32>() + 1e-12).sqrt();
+            let inv = 1.0 / norm;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Rows projected to the unit sphere (copy).
+    pub fn unit_rows(&self) -> Mat {
+        let mut m = self.clone();
+        m.l2_normalize_rows();
+        m
+    }
+
+    /// LayerNorm over the last axis with gain g and bias b.
+    pub fn layer_norm(&self, g: &[f32], b: &[f32]) -> Mat {
+        assert_eq!(g.len(), self.cols);
+        assert_eq!(b.len(), self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mean = row.iter().sum::<f32>() / self.cols as f32;
+            let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                / self.cols as f32;
+            let inv = 1.0 / (var + 1e-6).sqrt();
+            let orow = out.row_mut(i);
+            for j in 0..self.cols {
+                orow[j] = (row[j] - mean) * inv * g[j] + b[j];
+            }
+        }
+        out
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// GELU (tanh approximation, as in BERT).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x
+        * (1.0
+            + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x))
+                .tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(7, 5, 1.0, &mut rng);
+        let b = Mat::randn(9, 5, 1.0, &mut rng);
+        let direct = a.matmul_t(&b);
+        let via_t = a.matmul(&b.t());
+        assert!(direct.max_abs_diff(&via_t) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(2);
+        let mut a = Mat::randn(5, 8, 3.0, &mut rng);
+        a.softmax_rows();
+        for i in 0..5 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(a.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn l2_rows_unit_norm() {
+        let mut rng = Rng::new(3);
+        let mut a = Mat::randn(4, 16, 2.0, &mut rng);
+        a.l2_normalize_rows();
+        for i in 0..4 {
+            let n: f32 = a.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(3, 32, 5.0, &mut rng);
+        let g = vec![1.0; 32];
+        let b = vec![0.0; 32];
+        let out = a.layer_norm(&g, &b);
+        for i in 0..3 {
+            let mean: f32 = out.row(i).iter().sum::<f32>() / 32.0;
+            let var: f32 =
+                out.row(i).iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+}

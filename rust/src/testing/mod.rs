@@ -1,0 +1,112 @@
+//! Property-testing microframework (offline registry has no proptest).
+//!
+//! Provides seeded generators, a `check` driver that runs N cases and
+//! reports the failing seed, and simple shrinking for numeric/size
+//! parameters via halving. Used by the coordinator invariants tests
+//! (routing, batching, state) and the attention-library property tests.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. On failure,
+/// attempt to shrink by regenerating with halved size hints, and panic
+/// with the seed that reproduces the minimal found counterexample.
+pub fn check<T: std::fmt::Debug, G, P>(cfg: PropConfig, mut generate: G, prop: P)
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: Fn(&T) -> bool,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let size = 1 + case % 64;
+        let input = generate(&mut rng, size);
+        if !prop(&input) {
+            // shrink: retry with progressively smaller size hints
+            let mut minimal = input;
+            let mut cur = size;
+            while cur > 1 {
+                cur /= 2;
+                let mut rng = Rng::new(case_seed);
+                let candidate = generate(&mut rng, cur);
+                if !prop(&candidate) {
+                    minimal = candidate;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}).\n\
+                 minimal counterexample: {minimal:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        lo + rng.uniform() * (hi - lo)
+    }
+
+    pub fn unit_mat(rng: &mut Rng, n: usize, d: usize) -> Mat {
+        Mat::randn(n, d, 1.0, rng).unit_rows()
+    }
+
+    pub fn vec_of<T>(rng: &mut Rng, len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        (0..len).map(|_| f(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(PropConfig::default(), |rng, size| {
+            gen::vec_of(rng, size, |r| r.below(100))
+        }, |v| v.iter().all(|&x| x < 100));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(
+            PropConfig { cases: 16, seed: 1 },
+            |rng, size| gen::vec_of(rng, size + 3, |r| r.below(10)),
+            |v| v.len() < 3,
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let x = gen::usize_in(&mut rng, 5, 10);
+            assert!((5..10).contains(&x));
+            let f = gen::f32_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let m = gen::unit_mat(&mut rng, 4, 8);
+        assert_eq!((m.rows, m.cols), (4, 8));
+    }
+}

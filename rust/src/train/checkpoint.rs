@@ -1,0 +1,114 @@
+//! Checkpoint format: a simple self-describing binary container for named
+//! f32 tensors (the offline registry has no serde/npy writer).
+//!
+//! Layout (little-endian):
+//!   magic "YOSOCKPT" | u32 version | u32 tensor count
+//!   per tensor: u32 name_len | name bytes | u32 ndim | u64 dims...
+//!               | f32 data...
+
+use crate::model::ParamSet;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"YOSOCKPT";
+const VERSION: u32 = 1;
+
+pub fn save(params: &ParamSet, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for i in 0..params.len() {
+        let name = params.names[i].as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(params.shapes[i].len() as u32).to_le_bytes())?;
+        for &d in &params.shapes[i] {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in &params.values[i] {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<ParamSet> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "not a yoso checkpoint");
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut set = ParamSet::default();
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        ensure!(name_len < 4096, "absurd name length");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let ndim = read_u32(&mut f)? as usize;
+        ensure!(ndim <= 8, "absurd rank");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let count: usize = shape.iter().product();
+        ensure!(count < (1 << 30), "absurd tensor size");
+        let mut data = vec![0f32; count];
+        let mut buf = vec![0u8; count * 4];
+        f.read_exact(&mut buf)?;
+        for (x, c) in data.iter_mut().zip(buf.chunks_exact(4)) {
+            *x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        set.names.push(String::from_utf8(name)?);
+        set.shapes.push(shape);
+        set.values.push(data);
+    }
+    Ok(set)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let params = ParamSet {
+            names: vec!["a".into(), "layer0.wq".into()],
+            shapes: vec![vec![2, 3], vec![4]],
+            values: vec![vec![1.0, -2.5, 3.0, 0.0, 7.5, -1.0], vec![0.5; 4]],
+        };
+        let path = std::env::temp_dir().join(format!("ckpt_{}.bin", std::process::id()));
+        save(&params, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.names, params.names);
+        assert_eq!(loaded.shapes, params.shapes);
+        assert_eq!(loaded.values, params.values);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,10 @@
+//! Training orchestrator: drives the fused train-step artifacts (fwd +
+//! bwd + AdamW in one HLO module) from Rust, with data generation,
+//! metrics, periodic evaluation, and checkpointing.
+
+pub mod checkpoint;
+pub mod source;
+pub mod trainer;
+
+pub use source::{BatchSource, ClsSource, PretrainSource};
+pub use trainer::{EvalResult, Trainer};

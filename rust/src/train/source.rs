@@ -1,0 +1,124 @@
+//! Batch sources: map (index, artifact ABI) -> input literals for the
+//! `batch:*` slots. Deterministic by index, so runs are reproducible and
+//! train/eval splits are disjoint index ranges.
+
+use crate::data::glue_synth::GlueGenerator;
+use crate::data::lra::LraGenerator;
+use crate::data::mlm::PretrainStream;
+use crate::runtime::literal::i32_literal;
+use crate::runtime::manifest::ArtifactSpec;
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// Index base for evaluation batches — far from any training index.
+pub const EVAL_INDEX_BASE: u64 = 1 << 40;
+
+pub trait BatchSource: Send {
+    /// Literals for the artifact's `batch:*` slots, in ABI order.
+    fn batch_literals(&self, start_index: u64, spec: &ArtifactSpec)
+        -> Result<Vec<Literal>>;
+}
+
+/// MLM + SOP pretraining batches.
+pub struct PretrainSource {
+    pub stream: PretrainStream,
+}
+
+impl BatchSource for PretrainSource {
+    fn batch_literals(&self, start: u64, spec: &ArtifactSpec) -> Result<Vec<Literal>> {
+        let slots = spec.inputs_with_prefix("batch:");
+        let b = slots
+            .first()
+            .map(|s| s.shape[0])
+            .unwrap_or(0);
+        let batch = self.stream.batch(start, b);
+        let mut out = Vec::with_capacity(slots.len());
+        for slot in slots {
+            let lit = match slot.name.as_str() {
+                "batch:input_ids" => i32_literal(&batch.input_ids, &slot.shape)?,
+                "batch:segment_ids" => i32_literal(&batch.segment_ids, &slot.shape)?,
+                "batch:mlm_labels" => i32_literal(&batch.mlm_labels, &slot.shape)?,
+                "batch:sop_labels" => i32_literal(&batch.sop_labels, &slot.shape)?,
+                other => bail!("unknown pretrain batch slot {other}"),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+}
+
+/// Classification batches from any deterministic example generator.
+pub enum ClsSource {
+    Glue(GlueGenerator),
+    Lra(LraGenerator),
+}
+
+impl ClsSource {
+    fn batch(&self, start: u64, b: usize) -> crate::data::ClsBatch {
+        match self {
+            ClsSource::Glue(g) => g.batch(start, b),
+            ClsSource::Lra(g) => g.batch(start, b),
+        }
+    }
+}
+
+impl BatchSource for ClsSource {
+    fn batch_literals(&self, start: u64, spec: &ArtifactSpec) -> Result<Vec<Literal>> {
+        let slots = spec.inputs_with_prefix("batch:");
+        let b = slots.first().map(|s| s.shape[0]).unwrap_or(0);
+        let batch = self.batch(start, b);
+        let mut out = Vec::with_capacity(slots.len());
+        for slot in slots {
+            let lit = match slot.name.as_str() {
+                "batch:input_ids" => i32_literal(&batch.input_ids, &slot.shape)?,
+                "batch:segment_ids" => i32_literal(&batch.segment_ids, &slot.shape)?,
+                "batch:labels" => i32_literal(&batch.labels, &slot.shape)?,
+                other => bail!("unknown cls batch slot {other}"),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusConfig, CorpusGenerator};
+    use crate::data::mlm::MlmConfig;
+    use crate::data::tokenizer::WordTokenizer;
+    use crate::runtime::manifest::{Dtype, IoSpec};
+
+    fn pretrain_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "/dev/null".into(),
+            kind: "train_step".into(),
+            family: "pretrain".into(),
+            attention: "softmax".into(),
+            inputs: vec![
+                IoSpec { name: "batch:input_ids".into(), shape: vec![4, 128], dtype: Dtype::I32 },
+                IoSpec { name: "batch:segment_ids".into(), shape: vec![4, 128], dtype: Dtype::I32 },
+                IoSpec { name: "batch:mlm_labels".into(), shape: vec![4, 128], dtype: Dtype::I32 },
+                IoSpec { name: "batch:sop_labels".into(), shape: vec![4], dtype: Dtype::I32 },
+            ],
+            outputs: vec![],
+            config: Default::default(),
+        }
+    }
+
+    #[test]
+    fn pretrain_source_fills_all_slots() {
+        let src = PretrainSource {
+            stream: PretrainStream::new(
+                CorpusGenerator::new(CorpusConfig::default()),
+                WordTokenizer { n_words: 2000 },
+                MlmConfig::default(),
+                3,
+            ),
+        };
+        let lits = src.batch_literals(0, &pretrain_spec()).unwrap();
+        assert_eq!(lits.len(), 4);
+        assert_eq!(lits[0].element_count(), 4 * 128);
+    }
+}

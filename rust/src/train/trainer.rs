@@ -1,0 +1,304 @@
+//! The training loop: Rust owns the loop, data, metrics, checkpoints;
+//! XLA owns the math (one fused HLO train step per variant).
+
+use super::checkpoint;
+use super::source::{BatchSource, EVAL_INDEX_BASE};
+use crate::metrics::Recorder;
+use crate::model::ParamSet;
+use crate::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
+use crate::runtime::{Artifact, Runtime};
+use crate::util::Timer;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use xla::Literal;
+
+/// Example-index stride between training batches: must exceed any batch
+/// size so step s and step s+1 draw disjoint examples.
+pub const BATCH_INDEX_STRIDE: u64 = 4096;
+
+/// Metrics vector layout (see model.py pretrain_losses / cls_losses).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f64,
+    pub mlm_loss: f64,
+    pub sop_loss: f64,
+    pub correct: f64,
+    pub denom: f64,
+    pub sop_correct: f64,
+    pub batch: f64,
+}
+
+impl StepMetrics {
+    pub fn from_vec(v: &[f32]) -> StepMetrics {
+        StepMetrics {
+            loss: v[0] as f64,
+            mlm_loss: v[1] as f64,
+            sop_loss: v[2] as f64,
+            correct: v[3] as f64,
+            denom: v[4] as f64,
+            sop_correct: v[5] as f64,
+            batch: v[6] as f64,
+        }
+    }
+
+    pub fn mlm_accuracy(&self) -> f64 {
+        self.correct / self.denom.max(1.0)
+    }
+
+    pub fn sop_accuracy(&self) -> f64 {
+        self.sop_correct / self.batch.max(1.0)
+    }
+
+    /// exp(mlm_loss): the Table-2 perplexity metric.
+    pub fn mlm_perplexity(&self) -> f64 {
+        self.mlm_loss.exp()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub mlm_perplexity: f64,
+    pub accuracy: f64,
+    pub sop_accuracy: f64,
+}
+
+/// Evaluate an arbitrary eval artifact with explicit parameter literals —
+/// used when sweeping inference-time settings (e.g. Figure 5's hash
+/// counts) over one trained parameter set.
+pub fn eval_artifact(
+    art: &Artifact,
+    params: &[Literal],
+    source: &dyn BatchSource,
+    n_batches: usize,
+) -> Result<EvalResult> {
+    let spec = &art.spec;
+    ensure!(spec.n_params() == params.len(), "param count mismatch");
+    let mut loss_sum = 0.0;
+    let mut agg = StepMetrics::default();
+    for b in 0..n_batches {
+        let batch = source.batch_literals(EVAL_INDEX_BASE + (b as u64) * 1024, spec)?;
+        let mut inputs: Vec<Literal> = params.iter().cloned().collect();
+        inputs.extend(batch);
+        inputs.push(i32_literal(&[b as i32], &[])?);
+        let outputs = art.execute(&inputs)?;
+        let m = StepMetrics::from_vec(&to_f32_vec(&outputs[0])?);
+        loss_sum += m.loss;
+        agg.mlm_loss += m.mlm_loss;
+        agg.correct += m.correct;
+        agg.denom += m.denom;
+        agg.sop_correct += m.sop_correct;
+        agg.batch += m.batch;
+    }
+    let nb = n_batches.max(1) as f64;
+    Ok(EvalResult {
+        loss: loss_sum / nb,
+        mlm_perplexity: (agg.mlm_loss / nb).exp(),
+        accuracy: agg.correct / agg.denom.max(1.0),
+        sop_accuracy: agg.sop_correct / agg.batch.max(1.0),
+    })
+}
+
+pub struct Trainer {
+    train_art: Arc<Artifact>,
+    eval_art: Option<Arc<Artifact>>,
+    /// current parameters (host-side, ABI order)
+    pub params: Vec<Literal>,
+    adam_m: Vec<Literal>,
+    adam_v: Vec<Literal>,
+    pub step: usize,
+    n_params: usize,
+    pub param_template: ParamSet,
+}
+
+impl Trainer {
+    /// Create a trainer for the named train-step artifact, initializing
+    /// parameters in Rust (or from `init` when resuming/fine-tuning).
+    pub fn new(
+        runtime: &Runtime,
+        train_artifact: &str,
+        eval_artifact: Option<&str>,
+        seed: u64,
+        init: Option<ParamSet>,
+    ) -> Result<Trainer> {
+        let train_art = runtime.artifact(train_artifact)?;
+        let eval_art = match eval_artifact {
+            Some(name) => Some(runtime.artifact(name)?),
+            None => None,
+        };
+        let spec = &train_art.spec;
+        let n_params = spec.n_params();
+        ensure!(n_params > 0, "{train_artifact} has no param inputs");
+
+        let mut template = ParamSet::init_for(spec, seed);
+        if let Some(init) = init {
+            // fine-tuning: copy matching tensors (head params may differ)
+            let by_name: std::collections::BTreeMap<_, _> = init
+                .names
+                .iter()
+                .zip(init.values.iter())
+                .map(|(n, v)| (n.clone(), v))
+                .collect();
+            let mut copied = 0;
+            for i in 0..template.len() {
+                if let Some(v) = by_name.get(&template.names[i]) {
+                    if v.len() == template.values[i].len() {
+                        template.values[i] = (*v).clone();
+                        copied += 1;
+                    }
+                }
+            }
+            crate::info!("fine-tune init: {copied}/{} tensors from checkpoint",
+                         template.len());
+        }
+
+        let params = Self::to_literals(&template)?;
+        let zeros = template.zeros_like();
+        let adam_m = Self::to_literals(&zeros)?;
+        let adam_v = Self::to_literals(&zeros)?;
+        Ok(Trainer {
+            train_art,
+            eval_art,
+            params,
+            adam_m,
+            adam_v,
+            step: 0,
+            n_params,
+            param_template: template,
+        })
+    }
+
+    fn to_literals(set: &ParamSet) -> Result<Vec<Literal>> {
+        set.values
+            .iter()
+            .zip(&set.shapes)
+            .map(|(v, s)| f32_literal(v, s))
+            .collect()
+    }
+
+    /// Current parameters as a host ParamSet (for checkpointing).
+    pub fn snapshot(&self) -> Result<ParamSet> {
+        let mut set = self.param_template.clone();
+        for (i, lit) in self.params.iter().enumerate() {
+            set.values[i] = to_f32_vec(lit)?;
+        }
+        Ok(set)
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        checkpoint::save(&self.snapshot()?, path)
+    }
+
+    /// One optimizer step on the batch at `index`; returns its metrics.
+    pub fn train_step(
+        &mut self,
+        source: &dyn BatchSource,
+        index: u64,
+        lr: f64,
+    ) -> Result<StepMetrics> {
+        let spec = &self.train_art.spec;
+        let batch = source.batch_literals(index, spec)?;
+        let mut inputs: Vec<Literal> = Vec::with_capacity(spec.inputs.len());
+        // ABI: params, adam_m, adam_v, batch..., step, seed, lr
+        inputs.extend(self.params.drain(..));
+        inputs.extend(self.adam_m.drain(..));
+        inputs.extend(self.adam_v.drain(..));
+        inputs.extend(batch);
+        inputs.push(i32_literal(&[self.step as i32], &[])?);
+        inputs.push(i32_literal(&[(index & 0x7FFF_FFFF) as i32], &[])?);
+        inputs.push(f32_literal(&[lr as f32], &[])?);
+
+        let mut outputs = self.train_art.execute(&inputs)?;
+        ensure!(outputs.len() == 3 * self.n_params + 1, "train step ABI");
+        let metrics_lit = outputs.pop().unwrap();
+        self.adam_v = outputs.split_off(2 * self.n_params);
+        self.adam_m = outputs.split_off(self.n_params);
+        self.params = outputs;
+        self.step += 1;
+        let m = to_f32_vec(&metrics_lit)?;
+        Ok(StepMetrics::from_vec(&m))
+    }
+
+    /// Evaluate over `n_batches` held-out batches.
+    pub fn evaluate(&self, source: &dyn BatchSource, n_batches: usize) -> Result<EvalResult> {
+        let art = self
+            .eval_art
+            .as_ref()
+            .context("no eval artifact configured")?;
+        let spec = &art.spec;
+        let mut agg = StepMetrics::default();
+        let mut loss_sum = 0.0;
+        for b in 0..n_batches {
+            let batch = source.batch_literals(
+                EVAL_INDEX_BASE + (b as u64) * 1024,
+                spec,
+            )?;
+            let mut inputs: Vec<Literal> = Vec::with_capacity(spec.inputs.len());
+            for lit in &self.params {
+                inputs.push(lit.clone());
+            }
+            inputs.extend(batch);
+            inputs.push(i32_literal(&[b as i32], &[])?);
+            let outputs = art.execute(&inputs)?;
+            let m = StepMetrics::from_vec(&to_f32_vec(&outputs[0])?);
+            loss_sum += m.loss;
+            agg.mlm_loss += m.mlm_loss;
+            agg.correct += m.correct;
+            agg.denom += m.denom;
+            agg.sop_correct += m.sop_correct;
+            agg.batch += m.batch;
+        }
+        let nb = n_batches.max(1) as f64;
+        Ok(EvalResult {
+            loss: loss_sum / nb,
+            mlm_perplexity: (agg.mlm_loss / nb).exp(),
+            accuracy: agg.correct / agg.denom.max(1.0),
+            sop_accuracy: agg.sop_correct / agg.batch.max(1.0),
+        })
+    }
+
+    /// Full training run with logging + periodic eval into a Recorder.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        source: &dyn BatchSource,
+        steps: usize,
+        lr: f64,
+        eval_every: usize,
+        eval_batches: usize,
+        log_every: usize,
+        rec: &mut Recorder,
+    ) -> Result<()> {
+        let timer = Timer::start();
+        for s in 0..steps {
+            // stride the example-index space so consecutive batches are
+            // disjoint (sources hand out examples [index, index + batch))
+            let m = self.train_step(source, (s as u64) * BATCH_INDEX_STRIDE, lr)?;
+            rec.push("train_loss", self.step as f64, m.loss);
+            rec.push("train_mlm_ppl", self.step as f64, m.mlm_perplexity());
+            if log_every > 0 && s % log_every == 0 {
+                crate::info!(
+                    "step {:>5}  loss {:.4}  mlm_ppl {:.2}  acc {:.3}  ({:.2} s/step)",
+                    self.step,
+                    m.loss,
+                    m.mlm_perplexity(),
+                    m.mlm_accuracy(),
+                    timer.elapsed_secs() / (s + 1) as f64,
+                );
+            }
+            if eval_every > 0 && (s + 1) % eval_every == 0 && self.eval_art.is_some() {
+                let e = self.evaluate(source, eval_batches)?;
+                rec.push("eval_loss", self.step as f64, e.loss);
+                rec.push("eval_mlm_ppl", self.step as f64, e.mlm_perplexity);
+                rec.push("eval_acc", self.step as f64, e.accuracy);
+                rec.push("eval_sop_acc", self.step as f64, e.sop_accuracy);
+                crate::info!(
+                    "  eval @ {:>5}: loss {:.4} ppl {:.2} acc {:.3} sop {:.3}",
+                    self.step, e.loss, e.mlm_perplexity, e.accuracy, e.sop_accuracy
+                );
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates: RNG, statistics, timing, thread pool, logging.
+
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

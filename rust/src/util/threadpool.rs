@@ -1,0 +1,144 @@
+//! Fixed-size thread pool over std channels (no tokio in the offline
+//! registry). Powers the data pipeline and the serving worker pool.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Work-queue thread pool. Jobs are closures; `join` blocks until all
+/// submitted jobs have completed.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> ThreadPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut handles = Vec::with_capacity(n_threads);
+        for _ in 0..n_threads.max(1) {
+            let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        job();
+                        let (lock, cvar) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        if *p == 0 {
+                            cvar.notify_all();
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { tx: Some(tx), handles, pending }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker thread died");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cvar.wait(p).unwrap();
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> = Arc::new(Mutex::new(
+            items.iter().map(|_| None).collect(),
+        ));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.join();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("map results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_idempotent() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+        pool.execute(|| {});
+        pool.join();
+        pool.join();
+    }
+}

@@ -1,0 +1,54 @@
+//! Wall-clock timing helpers for the bench harness and metrics.
+
+use std::time::Instant;
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_secs() * 1e6
+    }
+}
+
+/// Run `f` `iters` times, returning per-iteration seconds.
+pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> Vec<f64> {
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        out.push(t.elapsed_secs());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::hint::black_box((0..1000).sum::<u64>());
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn time_iters_count() {
+        assert_eq!(time_iters(5, || {}).len(), 5);
+    }
+}

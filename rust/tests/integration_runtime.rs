@@ -1,0 +1,151 @@
+//! Integration tests over the PJRT runtime + artifacts. These require
+//! `make artifacts`; they skip (with a notice) when the directory is
+//! missing so `cargo test` works on a fresh checkout.
+
+use std::path::Path;
+use yoso::attention::YosoE;
+use yoso::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
+use yoso::runtime::Runtime;
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn attention_artifact_matches_pure_rust_expectation() {
+    // The Pallas-lowered YOSO-E op and the pure-Rust YosoE must agree:
+    // same math, two implementations, two layers of the stack.
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("attn_yoso_e_n256").expect("compile");
+    let (n, d) = (256usize, 64usize);
+    let mut rng = Rng::new(5);
+    let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+
+    let inputs = vec![
+        f32_literal(&q.data, &[n, d]).unwrap(),
+        f32_literal(&k.data, &[n, d]).unwrap(),
+        f32_literal(&v.data, &[n, d]).unwrap(),
+        i32_literal(&[0], &[]).unwrap(),
+    ];
+    let out = art.execute(&inputs).expect("execute");
+    let got = to_f32_vec(&out[0]).unwrap();
+
+    let mut expect = YosoE { tau: 8 }.forward_raw(&q, &k, &v);
+    expect.l2_normalize_rows();
+    let max_diff = got
+        .iter()
+        .zip(&expect.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "pallas vs rust YOSO-E: max diff {max_diff}");
+}
+
+#[test]
+fn softmax_artifact_matches_pure_rust() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("attn_softmax_n256").expect("compile");
+    let (n, d) = (256usize, 64usize);
+    let mut rng = Rng::new(6);
+    let q = Mat::randn(n, d, 1.0, &mut rng);
+    let k = Mat::randn(n, d, 1.0, &mut rng);
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    let inputs = vec![
+        f32_literal(&q.data, &[n, d]).unwrap(),
+        f32_literal(&k.data, &[n, d]).unwrap(),
+        f32_literal(&v.data, &[n, d]).unwrap(),
+        i32_literal(&[0], &[]).unwrap(),
+    ];
+    let out = art.execute(&inputs).expect("execute");
+    let got = to_f32_vec(&out[0]).unwrap();
+    use yoso::attention::{Attention, SoftmaxAttention};
+    let expect = SoftmaxAttention.forward(&q, &k, &v, &mut rng);
+    let max_diff = got
+        .iter()
+        .zip(&expect.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "softmax artifact vs rust: {max_diff}");
+}
+
+#[test]
+fn train_step_reduces_loss_and_roundtrips_checkpoint() {
+    let Some(rt) = runtime() else { return };
+    use yoso::data::corpus::{CorpusConfig, CorpusGenerator};
+    use yoso::data::mlm::{MlmConfig, PretrainStream};
+    use yoso::data::tokenizer::WordTokenizer;
+    use yoso::train::{PretrainSource, Trainer};
+
+    let src = PretrainSource {
+        stream: PretrainStream::new(
+            CorpusGenerator::new(CorpusConfig::default()),
+            WordTokenizer { n_words: 2000 },
+            MlmConfig::default(),
+            11,
+        ),
+    };
+    let mut trainer =
+        Trainer::new(&rt, "train_pretrain_softmax", Some("eval_pretrain_softmax"),
+                     11, None)
+            .expect("trainer");
+    let first = trainer.train_step(&src, 0, 1e-3).expect("step");
+    let mut last = first;
+    for s in 1..12 {
+        last = trainer.train_step(&src, s, 1e-3).expect("step");
+    }
+    assert!(last.loss.is_finite());
+    assert!(
+        last.loss < first.loss,
+        "loss should decrease: {} -> {}",
+        first.loss,
+        last.loss
+    );
+
+    // checkpoint roundtrip preserves exact values
+    let snap = trainer.snapshot().unwrap();
+    let path = std::env::temp_dir().join(format!("it_ckpt_{}.bin", std::process::id()));
+    yoso::train::checkpoint::save(&snap, &path).unwrap();
+    let loaded = yoso::train::checkpoint::load(&path).unwrap();
+    assert_eq!(snap.values, loaded.values);
+    let _ = std::fs::remove_file(path);
+
+    // eval runs and produces finite metrics
+    let eval = trainer.evaluate(&src, 2).expect("eval");
+    assert!(eval.mlm_perplexity.is_finite() && eval.mlm_perplexity > 1.0);
+}
+
+#[test]
+fn forward_artifact_serves_batches() {
+    let Some(rt) = runtime() else { return };
+    use yoso::model::ParamSet;
+    let art = rt.artifact("fwd_glue_softmax").expect("compile");
+    let spec = &art.spec;
+    let params = ParamSet::init_for(spec, 3);
+    let ids_slot = spec
+        .inputs
+        .iter()
+        .find(|s| s.name == "batch:input_ids")
+        .unwrap();
+    let (b, n) = (ids_slot.shape[0], ids_slot.shape[1]);
+    let mut inputs: Vec<xla::Literal> = params
+        .values
+        .iter()
+        .zip(&params.shapes)
+        .map(|(v, s)| f32_literal(v, s).unwrap())
+        .collect();
+    inputs.push(i32_literal(&vec![5i32; b * n], &[b, n]).unwrap());
+    inputs.push(i32_literal(&vec![0i32; b * n], &[b, n]).unwrap());
+    inputs.push(i32_literal(&[1], &[]).unwrap());
+    let out = art.execute(&inputs).expect("execute");
+    let logits = to_f32_vec(&out[0]).unwrap();
+    assert_eq!(logits.len() % b, 0);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}

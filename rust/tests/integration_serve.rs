@@ -1,0 +1,72 @@
+//! End-to-end serving integration: spawn the server thread against the
+//! forward artifact, drive concurrent clients, check every request is
+//! answered with well-formed logits and the batcher actually batches.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+use yoso::data::glue_synth::{GlueGenerator, GlueTask};
+use yoso::serve::{BatchPolicy, ServerHandle};
+
+fn artifacts_present() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn serve_roundtrip_with_dynamic_batching() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let handle = ServerHandle::spawn(
+        PathBuf::from("artifacts"),
+        "fwd_glue_softmax".into(),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(3) },
+        1,
+        None,
+    );
+    let gen = GlueGenerator::new(GlueTask::Sst2, 128, 3);
+    let n = 48;
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let ex = gen.example(i as u64);
+            handle.submit(ex.input_ids, ex.segment_ids)
+        })
+        .collect();
+    let mut n_ok = 0;
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.logits.len(), 3, "3-class head");
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        assert!(resp.total_ms >= resp.queue_ms);
+        n_ok += 1;
+    }
+    assert_eq!(n_ok, n);
+    let stats = handle.shutdown().expect("stats");
+    assert_eq!(stats.requests, n);
+    // batching must actually coalesce: far fewer batches than requests
+    assert!(stats.batches < n, "batches {} vs requests {n}", stats.batches);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+#[test]
+fn serve_deterministic_for_identical_inputs() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let handle = ServerHandle::spawn(
+        PathBuf::from("artifacts"),
+        "fwd_glue_softmax".into(),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        7,
+        None,
+    );
+    let ids = vec![9i32; 64];
+    let segs = vec![0i32; 64];
+    let a = handle.submit(ids.clone(), segs.clone()).recv().unwrap();
+    let b = handle.submit(ids, segs).recv().unwrap();
+    // softmax attention is deterministic; identical inputs + params give
+    // identical logits regardless of which batch they landed in.
+    assert_eq!(a.logits, b.logits);
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,151 @@
+//! Property tests on coordinator invariants (routing/batching/state) and
+//! the estimator math, via the in-crate property-testing framework.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+use yoso::attention::{YosoAttention, YosoE};
+use yoso::data::{collate_cls, ClsExample};
+use yoso::serve::{BatchPolicy, Batcher, Request};
+use yoso::tensor::Mat;
+use yoso::testing::{check, gen, PropConfig};
+use yoso::util::Rng;
+
+/// Batcher invariant: every submitted request lands in exactly one batch,
+/// in FIFO order, and no batch exceeds max_batch.
+#[test]
+fn prop_batcher_partitions_requests_in_order() {
+    check(
+        PropConfig { cases: 24, seed: 1 },
+        |rng, size| {
+            let n_requests = 1 + size;
+            let max_batch = gen::usize_in(rng, 1, 9);
+            (n_requests, max_batch)
+        },
+        |&(n_requests, max_batch)| {
+            let (tx, rx) = channel();
+            let mut keep = Vec::new();
+            for i in 0..n_requests {
+                let (reply, krx) = channel();
+                keep.push(krx);
+                tx.send(Request {
+                    input_ids: vec![i as i32],
+                    segment_ids: vec![0],
+                    reply,
+                    enqueued: Instant::now(),
+                })
+                .unwrap();
+            }
+            drop(tx);
+            let b = Batcher {
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                },
+            };
+            let mut seen = Vec::new();
+            while let Some(batch) = b.next_batch(&rx) {
+                if batch.len() > max_batch {
+                    return false;
+                }
+                for r in batch {
+                    seen.push(r.input_ids[0]);
+                }
+            }
+            seen == (0..n_requests as i32).collect::<Vec<_>>()
+        },
+    );
+}
+
+/// Collation invariant: batch tensors always have exactly b*n elements
+/// and labels survive collation (state management).
+#[test]
+fn prop_collate_shapes_and_labels() {
+    check(
+        PropConfig { cases: 32, seed: 2 },
+        |rng, size| {
+            let b = 1 + size % 8;
+            let n = gen::usize_in(rng, 4, 64);
+            let examples: Vec<ClsExample> = (0..b)
+                .map(|i| {
+                    let len = gen::usize_in(rng, 1, 2 * n);
+                    ClsExample {
+                        input_ids: gen::vec_of(rng, len, |r| r.below(100) as i32),
+                        segment_ids: vec![0; len],
+                        label: i as i32,
+                    }
+                })
+                .collect();
+            (examples, n)
+        },
+        |(examples, n)| {
+            let batch = collate_cls(examples, *n);
+            batch.input_ids.len() == examples.len() * n
+                && batch.segment_ids.len() == examples.len() * n
+                && batch.labels == (0..examples.len() as i32).collect::<Vec<_>>()
+        },
+    );
+}
+
+/// Estimator invariant: YOSO-m attention weights are in [0, 1] in
+/// expectation — outputs of B-hat V are convex-combination-bounded by
+/// sum of |V| rows.
+#[test]
+fn prop_yoso_output_bounded_by_value_mass() {
+    check(
+        PropConfig { cases: 12, seed: 3 },
+        |rng, size| {
+            let n = 8 + 4 * size.min(16);
+            let q = gen::unit_mat(rng, n, 16);
+            let k = gen::unit_mat(rng, n, 16);
+            let v = Mat::randn(n, 8, 1.0, rng);
+            (q, k, v)
+        },
+        |(q, k, v)| {
+            let mut rng = Rng::new(77);
+            let out = YosoAttention::new(6, 8, false).forward_raw(q, k, v, &mut rng);
+            // each output entry <= sum_j |v_jl| (all weights in [0,1])
+            for l in 0..v.cols {
+                let mass: f32 = (0..v.rows).map(|j| v.at(j, l).abs()).sum();
+                for i in 0..out.rows {
+                    if out.at(i, l).abs() > mass + 1e-4 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Monte-Carlo consistency: averaging two independent YOSO-m runs is at
+/// least as close to YOSO-E as the worse single run (variance reduction).
+#[test]
+fn prop_averaging_reduces_error() {
+    check(
+        PropConfig { cases: 8, seed: 4 },
+        |rng, _size| {
+            let n = 32;
+            let q = gen::unit_mat(rng, n, 16);
+            let k = gen::unit_mat(rng, n, 16);
+            let v = Mat::randn(n, 8, 1.0, rng);
+            (q, k, v)
+        },
+        |(q, k, v)| {
+            let e = YosoE { tau: 4 }.forward_raw(q, k, v);
+            let mut rng = Rng::new(5);
+            let a = YosoAttention::new(4, 4, false).forward_raw(q, k, v, &mut rng);
+            let b = YosoAttention::new(4, 4, false).forward_raw(q, k, v, &mut rng);
+            let mut avg = a.clone();
+            avg.add_assign(&b);
+            avg.scale(0.5);
+            let err = |m: &Mat| -> f64 {
+                m.data
+                    .iter()
+                    .zip(&e.data)
+                    .map(|(x, y)| ((x - y) as f64).powi(2))
+                    .sum::<f64>()
+            };
+            err(&avg) <= err(&a).max(err(&b)) + 1e-9
+        },
+    );
+}
