@@ -2,19 +2,40 @@
 //! and every baseline, per instance (one head, d = 64), with each
 //! method's paper hyperparameters (§4.2/§4.3).
 //!
-//! Writes results/fig7_efficiency.csv (method,n,ms,peak_bytes,model_bytes)
-//! and prints the two panels. The paper's shape to reproduce: softmax
-//! grows quadratically and runs out of budget first; the efficient
-//! methods stay near-linear; YOSO has the lowest memory profile.
+//! Writes results/fig7_efficiency.csv
+//! (method,n,threads,time_ms,peak_bytes,model_bytes) and prints the two
+//! panels. Zoo baselines run serially (threads = 1); the YOSO parallel
+//! engine rows sweep thread counts (powers of two up to the core count,
+//! capped by `YOSO_BENCH_THREADS`) so the multi-thread speed-up is
+//! measured, not asserted. The paper's shape to reproduce: softmax grows
+//! quadratically and runs out of budget first; the efficient methods
+//! stay near-linear; YOSO has the lowest memory profile.
 
 use std::io::Write;
-use yoso::attention::by_name;
-use yoso::bench_support::{bench, human_bytes, peak_bytes, reset_peak, CountingAlloc};
+use yoso::attention::{by_name, Engine, YosoAttention};
+use yoso::bench_support::{
+    bench, bench_threads, human_bytes, peak_bytes, reset_peak, CountingAlloc,
+};
 use yoso::tensor::Mat;
 use yoso::util::Rng;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
+
+/// 1, 2, 4, ... up to the `bench_threads()` budget.
+fn thread_counts() -> Vec<usize> {
+    let max_threads = bench_threads();
+    let mut counts = vec![1usize];
+    let mut t = 2;
+    while t < max_threads {
+        counts.push(t);
+        t *= 2;
+    }
+    if max_threads > 1 {
+        counts.push(max_threads);
+    }
+    counts
+}
 
 fn main() {
     let d = 64;
@@ -24,7 +45,7 @@ fn main() {
 
     std::fs::create_dir_all("results").unwrap();
     let mut csv = std::fs::File::create("results/fig7_efficiency.csv").unwrap();
-    writeln!(csv, "method,n,time_ms,peak_bytes,model_bytes").unwrap();
+    writeln!(csv, "method,n,threads,time_ms,peak_bytes,model_bytes").unwrap();
 
     println!("Figure 7 — per-instance forward time (ms) and peak memory\n");
     print!("{:<12}", "method");
@@ -53,7 +74,7 @@ fn main() {
             let peak = peak_bytes();
             writeln!(
                 csv,
-                "{method},{n},{},{},{}",
+                "{method},{n},1,{},{},{}",
                 r.summary.mean * 1e3,
                 peak,
                 attn.workspace_bytes(n, d)
@@ -64,6 +85,62 @@ fn main() {
         }
         println!("{time_row}");
         println!("{mem_row}");
+    }
+
+    // YOSO parallel engine: per-hash fan-out, thread-count sweep. The
+    // t = 1 row is the serial engine (no pool) — the speed-up baseline.
+    println!("\nYOSO parallel engine scaling (yoso_32, per-hash fan-out)\n");
+    println!("{:>6} {:>8} {:>12} {:>10}", "n", "threads", "time_ms", "speedup");
+    let att = YosoAttention::new(8, 32, false);
+    let counts = thread_counts();
+    let mut serial_ms_n4096 = 0.0f64;
+    let mut best_speedup_n4096 = 1.0f64;
+    for n in [1024usize, 4096] {
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let mut serial_ms = 0.0f64;
+        for &t in &counts {
+            let engine = Engine::new(t);
+            let run_rng = Rng::new(9);
+            reset_peak();
+            let iters = if n >= 2048 { 3 } else { 5 };
+            let r = bench(&format!("yoso_32_engine n={n} t={t}"), 1, iters, || {
+                std::hint::black_box(
+                    engine.forward_yoso(&att, &q, &k, &v, &run_rng),
+                );
+            });
+            let peak = peak_bytes();
+            let ms = r.summary.mean * 1e3;
+            if t == 1 {
+                serial_ms = ms;
+                if n == 4096 {
+                    serial_ms_n4096 = ms;
+                }
+            }
+            let speedup = serial_ms / ms.max(1e-9);
+            if n == 4096 {
+                best_speedup_n4096 = best_speedup_n4096.max(speedup);
+            }
+            writeln!(
+                csv,
+                "yoso_32_engine,{n},{t},{ms},{peak},{}",
+                engine.workspace_bytes(&att, n, d)
+            )
+            .unwrap();
+            println!("{n:>6} {t:>8} {ms:>12.2} {speedup:>9.2}x");
+        }
+    }
+    println!(
+        "\nengine speedup at n=4096: {best_speedup_n4096:.2}x over serial \
+         ({serial_ms_n4096:.2} ms) with up to {} threads",
+        counts.last().copied().unwrap_or(1)
+    );
+    if counts.last().copied().unwrap_or(1) >= 4 && best_speedup_n4096 < 2.0 {
+        println!(
+            "WARNING: expected >= 2x engine speedup on >= 4 cores, \
+             measured {best_speedup_n4096:.2}x"
+        );
     }
     println!("\n-> results/fig7_efficiency.csv");
 

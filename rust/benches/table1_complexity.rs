@@ -5,8 +5,8 @@
 //! bytes (analytic model + counting allocator), then fit the scaling
 //! exponent alpha in t ~ n^alpha. Softmax should fit ~2, YOSO ~1.
 
-use yoso::attention::{Attention, SoftmaxAttention, YosoAttention};
-use yoso::bench_support::{bench, human_bytes, CountingAlloc};
+use yoso::attention::{Attention, Engine, SoftmaxAttention, YosoAttention};
+use yoso::bench_support::{bench, bench_threads, human_bytes, CountingAlloc};
 use yoso::tensor::Mat;
 use yoso::util::Rng;
 
@@ -29,10 +29,12 @@ fn main() {
     let d = 64;
     let ns = [512usize, 1024, 2048, 4096];
     let mut rng = Rng::new(0);
+    let threads = bench_threads();
+    let engine = Engine::new(threads);
 
     println!("Table 1 — empirical forward cost (d = {d}, tau = 8, m = 32)\n");
-    println!("{:>6} {:>16} {:>14} {:>16} {:>14}", "n", "softmax ms", "sm mem",
-             "yoso-32 ms", "yoso mem");
+    println!("{:>6} {:>16} {:>14} {:>16} {:>16} {:>14}", "n", "softmax ms",
+             "sm mem", "yoso-32 ms", format!("yoso@{threads}t ms"), "yoso mem");
 
     let mut sm_times = Vec::new();
     let mut yo_times = Vec::new();
@@ -51,12 +53,17 @@ fn main() {
         let yo = bench(&format!("yoso n={n}"), 1, 5, || {
             std::hint::black_box(yoso.forward(&q, &k, &v, &mut r2));
         });
+        let r3 = Rng::new(2);
+        let yo_par = bench(&format!("yoso engine n={n}"), 1, 5, || {
+            std::hint::black_box(engine.forward_yoso(&yoso, &q, &k, &v, &r3));
+        });
         println!(
-            "{:>6} {:>16.3} {:>14} {:>16.3} {:>14}",
+            "{:>6} {:>16.3} {:>14} {:>16.3} {:>16.3} {:>14}",
             n,
             sm.summary.mean * 1e3,
             human_bytes(softmax.workspace_bytes(n, d)),
             yo.summary.mean * 1e3,
+            yo_par.summary.mean * 1e3,
             human_bytes(yoso.workspace_bytes(n, d)),
         );
         sm_times.push(sm.summary.mean);

@@ -1,0 +1,358 @@
+//! Parallel multi-head YOSO forward engine.
+//!
+//! Two independent grains of parallelism over `util::ThreadPool`, both
+//! deterministic for a given caller seed:
+//!
+//! * **Per-hash** (`Engine::forward_yoso`): the `m` hash rounds of one
+//!   YOSO forward are embarrassingly parallel. Round `h` draws its
+//!   projections from the fixed stream `rng.fold_in(h)` and scatters into
+//!   its *own* bucket table. Rounds are grouped into fixed
+//!   `HASH_CHUNK`-sized tasks (hashes summed ascending within a chunk,
+//!   chunk accumulators reduced ascending on the caller thread), bounding
+//!   transient memory at m/HASH_CHUNK accumulators. Every term and every
+//!   association of the reduction is a constant of the algorithm — never
+//!   of the thread count — so output bytes are identical for every
+//!   thread count, including the serial engine.
+//! * **Per-head** (`MultiHeadAttention::forward_batch`): independent
+//!   `[batch, heads] x (Q, K, V)` tasks fan across the pool; head `i`
+//!   draws from `rng.fold_in(i)`, matching the serial default
+//!   `Attention::forward_batch` bit-for-bit.
+//!
+//! Note: the engine's per-hash streams differ from the *legacy*
+//! single-stream draw order of `YosoAttention::forward` (one hasher
+//! object drawing all m rounds from one sequence). Both are unbiased
+//! samples of the same estimator; "bit-identical" guarantees here relate
+//! engine runs at different thread counts, not engine vs legacy.
+//!
+//! Deadlock rule: jobs running *on* a pool must never submit to the same
+//! pool (`ThreadPool::map` joins on a shared pending count). Pick one
+//! grain per pool: the serve path fans requests and keeps heads serial
+//! inside each job; the benches fan hashes.
+
+use super::yoso::YosoAttention;
+use super::{Attention, HeadTask};
+use crate::lsh::{HadamardHasher, Hasher, HyperplaneHasher};
+use crate::tensor::Mat;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// Hash rounds folded per pool task. A build-time constant — never a
+/// function of the thread count — so the floating-point association of
+/// the reduction, and therefore the output bytes, do not change when the
+/// engine scales. 4 keeps transient memory at m/4 accumulators while
+/// still exposing 8-way parallelism for the paper's m = 32.
+pub const HASH_CHUNK: usize = 4;
+
+/// A thread-count-agnostic executor: `threads == 1` runs inline with no
+/// pool, `threads > 1` owns a `ThreadPool`. Clones share the same pool.
+#[derive(Clone)]
+pub struct Engine {
+    pool: Option<Arc<ThreadPool>>,
+    threads: usize,
+}
+
+impl Engine {
+    /// Inline executor — no pool, no threads, same results.
+    pub fn serial() -> Engine {
+        Engine { pool: None, threads: 1 }
+    }
+
+    /// Pool-backed executor. `threads == 0` resolves to the number of
+    /// available cores; `<= 1` degrades to the serial engine.
+    pub fn new(threads: usize) -> Engine {
+        let t = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        if t <= 1 {
+            Engine::serial()
+        } else {
+            Engine { pool: Some(Arc::new(ThreadPool::new(t))), threads: t }
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Order-preserving map over owned items: pool when present, inline
+    /// otherwise. Results are positionally identical either way.
+    fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        match &self.pool {
+            Some(pool) => pool.map(items, f),
+            None => items.into_iter().map(f).collect(),
+        }
+    }
+
+    /// Raw (unnormalized) YOSO forward with hash rounds fanned across the
+    /// pool in fixed-size chunks. Bit-identical for every thread count
+    /// with the same `rng`: the chunk layout and both summation orders
+    /// (hashes ascending within a chunk, chunks ascending in the final
+    /// reduction) are constants, independent of `threads`.
+    pub fn forward_yoso_raw(
+        &self,
+        att: &YosoAttention,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        rng: &Rng,
+    ) -> Mat {
+        let d = q.cols;
+        assert_eq!(k.cols, d);
+        assert_eq!(v.rows, k.rows);
+        let nq = q.rows;
+        let dv = v.cols;
+        let qn = Arc::new(q.unit_rows());
+        let kn = Arc::new(k.unit_rows());
+        let vv = Arc::new(v.clone());
+        let (tau, m, fast) = (att.tau, att.m, att.fast_hash);
+        let base = rng.clone();
+        let n_chunks = (m + HASH_CHUNK - 1) / HASH_CHUNK;
+        let chunks = self.map((0..n_chunks).collect::<Vec<usize>>(), move |c| {
+            let lo = c * HASH_CHUNK;
+            let hi = ((c + 1) * HASH_CHUNK).min(m);
+            let mut acc = Mat::zeros(qn.rows, vv.cols);
+            for h in lo..hi {
+                let mut hrng = base.fold_in(h as u64);
+                let partial = hash_round(&qn, &kn, &vv, tau, fast, &mut hrng);
+                for (o, s) in acc.data.iter_mut().zip(&partial.data) {
+                    *o += s;
+                }
+            }
+            acc
+        });
+        let mut out = Mat::zeros(nq, dv);
+        let inv_m = 1.0 / m as f32;
+        for chunk in &chunks {
+            for (o, s) in out.data.iter_mut().zip(&chunk.data) {
+                *o += inv_m * s;
+            }
+        }
+        out
+    }
+
+    /// Analytic auxiliary-memory model of `forward_yoso_raw` — the
+    /// engine trades the serial path's single reused table for chunk
+    /// accumulators plus one live (table + partial) per running worker.
+    pub fn workspace_bytes(&self, att: &YosoAttention, n: usize, d: usize) -> usize {
+        let n_chunks = (att.m + HASH_CHUNK - 1) / HASH_CHUNK;
+        let live_tasks = self.threads.min(n_chunks);
+        n_chunks * n * d * 4
+            + live_tasks * (((1 << att.tau) * d + n * d) * 4 + 2 * n * 4)
+    }
+
+    /// YOSO forward honoring the variant's `normalize` flag (N-YOSO).
+    pub fn forward_yoso(
+        &self,
+        att: &YosoAttention,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        rng: &Rng,
+    ) -> Mat {
+        let mut out = self.forward_yoso_raw(att, q, k, v, rng);
+        if att.normalize {
+            out.l2_normalize_rows();
+        }
+        out
+    }
+}
+
+/// One hash round: per-round hasher from `rng`, scatter `V` into this
+/// round's own bucket table, gather per query. Returns the (nq, dv)
+/// partial sum (the caller applies 1/m during reduction).
+fn hash_round(qn: &Mat, kn: &Mat, v: &Mat, tau: usize, fast: bool, rng: &mut Rng) -> Mat {
+    let d = qn.cols;
+    let (cq, ck) = if fast {
+        let hasher = HadamardHasher::new(rng, 1, d, tau);
+        (hasher.hash_all(qn), hasher.hash_all(kn))
+    } else {
+        let hasher = HyperplaneHasher::new(rng, 1, d, tau);
+        (hasher.hash_all(qn), hasher.hash_all(kn))
+    };
+    let dv = v.cols;
+    let n_buckets = 1usize << tau;
+    let mut table = vec![0.0f32; n_buckets * dv];
+    for j in 0..kn.rows {
+        let b = ck[j] as usize;
+        let dst = &mut table[b * dv..(b + 1) * dv];
+        for (t, s) in dst.iter_mut().zip(v.row(j)) {
+            *t += s;
+        }
+    }
+    let mut partial = Mat::zeros(qn.rows, dv);
+    for i in 0..qn.rows {
+        let b = cq[i] as usize;
+        let src = &table[b * dv..(b + 1) * dv];
+        for (o, s) in partial.row_mut(i).iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+    partial
+}
+
+/// Batched multi-head attention: fans independent head tasks across the
+/// engine. Matches `Attention::forward_batch`'s serial default
+/// bit-for-bit (same per-head `fold_in` streams, order-preserving map).
+pub struct MultiHeadAttention {
+    engine: Engine,
+}
+
+impl MultiHeadAttention {
+    pub fn new(engine: Engine) -> MultiHeadAttention {
+        MultiHeadAttention { engine }
+    }
+
+    /// Pool-free instance (for use inside jobs already on a pool).
+    pub fn serial() -> MultiHeadAttention {
+        MultiHeadAttention::new(Engine::serial())
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Forward every head; result `i` corresponds to `heads[i]`.
+    pub fn forward_batch(
+        &self,
+        attn: &Arc<dyn Attention>,
+        heads: Vec<HeadTask>,
+        rng: &Rng,
+    ) -> Vec<Mat> {
+        let attn = Arc::clone(attn);
+        let base = rng.clone();
+        let items: Vec<(usize, HeadTask)> = heads.into_iter().enumerate().collect();
+        self.engine.map(items, move |(i, h)| {
+            let mut r = base.fold_in(i as u64);
+            attn.forward(&h.q, &h.k, &h.v, &mut r)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::by_name;
+    use crate::attention::yoso::YosoE;
+    use crate::util::stats::radians_between;
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        (q, k, v)
+    }
+
+    fn bits_equal(a: &Mat, b: &Mat) -> bool {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data
+                .iter()
+                .zip(&b.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn thread_count_resolution() {
+        assert_eq!(Engine::serial().threads(), 1);
+        assert!(Engine::new(0).threads() >= 1);
+        assert_eq!(Engine::new(1).threads(), 1);
+        assert_eq!(Engine::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn parallel_yoso_bit_identical_to_serial() {
+        let (q, k, v) = setup(96, 32, 11);
+        let att = YosoAttention::new(6, 16, false);
+        let rng = Rng::new(77);
+        let serial = Engine::serial().forward_yoso(&att, &q, &k, &v, &rng);
+        for threads in [2usize, 4, 7] {
+            let par = Engine::new(threads).forward_yoso(&att, &q, &k, &v, &rng);
+            assert!(bits_equal(&serial, &par), "threads={threads}");
+        }
+        // explicit reference: manual chunked fold, no Engine involved
+        let mut reference = Mat::zeros(q.rows, v.cols);
+        let qn = q.unit_rows();
+        let kn = k.unit_rows();
+        let inv_m = 1.0 / att.m as f32;
+        let n_chunks = (att.m + HASH_CHUNK - 1) / HASH_CHUNK;
+        for c in 0..n_chunks {
+            let mut acc = Mat::zeros(q.rows, v.cols);
+            for h in c * HASH_CHUNK..((c + 1) * HASH_CHUNK).min(att.m) {
+                let mut hrng = rng.fold_in(h as u64);
+                let partial =
+                    hash_round(&qn, &kn, &v, att.tau, false, &mut hrng);
+                for (o, s) in acc.data.iter_mut().zip(&partial.data) {
+                    *o += s;
+                }
+            }
+            for (o, s) in reference.data.iter_mut().zip(&acc.data) {
+                *o += inv_m * s;
+            }
+        }
+        reference.l2_normalize_rows();
+        assert!(bits_equal(&serial, &reference));
+    }
+
+    #[test]
+    fn fast_hash_round_parallel_matches_serial() {
+        let (q, k, v) = setup(64, 32, 3);
+        let att = YosoAttention::new(5, 12, true);
+        let rng = Rng::new(9);
+        let serial = Engine::serial().forward_yoso(&att, &q, &k, &v, &rng);
+        let par = Engine::new(4).forward_yoso(&att, &q, &k, &v, &rng);
+        assert!(bits_equal(&serial, &par));
+        assert!(serial.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn engine_estimate_converges_to_expectation() {
+        // engine streams differ from the legacy single-stream draw, but
+        // the estimator is the same: it must still approach YOSO-E.
+        let (q, k, v) = setup(48, 16, 0);
+        let mut e = YosoE { tau: 4 }.forward_raw(&q, &k, &v);
+        e.l2_normalize_rows();
+        let att = YosoAttention::new(4, 256, false);
+        let y = Engine::new(2).forward_yoso(&att, &q, &k, &v, &Rng::new(5));
+        let err: f64 = (0..q.rows)
+            .map(|i| radians_between(y.row(i), e.row(i)))
+            .sum::<f64>()
+            / q.rows as f64;
+        assert!(err < 0.3, "engine estimate too far from expectation: {err}");
+    }
+
+    #[test]
+    fn multihead_matches_trait_default() {
+        let mut rng = Rng::new(21);
+        let heads: Vec<HeadTask> = (0..6)
+            .map(|_| {
+                let q = Mat::randn(40, 32, 1.0, &mut rng).unit_rows();
+                let k = Mat::randn(40, 32, 1.0, &mut rng).unit_rows();
+                let v = Mat::randn(40, 32, 1.0, &mut rng);
+                HeadTask { q, k, v }
+            })
+            .collect();
+        let base = Rng::new(1234);
+        for name in ["yoso_8", "softmax", "reformer", "performer"] {
+            let mut ctor = Rng::new(2);
+            let attn: Arc<dyn Attention> = Arc::from(by_name(name, &mut ctor, 32));
+            let serial = attn.forward_batch(&heads, &base);
+            let mh = MultiHeadAttention::new(Engine::new(3));
+            let par = mh.forward_batch(&attn, heads.clone(), &base);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert!(bits_equal(a, b), "{name}");
+            }
+        }
+    }
+}

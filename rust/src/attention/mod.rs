@@ -11,6 +11,7 @@
 //! reproduced both analytically and via the counting allocator in
 //! `bench_support`.
 
+pub mod engine;
 pub mod linear;
 pub mod linformer;
 pub mod longformer;
@@ -20,6 +21,7 @@ pub mod reformer;
 pub mod softmax;
 pub mod yoso;
 
+pub use engine::{Engine, MultiHeadAttention};
 pub use linear::{LinearTransformer, YosoConv};
 pub use linformer::Linformer;
 pub use longformer::Longformer;
@@ -32,13 +34,42 @@ pub use yoso::{YosoAttention, YosoE};
 use crate::tensor::Mat;
 use crate::util::Rng;
 
+/// One head's (q, k, v) triple for batched multi-head execution. A
+/// `[batch, heads]` workload flattens to a `Vec<HeadTask>` in row-major
+/// (batch-then-head) order.
+#[derive(Clone, Debug)]
+pub struct HeadTask {
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+}
+
 /// Self-attention over per-head matrices. q, k: (n, d); v: (n, dv).
-pub trait Attention {
+///
+/// `Send + Sync` so trait objects can be shared with the worker pool by
+/// the parallel engine (`attention::engine`); every implementation is
+/// plain owned data.
+pub trait Attention: Send + Sync {
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
 
     /// Compute the attention output (n, dv).
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, rng: &mut Rng) -> Mat;
+
+    /// Forward a batch of independent heads. Head `i` draws its
+    /// randomness from `rng.fold_in(i)`, so results do not depend on
+    /// evaluation order — `engine::MultiHeadAttention` is the pool-backed
+    /// equivalent and produces bit-identical output. Default: serial loop.
+    fn forward_batch(&self, heads: &[HeadTask], rng: &Rng) -> Vec<Mat> {
+        heads
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                let mut r = rng.fold_in(i as u64);
+                self.forward(&h.q, &h.k, &h.v, &mut r)
+            })
+            .collect()
+    }
 
     /// Theoretical auxiliary memory (bytes) beyond inputs/outputs for a
     /// sequence length n and head dim d — the Figure 7 memory model.

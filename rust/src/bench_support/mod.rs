@@ -99,6 +99,22 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
 }
 
+/// Thread budget for benches: `YOSO_BENCH_THREADS`, where 0, unset, or
+/// unparsable all mean "every available core". Shared by fig7/table1 so
+/// the env var has one meaning everywhere (Engine::new(0) agrees).
+pub fn bench_threads() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    match std::env::var("YOSO_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(0) | None => cores,
+        Some(t) => t,
+    }
+}
+
 /// Choose iteration count so a bench takes roughly `budget_secs`.
 pub fn calibrate_iters<F: FnMut()>(mut f: F, budget_secs: f64) -> usize {
     let t = Timer::start();

@@ -12,12 +12,29 @@
 //!   AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** — this crate: config + CLI, data pipeline, PJRT runtime that
 //!   loads the artifacts, training orchestrator, serving coordinator with
-//!   dynamic batching, a pure-Rust attention library (YOSO + every
-//!   baseline) for the efficiency/approximation studies, metrics,
-//!   checkpointing.
+//!   dynamic batching (artifact executor + an artifact-free CPU fallback),
+//!   a pure-Rust attention library (YOSO + every baseline) for the
+//!   efficiency/approximation studies, metrics, checkpointing — and a
+//!   **parallel multi-head forward engine** (`attention::engine`) that
+//!   exploits the estimator's embarrassing parallelism on a
+//!   `util::ThreadPool`.
+//!
+//! The engine's thread-scaling model: YOSO's m hash rounds and the
+//! `[batch, heads]` fan-out are both independent work items. Each item
+//! draws its randomness from a `fold_in`-derived stream of the caller's
+//! seed, so output bytes are identical at every thread count — 1 thread
+//! vs N threads is a pure wall-clock knob (asserted by tests). One
+//! parallelism grain is picked per pool: benches fan hash rounds, the
+//! CPU serve path fans requests and keeps heads serial inside each job
+//! (jobs must never re-enter their own pool). Benches select thread
+//! counts from the core count, capped by `YOSO_BENCH_THREADS`.
 //!
 //! Python never runs at request time: after `make artifacts`, the `yoso`
-//! binary is self-contained.
+//! binary is self-contained. Without artifacts, the offline build runs
+//! against in-tree `anyhow`/`xla` stand-ins (`rust/vendor/`): literal
+//! marshaling is real, PJRT compilation gates with a clear error, and
+//! every pure-Rust path (attention zoo, encoder, CPU serving, benches)
+//! is fully functional.
 
 pub mod attention;
 pub mod bench_support;

@@ -6,11 +6,14 @@
 //! (Figure 6), and the efficiency study's full-model rows.
 
 use super::params::ParamSet;
-use crate::attention::Attention;
+use crate::attention::{Attention, HeadTask, MultiHeadAttention};
 use crate::data::special;
+use crate::runtime::manifest::{ArtifactSpec, Dtype, IoSpec};
 use crate::tensor::{gelu, Mat};
 use crate::util::Rng;
+use std::sync::Arc;
 
+#[derive(Clone, Debug)]
 pub struct EncoderConfig {
     pub n_layers: usize,
     pub d_model: usize,
@@ -37,6 +40,70 @@ impl EncoderConfig {
 
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
+    }
+}
+
+/// The encoder's parameter ABI as an `ArtifactSpec` — the same `param:*`
+/// slot list `aot.py` emits for this geometry. Lets the pure-Rust paths
+/// (CPU-fallback serving, tests) initialize a `ParamSet` without an
+/// artifacts directory.
+pub fn encoder_abi_spec(cfg: &EncoderConfig) -> ArtifactSpec {
+    let d = cfg.d_model;
+    let mut inputs = Vec::new();
+    let mut add = |name: &str, shape: Vec<usize>| {
+        inputs.push(IoSpec {
+            name: format!("param:{name}"),
+            shape,
+            dtype: Dtype::F32,
+        });
+    };
+    add("tok_emb", vec![cfg.vocab_size, d]);
+    add("pos_emb", vec![cfg.max_len, d]);
+    add("seg_emb", vec![2, d]);
+    add("emb_ln_g", vec![d]);
+    add("emb_ln_b", vec![d]);
+    for l in 0..cfg.n_layers {
+        for (n, s) in [
+            ("wq", vec![d, d]),
+            ("bq", vec![d]),
+            ("wk", vec![d, d]),
+            ("bk", vec![d]),
+            ("wv", vec![d, d]),
+            ("bv", vec![d]),
+            ("wo", vec![d, d]),
+            ("bo", vec![d]),
+            ("ln1_g", vec![d]),
+            ("ln1_b", vec![d]),
+            ("ff1_w", vec![d, cfg.d_ff]),
+            ("ff1_b", vec![cfg.d_ff]),
+            ("ff2_w", vec![cfg.d_ff, d]),
+            ("ff2_b", vec![d]),
+            ("ln2_g", vec![d]),
+            ("ln2_b", vec![d]),
+        ] {
+            add(&format!("layer{l}.{n}"), s);
+        }
+    }
+    add("mlm_w", vec![d, d]);
+    add("mlm_b", vec![d]);
+    add("mlm_ln_g", vec![d]);
+    add("mlm_ln_b", vec![d]);
+    add("mlm_out_b", vec![cfg.vocab_size]);
+    add("pool_w", vec![d, d]);
+    add("pool_b", vec![d]);
+    add("sop_w", vec![d, 2]);
+    add("sop_b", vec![2]);
+    add("cls_w", vec![d, cfg.n_classes]);
+    add("cls_b", vec![cfg.n_classes]);
+    ArtifactSpec {
+        name: "encoder_abi".into(),
+        file: "/dev/null".into(),
+        kind: "forward".into(),
+        family: "cpu".into(),
+        attention: "any".into(),
+        inputs,
+        outputs: vec![],
+        config: Default::default(),
     }
 }
 
@@ -99,17 +166,51 @@ impl<'a> Encoder<'a> {
         x.layer_norm(self.vec("emb_ln_g"), self.vec("emb_ln_b"))
     }
 
-    /// Full encoder forward for one sequence.
+    /// Full encoder forward for one sequence (serial head loop via the
+    /// batched `Attention::forward_batch` API). Advances `rng` once, so
+    /// repeated calls draw fresh randomness (fresh hash functions for
+    /// stochastic attention) like the pre-batched head loop did.
     pub fn forward(&self, ids: &[i32], segs: &[i32], attn: &dyn Attention,
                    rng: &mut Rng) -> Mat {
+        let call = Rng::new(rng.next_u64());
         let mut x = self.embed(ids, segs);
         for l in 0..self.cfg.n_layers {
-            x = self.layer(l, &x, attn, rng);
+            x = self.layer_with(l, &x, &call, &mut |heads, base| {
+                attn.forward_batch(&heads, base)
+            });
+        }
+        x
+    }
+
+    /// Engine-parallel forward: head fan-out on `mh`'s pool. Bit-identical
+    /// to `forward` for the same seed — both derive head `i` of layer `l`
+    /// from the same per-call stream via `fold_in(l).fold_in(i)`.
+    pub fn forward_mh(&self, ids: &[i32], segs: &[i32],
+                      attn: &Arc<dyn Attention>, mh: &MultiHeadAttention,
+                      rng: &mut Rng) -> Mat {
+        let call = Rng::new(rng.next_u64());
+        let mut x = self.embed(ids, segs);
+        for l in 0..self.cfg.n_layers {
+            x = self.layer_with(l, &x, &call, &mut |heads, base| {
+                mh.forward_batch(attn, heads, base)
+            });
         }
         x
     }
 
     fn layer(&self, l: usize, x: &Mat, attn: &dyn Attention, rng: &mut Rng) -> Mat {
+        let call = Rng::new(rng.next_u64());
+        self.layer_with(l, x, &call, &mut |heads, base| {
+            attn.forward_batch(&heads, base)
+        })
+    }
+
+    /// One encoder layer; `run_heads` maps the per-head (q, k, v) tasks to
+    /// per-head outputs (serial trait default or the pool-backed engine).
+    /// `call` is the per-forward-call stream; layer `l` derives its head
+    /// base from `call.fold_in(l)`.
+    fn layer_with(&self, l: usize, x: &Mat, call: &Rng,
+                  run_heads: &mut dyn FnMut(Vec<HeadTask>, &Rng) -> Vec<Mat>) -> Mat {
         let p = |s: &str| format!("layer{l}.{s}");
         let n = x.rows;
         let h = self.cfg.n_heads;
@@ -119,14 +220,18 @@ impl<'a> Encoder<'a> {
         let k = self.dense(x, &p("wk"), &p("bk"));
         let v = self.dense(x, &p("wv"), &p("bv"));
 
-        // per-head attention
-        let mut concat = Mat::zeros(n, self.cfg.d_model);
+        let mut heads = Vec::with_capacity(h);
         for head in 0..h {
             let slice = |m: &Mat| {
                 Mat::from_fn(n, dh, |i, j| m.at(i, head * dh + j))
             };
-            let (qh, kh, vh) = (slice(&q), slice(&k), slice(&v));
-            let out = attn.forward(&qh, &kh, &vh, rng);
+            heads.push(HeadTask { q: slice(&q), k: slice(&k), v: slice(&v) });
+        }
+        let base = call.fold_in(l as u64);
+        let outs = run_heads(heads, &base);
+
+        let mut concat = Mat::zeros(n, self.cfg.d_model);
+        for (head, out) in outs.iter().enumerate() {
             for i in 0..n {
                 for j in 0..dh {
                     concat.set(i, head * dh + j, out.at(i, j));
@@ -147,10 +252,8 @@ impl<'a> Encoder<'a> {
         res2.layer_norm(self.vec(&p("ln2_g")), self.vec(&p("ln2_b")))
     }
 
-    /// [CLS] pooler + classifier logits.
-    pub fn classify(&self, ids: &[i32], segs: &[i32], attn: &dyn Attention,
-                    rng: &mut Rng) -> Vec<f32> {
-        let hidden = self.forward(ids, segs, attn, rng);
+    /// [CLS] pooler + classifier head over a final hidden state.
+    fn pool_logits(&self, hidden: &Mat) -> Vec<f32> {
         let cls = Mat::from_vec(1, self.cfg.d_model, hidden.row(0).to_vec());
         let mut pooled = self.dense(&cls, "pool_w", "pool_b");
         for x in pooled.data.iter_mut() {
@@ -158,6 +261,21 @@ impl<'a> Encoder<'a> {
         }
         let logits = self.dense(&pooled, "cls_w", "cls_b");
         logits.data
+    }
+
+    /// [CLS] pooler + classifier logits.
+    pub fn classify(&self, ids: &[i32], segs: &[i32], attn: &dyn Attention,
+                    rng: &mut Rng) -> Vec<f32> {
+        let hidden = self.forward(ids, segs, attn, rng);
+        self.pool_logits(&hidden)
+    }
+
+    /// `classify` over the engine-parallel forward.
+    pub fn classify_mh(&self, ids: &[i32], segs: &[i32],
+                       attn: &Arc<dyn Attention>, mh: &MultiHeadAttention,
+                       rng: &mut Rng) -> Vec<f32> {
+        let hidden = self.forward_mh(ids, segs, attn, mh, rng);
+        self.pool_logits(&hidden)
     }
 
     /// Per-head (q, k) projections of layer `l` — the Figure 6 probe.
@@ -192,69 +310,13 @@ pub fn pad_to(ids: &[i32], segs: &[i32], len: usize) -> (Vec<i32>, Vec<i32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::SoftmaxAttention;
-    use crate::runtime::manifest::{ArtifactSpec, Dtype, IoSpec};
-
-    fn fake_spec() -> ArtifactSpec {
-        // build the param list the same way the ABI would for the base
-        // encoder at vocab 64, n 16, classes 3
-        let cfg = EncoderConfig::base(64, 16, 3);
-        let d = cfg.d_model;
-        let mut inputs = Vec::new();
-        let mut add = |name: &str, shape: Vec<usize>| {
-            inputs.push(IoSpec {
-                name: format!("param:{name}"),
-                shape,
-                dtype: Dtype::F32,
-            });
-        };
-        add("tok_emb", vec![cfg.vocab_size, d]);
-        add("pos_emb", vec![cfg.max_len, d]);
-        add("seg_emb", vec![2, d]);
-        add("emb_ln_g", vec![d]);
-        add("emb_ln_b", vec![d]);
-        for l in 0..cfg.n_layers {
-            for (n, s) in [
-                ("wq", vec![d, d]), ("bq", vec![d]),
-                ("wk", vec![d, d]), ("bk", vec![d]),
-                ("wv", vec![d, d]), ("bv", vec![d]),
-                ("wo", vec![d, d]), ("bo", vec![d]),
-                ("ln1_g", vec![d]), ("ln1_b", vec![d]),
-                ("ff1_w", vec![d, cfg.d_ff]), ("ff1_b", vec![cfg.d_ff]),
-                ("ff2_w", vec![cfg.d_ff, d]), ("ff2_b", vec![d]),
-                ("ln2_g", vec![d]), ("ln2_b", vec![d]),
-            ] {
-                add(&format!("layer{l}.{n}"), s);
-            }
-        }
-        add("mlm_w", vec![d, d]);
-        add("mlm_b", vec![d]);
-        add("mlm_ln_g", vec![d]);
-        add("mlm_ln_b", vec![d]);
-        add("mlm_out_b", vec![cfg.vocab_size]);
-        add("pool_w", vec![d, d]);
-        add("pool_b", vec![d]);
-        add("sop_w", vec![d, 2]);
-        add("sop_b", vec![2]);
-        add("cls_w", vec![d, 3]);
-        add("cls_b", vec![3]);
-        ArtifactSpec {
-            name: "fake".into(),
-            file: "/dev/null".into(),
-            kind: "train_step".into(),
-            family: "test".into(),
-            attention: "softmax".into(),
-            inputs,
-            outputs: vec![],
-            config: Default::default(),
-        }
-    }
+    use crate::attention::{Engine, SoftmaxAttention, YosoAttention};
 
     #[test]
     fn forward_shapes_and_finiteness() {
-        let spec = fake_spec();
-        let params = ParamSet::init_for(&spec, 0);
-        let enc = Encoder::new(EncoderConfig::base(64, 16, 3), &params);
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = Encoder::new(cfg, &params);
         let ids: Vec<i32> = (0..16).map(|i| (i % 60) + 5).collect();
         let segs = vec![0i32; 16];
         let mut rng = Rng::new(1);
@@ -267,14 +329,58 @@ mod tests {
 
     #[test]
     fn qk_probe_shapes() {
-        let spec = fake_spec();
-        let params = ParamSet::init_for(&spec, 0);
-        let enc = Encoder::new(EncoderConfig::base(64, 16, 3), &params);
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = Encoder::new(cfg, &params);
         let ids = vec![5i32; 16];
         let segs = vec![0i32; 16];
         let mut rng = Rng::new(2);
         let (q, k) = enc.layer_qk(1, &ids, &segs, 0, &SoftmaxAttention, &mut rng);
         assert_eq!((q.rows, q.cols), (16, 64));
         assert_eq!((k.rows, k.cols), (16, 64));
+    }
+
+    #[test]
+    fn pooled_forward_bit_identical_to_serial() {
+        // Stochastic attention: identical bytes prove the fold_in head
+        // streams make thread count irrelevant end-to-end.
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 3);
+        let enc = Encoder::new(cfg, &params);
+        let ids: Vec<i32> = (0..16).map(|i| (i % 60) + 5).collect();
+        let segs = vec![0i32; 16];
+        let attn: Arc<dyn Attention> =
+            Arc::new(YosoAttention::new(5, 8, false));
+        let mut rng1 = Rng::new(7);
+        let serial = enc.forward(&ids, &segs, attn.as_ref(), &mut rng1);
+        let mh = MultiHeadAttention::new(Engine::new(3));
+        let mut rng2 = Rng::new(7);
+        let pooled = enc.forward_mh(&ids, &segs, &attn, &mh, &mut rng2);
+        assert_eq!(serial.data.len(), pooled.data.len());
+        for (a, b) in serial.data.iter().zip(&pooled.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut rng3 = Rng::new(7);
+        let logits = enc.classify_mh(&ids, &segs, &attn, &mh, &mut rng3);
+        assert_eq!(logits.len(), 3);
+    }
+
+    #[test]
+    fn repeated_forward_draws_fresh_randomness() {
+        // forward advances the caller rng: consecutive calls on the same
+        // input must sample different hash functions (Monte-Carlo use).
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 1);
+        let enc = Encoder::new(cfg, &params);
+        let ids = vec![7i32; 16];
+        let segs = vec![0i32; 16];
+        let attn = YosoAttention::new(5, 4, false);
+        let mut rng = Rng::new(3);
+        let a = enc.forward(&ids, &segs, &attn, &mut rng);
+        let b = enc.forward(&ids, &segs, &attn, &mut rng);
+        assert!(
+            a.max_abs_diff(&b) > 0.0,
+            "consecutive stochastic forwards drew identical randomness"
+        );
     }
 }

@@ -6,4 +6,5 @@
 pub mod encoder;
 pub mod params;
 
+pub use encoder::{encoder_abi_spec, Encoder, EncoderConfig};
 pub use params::{init_param, ParamSet};

@@ -1,18 +1,24 @@
-//! Serving coordinator: request queue -> dynamic batcher -> PJRT
-//! executor, vLLM-router style.
+//! Serving coordinator: request queue -> dynamic batcher -> executor,
+//! vLLM-router style.
 //!
-//! PJRT handles are not `Send`, so the server *owns* its Runtime on a
-//! dedicated thread; clients talk to it through channels. The batcher
-//! collects requests until either `max_batch` is reached or the oldest
-//! request has waited `max_wait_ms` — the standard dynamic-batching
-//! policy — then pads the batch to the artifact's fixed batch size and
-//! executes one forward.
+//! PJRT handles are not `Send`, so the server *owns* its executor on a
+//! dedicated thread; clients talk to it through channels (`Submitter`
+//! clones for concurrent producers). The batcher collects requests until
+//! either `max_batch` is reached or the oldest request has waited
+//! `max_wait_ms` — the standard dynamic-batching policy.
+//!
+//! Executors: the PJRT artifact path (`ServerHandle::spawn`) runs one
+//! fused forward per padded batch; the CPU fallback
+//! (`ServerHandle::spawn_cpu`) runs the pure-Rust encoder + attention
+//! zoo, fanning the batch's requests across a worker `ThreadPool` while
+//! each request keeps its multi-head fan-out serial — one parallelism
+//! grain per pool (see `attention::engine` for the deadlock rule).
 
 pub mod batcher;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use server::{ServerHandle, ServeStats};
+pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};
 
 /// One inference request: token ids + segments for a single sequence.
 #[derive(Debug)]

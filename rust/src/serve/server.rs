@@ -1,17 +1,30 @@
-//! The serving loop: owns the PJRT runtime on its thread, pulls dynamic
-//! batches, pads to the artifact's fixed batch size, executes, and
-//! delivers per-sequence logits.
+//! The serving loop: owns the executor on its thread, pulls dynamic
+//! batches, executes, and delivers per-sequence logits.
+//!
+//! Two executors share the same handle/batcher/stats machinery:
+//! * **artifact** (`ServerHandle::spawn`): PJRT runtime, pads each batch
+//!   to the artifact's fixed batch size, one fused forward per batch.
+//! * **CPU fallback** (`ServerHandle::spawn_cpu`): the pure-Rust encoder
+//!   + attention zoo, no artifacts needed. Requests of a batch fan out
+//!   across a `ThreadPool`; inside each request job the encoder runs the
+//!   batched multi-head API serially (`MultiHeadAttention::serial`) —
+//!   one parallelism grain per pool, so jobs never re-enter it.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::{Request, Response};
+use crate::attention::{by_name, Attention, MultiHeadAttention};
 use crate::data::special;
+use crate::model::encoder::{encoder_abi_spec, pad_to, Encoder, EncoderConfig};
 use crate::model::ParamSet;
 use crate::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
 use crate::runtime::Runtime;
 use crate::util::stats::Summary;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 use xla::Literal;
 
@@ -29,6 +42,51 @@ pub struct ServeStats {
     pub latency: Summary,
     pub queue_latency: Summary,
     pub throughput_rps: f64,
+}
+
+/// Cloneable submission handle: hand one to each producer thread.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Sender<Request>,
+}
+
+impl Submitter {
+    /// Submit one sequence; returns the response receiver.
+    pub fn submit(&self, input_ids: Vec<i32>, segment_ids: Vec<i32>)
+        -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let _ = self.tx.send(Request {
+            input_ids,
+            segment_ids,
+            reply,
+            enqueued: Instant::now(),
+        });
+        rx
+    }
+}
+
+/// Configuration for the artifact-free CPU fallback server.
+#[derive(Clone, Debug)]
+pub struct CpuServeConfig {
+    /// attention zoo variant (`attention::by_name`)
+    pub attention: String,
+    /// encoder geometry; sequences pad/truncate to `encoder.max_len`
+    pub encoder: EncoderConfig,
+    /// worker threads for request-level fan-out (0 = available cores)
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for CpuServeConfig {
+    fn default() -> Self {
+        CpuServeConfig {
+            attention: "yoso_32".into(),
+            // vocab: WordTokenizer { n_words: 2000 } + special tokens
+            encoder: EncoderConfig::base(2005, 128, 2),
+            threads: 0,
+            seed: 42,
+        }
+    }
 }
 
 impl ServerHandle {
@@ -49,20 +107,34 @@ impl ServerHandle {
         ServerHandle { tx, join: Some(join) }
     }
 
+    /// Spawn the artifact-free CPU fallback server: pure-Rust encoder on
+    /// a request-level worker pool.
+    pub fn spawn_cpu(cfg: CpuServeConfig, policy: BatchPolicy) -> ServerHandle {
+        let (tx, rx) = channel::<Request>();
+        let join =
+            std::thread::spawn(move || serve_loop_cpu(cfg, policy, rx));
+        ServerHandle { tx, join: Some(join) }
+    }
+
+    /// Cloneable submission handle for concurrent producers.
+    ///
+    /// Liveness contract: every `Submitter` clone holds the request
+    /// channel open. Drop all clones (e.g. join producer threads) before
+    /// calling `shutdown`, or the serve loop never sees the queue close
+    /// and `shutdown` blocks.
+    pub fn submitter(&self) -> Submitter {
+        Submitter { tx: self.tx.clone() }
+    }
+
     /// Submit one sequence; returns the response receiver.
     pub fn submit(&self, input_ids: Vec<i32>, segment_ids: Vec<i32>)
         -> Receiver<Response> {
-        let (reply, rx) = channel();
-        let _ = self.tx.send(Request {
-            input_ids,
-            segment_ids,
-            reply,
-            enqueued: Instant::now(),
-        });
-        rx
+        self.submitter().submit(input_ids, segment_ids)
     }
 
-    /// Close the queue and collect stats.
+    /// Close the queue and collect stats. Blocks until the serve loop
+    /// drains; outstanding `Submitter` clones keep the queue open, so
+    /// drop them first (see `submitter`).
     pub fn shutdown(mut self) -> Result<ServeStats> {
         drop(self.tx);
         self.join
@@ -149,19 +221,120 @@ fn serve_loop(
     }
 
     let elapsed = started.elapsed().as_secs_f64();
-    Ok(ServeStats {
+    Ok(make_stats(n_requests, n_batches, &latencies, &queue_latencies, elapsed))
+}
+
+/// Hash request content into an RNG stream so identical inputs get
+/// identical randomness — stochastic attention variants then serve
+/// reproducible logits regardless of batching or arrival order.
+fn content_rng(seed: u64, ids: &[i32], segs: &[i32]) -> Rng {
+    Rng::new(seed).fold_in_i32s(ids).fold_in_i32s(segs)
+}
+
+/// Clamp untrusted client tokens into the embedding tables' ranges:
+/// out-of-vocabulary ids become UNK, segments clamp to {0, 1}. The
+/// encoder indexes these tables directly, so a raw client value would
+/// otherwise panic a worker.
+fn sanitize(ids: &mut [i32], segs: &mut [i32], vocab_size: usize) {
+    for t in ids.iter_mut() {
+        if *t < 0 || *t as usize >= vocab_size {
+            *t = special::UNK;
+        }
+    }
+    for s in segs.iter_mut() {
+        *s = (*s).clamp(0, 1);
+    }
+}
+
+/// Shared tail of both serve loops.
+fn make_stats(
+    n_requests: usize,
+    n_batches: usize,
+    latencies: &[f64],
+    queue_latencies: &[f64],
+    elapsed: f64,
+) -> ServeStats {
+    ServeStats {
         requests: n_requests,
         batches: n_batches,
         latency: if latencies.is_empty() {
             Summary::of(&[0.0])
         } else {
-            Summary::of(&latencies)
+            Summary::of(latencies)
         },
         queue_latency: if queue_latencies.is_empty() {
             Summary::of(&[0.0])
         } else {
-            Summary::of(&queue_latencies)
+            Summary::of(queue_latencies)
         },
         throughput_rps: n_requests as f64 / elapsed.max(1e-9),
-    })
+    }
+}
+
+fn serve_loop_cpu(
+    cfg: CpuServeConfig,
+    policy: BatchPolicy,
+    rx: Receiver<Request>,
+) -> Result<ServeStats> {
+    let ecfg = cfg.encoder.clone();
+    let params =
+        Arc::new(ParamSet::init_for(&encoder_abi_spec(&ecfg), cfg.seed));
+    let mut ctor_rng = Rng::new(cfg.seed ^ 0x5EED_CAFE);
+    let attn: Arc<dyn Attention> =
+        Arc::from(by_name(&cfg.attention, &mut ctor_rng, ecfg.d_head()));
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    let pool = ThreadPool::new(threads);
+    crate::info!(
+        "cpu serve: attention={} threads={threads} vocab={} seq={}",
+        cfg.attention,
+        ecfg.vocab_size,
+        ecfg.max_len
+    );
+
+    let batcher = Batcher { policy };
+    let mut latencies = Vec::new();
+    let mut queue_latencies = Vec::new();
+    let mut n_requests = 0usize;
+    let mut n_batches = 0usize;
+    let started = Instant::now();
+
+    while let Some(batch) = batcher.next_batch(&rx) {
+        let exec_start = Instant::now();
+        n_batches += 1;
+        n_requests += batch.len();
+        let params = Arc::clone(&params);
+        let attn = Arc::clone(&attn);
+        let ecfg = ecfg.clone();
+        let (seed, max_len) = (cfg.seed, ecfg.max_len);
+        // request-level fan-out; the per-request reply is sent from the
+        // worker so fast requests are not stuck behind slow batchmates
+        let timings = pool.map(batch, move |req| {
+            let (mut ids, mut segs) =
+                pad_to(&req.input_ids, &req.segment_ids, max_len);
+            sanitize(&mut ids, &mut segs, ecfg.vocab_size);
+            let mut rng = content_rng(seed, &ids, &segs);
+            // per-request Encoder::new only rebuilds the ~50-entry name
+            // map — noise next to the forward's matmuls
+            let enc = Encoder::new(ecfg.clone(), &params);
+            let mh = MultiHeadAttention::serial();
+            let logits = enc.classify_mh(&ids, &segs, &attn, &mh, &mut rng);
+            let queue_ms = (exec_start - req.enqueued).as_secs_f64() * 1e3;
+            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let _ = req.reply.send(Response { logits, queue_ms, total_ms });
+            (queue_ms, total_ms)
+        });
+        for (queue_ms, total_ms) in timings {
+            queue_latencies.push(queue_ms);
+            latencies.push(total_ms);
+        }
+    }
+
+    let elapsed = started.elapsed().as_secs_f64();
+    Ok(make_stats(n_requests, n_batches, &latencies, &queue_latencies, elapsed))
 }

@@ -8,4 +8,5 @@ pub mod timer;
 
 pub use rng::Rng;
 pub use stats::Summary;
+pub use threadpool::ThreadPool;
 pub use timer::Timer;

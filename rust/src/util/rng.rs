@@ -38,6 +38,16 @@ impl Rng {
         Rng::new(h)
     }
 
+    /// `fold_in` over arbitrary i32 content (e.g. a request's token ids):
+    /// identical data always derives the identical stream.
+    pub fn fold_in_i32s(&self, data: &[i32]) -> Rng {
+        let mut h = 0xcbf29ce484222325u64; // FNV offset
+        for &t in data {
+            h = (h ^ (t as u32 as u64)).wrapping_mul(0x100000001b3);
+        }
+        self.fold_in(h)
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -222,6 +232,17 @@ mod tests {
         let mut a = base.fold_in(0);
         let mut b = base.fold_in(1);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fold_in_i32s_content_addressed() {
+        let base = Rng::new(42);
+        let mut a = base.fold_in_i32s(&[1, 2, 3]);
+        let mut b = base.fold_in_i32s(&[1, 2, 3]);
+        let mut c = base.fold_in_i32s(&[1, 2, 4]);
+        let x = a.next_u64();
+        assert_eq!(x, b.next_u64());
+        assert_ne!(x, c.next_u64());
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Fixed-size thread pool over std channels (no tokio in the offline
-//! registry). Powers the data pipeline and the serving worker pool.
+//! registry). Powers the data pipeline, the parallel attention engine,
+//! and the serving worker pool.
+//!
+//! Panic safety: a panicking job is caught on the worker, the pending
+//! count still drops (so `join` never deadlocks), and the panic is
+//! re-raised on the caller at the next `map` — a poisoned pool fails
+//! loudly instead of hanging.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -13,6 +20,7 @@ pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    panicked: Arc<AtomicBool>,
 }
 
 impl ThreadPool {
@@ -20,10 +28,12 @@ impl ThreadPool {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::with_capacity(n_threads);
         for _ in 0..n_threads.max(1) {
             let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
             let pending = Arc::clone(&pending);
+            let panicked = Arc::clone(&panicked);
             handles.push(std::thread::spawn(move || loop {
                 let job = {
                     let guard = rx.lock().unwrap();
@@ -31,7 +41,12 @@ impl ThreadPool {
                 };
                 match job {
                     Ok(job) => {
-                        job();
+                        let result = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(job),
+                        );
+                        if result.is_err() {
+                            panicked.store(true, Ordering::SeqCst);
+                        }
                         let (lock, cvar) = &*pending;
                         let mut p = lock.lock().unwrap();
                         *p -= 1;
@@ -43,7 +58,12 @@ impl ThreadPool {
                 }
             }));
         }
-        ThreadPool { tx: Some(tx), handles, pending }
+        ThreadPool { tx: Some(tx), handles, pending, panicked }
+    }
+
+    /// True once any job has panicked (sticky).
+    pub fn panicked(&self) -> bool {
+        self.panicked.load(Ordering::SeqCst)
     }
 
     /// Submit a job.
@@ -68,7 +88,8 @@ impl ThreadPool {
         }
     }
 
-    /// Map `f` over `items` in parallel, preserving order.
+    /// Map `f` over `items` in parallel, preserving order. Panics if any
+    /// job (this batch or an earlier one on this pool) panicked.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -88,6 +109,9 @@ impl ThreadPool {
             });
         }
         self.join();
+        if self.panicked() {
+            panic!("thread pool job panicked");
+        }
         Arc::try_unwrap(results)
             .unwrap_or_else(|_| panic!("map results still shared"))
             .into_inner()
@@ -140,5 +164,28 @@ mod tests {
         pool.execute(|| {});
         pool.join();
         pool.join();
+    }
+
+    #[test]
+    fn panicking_job_does_not_deadlock_join() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        for _ in 0..10 {
+            pool.execute(|| {});
+        }
+        pool.join(); // must return, not hang
+        assert!(pool.panicked());
+    }
+
+    #[test]
+    #[should_panic(expected = "thread pool job panicked")]
+    fn map_propagates_job_panic() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![1usize, 2, 3], |x| {
+            if x == 2 {
+                panic!("bad item");
+            }
+            x
+        });
     }
 }

@@ -5,7 +5,8 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 use yoso::data::glue_synth::{GlueGenerator, GlueTask};
-use yoso::serve::{BatchPolicy, ServerHandle};
+use yoso::model::encoder::EncoderConfig;
+use yoso::serve::{BatchPolicy, CpuServeConfig, ServerHandle};
 
 fn artifacts_present() -> bool {
     Path::new("artifacts/manifest.json").exists()
@@ -69,4 +70,90 @@ fn serve_deterministic_for_identical_inputs() {
     // identical logits regardless of which batch they landed in.
     assert_eq!(a.logits, b.logits);
     handle.shutdown().unwrap();
+}
+
+/// Small geometry so the debug-build encoder forward stays in the
+/// millisecond range; d_head = 32 (power of two) suits every variant.
+fn tiny_cpu_config(attention: &str, seed: u64) -> CpuServeConfig {
+    CpuServeConfig {
+        attention: attention.into(),
+        encoder: EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 32,
+            n_classes: 2,
+        },
+        threads: 2,
+        seed,
+    }
+}
+
+#[test]
+fn cpu_fallback_stress_every_request_replied_exactly_once() {
+    // No artifacts needed: the CPU fallback serves the pure-Rust encoder
+    // with request-level fan-out on the parallel engine's pool. Many
+    // concurrent producers; every request must get exactly one reply.
+    let handle = ServerHandle::spawn_cpu(
+        tiny_cpu_config("yoso_8", 5),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    );
+    let producers = 6usize;
+    let per_producer = 8usize;
+    let mut joins = Vec::new();
+    for p in 0..producers {
+        let sub = handle.submitter();
+        joins.push(std::thread::spawn(move || {
+            let gen = GlueGenerator::new(GlueTask::Sst2, 32, p as u64);
+            (0..per_producer)
+                .map(|i| {
+                    let ex = gen.example((p * per_producer + i) as u64);
+                    sub.submit(ex.input_ids, ex.segment_ids)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut n_ok = 0usize;
+    for j in joins {
+        for rx in j.join().expect("producer thread") {
+            let resp = rx.recv().expect("exactly one reply");
+            assert_eq!(resp.logits.len(), 2, "2-class head");
+            assert!(resp.logits.iter().all(|x| x.is_finite()));
+            assert!(resp.total_ms >= resp.queue_ms);
+            assert!(rx.recv().is_err(), "a request was replied to twice");
+            n_ok += 1;
+        }
+    }
+    assert_eq!(n_ok, producers * per_producer);
+    let stats = handle.shutdown().expect("stats");
+    assert_eq!(stats.requests, producers * per_producer);
+    assert!(stats.batches >= 1);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+#[test]
+fn cpu_fallback_deterministic_for_identical_inputs() {
+    // Stochastic attention variant: the content-hash RNG stream makes
+    // identical inputs reproducible regardless of batch placement.
+    let handle = ServerHandle::spawn_cpu(
+        tiny_cpu_config("yoso_8", 9),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    let ids = vec![9i32; 32];
+    let segs = vec![0i32; 32];
+    let a = handle.submit(ids.clone(), segs.clone()).recv().unwrap();
+    let b = handle.submit(ids, segs).recv().unwrap();
+    assert_eq!(a.logits, b.logits);
+    // hostile input: out-of-vocab / negative ids and bad segments must be
+    // sanitized (-> UNK / clamped), answered, and must not wedge a worker
+    let hostile = handle
+        .submit(vec![i32::MAX, -7, 999_999], vec![5, -3, 2])
+        .recv()
+        .expect("sanitized reply");
+    assert_eq!(hostile.logits.len(), 2);
+    assert!(hostile.logits.iter().all(|x| x.is_finite()));
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, 3);
 }

@@ -1,0 +1,129 @@
+//! Property tests over the whole attention zoo (`attention::by_name`)
+//! via the in-crate `testing::{check, gen}` framework: output shapes and
+//! finiteness on random inputs, monotonicity of the `workspace_bytes`
+//! memory model in n, and determinism of the parallel engine (1 thread
+//! vs N threads, same seed => identical bytes).
+
+use std::sync::Arc;
+use yoso::attention::{
+    by_name, Attention, Engine, HeadTask, MultiHeadAttention, YosoAttention,
+};
+use yoso::tensor::Mat;
+use yoso::testing::{check, gen, PropConfig};
+use yoso::util::Rng;
+
+/// Every constructible zoo variant (the §4.2 baselines + YOSO family).
+const ZOO: [&str; 12] = [
+    "softmax",
+    "none",
+    "yoso_e",
+    "yoso_16",
+    "yoso_fast_16",
+    "yoso_c_16",
+    "linear",
+    "linformer",
+    "performer",
+    "longformer",
+    "reformer",
+    "nystrom",
+];
+
+/// Head dim for all cases; a power of two so `yoso_fast_*` (Hadamard)
+/// is constructible.
+const D: usize = 32;
+
+fn bits_equal(a: &Mat, b: &Mat) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data
+            .iter()
+            .zip(&b.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_zoo_output_shape_and_finite() {
+    check(
+        PropConfig { cases: 10, seed: 0xA77E },
+        |rng, size| {
+            let n = 2 + size % 40;
+            let q = gen::unit_mat(rng, n, D);
+            let k = gen::unit_mat(rng, n, D);
+            let v = Mat::randn(n, D, 1.0, rng);
+            (q, k, v)
+        },
+        |(q, k, v)| {
+            ZOO.iter().all(|name| {
+                let mut ctor = Rng::new(1);
+                let attn = by_name(name, &mut ctor, D);
+                let mut run = Rng::new(2);
+                let out = attn.forward(q, k, v, &mut run);
+                out.rows == q.rows
+                    && out.cols == D
+                    && out.data.iter().all(|x| x.is_finite())
+            })
+        },
+    );
+}
+
+#[test]
+fn workspace_bytes_monotone_in_n() {
+    for name in ZOO {
+        let mut ctor = Rng::new(3);
+        let attn = by_name(name, &mut ctor, D);
+        let mut prev = 0usize;
+        for n in [16usize, 64, 256, 1024, 4096, 16384] {
+            let ws = attn.workspace_bytes(n, D);
+            assert!(
+                ws >= prev,
+                "{name}: workspace_bytes shrank going to n={n} ({prev} -> {ws})"
+            );
+            prev = ws;
+        }
+    }
+}
+
+#[test]
+fn zoo_parallel_heads_bit_identical_to_serial() {
+    // MultiHeadAttention on a pool vs the trait's serial default: same
+    // fold_in(head) streams, so every variant (stochastic or not) must
+    // produce identical bytes.
+    let mut rng = Rng::new(11);
+    let heads: Vec<HeadTask> = (0..4)
+        .map(|_| HeadTask {
+            q: Mat::randn(24, D, 1.0, &mut rng).unit_rows(),
+            k: Mat::randn(24, D, 1.0, &mut rng).unit_rows(),
+            v: Mat::randn(24, D, 1.0, &mut rng),
+        })
+        .collect();
+    let base = Rng::new(999);
+    let mh = MultiHeadAttention::new(Engine::new(4));
+    for name in ZOO {
+        let mut ctor = Rng::new(7);
+        let attn: Arc<dyn Attention> = Arc::from(by_name(name, &mut ctor, D));
+        let serial = attn.forward_batch(&heads, &base);
+        let par = mh.forward_batch(&attn, heads.clone(), &base);
+        assert_eq!(serial.len(), par.len(), "{name}");
+        for (a, b) in serial.iter().zip(&par) {
+            assert!(bits_equal(a, b), "{name}: parallel heads diverged");
+        }
+    }
+}
+
+#[test]
+fn engine_one_thread_vs_many_identical_bytes() {
+    let mut rng = Rng::new(4);
+    let q = Mat::randn(80, D, 1.0, &mut rng).unit_rows();
+    let k = Mat::randn(80, D, 1.0, &mut rng).unit_rows();
+    let v = Mat::randn(80, D, 1.0, &mut rng);
+    for (tau, m, fast) in [(6usize, 8usize, false), (4, 16, true)] {
+        let att = YosoAttention::new(tau, m, fast);
+        let seed_rng = Rng::new(31);
+        let one = Engine::new(1).forward_yoso(&att, &q, &k, &v, &seed_rng);
+        let many = Engine::new(8).forward_yoso(&att, &q, &k, &v, &seed_rng);
+        assert!(
+            bits_equal(&one, &many),
+            "tau={tau} m={m} fast={fast}: thread count changed the bytes"
+        );
+    }
+}

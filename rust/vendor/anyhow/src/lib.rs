@@ -1,0 +1,194 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build container has no crates.io access, so this path dependency
+//! provides the subset of anyhow the coordinator uses: `Result`,
+//! a message-chain `Error`, the `Context` trait for `Result`/`Option`,
+//! and the `anyhow!` / `bail!` / `ensure!` macros. Semantics match the
+//! real crate for these uses; swap the manifest entry for the registry
+//! version when building online.
+
+use std::fmt;
+
+/// Error: an owned message plus an optional chain of causes.
+///
+/// Like the real anyhow, this type deliberately does NOT implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// below does not conflict with the reflexive `From<Error>`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The causal chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // keep the std source chain visible in the message chain
+        let mut msgs = Vec::new();
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut chain: Option<Box<Error>> = None;
+        for m in msgs.into_iter().rev() {
+            chain = Some(Box::new(Error { msg: m, source: chain }));
+        }
+        Error { msg: e.to_string(), source: chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Early-return with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, early-returning an error when it fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        let chain = e.chain();
+        assert!(chain.len() >= 2, "{chain:?}");
+        assert!(chain[1].contains("disk on fire"));
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(5).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros() {
+        fn fails(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(3).unwrap(), 3);
+        assert_eq!(fails(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(fails(7).unwrap_err().to_string(), "unlucky 7");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}
