@@ -14,7 +14,7 @@
 
 use std::io::Write;
 use yoso::attention::{YosoAttention, YosoE};
-use yoso::bench_support::bench;
+use yoso::bench_support::{bench, smoke_or};
 use yoso::tensor::Mat;
 use yoso::util::stats::radians_between;
 use yoso::util::Rng;
@@ -34,7 +34,7 @@ fn mean_row_entropy(w: &Mat) -> f64 {
 }
 
 fn main() {
-    let (n, d) = (512usize, 64usize);
+    let (n, d) = (smoke_or(128usize, 512), 64usize);
     let mut rng = Rng::new(0);
     let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
     let mut qn = k.clone();

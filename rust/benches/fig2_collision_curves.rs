@@ -6,6 +6,7 @@
 //! and (tau/2) * p(sim) lower-bounds the true derivative.
 
 use std::io::Write;
+use yoso::bench_support::smoke_or;
 use yoso::lsh::collision::{collision_probability, collision_probability_grad,
                            collision_probability_grad_lower_bound, exp_weight};
 
@@ -16,7 +17,7 @@ fn main() {
     writeln!(f, "sim,exp_weight,collision_prob,exp_grad,collision_grad,lower_bound")
         .unwrap();
 
-    let steps = 400;
+    let steps = smoke_or(50, 400);
     let mut max_gap: f64 = 0.0;
     let mut violations = 0usize;
     for i in 0..=steps {

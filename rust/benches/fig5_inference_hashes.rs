@@ -23,7 +23,10 @@ fn env_usize(name: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     yoso::util::log::init_from_env();
-    let steps = env_usize("YOSO_F5_STEPS", 80);
+    if yoso::bench_support::smoke_skip_without_artifacts("artifacts") {
+        return Ok(());
+    }
+    let steps = env_usize("YOSO_F5_STEPS", yoso::bench_support::smoke_or(8, 80));
     let rt = Runtime::open(Path::new("artifacts"))?;
     let src = PretrainSource {
         stream: PretrainStream::new(

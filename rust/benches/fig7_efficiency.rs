@@ -3,18 +3,23 @@
 //! method's paper hyperparameters (§4.2/§4.3).
 //!
 //! Writes results/fig7_efficiency.csv
-//! (method,n,threads,time_ms,peak_bytes,model_bytes) and prints the two
-//! panels. Zoo baselines run serially (threads = 1); the YOSO parallel
-//! engine rows sweep thread counts (powers of two up to the core count,
-//! capped by `YOSO_BENCH_THREADS`) so the multi-thread speed-up is
-//! measured, not asserted. The paper's shape to reproduce: softmax grows
+//! (method,n,threads,chunk_policy,sched,time_ms,peak_bytes,model_bytes)
+//! and prints the panels. Zoo baselines run serially (threads = 1,
+//! sched = serial); the YOSO parallel engine rows sweep thread counts
+//! (powers of two up to the core count, capped by `YOSO_BENCH_THREADS`)
+//! crossed with the scheduler (work-stealing `steal` vs the legacy
+//! channel pool `chan`) and the chunk policy (`fixed4` vs `adaptiveW`),
+//! so both the scheduler delta and the chunking delta land in the CSV
+//! rather than being asserted. `YOSO_BENCH_SMOKE=1` shrinks the sweep to
+//! the CI-sized smoke run. The paper's shape to reproduce: softmax grows
 //! quadratically and runs out of budget first; the efficient methods
 //! stay near-linear; YOSO has the lowest memory profile.
 
 use std::io::Write;
-use yoso::attention::{by_name, Engine, YosoAttention};
+use yoso::attention::{by_name, ChunkPolicy, Engine, YosoAttention};
 use yoso::bench_support::{
-    bench, bench_threads, human_bytes, peak_bytes, reset_peak, CountingAlloc,
+    bench, bench_threads, human_bytes, peak_bytes, reset_peak, smoke, smoke_or,
+    CountingAlloc,
 };
 use yoso::tensor::Mat;
 use yoso::util::Rng;
@@ -37,19 +42,60 @@ fn thread_counts() -> Vec<usize> {
     counts
 }
 
+/// One engine measurement: mean ms + peak bytes over `iters` runs.
+fn time_engine(
+    engine: &Engine,
+    att: &YosoAttention,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    iters: usize,
+) -> (f64, usize) {
+    let run_rng = Rng::new(9);
+    reset_peak();
+    let r = bench("engine", 1, iters, || {
+        std::hint::black_box(engine.forward_yoso(att, q, k, v, &run_rng));
+    });
+    (r.summary.mean * 1e3, peak_bytes())
+}
+
+/// Best (minimum mean) of `rounds` unconditional repetitions — the same
+/// noise damping for every scheduler, so the A/B stays unbiased: the
+/// stopping rule never looks at which side is winning.
+fn best_engine_time(
+    engine: &Engine,
+    att: &YosoAttention,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    iters: usize,
+    rounds: usize,
+) -> (f64, usize) {
+    let mut best = time_engine(engine, att, q, k, v, iters);
+    for _ in 1..rounds {
+        let r = time_engine(engine, att, q, k, v, iters);
+        if r.0 < best.0 {
+            best = r;
+        }
+    }
+    best
+}
+
 fn main() {
     let d = 64;
     let methods = ["softmax", "yoso_32", "yoso_e", "nystrom", "longformer",
                    "linformer", "reformer", "performer"];
-    let ns = [512usize, 1024, 2048, 4096];
+    let ns = smoke_or(vec![256usize, 512], vec![512usize, 1024, 2048, 4096]);
+    let engine_ns = smoke_or(vec![512usize], vec![1024usize, 4096]);
 
     std::fs::create_dir_all("results").unwrap();
     let mut csv = std::fs::File::create("results/fig7_efficiency.csv").unwrap();
-    writeln!(csv, "method,n,threads,time_ms,peak_bytes,model_bytes").unwrap();
+    writeln!(csv, "method,n,threads,chunk_policy,sched,time_ms,peak_bytes,model_bytes")
+        .unwrap();
 
     println!("Figure 7 — per-instance forward time (ms) and peak memory\n");
     print!("{:<12}", "method");
-    for n in ns {
+    for &n in &ns {
         print!("{:>9}n={n:<6}", "");
     }
     println!();
@@ -74,7 +120,7 @@ fn main() {
             let peak = peak_bytes();
             writeln!(
                 csv,
-                "{method},{n},1,{},{},{}",
+                "{method},{n},1,-,serial,{},{},{}",
                 r.summary.mean * 1e3,
                 peak,
                 attn.workspace_bytes(n, d)
@@ -87,64 +133,140 @@ fn main() {
         println!("{mem_row}");
     }
 
-    // YOSO parallel engine: per-hash fan-out, thread-count sweep. The
-    // t = 1 row is the serial engine (no pool) — the speed-up baseline.
-    println!("\nYOSO parallel engine scaling (yoso_32, per-hash fan-out)\n");
-    println!("{:>6} {:>8} {:>12} {:>10}", "n", "threads", "time_ms", "speedup");
-    let att = YosoAttention::new(8, 32, false);
+    // YOSO parallel engine: per-hash fan-out, (threads x scheduler x
+    // chunk policy) sweep. The t = 1 row is the serial engine (no pool)
+    // — the speed-up baseline for both schedulers.
     let counts = thread_counts();
-    let mut serial_ms_n4096 = 0.0f64;
-    let mut best_speedup_n4096 = 1.0f64;
-    for n in [1024usize, 4096] {
+    let adaptive = ChunkPolicy::adaptive(counts.last().copied().unwrap_or(1));
+    println!("\nYOSO parallel engine scaling (yoso_32, per-hash fan-out)\n");
+    println!(
+        "{:>6} {:>8} {:>11} {:>7} {:>12} {:>10}",
+        "n", "threads", "chunk", "sched", "time_ms", "speedup"
+    );
+    let att = YosoAttention::new(8, 32, false);
+    let mut serial_ms_last_n = 0.0f64;
+    let mut best_speedup_last_n = 1.0f64;
+    let mut steal_losses = 0usize;
+    for &n in &engine_ns {
         let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
         let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
         let v = Mat::randn(n, d, 1.0, &mut rng);
+        let iters = smoke_or(3, if n >= 2048 { 3 } else { 5 });
         let mut serial_ms = 0.0f64;
+        let last_n = engine_ns.last().copied().unwrap_or(0) == n;
         for &t in &counts {
-            let engine = Engine::new(t);
-            let run_rng = Rng::new(9);
-            reset_peak();
-            let iters = if n >= 2048 { 3 } else { 5 };
-            let r = bench(&format!("yoso_32_engine n={n} t={t}"), 1, iters, || {
-                std::hint::black_box(
-                    engine.forward_yoso(&att, &q, &k, &v, &run_rng),
-                );
-            });
-            let peak = peak_bytes();
-            let ms = r.summary.mean * 1e3;
             if t == 1 {
+                // no pool on either scheduler — one shared baseline row
+                let engine = Engine::serial();
+                let (ms, peak) = time_engine(&engine, &att, &q, &k, &v, iters);
                 serial_ms = ms;
-                if n == 4096 {
-                    serial_ms_n4096 = ms;
+                if last_n {
+                    serial_ms_last_n = ms;
+                }
+                writeln!(
+                    csv,
+                    "yoso_32_engine,{n},1,{},serial,{ms},{peak},{}",
+                    engine.chunk_policy().label(),
+                    engine.workspace_bytes(&att, n, d)
+                )
+                .unwrap();
+                println!(
+                    "{n:>6} {t:>8} {:>11} {:>7} {ms:>12.2} {:>9.2}x",
+                    engine.chunk_policy().label(),
+                    "serial",
+                    1.0
+                );
+                continue;
+            }
+            // scheduler A/B at fixed chunking: symmetric best-of-3 per
+            // scheduler (unconditional — see best_engine_time) so noisy
+            // shared-CI boxes are damped without biasing the comparison
+            let chan = Engine::new_channel(t);
+            let steal = Engine::new(t);
+            let (chan_ms, chan_peak) =
+                best_engine_time(&chan, &att, &q, &k, &v, iters, 3);
+            let (steal_ms, steal_peak) =
+                best_engine_time(&steal, &att, &q, &k, &v, iters, 3);
+            // 5% tolerance: the smoke gate must catch a scheduler
+            // regression, not a noisy-neighbor blip on a shared runner
+            if steal_ms > chan_ms * 1.05 {
+                steal_losses += 1;
+            }
+            // workspace model depends on (threads, policy) only — same
+            // number for both schedulers
+            let model_bytes = steal.workspace_bytes(&att, n, d);
+            for (sched, ms, peak) in
+                [("chan", chan_ms, chan_peak), ("steal", steal_ms, steal_peak)]
+            {
+                writeln!(
+                    csv,
+                    "yoso_32_engine,{n},{t},{},{sched},{ms},{peak},{model_bytes}",
+                    steal.chunk_policy().label()
+                )
+                .unwrap();
+                let speedup = serial_ms / ms.max(1e-9);
+                println!(
+                    "{n:>6} {t:>8} {:>11} {sched:>7} {ms:>12.2} {speedup:>9.2}x",
+                    steal.chunk_policy().label()
+                );
+                if sched == "steal" && last_n {
+                    best_speedup_last_n = best_speedup_last_n.max(speedup);
                 }
             }
+            // adaptive chunking on the stealing pool — the policy delta,
+            // with the same best-of-3 damping as the fixed-policy rows
+            let engine = Engine::with_policy(t, adaptive);
+            let (ms, peak) = best_engine_time(&engine, &att, &q, &k, &v, iters, 3);
             let speedup = serial_ms / ms.max(1e-9);
-            if n == 4096 {
-                best_speedup_n4096 = best_speedup_n4096.max(speedup);
-            }
             writeln!(
                 csv,
-                "yoso_32_engine,{n},{t},{ms},{peak},{}",
+                "yoso_32_engine,{n},{t},{},steal,{ms},{peak},{}",
+                adaptive.label(),
                 engine.workspace_bytes(&att, n, d)
             )
             .unwrap();
-            println!("{n:>6} {t:>8} {ms:>12.2} {speedup:>9.2}x");
+            println!(
+                "{n:>6} {t:>8} {:>11} {:>7} {ms:>12.2} {speedup:>9.2}x",
+                adaptive.label(),
+                "steal"
+            );
+            if last_n {
+                best_speedup_last_n = best_speedup_last_n.max(speedup);
+            }
         }
     }
+    let last_n = engine_ns.last().copied().unwrap_or(0);
     println!(
-        "\nengine speedup at n=4096: {best_speedup_n4096:.2}x over serial \
-         ({serial_ms_n4096:.2} ms) with up to {} threads",
+        "\nengine speedup at n={last_n}: {best_speedup_last_n:.2}x over serial \
+         ({serial_ms_last_n:.2} ms) with up to {} threads",
         counts.last().copied().unwrap_or(1)
     );
-    if counts.last().copied().unwrap_or(1) >= 4 && best_speedup_n4096 < 2.0 {
+    if steal_losses > 0 {
+        println!(
+            "WARNING: work-stealing pool slower than the channel pool at \
+             {steal_losses} sweep point(s) (best-of-3 per scheduler)"
+        );
+        if smoke() {
+            // the bench-smoke CI job is the regression gate: a stealing
+            // scheduler that loses to the channel baseline at any point
+            // of the smoke sweep must fail the job, not warn into a log
+            std::process::exit(1);
+        }
+    }
+    if !smoke() && counts.last().copied().unwrap_or(1) >= 4 && best_speedup_last_n < 2.0 {
         println!(
             "WARNING: expected >= 2x engine speedup on >= 4 cores, \
-             measured {best_speedup_n4096:.2}x"
+             measured {best_speedup_last_n:.2}x"
         );
     }
     println!("\n-> results/fig7_efficiency.csv");
 
-    // the headline shape assertions
+    // the headline shape assertions (full runs only: at smoke sizes the
+    // quadratic term does not dominate yet)
+    if smoke() {
+        println!("\nYOSO_BENCH_SMOKE: skipping softmax/yoso headline ratio");
+        return;
+    }
     let mut check = |method: &str, n: usize| -> f64 {
         let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
         let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();

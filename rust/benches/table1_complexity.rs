@@ -3,10 +3,17 @@
 //!
 //! For each n we time the pure-Rust forward kernels and record workspace
 //! bytes (analytic model + counting allocator), then fit the scaling
-//! exponent alpha in t ~ n^alpha. Softmax should fit ~2, YOSO ~1.
+//! exponent alpha in t ~ n^alpha. Softmax should fit ~2, YOSO ~1. The
+//! engine column runs on the work-stealing pool under both chunk
+//! policies; rows land in results/table1_complexity.csv with a
+//! `chunk_policy` column. `YOSO_BENCH_SMOKE=1` shrinks the sweep and
+//! skips the exponent assertions (the quadratic term does not dominate
+//! at smoke sizes).
 
-use yoso::attention::{Attention, Engine, SoftmaxAttention, YosoAttention};
-use yoso::bench_support::{bench, bench_threads, human_bytes, CountingAlloc};
+use std::io::Write;
+use yoso::attention::{Attention, ChunkPolicy, Engine, SoftmaxAttention, YosoAttention};
+use yoso::bench_support::{bench, bench_threads, human_bytes, smoke, smoke_or,
+                          CountingAlloc};
 use yoso::tensor::Mat;
 use yoso::util::Rng;
 
@@ -15,9 +22,9 @@ static ALLOC: CountingAlloc = CountingAlloc;
 
 fn fit_exponent(ns: &[usize], ts: &[f64]) -> f64 {
     // least-squares slope of log t vs log n
-    let k = ns.len() as f64;
     let lx: Vec<f64> = ns.iter().map(|&n| (n as f64).ln()).collect();
     let ly: Vec<f64> = ts.iter().map(|&t| t.ln()).collect();
+    let k = ns.len() as f64;
     let mx = lx.iter().sum::<f64>() / k;
     let my = ly.iter().sum::<f64>() / k;
     let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
@@ -27,14 +34,32 @@ fn fit_exponent(ns: &[usize], ts: &[f64]) -> f64 {
 
 fn main() {
     let d = 64;
-    let ns = [512usize, 1024, 2048, 4096];
+    let ns = smoke_or(vec![128usize, 256, 512], vec![512usize, 1024, 2048, 4096]);
     let mut rng = Rng::new(0);
     let threads = bench_threads();
-    let engine = Engine::new(threads);
+    let iters = smoke_or(3, 5);
+    let fixed = ChunkPolicy::default();
+    let adaptive = ChunkPolicy::adaptive(threads);
+    let engines = [
+        Engine::with_policy(threads, fixed),
+        Engine::with_policy(threads, adaptive),
+    ];
+
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = std::fs::File::create("results/table1_complexity.csv").unwrap();
+    writeln!(csv, "method,n,threads,chunk_policy,time_ms,model_bytes").unwrap();
 
     println!("Table 1 — empirical forward cost (d = {d}, tau = 8, m = 32)\n");
-    println!("{:>6} {:>16} {:>14} {:>16} {:>16} {:>14}", "n", "softmax ms",
-             "sm mem", "yoso-32 ms", format!("yoso@{threads}t ms"), "yoso mem");
+    println!(
+        "{:>6} {:>16} {:>14} {:>16} {:>16} {:>16} {:>14}",
+        "n",
+        "softmax ms",
+        "sm mem",
+        "yoso-32 ms",
+        format!("yoso@{threads}t {} ms", fixed.label()),
+        format!("yoso@{threads}t {} ms", adaptive.label()),
+        "yoso mem"
+    );
 
     let mut sm_times = Vec::new();
     let mut yo_times = Vec::new();
@@ -46,24 +71,43 @@ fn main() {
         let softmax = SoftmaxAttention;
         let yoso = YosoAttention::new(8, 32, false);
         let mut r1 = Rng::new(1);
-        let sm = bench(&format!("softmax n={n}"), 1, 5, || {
+        let sm = bench(&format!("softmax n={n}"), 1, iters, || {
             std::hint::black_box(softmax.forward(&q, &k, &v, &mut r1));
         });
         let mut r2 = Rng::new(2);
-        let yo = bench(&format!("yoso n={n}"), 1, 5, || {
+        let yo = bench(&format!("yoso n={n}"), 1, iters, || {
             std::hint::black_box(yoso.forward(&q, &k, &v, &mut r2));
         });
-        let r3 = Rng::new(2);
-        let yo_par = bench(&format!("yoso engine n={n}"), 1, 5, || {
-            std::hint::black_box(engine.forward_yoso(&yoso, &q, &k, &v, &r3));
-        });
+        writeln!(csv, "softmax,{n},1,-,{},{}", sm.summary.mean * 1e3,
+                 softmax.workspace_bytes(n, d))
+            .unwrap();
+        writeln!(csv, "yoso_32,{n},1,-,{},{}", yo.summary.mean * 1e3,
+                 yoso.workspace_bytes(n, d))
+            .unwrap();
+        let mut engine_ms = Vec::new();
+        for engine in &engines {
+            let r3 = Rng::new(2);
+            let yo_par = bench(&format!("yoso engine n={n}"), 1, iters, || {
+                std::hint::black_box(engine.forward_yoso(&yoso, &q, &k, &v, &r3));
+            });
+            let ms = yo_par.summary.mean * 1e3;
+            writeln!(
+                csv,
+                "yoso_32_engine,{n},{threads},{},{ms},{}",
+                engine.chunk_policy().label(),
+                engine.workspace_bytes(&yoso, n, d)
+            )
+            .unwrap();
+            engine_ms.push(ms);
+        }
         println!(
-            "{:>6} {:>16.3} {:>14} {:>16.3} {:>16.3} {:>14}",
+            "{:>6} {:>16.3} {:>14} {:>16.3} {:>16.3} {:>16.3} {:>14}",
             n,
             sm.summary.mean * 1e3,
             human_bytes(softmax.workspace_bytes(n, d)),
             yo.summary.mean * 1e3,
-            yo_par.summary.mean * 1e3,
+            engine_ms[0],
+            engine_ms[1],
             human_bytes(yoso.workspace_bytes(n, d)),
         );
         sm_times.push(sm.summary.mean);
@@ -78,6 +122,11 @@ fn main() {
     println!("\nmemory model: softmax O(n^2) grows {}x from n=512 to 4096; \
               yoso table O(m 2^tau + codes) is n-independent (table) + O(n) codes",
              (4096 * 4096) / (512 * 512));
+    println!("\n-> results/table1_complexity.csv");
+    if smoke() {
+        println!("YOSO_BENCH_SMOKE: skipping scaling-exponent assertions");
+        return;
+    }
     assert!(sm_alpha > 1.6, "softmax should scale ~quadratically: {sm_alpha}");
     assert!(yo_alpha < 1.45, "yoso should scale ~linearly: {yo_alpha}");
 }

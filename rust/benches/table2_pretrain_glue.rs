@@ -35,8 +35,11 @@ fn source(seed: u64) -> PretrainSource {
 
 fn main() -> anyhow::Result<()> {
     yoso::util::log::init_from_env();
-    let steps = env_usize("YOSO_T2_STEPS", 60);
-    let glue_steps = env_usize("YOSO_T2_GLUE_STEPS", 40);
+    if yoso::bench_support::smoke_skip_without_artifacts("artifacts") {
+        return Ok(());
+    }
+    let steps = env_usize("YOSO_T2_STEPS", yoso::bench_support::smoke_or(6, 60));
+    let glue_steps = env_usize("YOSO_T2_GLUE_STEPS", yoso::bench_support::smoke_or(4, 40));
     let full = std::env::var("YOSO_T2_FULL").is_ok();
 
     let variants: Vec<&str> = if full {

@@ -22,7 +22,10 @@ fn env_usize(name: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     yoso::util::log::init_from_env();
-    let steps = env_usize("YOSO_T3_STEPS", 40);
+    if yoso::bench_support::smoke_skip_without_artifacts("artifacts") {
+        return Ok(());
+    }
+    let steps = env_usize("YOSO_T3_STEPS", yoso::bench_support::smoke_or(4, 40));
     let full = std::env::var("YOSO_T3_FULL").is_ok();
     let variants: Vec<&str> = if full {
         vec!["none", "softmax", "yoso_e", "yoso_32", "star_yoso_16",

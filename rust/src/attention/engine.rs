@@ -1,22 +1,42 @@
 //! Parallel multi-head YOSO forward engine.
 //!
-//! Two independent grains of parallelism over `util::ThreadPool`, both
-//! deterministic for a given caller seed:
+//! Two independent grains of parallelism over the work-stealing
+//! `util::ThreadPool`, both deterministic for a given caller seed:
 //!
 //! * **Per-hash** (`Engine::forward_yoso`): the `m` hash rounds of one
 //!   YOSO forward are embarrassingly parallel. Round `h` draws its
 //!   projections from the fixed stream `rng.fold_in(h)` and scatters into
-//!   its *own* bucket table. Rounds are grouped into fixed
-//!   `HASH_CHUNK`-sized tasks (hashes summed ascending within a chunk,
-//!   chunk accumulators reduced ascending on the caller thread), bounding
-//!   transient memory at m/HASH_CHUNK accumulators. Every term and every
-//!   association of the reduction is a constant of the algorithm — never
-//!   of the thread count — so output bytes are identical for every
-//!   thread count, including the serial engine.
+//!   its *own* bucket table. Rounds are grouped into chunk-sized tasks
+//!   (hashes summed ascending within a chunk, chunk accumulators reduced
+//!   ascending on the caller thread), bounding transient memory at
+//!   m/chunk accumulators.
 //! * **Per-head** (`MultiHeadAttention::forward_batch`): independent
 //!   `[batch, heads] x (Q, K, V)` tasks fan across the pool; head `i`
 //!   draws from `rng.fold_in(i)`, matching the serial default
 //!   `Attention::forward_batch` bit-for-bit.
+//!
+//! # Chunking policy and the determinism contract
+//!
+//! How many hash rounds fold into one task is a [`ChunkPolicy`]:
+//!
+//! * [`ChunkPolicy::fixed`]`(4)` — the default; bit-compatible with the
+//!   original fixed `HASH_CHUNK = 4` layout.
+//! * [`ChunkPolicy::adaptive`]`(width)` — sizes chunks from the policy
+//!   inputs (m, the per-round workload n·d, and the *declared* target
+//!   width): enough chunks to keep `width` workers busy with stealing
+//!   slack, but each chunk large enough to amortize per-task scheduling
+//!   overhead when rounds are tiny.
+//!
+//! The invariant both policies keep: **task layout is a function of the
+//! policy inputs only — never of the executing pool's thread count**.
+//! The adaptive policy's `width` is a constant captured at construction
+//! (snapshot the core count into it if you want that), so every term and
+//! every association of the floating-point reduction is fixed once the
+//! policy is fixed, and output bytes are identical at every thread
+//! count, including the serial engine, under either scheduler. Changing
+//! the *policy* (or its resolved chunk size) legitimately changes the
+//! reduction association and therefore the bytes; changing *threads*
+//! never does. The 1-vs-N property tests assert this for both policies.
 //!
 //! Note: the engine's per-hash streams differ from the *legacy*
 //! single-stream draw order of `YosoAttention::forward` (one hasher
@@ -25,58 +45,201 @@
 //! engine runs at different thread counts, not engine vs legacy.
 //!
 //! Deadlock rule: jobs running *on* a pool must never submit to the same
-//! pool (`ThreadPool::map` joins on a shared pending count). Pick one
-//! grain per pool: the serve path fans requests and keeps heads serial
-//! inside each job; the benches fan hashes.
+//! pool (`ThreadPool::map`/`run_batch` block on batch completion). Pick
+//! one grain per pool: the serve path fans requests and keeps heads
+//! serial inside each job; the benches fan hashes.
 
 use super::yoso::YosoAttention;
 use super::{Attention, HeadTask};
 use crate::lsh::{HadamardHasher, Hasher, HyperplaneHasher};
 use crate::tensor::Mat;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{ChannelPool, ThreadPool};
 use crate::util::Rng;
 use std::sync::Arc;
 
-/// Hash rounds folded per pool task. A build-time constant — never a
-/// function of the thread count — so the floating-point association of
-/// the reduction, and therefore the output bytes, do not change when the
-/// engine scales. 4 keeps transient memory at m/4 accumulators while
-/// still exposing 8-way parallelism for the paper's m = 32.
+/// Default hash rounds folded per pool task (`ChunkPolicy::fixed(4)`).
+/// 4 keeps transient memory at m/4 accumulators while still exposing
+/// 8-way parallelism for the paper's m = 32.
 pub const HASH_CHUNK: usize = 4;
 
+/// How many hash rounds fold into one pool task. The resolved chunk size
+/// is a pure function of `(m, n, d)` and the policy's own constants —
+/// never of the executing thread count — so the engine's output bytes
+/// depend on the policy, not on how many workers ran it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// Fold exactly `chunk` rounds per task (layout of the original
+    /// fixed `HASH_CHUNK` engine when `chunk == 4`).
+    Fixed { chunk: usize },
+    /// Size chunks from m, the per-round workload n·d, and a *declared*
+    /// target width. `width` is a policy constant captured at
+    /// construction, not the executing pool's thread count.
+    Adaptive { width: usize },
+}
+
+impl ChunkPolicy {
+    /// Fixed chunking; `fixed(4)` is the bit-compatible default.
+    pub fn fixed(chunk: usize) -> ChunkPolicy {
+        ChunkPolicy::Fixed { chunk: chunk.max(1) }
+    }
+
+    /// Adaptive chunking targeting `width` workers (0 snapshots the
+    /// machine's core count — at construction, once; the value is a
+    /// constant of the policy from then on).
+    pub fn adaptive(width: usize) -> ChunkPolicy {
+        let w = if width == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            width
+        };
+        ChunkPolicy::Adaptive { width: w.max(1) }
+    }
+
+    /// Resolve the rounds-per-task for a forward with `m` hash rounds
+    /// over an (n, d) query block.
+    pub fn chunk_size(&self, m: usize, n: usize, d: usize) -> usize {
+        let m = m.max(1);
+        match *self {
+            // .max(1): the `fixed()` ctor clamps, but the variant fields
+            // are public — a literal `Fixed { chunk: 0 }` must not turn
+            // into a divide-by-zero in the chunk-count ceil
+            ChunkPolicy::Fixed { chunk } => chunk.max(1),
+            ChunkPolicy::Adaptive { width } => {
+                // ~3 tasks per declared worker: enough slack for the
+                // stealing scheduler to rebalance without shrinking
+                // tasks to scheduling noise
+                let target_tasks = (3 * width).clamp(1, m);
+                let mut chunk = (m + target_tasks - 1) / target_tasks;
+                // tiny rounds amortize poorly: fold more of them per
+                // task as the per-round n·d work shrinks
+                let round_work = n.saturating_mul(d);
+                let floor = if round_work < (1 << 14) {
+                    4
+                } else if round_work < (1 << 17) {
+                    2
+                } else {
+                    1
+                };
+                chunk = chunk.max(floor);
+                chunk.min(m)
+            }
+        }
+    }
+
+    /// Stable label for CSV columns and logs, e.g. `fixed4`, `adaptive8`.
+    pub fn label(&self) -> String {
+        match *self {
+            ChunkPolicy::Fixed { chunk } => format!("fixed{chunk}"),
+            ChunkPolicy::Adaptive { width } => format!("adaptive{width}"),
+        }
+    }
+}
+
+impl Default for ChunkPolicy {
+    fn default() -> Self {
+        ChunkPolicy::Fixed { chunk: HASH_CHUNK }
+    }
+}
+
+/// The executor behind an `Engine`: inline, the work-stealing pool, or
+/// the legacy channel pool (kept for scheduler A/B benchmarking).
+#[derive(Clone)]
+enum Exec {
+    Inline,
+    Stealing(Arc<ThreadPool>),
+    Channel(Arc<ChannelPool>),
+}
+
 /// A thread-count-agnostic executor: `threads == 1` runs inline with no
-/// pool, `threads > 1` owns a `ThreadPool`. Clones share the same pool.
+/// pool, `threads > 1` owns a pool. Clones share the same pool. The
+/// chunk policy rides the engine so every consumer (benches, encoder,
+/// serve config) resolves task layout the same way.
 #[derive(Clone)]
 pub struct Engine {
-    pool: Option<Arc<ThreadPool>>,
+    exec: Exec,
     threads: usize,
+    chunk: ChunkPolicy,
 }
 
 impl Engine {
     /// Inline executor — no pool, no threads, same results.
     pub fn serial() -> Engine {
-        Engine { pool: None, threads: 1 }
+        Engine { exec: Exec::Inline, threads: 1, chunk: ChunkPolicy::default() }
     }
 
-    /// Pool-backed executor. `threads == 0` resolves to the number of
-    /// available cores; `<= 1` degrades to the serial engine.
+    /// Work-stealing pool executor. `threads == 0` resolves to the
+    /// number of available cores; `<= 1` degrades to the serial engine.
     pub fn new(threads: usize) -> Engine {
-        let t = if threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
+        Engine::with_policy(threads, ChunkPolicy::default())
+    }
+
+    /// Work-stealing executor with an explicit chunk policy.
+    pub fn with_policy(threads: usize, chunk: ChunkPolicy) -> Engine {
+        let t = Engine::resolve(threads);
+        if t <= 1 {
+            Engine { exec: Exec::Inline, threads: 1, chunk }
+        } else {
+            Engine {
+                exec: Exec::Stealing(Arc::new(ThreadPool::new(t))),
+                threads: t,
+                chunk,
+            }
+        }
+    }
+
+    /// Legacy channel-per-job scheduler (`util::ChannelPool`) behind the
+    /// same API and determinism contract — the fig7 scheduler baseline.
+    /// Not for production paths; the stealing pool is strictly cheaper.
+    pub fn new_channel(threads: usize) -> Engine {
+        Engine::new_channel_with(threads, ChunkPolicy::default())
+    }
+
+    /// Channel-scheduler engine with an explicit chunk policy.
+    pub fn new_channel_with(threads: usize, chunk: ChunkPolicy) -> Engine {
+        let t = Engine::resolve(threads);
+        if t <= 1 {
+            Engine { exec: Exec::Inline, threads: 1, chunk }
+        } else {
+            Engine {
+                exec: Exec::Channel(Arc::new(ChannelPool::new(t))),
+                threads: t,
+                chunk,
+            }
+        }
+    }
+
+    fn resolve(threads: usize) -> usize {
+        if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
-        };
-        if t <= 1 {
-            Engine::serial()
-        } else {
-            Engine { pool: Some(Arc::new(ThreadPool::new(t))), threads: t }
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The engine's chunk policy (task-layout contract).
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.chunk
+    }
+
+    /// Replace the chunk policy (builder style). Changing the policy may
+    /// change output bytes (different reduction association); changing
+    /// threads never does.
+    pub fn with_chunk_policy(mut self, chunk: ChunkPolicy) -> Engine {
+        self.chunk = chunk;
+        self
+    }
+
+    /// Scheduler label for CSV columns: `serial`, `steal`, or `chan`.
+    pub fn sched_label(&self) -> &'static str {
+        match self.exec {
+            Exec::Inline => "serial",
+            Exec::Stealing(_) => "steal",
+            Exec::Channel(_) => "chan",
+        }
     }
 
     /// Order-preserving map over owned items: pool when present, inline
@@ -87,17 +250,19 @@ impl Engine {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
-        match &self.pool {
-            Some(pool) => pool.map(items, f),
-            None => items.into_iter().map(f).collect(),
+        match &self.exec {
+            Exec::Inline => items.into_iter().map(f).collect(),
+            Exec::Stealing(pool) => pool.map(items, f),
+            Exec::Channel(pool) => pool.map(items, f),
         }
     }
 
     /// Raw (unnormalized) YOSO forward with hash rounds fanned across the
-    /// pool in fixed-size chunks. Bit-identical for every thread count
-    /// with the same `rng`: the chunk layout and both summation orders
-    /// (hashes ascending within a chunk, chunks ascending in the final
-    /// reduction) are constants, independent of `threads`.
+    /// pool in policy-sized chunks. Bit-identical for every thread count
+    /// with the same `rng` and policy: the chunk layout and both
+    /// summation orders (hashes ascending within a chunk, chunks
+    /// ascending in the final reduction) are functions of the policy
+    /// inputs, independent of `threads` and of the scheduler.
     pub fn forward_yoso_raw(
         &self,
         att: &YosoAttention,
@@ -116,10 +281,11 @@ impl Engine {
         let vv = Arc::new(v.clone());
         let (tau, m, fast) = (att.tau, att.m, att.fast_hash);
         let base = rng.clone();
-        let n_chunks = (m + HASH_CHUNK - 1) / HASH_CHUNK;
+        let chunk = self.chunk.chunk_size(m, nq, d);
+        let n_chunks = (m + chunk - 1) / chunk;
         let chunks = self.map((0..n_chunks).collect::<Vec<usize>>(), move |c| {
-            let lo = c * HASH_CHUNK;
-            let hi = ((c + 1) * HASH_CHUNK).min(m);
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(m);
             let mut acc = Mat::zeros(qn.rows, vv.cols);
             for h in lo..hi {
                 let mut hrng = base.fold_in(h as u64);
@@ -132,8 +298,8 @@ impl Engine {
         });
         let mut out = Mat::zeros(nq, dv);
         let inv_m = 1.0 / m as f32;
-        for chunk in &chunks {
-            for (o, s) in out.data.iter_mut().zip(&chunk.data) {
+        for chunk_acc in &chunks {
+            for (o, s) in out.data.iter_mut().zip(&chunk_acc.data) {
                 *o += inv_m * s;
             }
         }
@@ -143,8 +309,11 @@ impl Engine {
     /// Analytic auxiliary-memory model of `forward_yoso_raw` — the
     /// engine trades the serial path's single reused table for chunk
     /// accumulators plus one live (table + partial) per running worker.
+    /// Resolves the same `ChunkPolicy` as the forward, so fixed and
+    /// adaptive layouts report their own accumulator counts.
     pub fn workspace_bytes(&self, att: &YosoAttention, n: usize, d: usize) -> usize {
-        let n_chunks = (att.m + HASH_CHUNK - 1) / HASH_CHUNK;
+        let chunk = self.chunk.chunk_size(att.m, n, d);
+        let n_chunks = (att.m + chunk - 1) / chunk;
         let live_tasks = self.threads.min(n_chunks);
         n_chunks * n * d * 4
             + live_tasks * (((1 << att.tau) * d + n * d) * 4 + 2 * n * 4)
@@ -217,8 +386,23 @@ impl MultiHeadAttention {
         MultiHeadAttention::new(Engine::serial())
     }
 
+    /// Pool-free instance carrying an explicit chunk policy — the CPU
+    /// serve path plumbs its configured policy through here so any
+    /// engine-level call (`forward_yoso`, `workspace_bytes`) made under
+    /// a request resolves the layout the server was configured with.
+    /// Head fan-out itself goes through the attention trait and is
+    /// policy-independent.
+    pub fn serial_with_policy(chunk: ChunkPolicy) -> MultiHeadAttention {
+        MultiHeadAttention::new(Engine::serial().with_chunk_policy(chunk))
+    }
+
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// The engine's chunk policy (convenience passthrough).
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.engine.chunk_policy()
     }
 
     /// Forward every head; result `i` corresponds to `heads[i]`.
@@ -243,6 +427,7 @@ mod tests {
     use super::*;
     use crate::attention::by_name;
     use crate::attention::yoso::YosoE;
+    use crate::testing::test_threads;
     use crate::util::stats::radians_between;
 
     fn setup(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
@@ -268,6 +453,32 @@ mod tests {
         assert!(Engine::new(0).threads() >= 1);
         assert_eq!(Engine::new(1).threads(), 1);
         assert_eq!(Engine::new(3).threads(), 3);
+        assert_eq!(Engine::new_channel(3).threads(), 3);
+        assert_eq!(Engine::serial().sched_label(), "serial");
+        assert_eq!(Engine::new(2).sched_label(), "steal");
+        assert_eq!(Engine::new_channel(2).sched_label(), "chan");
+    }
+
+    #[test]
+    fn chunk_policy_resolution() {
+        assert_eq!(ChunkPolicy::fixed(4).chunk_size(32, 512, 64), 4);
+        assert_eq!(ChunkPolicy::fixed(0).chunk_size(32, 512, 64), 1);
+        assert_eq!(ChunkPolicy::default().chunk_size(32, 512, 64), HASH_CHUNK);
+        // adaptive resolves within [1, m] for any inputs
+        for width in [1usize, 2, 4, 8, 64] {
+            let p = ChunkPolicy::adaptive(width);
+            for (m, n, d) in [(1usize, 8usize, 8usize), (8, 64, 32), (32, 512, 64),
+                              (128, 4096, 64), (256, 16, 16)] {
+                let c = p.chunk_size(m, n, d);
+                assert!((1..=m).contains(&c), "width={width} m={m} n={n} d={d}: {c}");
+            }
+        }
+        // big rounds + wide pools chunk finer than tiny rounds
+        let wide = ChunkPolicy::adaptive(8);
+        assert!(wide.chunk_size(32, 4096, 64) <= wide.chunk_size(32, 16, 16));
+        assert_eq!(ChunkPolicy::fixed(4).label(), "fixed4");
+        assert_eq!(ChunkPolicy::adaptive(8).label(), "adaptive8");
+        assert!(ChunkPolicy::adaptive(0).chunk_size(32, 512, 64) >= 1);
     }
 
     #[test]
@@ -305,14 +516,80 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_policy_bit_identical_across_thread_counts() {
+        // the tentpole invariant: adaptive layout is fixed by the policy,
+        // so thread count (and scheduler) remain pure wall-clock knobs
+        let (q, k, v) = setup(80, 32, 5);
+        let att = YosoAttention::new(6, 24, false);
+        let rng = Rng::new(13);
+        let policy = ChunkPolicy::adaptive(4);
+        let serial = Engine::serial()
+            .with_chunk_policy(policy)
+            .forward_yoso(&att, &q, &k, &v, &rng);
+        for threads in [2usize, 3, 8] {
+            let steal = Engine::with_policy(threads, policy)
+                .forward_yoso(&att, &q, &k, &v, &rng);
+            assert!(bits_equal(&serial, &steal), "steal threads={threads}");
+            let chan = Engine::new_channel_with(threads, policy)
+                .forward_yoso(&att, &q, &k, &v, &rng);
+            assert!(bits_equal(&serial, &chan), "chan threads={threads}");
+        }
+    }
+
+    #[test]
+    fn adaptive_matches_fixed_at_resolved_chunk() {
+        // when adaptive resolves to chunk size c, its bytes must equal
+        // Fixed(c)'s — the layout, not the policy enum, decides the sum
+        let (q, k, v) = setup(64, 32, 21);
+        let att = YosoAttention::new(5, 16, false);
+        let rng = Rng::new(3);
+        let adaptive = ChunkPolicy::adaptive(2);
+        let c = adaptive.chunk_size(att.m, q.rows, q.cols);
+        let t = test_threads(4);
+        let a = Engine::with_policy(t, adaptive).forward_yoso(&att, &q, &k, &v, &rng);
+        let f = Engine::with_policy(t, ChunkPolicy::fixed(c))
+            .forward_yoso(&att, &q, &k, &v, &rng);
+        assert!(bits_equal(&a, &f), "adaptive(c={c}) != fixed({c})");
+    }
+
+    #[test]
+    fn channel_engine_matches_stealing_engine() {
+        let (q, k, v) = setup(64, 32, 8);
+        let att = YosoAttention::new(5, 12, false);
+        let rng = Rng::new(17);
+        let t = test_threads(4);
+        let steal = Engine::new(t).forward_yoso(&att, &q, &k, &v, &rng);
+        let chan = Engine::new_channel(t).forward_yoso(&att, &q, &k, &v, &rng);
+        assert!(bits_equal(&steal, &chan));
+    }
+
+    #[test]
     fn fast_hash_round_parallel_matches_serial() {
         let (q, k, v) = setup(64, 32, 3);
         let att = YosoAttention::new(5, 12, true);
         let rng = Rng::new(9);
         let serial = Engine::serial().forward_yoso(&att, &q, &k, &v, &rng);
-        let par = Engine::new(4).forward_yoso(&att, &q, &k, &v, &rng);
+        let par = Engine::new(test_threads(4)).forward_yoso(&att, &q, &k, &v, &rng);
         assert!(bits_equal(&serial, &par));
         assert!(serial.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn workspace_reflects_policy() {
+        let att = YosoAttention::new(8, 32, false);
+        let fixed = Engine::with_policy(4, ChunkPolicy::fixed(4));
+        let coarse = Engine::with_policy(4, ChunkPolicy::fixed(16));
+        // coarser chunks => fewer accumulators => no more workspace
+        assert!(coarse.workspace_bytes(&att, 1024, 64)
+            <= fixed.workspace_bytes(&att, 1024, 64));
+        // adaptive stays monotone in n (the prop test sweeps this wider)
+        let adaptive = Engine::with_policy(4, ChunkPolicy::adaptive(4));
+        let mut prev = 0usize;
+        for n in [16usize, 64, 256, 1024, 4096] {
+            let ws = adaptive.workspace_bytes(&att, n, 64);
+            assert!(ws >= prev, "adaptive workspace shrank at n={n}");
+            prev = ws;
+        }
     }
 
     #[test]
@@ -347,7 +624,7 @@ mod tests {
             let mut ctor = Rng::new(2);
             let attn: Arc<dyn Attention> = Arc::from(by_name(name, &mut ctor, 32));
             let serial = attn.forward_batch(&heads, &base);
-            let mh = MultiHeadAttention::new(Engine::new(3));
+            let mh = MultiHeadAttention::new(Engine::new(test_threads(3)));
             let par = mh.forward_batch(&attn, heads.clone(), &base);
             assert_eq!(serial.len(), par.len());
             for (a, b) in serial.iter().zip(&par) {

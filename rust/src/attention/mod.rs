@@ -21,7 +21,7 @@ pub mod reformer;
 pub mod softmax;
 pub mod yoso;
 
-pub use engine::{Engine, MultiHeadAttention};
+pub use engine::{ChunkPolicy, Engine, HASH_CHUNK, MultiHeadAttention};
 pub use linear::{LinearTransformer, YosoConv};
 pub use linformer::Linformer;
 pub use longformer::Longformer;

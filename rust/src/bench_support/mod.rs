@@ -99,6 +99,44 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
 }
 
+/// True when `YOSO_BENCH_SMOKE=1` (or `true`): every bench binary
+/// shrinks its sweeps/iterations to a seconds-scale smoke run and skips
+/// shape assertions that only hold at full problem sizes. CI's
+/// bench-smoke job runs all benches in this mode on every PR and uploads
+/// the emitted CSVs as artifacts, so the perf trajectory (including the
+/// fig7 scheduler and chunk-policy columns) is recorded per change.
+pub fn smoke() -> bool {
+    smoke_setting(std::env::var("YOSO_BENCH_SMOKE").ok().as_deref())
+}
+
+/// The `YOSO_BENCH_SMOKE` parse itself, env-free so tests cover it
+/// without `set_var` (mutating the process environment races parallel
+/// tests that call `getenv` — UB on glibc).
+fn smoke_setting(v: Option<&str>) -> bool {
+    matches!(v, Some("1") | Some("true"))
+}
+
+/// `smoke_v` under `YOSO_BENCH_SMOKE`, else `full_v`.
+pub fn smoke_or<T>(smoke_v: T, full_v: T) -> T {
+    if smoke() {
+        smoke_v
+    } else {
+        full_v
+    }
+}
+
+/// Smoke-mode guard for artifact-dependent benches (fig5/table2/table3):
+/// in the CI smoke sweep there is no `artifacts/` directory (the offline
+/// build gates PJRT), so those benches print a skip note and exit clean
+/// instead of failing the job. Outside smoke mode this never skips.
+pub fn smoke_skip_without_artifacts(dir: &str) -> bool {
+    if smoke() && !std::path::Path::new(dir).join("manifest.json").exists() {
+        println!("YOSO_BENCH_SMOKE: no {dir}/manifest.json — skipping artifact bench");
+        return true;
+    }
+    false
+}
+
 /// Thread budget for benches: `YOSO_BENCH_THREADS`, where 0, unset, or
 /// unparsable all mean "every available core". Shared by fig7/table1 so
 /// the env var has one meaning everywhere (Engine::new(0) agrees).
@@ -141,6 +179,18 @@ mod tests {
         assert_eq!(human_bytes(512), "512 B");
         assert!(human_bytes(2048).contains("KiB"));
         assert!(human_bytes(5 << 20).contains("MiB"));
+    }
+
+    #[test]
+    fn smoke_flag_parses_settings() {
+        // the pure parser, not the env read: set_var would race the
+        // parallel tests that getenv (YOSO_TEST_THREADS etc.)
+        assert!(smoke_setting(Some("1")));
+        assert!(smoke_setting(Some("true")));
+        assert!(!smoke_setting(Some("0")));
+        assert!(!smoke_setting(Some("")));
+        assert!(!smoke_setting(Some("yes")));
+        assert!(!smoke_setting(None));
     }
 
     #[test]

@@ -66,9 +66,9 @@ fn emit_number(n: f64, out: &mut String) {
         // JSON has no NaN/Inf; emit null like serde_json's lossy mode.
         out.push_str("null");
     } else if n.fract() == 0.0 && n.abs() < 9e15 {
-        out.push_str(&format!("{}", n as i64));
+        out.push_str(&(n as i64).to_string());
     } else {
-        out.push_str(&format!("{n}"));
+        out.push_str(&n.to_string());
     }
 }
 

@@ -22,12 +22,19 @@
 //! The engine's thread-scaling model: YOSO's m hash rounds and the
 //! `[batch, heads]` fan-out are both independent work items. Each item
 //! draws its randomness from a `fold_in`-derived stream of the caller's
-//! seed, so output bytes are identical at every thread count — 1 thread
-//! vs N threads is a pure wall-clock knob (asserted by tests). One
-//! parallelism grain is picked per pool: benches fan hash rounds, the
-//! CPU serve path fans requests and keeps heads serial inside each job
-//! (jobs must never re-enter their own pool). Benches select thread
-//! counts from the core count, capped by `YOSO_BENCH_THREADS`.
+//! seed, and task layout is fixed by an `attention::ChunkPolicy`
+//! (fixed-size or adaptive) whose inputs never include the executing
+//! thread count — so output bytes are identical at every thread count
+//! and under either scheduler; 1 thread vs N threads is a pure
+//! wall-clock knob (asserted by tests). `util::ThreadPool` is a
+//! work-stealing deque scheduler with a bulk-submit (`scope`/`run_batch`)
+//! path; the legacy channel scheduler survives as `util::ChannelPool`
+//! for the fig7 A/B. One parallelism grain is picked per pool: benches
+//! fan hash rounds, the CPU serve path fans requests and keeps heads
+//! serial inside each job (jobs must never re-enter their own pool).
+//! Benches select thread counts from the core count, capped by
+//! `YOSO_BENCH_THREADS`; `YOSO_BENCH_SMOKE=1` shrinks every bench to a
+//! CI-sized smoke run, and `YOSO_TEST_THREADS` widens scheduler tests.
 //!
 //! Python never runs at request time: after `make artifacts`, the `yoso`
 //! binary is self-contained. Without artifacts, the offline build runs

@@ -184,7 +184,11 @@ impl<'a> Encoder<'a> {
 
     /// Engine-parallel forward: head fan-out on `mh`'s pool. Bit-identical
     /// to `forward` for the same seed — both derive head `i` of layer `l`
-    /// from the same per-call stream via `fold_in(l).fold_in(i)`.
+    /// from the same per-call stream via `fold_in(l).fold_in(i)`. The
+    /// engine's `ChunkPolicy` rides along in `mh` (it shapes YOSO hash
+    /// fan-out and workspace accounting at the engine level, never the
+    /// per-head streams), so thread count and policy stay wall-clock
+    /// knobs here.
     pub fn forward_mh(&self, ids: &[i32], segs: &[i32],
                       attn: &Arc<dyn Attention>, mh: &MultiHeadAttention,
                       rng: &mut Rng) -> Mat {
@@ -310,7 +314,8 @@ pub fn pad_to(ids: &[i32], segs: &[i32], len: usize) -> (Vec<i32>, Vec<i32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::{Engine, SoftmaxAttention, YosoAttention};
+    use crate::attention::{ChunkPolicy, Engine, SoftmaxAttention, YosoAttention};
+    use crate::testing::test_threads;
 
     #[test]
     fn forward_shapes_and_finiteness() {
@@ -353,7 +358,7 @@ mod tests {
             Arc::new(YosoAttention::new(5, 8, false));
         let mut rng1 = Rng::new(7);
         let serial = enc.forward(&ids, &segs, attn.as_ref(), &mut rng1);
-        let mh = MultiHeadAttention::new(Engine::new(3));
+        let mh = MultiHeadAttention::new(Engine::new(test_threads(3)));
         let mut rng2 = Rng::new(7);
         let pooled = enc.forward_mh(&ids, &segs, &attn, &mh, &mut rng2);
         assert_eq!(serial.data.len(), pooled.data.len());
@@ -363,6 +368,16 @@ mod tests {
         let mut rng3 = Rng::new(7);
         let logits = enc.classify_mh(&ids, &segs, &attn, &mh, &mut rng3);
         assert_eq!(logits.len(), 3);
+        // the chunk policy rides the engine without touching per-head
+        // streams: an adaptive-policy engine stays bit-identical too
+        let mh_adaptive = MultiHeadAttention::new(
+            Engine::with_policy(test_threads(3), ChunkPolicy::adaptive(4)),
+        );
+        let mut rng4 = Rng::new(7);
+        let adaptive = enc.forward_mh(&ids, &segs, &attn, &mh_adaptive, &mut rng4);
+        for (a, b) in serial.data.iter().zip(&adaptive.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

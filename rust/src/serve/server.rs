@@ -6,13 +6,15 @@
 //!   to the artifact's fixed batch size, one fused forward per batch.
 //! * **CPU fallback** (`ServerHandle::spawn_cpu`): the pure-Rust encoder
 //!   + attention zoo, no artifacts needed. Requests of a batch fan out
-//!   across a `ThreadPool`; inside each request job the encoder runs the
-//!   batched multi-head API serially (`MultiHeadAttention::serial`) —
-//!   one parallelism grain per pool, so jobs never re-enter it.
+//!   across the work-stealing `ThreadPool` (one bulk submit per batch);
+//!   inside each request job the encoder runs the batched multi-head API
+//!   serially (`MultiHeadAttention::serial_with_policy`, carrying the
+//!   configured `ChunkPolicy`) — one parallelism grain per pool, so jobs
+//!   never re-enter it.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::{Request, Response};
-use crate::attention::{by_name, Attention, MultiHeadAttention};
+use crate::attention::{by_name, Attention, ChunkPolicy, MultiHeadAttention};
 use crate::data::special;
 use crate::model::encoder::{encoder_abi_spec, pad_to, Encoder, EncoderConfig};
 use crate::model::ParamSet;
@@ -74,6 +76,13 @@ pub struct CpuServeConfig {
     pub encoder: EncoderConfig,
     /// worker threads for request-level fan-out (0 = available cores)
     pub threads: usize,
+    /// hash-chunking policy carried into each request's engine. Serving
+    /// logits and latency are policy-independent today — the CPU path
+    /// runs YOSO through the attention trait, not `Engine::forward_yoso`
+    /// (a test asserts the independence); the field pins the layout
+    /// contract for engine-level serving paths (fused per-request hash
+    /// fan-out, workspace accounting) without a config ABI break later
+    pub chunk_policy: ChunkPolicy,
     pub seed: u64,
 }
 
@@ -84,6 +93,7 @@ impl Default for CpuServeConfig {
             // vocab: WordTokenizer { n_words: 2000 } + special tokens
             encoder: EncoderConfig::base(2005, 128, 2),
             threads: 0,
+            chunk_policy: ChunkPolicy::default(),
             seed: 42,
         }
     }
@@ -196,7 +206,7 @@ fn serve_loop(
                 segs[row * seq_len + j] = t;
             }
         }
-        let mut inputs: Vec<Literal> = param_lits.iter().cloned().collect();
+        let mut inputs: Vec<Literal> = param_lits.to_vec();
         inputs.push(i32_literal(&ids, &[abi_batch, seq_len])?);
         inputs.push(i32_literal(&segs, &[abi_batch, seq_len])?);
         inputs.push(i32_literal(&[n_batches as i32], &[])?);
@@ -291,8 +301,9 @@ fn serve_loop_cpu(
     };
     let pool = ThreadPool::new(threads);
     crate::info!(
-        "cpu serve: attention={} threads={threads} vocab={} seq={}",
+        "cpu serve: attention={} threads={threads} chunk={} vocab={} seq={}",
         cfg.attention,
+        cfg.chunk_policy.label(),
         ecfg.vocab_size,
         ecfg.max_len
     );
@@ -312,8 +323,10 @@ fn serve_loop_cpu(
         let attn = Arc::clone(&attn);
         let ecfg = ecfg.clone();
         let (seed, max_len) = (cfg.seed, ecfg.max_len);
-        // request-level fan-out; the per-request reply is sent from the
-        // worker so fast requests are not stuck behind slow batchmates
+        let chunk_policy = cfg.chunk_policy;
+        // request-level fan-out on the work-stealing pool; the
+        // per-request reply is sent from the worker so fast requests are
+        // not stuck behind slow batchmates
         let timings = pool.map(batch, move |req| {
             let (mut ids, mut segs) =
                 pad_to(&req.input_ids, &req.segment_ids, max_len);
@@ -322,7 +335,7 @@ fn serve_loop_cpu(
             // per-request Encoder::new only rebuilds the ~50-entry name
             // map — noise next to the forward's matmuls
             let enc = Encoder::new(ecfg.clone(), &params);
-            let mh = MultiHeadAttention::serial();
+            let mh = MultiHeadAttention::serial_with_policy(chunk_policy);
             let logits = enc.classify_mh(&ids, &segs, &attn, &mh, &mut rng);
             let queue_ms = (exec_start - req.enqueued).as_secs_f64() * 1e3;
             let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;

@@ -7,6 +7,21 @@
 
 use crate::util::Rng;
 
+/// Thread count for scheduler-exercising tests: `YOSO_TEST_THREADS`
+/// overrides the test's built-in default (0, unset, or unparsable keep
+/// the default). CI sweeps this over {1, 2, core-count} in release mode
+/// so the work-stealing paths run at widths a 2-core runner would
+/// otherwise never hit; determinism tests must pass at every value.
+pub fn test_threads(default: usize) -> usize {
+    match std::env::var("YOSO_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(0) | None => default,
+        Some(t) => t,
+    }
+}
+
 /// Configuration for a property run.
 pub struct PropConfig {
     pub cases: usize,

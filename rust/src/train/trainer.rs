@@ -79,7 +79,7 @@ pub fn eval_artifact(
     let mut agg = StepMetrics::default();
     for b in 0..n_batches {
         let batch = source.batch_literals(EVAL_INDEX_BASE + (b as u64) * 1024, spec)?;
-        let mut inputs: Vec<Literal> = params.iter().cloned().collect();
+        let mut inputs: Vec<Literal> = params.to_vec();
         inputs.extend(batch);
         inputs.push(i32_literal(&[b as i32], &[])?);
         let outputs = art.execute(&inputs)?;

@@ -8,5 +8,5 @@ pub mod timer;
 
 pub use rng::Rng;
 pub use stats::Summary;
-pub use threadpool::ThreadPool;
+pub use threadpool::{ChannelPool, ThreadPool};
 pub use timer::Timer;

@@ -4,9 +4,11 @@
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
+use yoso::attention::ChunkPolicy;
 use yoso::data::glue_synth::{GlueGenerator, GlueTask};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{BatchPolicy, CpuServeConfig, ServerHandle};
+use yoso::testing::test_threads;
 
 fn artifacts_present() -> bool {
     Path::new("artifacts/manifest.json").exists()
@@ -86,7 +88,8 @@ fn tiny_cpu_config(attention: &str, seed: u64) -> CpuServeConfig {
             max_len: 32,
             n_classes: 2,
         },
-        threads: 2,
+        threads: test_threads(2),
+        chunk_policy: ChunkPolicy::default(),
         seed,
     }
 }
@@ -156,4 +159,39 @@ fn cpu_fallback_deterministic_for_identical_inputs() {
     assert!(hostile.logits.iter().all(|x| x.is_finite()));
     let stats = handle.shutdown().unwrap();
     assert_eq!(stats.requests, 3);
+}
+
+#[test]
+fn cpu_fallback_logits_independent_of_worker_width_and_policy() {
+    // The scheduler determinism contract, end to end: the same request
+    // served by 1-wide and 3-wide pools, under the fixed and the
+    // adaptive chunk policy, must produce byte-identical logits (the
+    // content-hash RNG pins randomness; head tasks go through the
+    // trait's per-head fold_in streams).
+    let ids = vec![17i32; 32];
+    let segs = vec![0i32; 32];
+    let mut reference: Option<Vec<f32>> = None;
+    for threads in [1usize, 3] {
+        for chunk_policy in [ChunkPolicy::fixed(4), ChunkPolicy::adaptive(4)] {
+            let mut cfg = tiny_cpu_config("yoso_8", 11);
+            cfg.threads = threads;
+            cfg.chunk_policy = chunk_policy;
+            let handle = ServerHandle::spawn_cpu(
+                cfg,
+                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            );
+            let resp = handle.submit(ids.clone(), segs.clone()).recv().unwrap();
+            handle.shutdown().unwrap();
+            if let Some(want) = &reference {
+                assert_eq!(
+                    want,
+                    &resp.logits,
+                    "threads={threads} policy={}",
+                    chunk_policy.label()
+                );
+            } else {
+                reference = Some(resp.logits);
+            }
+        }
+    }
 }

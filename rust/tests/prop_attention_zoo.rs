@@ -1,15 +1,20 @@
 //! Property tests over the whole attention zoo (`attention::by_name`)
 //! via the in-crate `testing::{check, gen}` framework: output shapes and
 //! finiteness on random inputs, monotonicity of the `workspace_bytes`
-//! memory model in n, and determinism of the parallel engine (1 thread
-//! vs N threads, same seed => identical bytes).
+//! memory model in n (zoo variants and the engine under both chunk
+//! policies), determinism of the parallel engine (1 thread vs N threads,
+//! same seed => identical bytes — fixed and adaptive chunking, both
+//! schedulers), and fixed/adaptive agreement whenever the adaptive
+//! policy resolves to the same chunk size. Pool widths honor
+//! `YOSO_TEST_THREADS` so CI can sweep them.
 
 use std::sync::Arc;
 use yoso::attention::{
-    by_name, Attention, Engine, HeadTask, MultiHeadAttention, YosoAttention,
+    by_name, Attention, ChunkPolicy, Engine, HeadTask, MultiHeadAttention,
+    YosoAttention,
 };
 use yoso::tensor::Mat;
-use yoso::testing::{check, gen, PropConfig};
+use yoso::testing::{check, gen, test_threads, PropConfig};
 use yoso::util::Rng;
 
 /// Every constructible zoo variant (the §4.2 baselines + YOSO family).
@@ -84,6 +89,64 @@ fn workspace_bytes_monotone_in_n() {
 }
 
 #[test]
+fn engine_workspace_monotone_in_n_under_both_policies() {
+    // the satellite property: the engine's analytic memory model must
+    // stay monotone in n whichever policy resolves the task layout
+    let att = YosoAttention::new(8, 32, false);
+    for threads in [1usize, 4] {
+        for policy in [
+            ChunkPolicy::fixed(4),
+            ChunkPolicy::fixed(16),
+            ChunkPolicy::adaptive(2),
+            ChunkPolicy::adaptive(8),
+        ] {
+            let engine = Engine::with_policy(threads, policy);
+            let mut prev = 0usize;
+            for n in [16usize, 64, 256, 1024, 4096, 16384] {
+                let ws = engine.workspace_bytes(&att, n, D);
+                assert!(
+                    ws >= prev,
+                    "{} threads={threads}: workspace shrank going to n={n} \
+                     ({prev} -> {ws})",
+                    policy.label()
+                );
+                prev = ws;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_adaptive_matches_fixed_at_same_resolved_chunk() {
+    // whenever adaptive resolves (m, n·d, width) to chunk size c, its
+    // output must be byte-for-byte the output of Fixed(c): the resolved
+    // layout — not the policy variant — decides the reduction order
+    check(
+        PropConfig { cases: 8, seed: 0xCC0C },
+        |rng, size| {
+            let n = 8 + size % 48;
+            let m = 1 + rng.below(24);
+            let width = 1 + rng.below(8);
+            let q = gen::unit_mat(rng, n, D);
+            let k = gen::unit_mat(rng, n, D);
+            let v = Mat::randn(n, D, 1.0, rng);
+            (q, k, v, m, width)
+        },
+        |(q, k, v, m, width)| {
+            let att = YosoAttention::new(5, *m, false);
+            let adaptive = ChunkPolicy::adaptive(*width);
+            let c = adaptive.chunk_size(*m, q.rows, q.cols);
+            let rng = Rng::new(0xF00D ^ *m as u64);
+            let t = test_threads(4);
+            let a = Engine::with_policy(t, adaptive).forward_yoso(&att, q, k, v, &rng);
+            let f = Engine::with_policy(t, ChunkPolicy::fixed(c))
+                .forward_yoso(&att, q, k, v, &rng);
+            bits_equal(&a, &f)
+        },
+    );
+}
+
+#[test]
 fn zoo_parallel_heads_bit_identical_to_serial() {
     // MultiHeadAttention on a pool vs the trait's serial default: same
     // fold_in(head) streams, so every variant (stochastic or not) must
@@ -97,7 +160,7 @@ fn zoo_parallel_heads_bit_identical_to_serial() {
         })
         .collect();
     let base = Rng::new(999);
-    let mh = MultiHeadAttention::new(Engine::new(4));
+    let mh = MultiHeadAttention::new(Engine::new(test_threads(4)));
     for name in ZOO {
         let mut ctor = Rng::new(7);
         let attn: Arc<dyn Attention> = Arc::from(by_name(name, &mut ctor, D));
@@ -112,18 +175,34 @@ fn zoo_parallel_heads_bit_identical_to_serial() {
 
 #[test]
 fn engine_one_thread_vs_many_identical_bytes() {
+    // 1 thread vs N threads, work-stealing vs channel scheduler, fixed
+    // vs adaptive chunking: bytes may depend on the *policy*, never on
+    // the thread count or the scheduler
     let mut rng = Rng::new(4);
     let q = Mat::randn(80, D, 1.0, &mut rng).unit_rows();
     let k = Mat::randn(80, D, 1.0, &mut rng).unit_rows();
     let v = Mat::randn(80, D, 1.0, &mut rng);
+    let many = test_threads(8);
     for (tau, m, fast) in [(6usize, 8usize, false), (4, 16, true)] {
         let att = YosoAttention::new(tau, m, fast);
         let seed_rng = Rng::new(31);
-        let one = Engine::new(1).forward_yoso(&att, &q, &k, &v, &seed_rng);
-        let many = Engine::new(8).forward_yoso(&att, &q, &k, &v, &seed_rng);
-        assert!(
-            bits_equal(&one, &many),
-            "tau={tau} m={m} fast={fast}: thread count changed the bytes"
-        );
+        for policy in [ChunkPolicy::fixed(4), ChunkPolicy::adaptive(4)] {
+            let one = Engine::with_policy(1, policy)
+                .forward_yoso(&att, &q, &k, &v, &seed_rng);
+            let steal = Engine::with_policy(many, policy)
+                .forward_yoso(&att, &q, &k, &v, &seed_rng);
+            assert!(
+                bits_equal(&one, &steal),
+                "tau={tau} m={m} fast={fast} {}: thread count changed the bytes",
+                policy.label()
+            );
+            let chan = Engine::new_channel_with(many, policy)
+                .forward_yoso(&att, &q, &k, &v, &seed_rng);
+            assert!(
+                bits_equal(&one, &chan),
+                "tau={tau} m={m} fast={fast} {}: scheduler changed the bytes",
+                policy.label()
+            );
+        }
     }
 }
