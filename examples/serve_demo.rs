@@ -1,15 +1,26 @@
-//! Serving demo: dynamic-batched inference over the AOT forward artifact,
-//! with a warmup phase (artifact compilation) excluded from the reported
-//! latencies, an open-loop arrival process, and a latency/throughput
-//! report — the serving-coordinator path of the stack.
+//! Serving demo. Two modes:
+//!
+//! * **gateway** (default, artifact-free): the multi-replica
+//!   `serve::gateway` over the pure-Rust CPU encoder — length-bucketed
+//!   batching, bounded-queue admission control, deadline sheds, and the
+//!   per-bucket/per-replica latency histogram report.
+//! * **artifact** (`YOSO_SERVE_ARTIFACTS=1`): the single-loop PJRT
+//!   artifact path with dynamic batching, as before (needs
+//!   `make artifacts`).
 //!
 //! Run: `cargo run --release --example serve_demo`
-//! Env: YOSO_SERVE_REQUESTS (default 512), YOSO_SERVE_VARIANT (yoso_32)
+//! Env: YOSO_SERVE_REQUESTS (default 512), YOSO_SERVE_VARIANT (yoso_32),
+//!      YOSO_SERVE_REPLICAS (default: available cores),
+//!      YOSO_SERVE_RPS (open-loop offered load, default 300)
 
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use yoso::data::glue_synth::{GlueGenerator, GlueTask};
-use yoso::serve::{BatchPolicy, ServerHandle};
+use yoso::model::encoder::EncoderConfig;
+use yoso::serve::{
+    BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig,
+    ServerHandle, ShedPolicy,
+};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -17,6 +28,84 @@ fn env_usize(name: &str, default: usize) -> usize {
 
 fn main() -> anyhow::Result<()> {
     yoso::util::log::init_from_env();
+    if std::env::var("YOSO_SERVE_ARTIFACTS").as_deref() == Ok("1") {
+        return artifact_demo();
+    }
+    gateway_demo()
+}
+
+/// Open-loop load against the CPU gateway; prints the merged stats.
+fn gateway_demo() -> anyhow::Result<()> {
+    let n_requests = env_usize("YOSO_SERVE_REQUESTS", 512);
+    let replicas = env_usize(
+        "YOSO_SERVE_REPLICAS",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    let rps = env_usize("YOSO_SERVE_RPS", 300) as f64;
+    let variant =
+        std::env::var("YOSO_SERVE_VARIANT").unwrap_or_else(|_| "yoso_32".into());
+
+    let encoder = EncoderConfig::base(2005, 128, 2);
+    let mut cfg = GatewayConfig::new(CpuServeConfig {
+        attention: variant.clone(),
+        encoder,
+        threads: 1, // replicas are the parallelism axis
+        chunk_policy: Default::default(),
+        seed: 42,
+    });
+    cfg.replicas = replicas;
+    cfg.queue_capacity = 128;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.batch = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) };
+    cfg.buckets = BucketLayout::pow2(16, 128);
+    let gw = Gateway::spawn(cfg);
+
+    // variable-length GLUE-style requests: short ones ride small buckets
+    let gen = GlueGenerator::new(GlueTask::Qnli, 128, 7);
+    println!(
+        "gateway demo: {n_requests} requests at ~{rps:.0} req/s offered, \
+         {replicas} replicas, attention {variant}"
+    );
+    let gap = Duration::from_secs_f64(1.0 / rps.max(1.0));
+    let start = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    let mut rejected = 0usize;
+    for i in 0..n_requests {
+        let target = start + gap * i as u32;
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let ex = gen.example(i as u64);
+        // a slice of traffic carries deadlines, exercising late sheds
+        let deadline = (i % 8 == 7).then(|| Duration::from_millis(250));
+        match gw.submitter().submit_with_deadline(
+            ex.input_ids,
+            ex.segment_ids,
+            deadline,
+        ) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut served = 0usize;
+    let mut late_shed = 0usize;
+    for rx in rxs {
+        match rx.recv()? {
+            Ok(_) => served += 1,
+            Err(_) => late_shed += 1,
+        }
+    }
+    let stats = gw.shutdown();
+    println!(
+        "\nclient view: {served} served, {late_shed} deadline-shed, \
+         {rejected} rejected at admission"
+    );
+    print!("{stats}");
+    Ok(())
+}
+
+/// The original artifact-path demo (single loop, PJRT executor).
+fn artifact_demo() -> anyhow::Result<()> {
     let n_requests = env_usize("YOSO_SERVE_REQUESTS", 512);
     let variant =
         std::env::var("YOSO_SERVE_VARIANT").unwrap_or_else(|_| "yoso_32".into());
@@ -47,11 +136,9 @@ fn main() -> anyhow::Result<()> {
             std::thread::sleep(Duration::from_micros(300));
         }
     }
-    let mut latencies = Vec::with_capacity(n_requests);
     let mut class_counts = [0usize; 3];
     for rx in receivers {
         let resp = rx.recv()?;
-        latencies.push(resp.total_ms);
         let arg = resp
             .logits
             .iter()
@@ -64,17 +151,9 @@ fn main() -> anyhow::Result<()> {
     let wall = t.elapsed_secs();
     let stats = handle.shutdown()?;
 
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |q: f64| yoso::util::stats::percentile(&latencies, q);
     println!("\n=== serving report (fwd_glue_{variant}) ===");
-    println!("requests        {n_requests} in {wall:.2} s  ->  {:.1} req/s",
-             n_requests as f64 / wall);
-    println!("batches         {} (mean occupancy {:.1})", stats.batches,
-             stats.requests as f64 / stats.batches.max(1) as f64);
-    println!("latency ms      p50 {:.2}  p90 {:.2}  p99 {:.2}",
-             pct(0.5), pct(0.9), pct(0.99));
-    println!("queue wait ms   p50 {:.2}  p99 {:.2}",
-             stats.queue_latency.p50, stats.queue_latency.p99);
+    println!("wall            {wall:.2} s");
+    println!("{stats}");
     println!("class counts    {class_counts:?}");
     Ok(())
 }

@@ -11,9 +11,12 @@
 //!   with a pluggable attention zoo; fused train/eval/forward steps
 //!   AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** — this crate: config + CLI, data pipeline, PJRT runtime that
-//!   loads the artifacts, training orchestrator, serving coordinator with
-//!   dynamic batching (artifact executor + an artifact-free CPU fallback),
-//!   a pure-Rust attention library (YOSO + every baseline) for the
+//!   loads the artifacts, training orchestrator, serving stack (artifact
+//!   executor + an artifact-free CPU fallback, fronted by the
+//!   **multi-replica `serve::gateway`** with bounded-queue admission
+//!   control, length-bucketed dynamic batching, deadline-aware dequeue,
+//!   and log-bucketed `metrics::Histogram` observability), a pure-Rust
+//!   attention library (YOSO + every baseline) for the
 //!   efficiency/approximation studies, metrics, checkpointing — and a
 //!   **parallel multi-head forward engine** (`attention::engine`) that
 //!   exploits the estimator's embarrassing parallelism on a

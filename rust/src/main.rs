@@ -214,11 +214,6 @@ fn cmd_serve(args: &Args, cfg: &RunConfig) -> Result<()> {
         }
     }
     let stats = handle.shutdown()?;
-    println!(
-        "served {}/{} requests in {} batches | p50 {:.1} ms p99 {:.1} ms | \
-         {:.1} req/s (artifact {artifact})",
-        got, stats.requests, stats.batches, stats.latency.p50,
-        stats.latency.p99, stats.throughput_rps
-    );
+    println!("served {got}/{n_requests} (artifact {artifact}) | {stats}");
     Ok(())
 }

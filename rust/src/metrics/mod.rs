@@ -1,5 +1,12 @@
 //! Run metrics: named counters/gauges, step logs, and CSV/JSON emission
-//! for the benchmark harness and the trainer.
+//! for the benchmark harness and the trainer — plus the log-bucketed
+//! [`Histogram`] the serving gateway records live latency into (see
+//! `serve::gateway::GatewayStats::record_into` for the bridge that lands
+//! gateway percentiles/counters in the `Recorder` CSV/JSON emitters).
+
+pub mod histogram;
+
+pub use histogram::Histogram;
 
 use crate::json::{to_string_pretty, Value};
 use crate::util::stats::Welford;

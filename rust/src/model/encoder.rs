@@ -282,6 +282,25 @@ impl<'a> Encoder<'a> {
         self.pool_logits(&hidden)
     }
 
+    /// Bucket-width forward entry: pad/truncate the (unpadded) request to
+    /// `width` and classify. The forward runs over `width` rows, so a
+    /// short request costs O(width·…) instead of O(max_len·…) — the
+    /// serving paths pass [`bucket_len`] of the request's own length
+    /// here, which makes the padded content (and hence the logits of a
+    /// content-seeded `rng`) a pure function of the request, independent
+    /// of batching, replica, or arrival order.
+    pub fn classify_bucketed(&self, ids: &[i32], segs: &[i32], width: usize,
+                             attn: &Arc<dyn Attention>, mh: &MultiHeadAttention,
+                             rng: &mut Rng) -> Vec<f32> {
+        assert!(
+            width <= self.cfg.max_len,
+            "bucket width {width} exceeds max_len {}",
+            self.cfg.max_len
+        );
+        let (ids, segs) = pad_to(ids, segs, width);
+        self.classify_mh(&ids, &segs, attn, mh, rng)
+    }
+
     /// Per-head (q, k) projections of layer `l` — the Figure 6 probe.
     pub fn layer_qk(&self, l: usize, ids: &[i32], segs: &[i32], head: usize,
                     attn: &dyn Attention, rng: &mut Rng) -> (Mat, Mat) {
@@ -298,6 +317,20 @@ impl<'a> Encoder<'a> {
         let kh = Mat::from_fn(n, dh, |i, j| k.at(i, head * dh + j));
         (qh, kh)
     }
+}
+
+/// Canonical compute width for a request of `len` tokens: the smallest
+/// power of two >= `len`, floored at 8 and capped at `max_len`. A pure
+/// function of the request's own length — never of which serving bucket
+/// it was grouped into — so logits stay bit-identical under every bucket
+/// layout (the gateway determinism contract). Power-of-two widths keep
+/// the attention zoo's FFT/Hadamard variants constructible at any width.
+pub fn bucket_len(len: usize, max_len: usize) -> usize {
+    let mut w = 8usize;
+    while w < len {
+        w *= 2;
+    }
+    w.min(max_len)
 }
 
 /// Pad/truncate ids+segs to a model length.
@@ -377,6 +410,43 @@ mod tests {
         let adaptive = enc.forward_mh(&ids, &segs, &attn, &mh_adaptive, &mut rng4);
         for (a, b) in serial.data.iter().zip(&adaptive.data) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bucket_len_is_pow2_floored_and_capped() {
+        assert_eq!(bucket_len(0, 128), 8);
+        assert_eq!(bucket_len(5, 128), 8);
+        assert_eq!(bucket_len(8, 128), 8);
+        assert_eq!(bucket_len(9, 128), 16);
+        assert_eq!(bucket_len(33, 128), 64);
+        assert_eq!(bucket_len(100, 128), 128);
+        assert_eq!(bucket_len(500, 128), 128, "caps at max_len");
+        assert_eq!(bucket_len(5, 4), 4, "small max_len wins over the floor");
+    }
+
+    #[test]
+    fn classify_bucketed_matches_explicit_pad() {
+        // the bucket-width entry is exactly pad_to + classify_mh — the
+        // serving paths rely on this equivalence for the bit-identity
+        // contract
+        let cfg = EncoderConfig::base(64, 32, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 3);
+        let enc = Encoder::new(cfg, &params);
+        let ids: Vec<i32> = (0..11).map(|i| (i % 60) + 5).collect();
+        let segs = vec![0i32; 11];
+        let attn: Arc<dyn Attention> = Arc::new(YosoAttention::new(5, 8, false));
+        let mh = MultiHeadAttention::serial();
+        let width = bucket_len(ids.len(), 32);
+        assert_eq!(width, 16);
+        let mut rng1 = Rng::new(7);
+        let a = enc.classify_bucketed(&ids, &segs, width, &attn, &mh, &mut rng1);
+        let (pids, psegs) = pad_to(&ids, &segs, width);
+        let mut rng2 = Rng::new(7);
+        let b = enc.classify_mh(&pids, &psegs, &attn, &mh, &mut rng2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

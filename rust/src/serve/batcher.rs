@@ -24,16 +24,28 @@ pub struct Batcher {
 
 impl Batcher {
     /// Collect the next batch. Blocks for the first request; then drains
-    /// until max_batch or until the first request has aged max_wait.
-    /// Returns None when the channel is closed and drained.
+    /// until max_batch or until the first request has aged max_wait
+    /// **counted from its `enqueued` timestamp**, not from when `recv`
+    /// returned — a request that already sat in the channel while the
+    /// executor was busy must not wait the full `max_wait` again. A
+    /// request aged past the budget still gets one non-blocking drain of
+    /// whatever is already queued (batching stays free when the queue is
+    /// deep). Returns None when the channel is closed and drained.
     pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
         let first = rx.recv().ok()?;
-        let deadline = Instant::now() + self.policy.max_wait;
+        // clamped to now: an over-aged first request makes the deadline
+        // "immediately", never a deadline in the past
+        let deadline = (first.enqueued + self.policy.max_wait).max(Instant::now());
         let mut batch = vec![first];
         while batch.len() < self.policy.max_batch {
             let now = Instant::now();
             if now >= deadline {
-                break;
+                // wait budget spent: take what is queued, without blocking
+                match rx.try_recv() {
+                    Ok(req) => batch.push(req),
+                    Err(_) => break,
+                }
+                continue;
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(req) => batch.push(req),
@@ -92,6 +104,33 @@ mod tests {
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn aged_request_does_not_wait_max_wait_again() {
+        // the aging regression: a request that sat in the channel past
+        // max_wait (executor busy) must ship immediately — after a
+        // non-blocking drain of anything else already queued
+        let Some(past) = Instant::now().checked_sub(Duration::from_secs(2)) else {
+            return; // platform epoch too close to boot; nothing to test
+        };
+        let (tx, rx) = channel();
+        let (mut r1, _k1) = req();
+        r1.enqueued = past;
+        let (r2, _k2) = req();
+        tx.send(r1).unwrap();
+        tx.send(r2).unwrap();
+        let b = Batcher {
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(500) },
+        };
+        let t = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2, "queued request must ride the aged batch");
+        assert!(
+            t.elapsed() < Duration::from_millis(400),
+            "aged request waited max_wait again: {:?}",
+            t.elapsed()
+        );
     }
 
     #[test]

@@ -1,0 +1,857 @@
+//! Multi-replica serving gateway: admission control, length-bucketed
+//! dynamic batching, deadline-aware dequeue, live latency histograms.
+//!
+//! ```text
+//!  clients ──▶ GatewaySubmitter ──▶ [bounded, bucketed queue] ──▶ replica 0 (pool)
+//!                 (admission:           one VecDeque per             replica 1 (pool)
+//!                  Reject | Block)      length bucket                ...
+//! ```
+//!
+//! # Admission control
+//!
+//! The queue is bounded (`queue_capacity`). When it is full,
+//! [`ShedPolicy::Reject`] refuses new work immediately with a
+//! [`Shed::QueueFull`] carrying a retry hint (estimated drain time), so
+//! overload degrades p99 gracefully instead of growing latency without
+//! bound; [`ShedPolicy::Block`] parks the submitter until space frees —
+//! the closed-loop producer's natural backpressure.
+//!
+//! # Length-bucketed batching
+//!
+//! Requests route to the narrowest [`BucketLayout`] bucket admitting
+//! their (canonical) length, and a batch is always formed within one
+//! bucket, so batchmates have similar cost and a short request is never
+//! stuck behind a long one. Across buckets, dequeue is globally FIFO by
+//! arrival: a replica picks the bucket whose head request is oldest.
+//!
+//! # The determinism contract
+//!
+//! Buckets decide *grouping only*. Each request computes at its
+//! content-canonical `model::encoder::bucket_len` width — the smallest
+//! power of two covering its own length, capped at `max_len` — and draws
+//! randomness from the content-hash RNG stream (`content_rng`). Logits
+//! are therefore a pure function of (config seed, request content):
+//! bit-identical across every bucket layout, replica count, batch
+//! placement, and arrival order, and bit-identical to the single-loop
+//! `ServerHandle::spawn_cpu` path (property-tested). `bucketing: false`
+//! disables the canonical width (everything pads to `max_len`, the
+//! legacy cost model) and is kept as the fig9 baseline.
+//!
+//! # Deadlines
+//!
+//! A request may carry a deadline. Dequeue is deadline-aware: an expired
+//! request is shed *before execution* — its reply channel delivers
+//! [`Shed::DeadlineExpired`] and it counts in `shed_deadline`, never
+//! silently dropped. Stats reconcile: `accepted == completed +
+//! shed_deadline`.
+//!
+//! # Observability
+//!
+//! Every replica records per-request latency into its own log-bucketed
+//! [`Histogram`] (plus per-bucket histograms and a queue-depth gauge
+//! sampled at each dequeue); shutdown merges them into [`GatewayStats`],
+//! which renders p50/p95/p99 per bucket and per replica and can emit
+//! everything into a `metrics::Recorder` for the CSV/JSON reports.
+
+use super::batcher::BatchPolicy;
+use super::server::{
+    build_attention, canonicalize, resolve_threads, serve_forward,
+    CpuServeConfig,
+};
+use super::Response;
+use crate::metrics::{Histogram, Recorder};
+use crate::model::encoder::{bucket_len, encoder_abi_spec, Encoder};
+use crate::model::ParamSet;
+use crate::util::threadpool::ThreadPool;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Sequence-length buckets for batch grouping: sorted widths, a request
+/// routes to the narrowest bucket covering its canonical length (the
+/// last bucket takes everything longer).
+#[derive(Clone, Debug)]
+pub struct BucketLayout {
+    widths: Vec<usize>,
+}
+
+impl BucketLayout {
+    /// Power-of-two widths doubling from `min` up to (and always
+    /// including) `max_len`.
+    pub fn pow2(min: usize, max_len: usize) -> BucketLayout {
+        let mut widths = Vec::new();
+        let mut w = min.max(8);
+        while w < max_len {
+            widths.push(w);
+            w *= 2;
+        }
+        widths.push(max_len);
+        BucketLayout { widths }
+    }
+
+    /// One bucket at `max_len` — the unbucketed layout.
+    pub fn single(max_len: usize) -> BucketLayout {
+        BucketLayout { widths: vec![max_len.max(1)] }
+    }
+
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Index of the narrowest bucket admitting `len` (the widest bucket
+    /// admits everything).
+    fn bucket_for(&self, len: usize) -> usize {
+        self.widths
+            .iter()
+            .position(|&w| len <= w)
+            .unwrap_or(self.widths.len() - 1)
+    }
+
+    /// Sorted, deduped, clamped into (0, max_len]; empty layouts
+    /// degrade to `single(max_len)`.
+    fn normalized(&self, max_len: usize) -> BucketLayout {
+        let mut widths: Vec<usize> = self
+            .widths
+            .iter()
+            .map(|&w| w.clamp(1, max_len))
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        if widths.is_empty() {
+            return BucketLayout::single(max_len);
+        }
+        BucketLayout { widths }
+    }
+}
+
+/// Why the gateway refused or dropped a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shed {
+    /// Rejected at admission: the bounded queue is at capacity. The hint
+    /// estimates when the backlog will have drained.
+    QueueFull { retry_after_ms: u64 },
+    /// Admitted, but the deadline expired before a replica reached it.
+    DeadlineExpired,
+    /// The gateway has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for Shed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Shed::QueueFull { retry_after_ms } => {
+                write!(f, "queue full (retry after ~{retry_after_ms} ms)")
+            }
+            Shed::DeadlineExpired => write!(f, "deadline expired in queue"),
+            Shed::Closed => write!(f, "gateway shut down"),
+        }
+    }
+}
+
+impl std::error::Error for Shed {}
+
+/// Overload behavior at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse new work when the queue is full — open-loop traffic sheds
+    /// instead of stacking unbounded latency.
+    Reject,
+    /// Park the submitter until space frees — closed-loop backpressure.
+    Block,
+}
+
+/// What a request's reply channel delivers: logits, or the shed reason.
+pub type GatewayReply = Result<Response, Shed>;
+
+/// Gateway configuration. `base.threads` is the worker-pool width of
+/// **each replica** (0 = every available core — set it explicitly when
+/// running several replicas, or the pools oversubscribe).
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    pub base: CpuServeConfig,
+    /// replica workers, each owning its params handle, attention
+    /// instance, and thread-pool shard (0 degrades to 1)
+    pub replicas: usize,
+    /// bound on admitted-but-unexecuted requests (0 degrades to 1)
+    pub queue_capacity: usize,
+    pub shed: ShedPolicy,
+    /// per-batch policy: max batch size, max wait aged from the first
+    /// request's enqueue time
+    pub batch: BatchPolicy,
+    pub buckets: BucketLayout,
+    /// true: requests compute at their content-canonical `bucket_len`
+    /// width (O(bucket), the point of this subsystem); false: everything
+    /// pads to `encoder.max_len` — the legacy cost model, kept as the
+    /// fig9 baseline
+    pub bucketing: bool,
+}
+
+impl GatewayConfig {
+    pub fn new(base: CpuServeConfig) -> GatewayConfig {
+        let max_len = base.encoder.max_len;
+        GatewayConfig {
+            base,
+            replicas: 1,
+            queue_capacity: 256,
+            shed: ShedPolicy::Reject,
+            batch: BatchPolicy::default(),
+            buckets: BucketLayout::pow2(16, max_len),
+            bucketing: true,
+        }
+    }
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig::new(CpuServeConfig::default())
+    }
+}
+
+/// One admitted request, canonicalized at submission.
+struct GwRequest {
+    ids: Vec<i32>,
+    segs: Vec<i32>,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    /// arrival number: dequeue picks the bucket with the smallest head
+    /// seq, so cross-bucket order stays FIFO
+    seq: u64,
+    reply: Sender<GatewayReply>,
+}
+
+/// Mutable queue state behind the gateway mutex.
+struct GwState {
+    queues: Vec<VecDeque<GwRequest>>,
+    queued: usize,
+    closed: bool,
+    next_seq: u64,
+    accepted: u64,
+    rejected: u64,
+    shed_deadline: u64,
+    peak_queue_depth: usize,
+    /// EWMA of per-request service time, feeding the retry hint
+    svc_ewma_ms: f64,
+}
+
+/// Everything shared between submitters, replicas, and the handle.
+struct GwShared {
+    state: Mutex<GwState>,
+    /// replicas park here for work; submitters notify
+    work_cv: Condvar,
+    /// blocked submitters park here for space; dequeues notify
+    space_cv: Condvar,
+    capacity: usize,
+    replicas: usize,
+    policy: ShedPolicy,
+    route: BucketLayout,
+    vocab_size: usize,
+    max_len: usize,
+}
+
+fn retry_hint_ms(st: &GwState, replicas: usize) -> u64 {
+    let per_req = if st.svc_ewma_ms > 0.0 { st.svc_ewma_ms } else { 1.0 };
+    let ms = st.queued as f64 * per_req / replicas.max(1) as f64;
+    ms.ceil().max(1.0) as u64
+}
+
+/// Cloneable submission handle. Clones never pin the gateway open —
+/// `Gateway::shutdown` closes the queue explicitly; later submits get
+/// `Err(Shed::Closed)`.
+#[derive(Clone)]
+pub struct GatewaySubmitter {
+    shared: Arc<GwShared>,
+}
+
+impl GatewaySubmitter {
+    /// Submit one sequence. `Ok` hands back the reply receiver (which
+    /// delivers logits or a post-admission shed); `Err` is an admission
+    /// rejection — the request was never queued.
+    pub fn submit(
+        &self,
+        input_ids: Vec<i32>,
+        segment_ids: Vec<i32>,
+    ) -> Result<Receiver<GatewayReply>, Shed> {
+        self.submit_with_deadline(input_ids, segment_ids, None)
+    }
+
+    /// Submit with an optional deadline (relative to now). A request
+    /// still queued when its deadline passes is shed before execution
+    /// and its receiver delivers `Err(Shed::DeadlineExpired)`.
+    pub fn submit_with_deadline(
+        &self,
+        input_ids: Vec<i32>,
+        segment_ids: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<GatewayReply>, Shed> {
+        let sh = &*self.shared;
+        let (ids, segs) =
+            canonicalize(input_ids, segment_ids, sh.vocab_size, sh.max_len);
+        let bucket = sh.route.bucket_for(ids.len());
+        // the client-visible submission instant: deadlines AND latency
+        // accounting both start here, so time parked at Block admission
+        // is part of queue_wait/total_ms — under-reporting overload
+        // latency would defeat the SLO stats this subsystem exists for
+        let submitted = Instant::now();
+        let deadline = deadline.map(|d| submitted + d);
+        let mut st = sh.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Shed::Closed);
+            }
+            if st.queued < sh.capacity {
+                break;
+            }
+            match sh.policy {
+                ShedPolicy::Reject => {
+                    st.rejected += 1;
+                    return Err(Shed::QueueFull {
+                        retry_after_ms: retry_hint_ms(&st, sh.replicas),
+                    });
+                }
+                ShedPolicy::Block => st = sh.space_cv.wait(st).unwrap(),
+            }
+        }
+        let (reply, rx) = channel();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.queues[bucket].push_back(GwRequest {
+            ids,
+            segs,
+            deadline,
+            enqueued: submitted,
+            seq,
+            reply,
+        });
+        st.queued += 1;
+        st.accepted += 1;
+        st.peak_queue_depth = st.peak_queue_depth.max(st.queued);
+        // notify_all, not notify_one: a replica parked in its batch
+        // aging wait could swallow a single wake-up meant for an idle
+        // peer watching a different bucket
+        sh.work_cv.notify_all();
+        Ok(rx)
+    }
+}
+
+/// Per-replica serving statistics (merged into [`GatewayStats`]).
+#[derive(Clone, Debug)]
+pub struct ReplicaStats {
+    pub replica: usize,
+    pub requests: u64,
+    pub batches: u64,
+    /// end-to-end ms per request served by this replica
+    pub latency: Histogram,
+    /// queue-wait ms per request
+    pub queue_wait: Histogram,
+    /// queue depth sampled at each dequeue (a gauge-as-histogram)
+    pub queue_depth: Histogram,
+    /// end-to-end ms per routing bucket (indexed like the layout widths)
+    pub per_bucket: Vec<Histogram>,
+}
+
+impl ReplicaStats {
+    fn new(replica: usize, n_buckets: usize) -> ReplicaStats {
+        ReplicaStats {
+            replica,
+            requests: 0,
+            batches: 0,
+            latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            queue_depth: Histogram::new(),
+            per_bucket: (0..n_buckets).map(|_| Histogram::new()).collect(),
+        }
+    }
+}
+
+/// Aggregate gateway statistics, returned at shutdown.
+///
+/// Reconciliation invariants (asserted by the overload integration
+/// test): `accepted == completed + shed_deadline`; `rejected` counts
+/// admission refusals, which were never accepted.
+#[derive(Clone, Debug)]
+pub struct GatewayStats {
+    pub accepted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub shed_deadline: u64,
+    pub batches: u64,
+    pub peak_queue_depth: usize,
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub queue_depth: Histogram,
+    pub bucket_widths: Vec<usize>,
+    pub per_bucket: Vec<Histogram>,
+    pub per_replica: Vec<ReplicaStats>,
+    pub elapsed_secs: f64,
+    pub throughput_rps: f64,
+}
+
+impl GatewayStats {
+    /// Fraction of offered requests that were shed (either side of
+    /// admission).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.accepted + self.rejected;
+        if offered == 0 {
+            0.0
+        } else {
+            (self.rejected + self.shed_deadline) as f64 / offered as f64
+        }
+    }
+
+    /// Emit counters, percentiles, and per-bucket/per-replica series
+    /// into a `Recorder`, from which `write_csv`/`write_json` produce
+    /// the run reports.
+    pub fn record_into(&self, rec: &mut Recorder) {
+        for (name, v) in [
+            ("gateway/accepted", self.accepted as f64),
+            ("gateway/completed", self.completed as f64),
+            ("gateway/rejected", self.rejected as f64),
+            ("gateway/shed_deadline", self.shed_deadline as f64),
+            ("gateway/batches", self.batches as f64),
+            ("gateway/peak_queue_depth", self.peak_queue_depth as f64),
+            ("gateway/shed_rate", self.shed_rate()),
+            ("gateway/throughput_rps", self.throughput_rps),
+            ("gateway/latency_p50_ms", self.latency.p50()),
+            ("gateway/latency_p95_ms", self.latency.p95()),
+            ("gateway/latency_p99_ms", self.latency.p99()),
+            ("gateway/queue_wait_p99_ms", self.queue_wait.p99()),
+            ("gateway/queue_depth_p99", self.queue_depth.p99()),
+        ] {
+            rec.push(name, 0.0, v);
+        }
+        for (&w, h) in self.bucket_widths.iter().zip(&self.per_bucket) {
+            let x = w as f64;
+            rec.push("gateway/bucket_requests", x, h.count() as f64);
+            rec.push("gateway/bucket_p50_ms", x, h.p50());
+            rec.push("gateway/bucket_p99_ms", x, h.p99());
+        }
+        for r in &self.per_replica {
+            let x = r.replica as f64;
+            rec.push("gateway/replica_requests", x, r.requests as f64);
+            rec.push("gateway/replica_batches", x, r.batches as f64);
+            rec.push("gateway/replica_p99_ms", x, r.latency.p99());
+        }
+    }
+}
+
+impl std::fmt::Display for GatewayStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "gateway: {} accepted ({} completed, {} deadline-shed), \
+             {} rejected | shed rate {:.1}% | {} batches | peak depth {} | \
+             {:.1} req/s",
+            self.accepted,
+            self.completed,
+            self.shed_deadline,
+            self.rejected,
+            self.shed_rate() * 100.0,
+            self.batches,
+            self.peak_queue_depth,
+            self.throughput_rps,
+        )?;
+        writeln!(
+            f,
+            "  latency ms p50 {:.2} p95 {:.2} p99 {:.2} | queue wait p99 {:.2}",
+            self.latency.p50(),
+            self.latency.p95(),
+            self.latency.p99(),
+            self.queue_wait.p99(),
+        )?;
+        for (&w, h) in self.bucket_widths.iter().zip(&self.per_bucket) {
+            if h.count() > 0 {
+                writeln!(
+                    f,
+                    "  bucket<={w:<5} {:>7} req  p50 {:.2} p95 {:.2} p99 {:.2}",
+                    h.count(),
+                    h.p50(),
+                    h.p95(),
+                    h.p99(),
+                )?;
+            }
+        }
+        for r in &self.per_replica {
+            writeln!(
+                f,
+                "  replica {:<3} {:>7} req in {:>6} batches  p99 {:.2}",
+                r.replica,
+                r.requests,
+                r.batches,
+                r.latency.p99(),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The gateway handle: spawn replicas, hand out submitters, shut down
+/// into merged stats.
+pub struct Gateway {
+    shared: Arc<GwShared>,
+    workers: Vec<std::thread::JoinHandle<ReplicaStats>>,
+    started: Instant,
+}
+
+impl Gateway {
+    /// Spawn the gateway: N replica worker threads, each owning its own
+    /// params handle, attention instance (identical ctor stream — see
+    /// `build_attention`), and work-stealing pool shard.
+    pub fn spawn(cfg: GatewayConfig) -> Gateway {
+        let max_len = cfg.base.encoder.max_len;
+        let route = if cfg.bucketing {
+            cfg.buckets.normalized(max_len)
+        } else {
+            BucketLayout::single(max_len)
+        };
+        let replicas = cfg.replicas.max(1);
+        let shared = Arc::new(GwShared {
+            state: Mutex::new(GwState {
+                queues: (0..route.widths.len()).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                closed: false,
+                next_seq: 0,
+                accepted: 0,
+                rejected: 0,
+                shed_deadline: 0,
+                peak_queue_depth: 0,
+                svc_ewma_ms: 0.0,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            capacity: cfg.queue_capacity.max(1),
+            replicas,
+            policy: cfg.shed,
+            route,
+            vocab_size: cfg.base.encoder.vocab_size,
+            max_len,
+        });
+        // one weight init shared by value semantics: every replica holds
+        // its own Arc handle onto identical bytes
+        let params = Arc::new(ParamSet::init_for(
+            &encoder_abi_spec(&cfg.base.encoder),
+            cfg.base.seed,
+        ));
+        crate::info!(
+            "gateway: attention={} replicas={replicas} capacity={} \
+             buckets={:?} bucketing={} threads/replica={}",
+            cfg.base.attention,
+            shared.capacity,
+            shared.route.widths,
+            cfg.bucketing,
+            resolve_threads(cfg.base.threads),
+        );
+        let workers = (0..replicas)
+            .map(|id| {
+                let shared = Arc::clone(&shared);
+                let cfg = cfg.clone();
+                let params = Arc::clone(&params);
+                std::thread::spawn(move || replica_loop(id, shared, cfg, params))
+            })
+            .collect();
+        Gateway { shared, workers, started: Instant::now() }
+    }
+
+    pub fn submitter(&self) -> GatewaySubmitter {
+        GatewaySubmitter { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Submit one sequence (see [`GatewaySubmitter::submit`]).
+    pub fn submit(
+        &self,
+        input_ids: Vec<i32>,
+        segment_ids: Vec<i32>,
+    ) -> Result<Receiver<GatewayReply>, Shed> {
+        self.submitter().submit(input_ids, segment_ids)
+    }
+
+    /// Live queue-depth gauge (admitted, not yet dequeued).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().queued
+    }
+
+    /// Close admission and join the replica threads. Idempotent: the
+    /// second call (e.g. `Drop` after `shutdown`) finds `workers` empty.
+    fn close_and_join(&mut self) -> Vec<std::thread::Result<ReplicaStats>> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        self.workers.drain(..).map(|h| h.join()).collect()
+    }
+
+    /// Close admission, drain what was already accepted, join the
+    /// replicas, and merge their stats. Returns even while
+    /// `GatewaySubmitter` clones are alive — the close is explicit.
+    pub fn shutdown(mut self) -> GatewayStats {
+        let per_replica: Vec<ReplicaStats> = self
+            .close_and_join()
+            .into_iter()
+            .map(|r| r.expect("gateway replica thread panicked"))
+            .collect();
+        let elapsed_secs = self.started.elapsed().as_secs_f64();
+
+        let widths = self.shared.route.widths.clone();
+        let mut latency = Histogram::new();
+        let mut queue_wait = Histogram::new();
+        let mut queue_depth = Histogram::new();
+        let mut per_bucket: Vec<Histogram> =
+            widths.iter().map(|_| Histogram::new()).collect();
+        let (mut completed, mut batches) = (0u64, 0u64);
+        for r in &per_replica {
+            completed += r.requests;
+            batches += r.batches;
+            latency.merge(&r.latency);
+            queue_wait.merge(&r.queue_wait);
+            queue_depth.merge(&r.queue_depth);
+            for (acc, h) in per_bucket.iter_mut().zip(&r.per_bucket) {
+                acc.merge(h);
+            }
+        }
+        let st = self.shared.state.lock().unwrap();
+        GatewayStats {
+            accepted: st.accepted,
+            completed,
+            rejected: st.rejected,
+            shed_deadline: st.shed_deadline,
+            batches,
+            peak_queue_depth: st.peak_queue_depth,
+            latency,
+            queue_wait,
+            queue_depth,
+            bucket_widths: widths,
+            per_bucket,
+            per_replica,
+            elapsed_secs,
+            throughput_rps: completed as f64 / elapsed_secs.max(1e-9),
+        }
+    }
+}
+
+impl Drop for Gateway {
+    /// A gateway dropped without `shutdown` must not strand its replica
+    /// threads: they hold the shared state alive themselves, so nothing
+    /// else would ever wake them off `work_cv`. Close and join, ignoring
+    /// stats (and replica panics — no double panic during unwind).
+    fn drop(&mut self) {
+        let _ = self.close_and_join();
+    }
+}
+
+/// Shed one expired request under the state lock.
+fn shed_expired(st: &mut GwState, req: GwRequest) {
+    st.shed_deadline += 1;
+    let _ = req.reply.send(Err(Shed::DeadlineExpired));
+}
+
+/// Collect the next single-bucket batch: globally-FIFO bucket pick,
+/// deadline sheds before execution, max-wait aged from the first
+/// request's enqueue time (clamped to now — the Batcher aging rule).
+/// None once the gateway is closed and drained.
+fn next_batch(
+    shared: &GwShared,
+    policy: &BatchPolicy,
+) -> Option<(usize, Vec<GwRequest>)> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        // capacity freed this round; space_cv is notified once per
+        // batch/park, not once per pop — a per-pop notify_all would wake
+        // every Block-mode submitter O(batch × waiters) times
+        let mut freed = false;
+        // pick the bucket whose live head arrived first, shedding
+        // expired heads on the way
+        let mut pick: Option<usize> = None;
+        let mut best_seq = u64::MAX;
+        for b in 0..st.queues.len() {
+            loop {
+                let head_expired = match st.queues[b].front() {
+                    Some(r) => matches!(r.deadline, Some(d) if now >= d),
+                    None => break,
+                };
+                if !head_expired {
+                    break;
+                }
+                let req = st.queues[b].pop_front().unwrap();
+                st.queued -= 1;
+                freed = true;
+                shed_expired(&mut st, req);
+            }
+            if let Some(r) = st.queues[b].front() {
+                if r.seq < best_seq {
+                    best_seq = r.seq;
+                    pick = Some(b);
+                }
+            }
+        }
+        if let Some(b) = pick {
+            let first = st.queues[b].pop_front().unwrap();
+            st.queued -= 1;
+            freed = true;
+            let deadline = (first.enqueued + policy.max_wait).max(now);
+            let mut batch = vec![first];
+            while batch.len() < policy.max_batch {
+                if let Some(req) = st.queues[b].pop_front() {
+                    st.queued -= 1;
+                    freed = true;
+                    let now = Instant::now();
+                    if matches!(req.deadline, Some(d) if now >= d) {
+                        shed_expired(&mut st, req);
+                    } else {
+                        batch.push(req);
+                    }
+                    continue;
+                }
+                let now = Instant::now();
+                if now >= deadline || st.closed {
+                    break;
+                }
+                // about to park for up to max_wait: release any
+                // submitters waiting on the capacity freed so far
+                if freed {
+                    shared.space_cv.notify_all();
+                    freed = false;
+                }
+                let (guard, _) =
+                    shared.work_cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+            // a batch member (the head included) can expire while we
+            // park waiting for batchmates: re-check so nothing expired
+            // ever reaches execution
+            let now = Instant::now();
+            let mut live = Vec::with_capacity(batch.len());
+            for req in batch {
+                if matches!(req.deadline, Some(d) if now >= d) {
+                    shed_expired(&mut st, req);
+                } else {
+                    live.push(req);
+                }
+            }
+            if freed {
+                shared.space_cv.notify_all();
+            }
+            if live.is_empty() {
+                // the whole batch expired during the wait; pick again
+                continue;
+            }
+            return Some((b, live));
+        }
+        if freed {
+            shared.space_cv.notify_all();
+        }
+        if st.closed {
+            return None;
+        }
+        st = shared.work_cv.wait(st).unwrap();
+    }
+}
+
+/// One replica: pull single-bucket batches, fan requests across the
+/// replica's own work-stealing pool (heads stay serial inside each
+/// request job — one parallelism grain per pool), record latencies.
+fn replica_loop(
+    id: usize,
+    shared: Arc<GwShared>,
+    cfg: GatewayConfig,
+    params: Arc<ParamSet>,
+) -> ReplicaStats {
+    let attn = build_attention(&cfg.base);
+    let pool = ThreadPool::new(resolve_threads(cfg.base.threads));
+    let mut stats = ReplicaStats::new(id, shared.route.widths.len());
+    let max_len = cfg.base.encoder.max_len;
+    while let Some((bucket, batch)) = next_batch(&shared, &cfg.batch) {
+        let exec_start = Instant::now();
+        {
+            let st = shared.state.lock().unwrap();
+            stats.queue_depth.record(st.queued as f64);
+        }
+        let n = batch.len();
+        let params = Arc::clone(&params);
+        let attn = Arc::clone(&attn);
+        let ecfg = cfg.base.encoder.clone();
+        let (seed, chunk) = (cfg.base.seed, cfg.base.chunk_policy);
+        let bucketing = cfg.bucketing;
+        let timings = pool.map(batch, move |req| {
+            let width = if bucketing {
+                bucket_len(req.ids.len(), max_len)
+            } else {
+                max_len
+            };
+            let enc = Encoder::new(ecfg.clone(), &params);
+            let logits =
+                serve_forward(&enc, &attn, chunk, seed, &req.ids, &req.segs, width);
+            let queue_ms = (exec_start - req.enqueued).as_secs_f64() * 1e3;
+            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let _ = req.reply.send(Ok(Response { logits, queue_ms, total_ms }));
+            (queue_ms, total_ms)
+        });
+        stats.batches += 1;
+        for (queue_ms, total_ms) in timings {
+            stats.requests += 1;
+            stats.queue_wait.record(queue_ms);
+            stats.latency.record(total_ms);
+            stats.per_bucket[bucket].record(total_ms);
+        }
+        // feed the admission retry hint
+        let per_req_ms =
+            exec_start.elapsed().as_secs_f64() * 1e3 / n.max(1) as f64;
+        let mut st = shared.state.lock().unwrap();
+        st.svc_ewma_ms = if st.svc_ewma_ms == 0.0 {
+            per_req_ms
+        } else {
+            0.8 * st.svc_ewma_ms + 0.2 * per_req_ms
+        };
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_pow2_and_routing() {
+        let l = BucketLayout::pow2(16, 128);
+        assert_eq!(l.widths(), &[16, 32, 64, 128]);
+        assert_eq!(l.bucket_for(1), 0);
+        assert_eq!(l.bucket_for(16), 0);
+        assert_eq!(l.bucket_for(17), 1);
+        assert_eq!(l.bucket_for(128), 3);
+        assert_eq!(l.bucket_for(4096), 3, "widest bucket takes the rest");
+        // non-pow2 max_len still terminates and includes the cap
+        let l = BucketLayout::pow2(16, 100);
+        assert_eq!(l.widths(), &[16, 32, 64, 100]);
+        // min >= max collapses to a single bucket
+        let l = BucketLayout::pow2(256, 128);
+        assert_eq!(l.widths(), &[128]);
+    }
+
+    #[test]
+    fn bucket_layout_normalizes() {
+        let l = BucketLayout { widths: vec![64, 16, 500, 16] }.normalized(128);
+        assert_eq!(l.widths(), &[16, 64, 128]);
+        let l = BucketLayout { widths: vec![] }.normalized(128);
+        assert_eq!(l.widths(), &[128]);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_backlog() {
+        let mut st = GwState {
+            queues: Vec::new(),
+            queued: 10,
+            closed: false,
+            next_seq: 0,
+            accepted: 0,
+            rejected: 0,
+            shed_deadline: 0,
+            peak_queue_depth: 0,
+            svc_ewma_ms: 4.0,
+        };
+        assert_eq!(retry_hint_ms(&st, 2), 20);
+        st.queued = 0;
+        assert_eq!(retry_hint_ms(&st, 2), 1, "hint is always >= 1 ms");
+    }
+}

@@ -1,23 +1,58 @@
-//! Serving coordinator: request queue -> dynamic batcher -> executor,
-//! vLLM-router style.
+//! Serving stack: single-loop coordinator (`server`) and multi-replica
+//! gateway (`gateway`), sharing one batcher, stats, and determinism
+//! contract.
 //!
-//! PJRT handles are not `Send`, so the server *owns* its executor on a
-//! dedicated thread; clients talk to it through channels (`Submitter`
-//! clones for concurrent producers). The batcher collects requests until
-//! either `max_batch` is reached or the oldest request has waited
-//! `max_wait_ms` — the standard dynamic-batching policy.
+//! # Architecture
 //!
-//! Executors: the PJRT artifact path (`ServerHandle::spawn`) runs one
-//! fused forward per padded batch; the CPU fallback
-//! (`ServerHandle::spawn_cpu`) runs the pure-Rust encoder + attention
-//! zoo, fanning the batch's requests across a worker `ThreadPool` while
-//! each request keeps its multi-head fan-out serial — one parallelism
-//! grain per pool (see `attention::engine` for the deadlock rule).
+//! * [`server::ServerHandle`] — the single serve loop. The PJRT artifact
+//!   path (`spawn`) owns its non-`Send` executor on one thread; the CPU
+//!   fallback (`spawn_cpu`) runs the pure-Rust encoder + attention zoo,
+//!   fanning each batch's requests across a work-stealing `ThreadPool`
+//!   (heads stay serial inside a request job — one parallelism grain per
+//!   pool, see `attention::engine` for the deadlock rule).
+//! * [`gateway::Gateway`] — the production front door over the CPU path:
+//!   **N replica workers**, each owning its own params handle, attention
+//!   instance, and pool shard; a **bounded queue** with a
+//!   [`gateway::ShedPolicy`] (reject-with-retry-hint or block) so
+//!   overload sheds instead of stacking unbounded latency;
+//!   **length-bucketed batching** ([`gateway::BucketLayout`]) so batches
+//!   group similar-cost requests; **deadline-aware dequeue** (expired
+//!   requests shed before execution, always reported); and **live
+//!   latency histograms** (`metrics::Histogram`) merged into
+//!   [`gateway::GatewayStats`] at shutdown.
+//!
+//! # Batching policy
+//!
+//! [`Batcher`] collects until `max_batch` or until the *oldest* request
+//! has aged `max_wait` counted from its enqueue time (a request that
+//! already waited in the channel never waits the budget twice); the
+//! gateway applies the same aging rule per bucket.
+//!
+//! # Determinism contract
+//!
+//! CPU-path logits are a pure function of (config seed, request
+//! content): randomness comes from the content-hash RNG stream and the
+//! compute width is the content-canonical `model::encoder::bucket_len`.
+//! Batch placement, bucket layout, replica count, thread count, and
+//! arrival order are all wall-clock knobs only — the gateway property
+//! test asserts bit-identity against the single-loop path across all of
+//! them.
+//!
+//! # Shutdown
+//!
+//! `shutdown` closes admission explicitly and drains what was accepted:
+//! outstanding `Submitter`/`GatewaySubmitter` clones never pin the
+//! server open, and post-shutdown submits fail fast.
 
 pub mod batcher;
+pub mod gateway;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use gateway::{
+    BucketLayout, Gateway, GatewayConfig, GatewayReply, GatewayStats,
+    GatewaySubmitter, ReplicaStats, Shed, ShedPolicy,
+};
 pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};
 
 /// One inference request: token ids + segments for a single sequence.

@@ -1,5 +1,8 @@
-//! The serving loop: owns the executor on its thread, pulls dynamic
-//! batches, executes, and delivers per-sequence logits.
+//! The single-loop serving path: owns the executor on its thread, pulls
+//! dynamic batches, executes, and delivers per-sequence logits. (The
+//! multi-replica front door with admission control lives in
+//! `serve::gateway` and shares this module's canonicalization/forward
+//! helpers, so both paths serve bit-identical logits.)
 //!
 //! Two executors share the same handle/batcher/stats machinery:
 //! * **artifact** (`ServerHandle::spawn`): PJRT runtime, pads each batch
@@ -10,13 +13,17 @@
 //!   inside each request job the encoder runs the batched multi-head API
 //!   serially (`MultiHeadAttention::serial_with_policy`, carrying the
 //!   configured `ChunkPolicy`) — one parallelism grain per pool, so jobs
-//!   never re-enter it.
+//!   never re-enter it. Each request computes at its content-canonical
+//!   `bucket_len` width (next power of two, capped at `max_len`), so a
+//!   short request costs O(its own length), not O(max_len).
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::{Request, Response};
 use crate::attention::{by_name, Attention, ChunkPolicy, MultiHeadAttention};
 use crate::data::special;
-use crate::model::encoder::{encoder_abi_spec, pad_to, Encoder, EncoderConfig};
+use crate::model::encoder::{
+    bucket_len, encoder_abi_spec, Encoder, EncoderConfig,
+};
 use crate::model::ParamSet;
 use crate::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
 use crate::runtime::Runtime;
@@ -26,13 +33,36 @@ use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 use xla::Literal;
 
+/// The request channel's sender behind an explicit close flag. `close`
+/// drops the underlying `Sender`, so the serve loop's receiver
+/// disconnects **even while `Submitter` clones are alive** — shutdown
+/// liveness never depends on producers dropping their handles first.
+/// Submits after close observe `None` and hand back a dead receiver.
+struct SharedTx(Mutex<Option<Sender<Request>>>);
+
+impl SharedTx {
+    fn new(tx: Sender<Request>) -> Arc<SharedTx> {
+        Arc::new(SharedTx(Mutex::new(Some(tx))))
+    }
+
+    /// A clone of the live sender, or None once closed. Cloning out of
+    /// the short critical section keeps the actual `send` lock-free.
+    fn sender(&self) -> Option<Sender<Request>> {
+        self.0.lock().unwrap().clone()
+    }
+
+    fn close(&self) {
+        self.0.lock().unwrap().take();
+    }
+}
+
 /// Client-side handle: submit sequences, receive logits.
 pub struct ServerHandle {
-    tx: Sender<Request>,
+    tx: Arc<SharedTx>,
     join: Option<std::thread::JoinHandle<Result<ServeStats>>>,
 }
 
@@ -46,23 +76,48 @@ pub struct ServeStats {
     pub throughput_rps: f64,
 }
 
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests in {} batches | latency ms p50 {:.2} p95 {:.2} \
+             p99 {:.2} | queue ms p50 {:.2} p95 {:.2} p99 {:.2} | {:.1} req/s",
+            self.requests,
+            self.batches,
+            self.latency.p50,
+            self.latency.p95,
+            self.latency.p99,
+            self.queue_latency.p50,
+            self.queue_latency.p95,
+            self.queue_latency.p99,
+            self.throughput_rps
+        )
+    }
+}
+
 /// Cloneable submission handle: hand one to each producer thread.
+/// Clones never pin the server open — `ServerHandle::shutdown` closes
+/// the queue explicitly, after which submits return dead receivers.
 #[derive(Clone)]
 pub struct Submitter {
-    tx: Sender<Request>,
+    tx: Arc<SharedTx>,
 }
 
 impl Submitter {
-    /// Submit one sequence; returns the response receiver.
+    /// Submit one sequence; returns the response receiver. After the
+    /// server shuts down the returned receiver's `recv` errors
+    /// immediately (the request was never admitted).
     pub fn submit(&self, input_ids: Vec<i32>, segment_ids: Vec<i32>)
         -> Receiver<Response> {
         let (reply, rx) = channel();
-        let _ = self.tx.send(Request {
-            input_ids,
-            segment_ids,
-            reply,
-            enqueued: Instant::now(),
-        });
+        if let Some(tx) = self.tx.sender() {
+            let _ = tx.send(Request {
+                input_ids,
+                segment_ids,
+                reply,
+                enqueued: Instant::now(),
+            });
+        }
         rx
     }
 }
@@ -72,7 +127,8 @@ impl Submitter {
 pub struct CpuServeConfig {
     /// attention zoo variant (`attention::by_name`)
     pub attention: String,
-    /// encoder geometry; sequences pad/truncate to `encoder.max_len`
+    /// encoder geometry; sequences truncate to `encoder.max_len` and
+    /// compute at their content-canonical `bucket_len` width
     pub encoder: EncoderConfig,
     /// worker threads for request-level fan-out (0 = available cores)
     pub threads: usize,
@@ -114,7 +170,7 @@ impl ServerHandle {
         let join = std::thread::spawn(move || {
             serve_loop(artifacts_dir, artifact_name, policy, seed, checkpoint, rx)
         });
-        ServerHandle { tx, join: Some(join) }
+        ServerHandle { tx: SharedTx::new(tx), join: Some(join) }
     }
 
     /// Spawn the artifact-free CPU fallback server: pure-Rust encoder on
@@ -123,17 +179,14 @@ impl ServerHandle {
         let (tx, rx) = channel::<Request>();
         let join =
             std::thread::spawn(move || serve_loop_cpu(cfg, policy, rx));
-        ServerHandle { tx, join: Some(join) }
+        ServerHandle { tx: SharedTx::new(tx), join: Some(join) }
     }
 
-    /// Cloneable submission handle for concurrent producers.
-    ///
-    /// Liveness contract: every `Submitter` clone holds the request
-    /// channel open. Drop all clones (e.g. join producer threads) before
-    /// calling `shutdown`, or the serve loop never sees the queue close
-    /// and `shutdown` blocks.
+    /// Cloneable submission handle for concurrent producers. Clones may
+    /// outlive the server: `shutdown` closes the queue itself, and a
+    /// submit after close hands back a dead receiver.
     pub fn submitter(&self) -> Submitter {
-        Submitter { tx: self.tx.clone() }
+        Submitter { tx: Arc::clone(&self.tx) }
     }
 
     /// Submit one sequence; returns the response receiver.
@@ -142,11 +195,12 @@ impl ServerHandle {
         self.submitter().submit(input_ids, segment_ids)
     }
 
-    /// Close the queue and collect stats. Blocks until the serve loop
-    /// drains; outstanding `Submitter` clones keep the queue open, so
-    /// drop them first (see `submitter`).
+    /// Close the queue, drain what was admitted, and collect stats.
+    /// Returns once the serve loop finishes the already-queued requests
+    /// — outstanding `Submitter` clones cannot block this (the close is
+    /// explicit, not drop-based).
     pub fn shutdown(mut self) -> Result<ServeStats> {
-        drop(self.tx);
+        self.tx.close();
         self.join
             .take()
             .expect("already joined")
@@ -236,7 +290,9 @@ fn serve_loop(
 
 /// Hash request content into an RNG stream so identical inputs get
 /// identical randomness — stochastic attention variants then serve
-/// reproducible logits regardless of batching or arrival order.
+/// reproducible logits regardless of batching or arrival order. Fed the
+/// *canonical* (sanitized, unpadded) content, so the stream is also
+/// independent of how far the request is padded.
 fn content_rng(seed: u64, ids: &[i32], segs: &[i32]) -> Rng {
     Rng::new(seed).fold_in_i32s(ids).fold_in_i32s(segs)
 }
@@ -253,6 +309,61 @@ fn sanitize(ids: &mut [i32], segs: &mut [i32], vocab_size: usize) {
     }
     for s in segs.iter_mut() {
         *s = (*s).clamp(0, 1);
+    }
+}
+
+/// Canonicalize a raw client request: align segment length to the ids,
+/// truncate to the model length, clamp hostile tokens. The canonical
+/// content is what `content_rng` folds and what the forward computes on,
+/// so identical canonical content always serves identical logits — the
+/// determinism contract every CPU serving path (single loop and gateway
+/// replicas alike) is property-tested against.
+pub(crate) fn canonicalize(
+    mut ids: Vec<i32>,
+    mut segs: Vec<i32>,
+    vocab_size: usize,
+    max_len: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    segs.resize(ids.len(), 0);
+    ids.truncate(max_len);
+    segs.truncate(max_len);
+    sanitize(&mut ids, &mut segs, vocab_size);
+    (ids, segs)
+}
+
+/// One canonical request through the encoder at `width` rows: derive the
+/// content RNG stream, pad to the bucket width, classify. Shared by the
+/// single-loop CPU path and every gateway replica — the gateway
+/// bit-identity property test compares exactly these bytes.
+pub(crate) fn serve_forward(
+    enc: &Encoder,
+    attn: &Arc<dyn Attention>,
+    chunk: ChunkPolicy,
+    seed: u64,
+    ids: &[i32],
+    segs: &[i32],
+    width: usize,
+) -> Vec<f32> {
+    let mut rng = content_rng(seed, ids, segs);
+    let mh = MultiHeadAttention::serial_with_policy(chunk);
+    enc.classify_bucketed(ids, segs, width, attn, &mh, &mut rng)
+}
+
+/// The CPU server/gateway attention constructor: one fixed ctor stream
+/// per config seed, so every gateway replica — and the single-loop path
+/// the property tests compare against — builds a bit-identical attention
+/// instance (some zoo variants draw projections from the ctor RNG).
+pub(crate) fn build_attention(cfg: &CpuServeConfig) -> Arc<dyn Attention> {
+    let mut ctor_rng = Rng::new(cfg.seed ^ 0x5EED_CAFE);
+    Arc::from(by_name(&cfg.attention, &mut ctor_rng, cfg.encoder.d_head()))
+}
+
+/// `threads == 0` means every available core.
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
     }
 }
 
@@ -289,16 +400,8 @@ fn serve_loop_cpu(
     let ecfg = cfg.encoder.clone();
     let params =
         Arc::new(ParamSet::init_for(&encoder_abi_spec(&ecfg), cfg.seed));
-    let mut ctor_rng = Rng::new(cfg.seed ^ 0x5EED_CAFE);
-    let attn: Arc<dyn Attention> =
-        Arc::from(by_name(&cfg.attention, &mut ctor_rng, ecfg.d_head()));
-    let threads = if cfg.threads == 0 {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-    } else {
-        cfg.threads
-    };
+    let attn = build_attention(&cfg);
+    let threads = resolve_threads(cfg.threads);
     let pool = ThreadPool::new(threads);
     crate::info!(
         "cpu serve: attention={} threads={threads} chunk={} vocab={} seq={}",
@@ -326,17 +429,24 @@ fn serve_loop_cpu(
         let chunk_policy = cfg.chunk_policy;
         // request-level fan-out on the work-stealing pool; the
         // per-request reply is sent from the worker so fast requests are
-        // not stuck behind slow batchmates
+        // not stuck behind slow batchmates. Each request computes at its
+        // content-canonical `bucket_len` width — O(next-pow2(len)), not
+        // O(max_len) — the same width every gateway replica would pick,
+        // so this single-loop path stays the gateway's bit-identical
+        // reference.
         let timings = pool.map(batch, move |req| {
-            let (mut ids, mut segs) =
-                pad_to(&req.input_ids, &req.segment_ids, max_len);
-            sanitize(&mut ids, &mut segs, ecfg.vocab_size);
-            let mut rng = content_rng(seed, &ids, &segs);
+            let (ids, segs) = canonicalize(
+                req.input_ids,
+                req.segment_ids,
+                ecfg.vocab_size,
+                max_len,
+            );
+            let width = bucket_len(ids.len(), max_len);
             // per-request Encoder::new only rebuilds the ~50-entry name
             // map — noise next to the forward's matmuls
             let enc = Encoder::new(ecfg.clone(), &params);
-            let mh = MultiHeadAttention::serial_with_policy(chunk_policy);
-            let logits = enc.classify_mh(&ids, &segs, &attn, &mh, &mut rng);
+            let logits =
+                serve_forward(&enc, &attn, chunk_policy, seed, &ids, &segs, width);
             let queue_ms = (exec_start - req.enqueued).as_secs_f64() * 1e3;
             let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             let _ = req.reply.send(Response { logits, queue_ms, total_ms });

@@ -1,6 +1,12 @@
 //! Streaming and batch statistics used by benches and metrics.
 
 /// Batch summary of a sample: mean/std/min/max/percentiles.
+///
+/// The percentile fields are **exact order statistics** (sorted-select,
+/// see [`quantile_exact`]): each is a value that actually occurred in the
+/// sample, which is what latency SLO reporting wants — an interpolated
+/// p99 can name a latency no request ever saw. The interpolating
+/// [`percentile`] stays available for plotting-style callers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
     pub n: usize,
@@ -10,6 +16,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -28,11 +35,22 @@ impl Summary {
             std: var.sqrt(),
             min: sorted[0],
             max: sorted[n - 1],
-            p50: percentile(&sorted, 0.50),
-            p90: percentile(&sorted, 0.90),
-            p99: percentile(&sorted, 0.99),
+            p50: quantile_exact(&sorted, 0.50),
+            p90: quantile_exact(&sorted, 0.90),
+            p95: quantile_exact(&sorted, 0.95),
+            p99: quantile_exact(&sorted, 0.99),
         }
     }
+}
+
+/// Exact nearest-rank quantile of a pre-sorted slice ("sorted-select"):
+/// the smallest sample value with at least `ceil(q * n)` observations at
+/// or below it. Always returns an element of the sample.
+pub fn quantile_exact(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 /// Linear-interpolated percentile of a pre-sorted slice.
@@ -83,6 +101,25 @@ impl Welford {
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
+
+    /// Combine two accumulators (Chan et al. parallel variance): the
+    /// result is as if every sample of `other` had been pushed here.
+    /// Lets per-thread accumulators (histograms, per-replica stats)
+    /// merge without replaying samples.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+    }
 }
 
 /// Angle (radians) between two vectors — the Figure 8 error metric.
@@ -115,8 +152,26 @@ mod tests {
         let s = Summary::of(&xs);
         assert_eq!(s.p50, 50.0);
         assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p95, 95.0);
         assert_eq!(s.min, 0.0);
         assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn quantile_exact_is_an_order_statistic() {
+        // nearest-rank must return an element of the sample, never an
+        // interpolated midpoint, and must hit the exact edge ranks
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_exact(&sorted, 0.0), 1.0);
+        assert_eq!(quantile_exact(&sorted, 0.25), 1.0); // ceil(1.0) = rank 1
+        assert_eq!(quantile_exact(&sorted, 0.5), 2.0);
+        assert_eq!(quantile_exact(&sorted, 0.51), 3.0); // ceil(2.04) = rank 3
+        assert_eq!(quantile_exact(&sorted, 1.0), 4.0);
+        for q in [0.1, 0.37, 0.5, 0.9, 0.95, 0.99] {
+            assert!(sorted.contains(&quantile_exact(&sorted, q)));
+        }
+        // single element: every quantile is that element
+        assert_eq!(quantile_exact(&[7.5], 0.99), 7.5);
     }
 
     #[test]
@@ -128,6 +183,32 @@ mod tests {
         }
         let mean = xs.iter().sum::<f64>() / 5.0;
         assert!((w.mean() - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (mut a, mut b, mut empty) =
+            (Welford::default(), Welford::default(), Welford::default());
+        for (i, &x) in xs.iter().enumerate() {
+            if i < 37 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        a.merge(&empty); // merging an empty accumulator is a no-op
+        empty.merge(&a); // merging INTO an empty one adopts the other side
+        for w in [&a, &empty] {
+            assert_eq!(w.count(), whole.count());
+            assert!((w.mean() - whole.mean()).abs() < 1e-9);
+            assert!((w.variance() - whole.variance()).abs() < 1e-9);
+        }
     }
 
     #[test]

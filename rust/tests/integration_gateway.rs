@@ -1,0 +1,208 @@
+//! Gateway overload, deadline, and shutdown-liveness behavior: drive the
+//! gateway past capacity and assert sheds are *reported* (never silent),
+//! every accepted request gets exactly one reply, and the stats
+//! counters reconcile (`accepted == completed + shed_deadline`,
+//! client-observed outcomes match the gateway's own counts).
+
+use std::time::Duration;
+use yoso::attention::ChunkPolicy;
+use yoso::model::encoder::EncoderConfig;
+use yoso::serve::{
+    BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig, Shed,
+    ShedPolicy,
+};
+use yoso::testing::test_threads;
+
+fn tiny_cfg(seed: u64) -> CpuServeConfig {
+    CpuServeConfig {
+        attention: "yoso_8".into(),
+        encoder: EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 32,
+            n_classes: 2,
+        },
+        threads: 1,
+        chunk_policy: ChunkPolicy::default(),
+        seed,
+    }
+}
+
+fn overload_cfg(seed: u64, capacity: usize, shed: ShedPolicy) -> GatewayConfig {
+    let mut cfg = GatewayConfig::new(tiny_cfg(seed));
+    cfg.replicas = 1;
+    cfg.queue_capacity = capacity;
+    cfg.shed = shed;
+    cfg.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    cfg.buckets = BucketLayout::pow2(8, 32);
+    cfg
+}
+
+#[test]
+fn overload_sheds_are_reported_and_stats_reconcile() {
+    // 4 producers x 25 un-paced submits against capacity 4 and a single
+    // 1-wide replica: admission must reject most of the burst
+    let gw = Gateway::spawn(overload_cfg(5, 4, ShedPolicy::Reject));
+    let producers = 4usize;
+    let per_producer = 25usize;
+    let mut joins = Vec::new();
+    for p in 0..producers {
+        let sub = gw.submitter();
+        joins.push(std::thread::spawn(move || {
+            let mut accepted = Vec::new();
+            let mut rejected = 0u64;
+            for i in 0..per_producer {
+                let len = 4 + (p * per_producer + i) % 24;
+                match sub.submit(vec![7i32; len], vec![0i32; len]) {
+                    Ok(rx) => accepted.push(rx),
+                    Err(Shed::QueueFull { retry_after_ms }) => {
+                        assert!(retry_after_ms >= 1, "hint must be actionable");
+                        rejected += 1;
+                    }
+                    Err(other) => panic!("unexpected shed: {other}"),
+                }
+            }
+            (accepted, rejected)
+        }));
+    }
+    let mut client_accepted = 0u64;
+    let mut client_rejected = 0u64;
+    for j in joins {
+        let (accepted, rejected) = j.join().expect("producer thread");
+        client_rejected += rejected;
+        for rx in accepted {
+            client_accepted += 1;
+            let reply = rx.recv().expect("exactly one reply per accepted");
+            let resp = reply.expect("no deadlines here, so no late sheds");
+            assert_eq!(resp.logits.len(), 2);
+            assert!(resp.logits.iter().all(|x| x.is_finite()));
+            assert!(rx.recv().is_err(), "a request was replied to twice");
+        }
+    }
+    let stats = gw.shutdown();
+    assert!(client_rejected > 0, "overload never triggered admission sheds");
+    assert_eq!(stats.rejected, client_rejected, "sheds must be reported");
+    assert_eq!(stats.accepted, client_accepted);
+    assert_eq!(
+        stats.accepted,
+        stats.completed + stats.shed_deadline,
+        "accepted requests must be accounted for: completed or shed"
+    );
+    assert_eq!(stats.shed_deadline, 0);
+    assert_eq!(stats.latency.count(), stats.completed);
+    assert!(stats.peak_queue_depth >= 1 && stats.peak_queue_depth <= 4);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+#[test]
+fn expired_deadlines_shed_before_execution_and_reconcile() {
+    let gw = Gateway::spawn(overload_cfg(7, 64, ShedPolicy::Reject));
+    // zero deadline: already expired whenever a replica dequeues it
+    let doomed: Vec<_> = (0..3)
+        .map(|_| {
+            gw.submitter()
+                .submit_with_deadline(
+                    vec![9i32; 12],
+                    vec![0i32; 12],
+                    Some(Duration::ZERO),
+                )
+                .expect("admitted")
+        })
+        .collect();
+    let healthy: Vec<_> = (0..5)
+        .map(|_| gw.submit(vec![5i32; 12], vec![0i32; 12]).expect("admitted"))
+        .collect();
+    for rx in doomed {
+        match rx.recv().expect("shed must be delivered, not dropped") {
+            Err(Shed::DeadlineExpired) => {}
+            other => panic!("expected DeadlineExpired, got {other:?}"),
+        }
+    }
+    for rx in healthy {
+        rx.recv().expect("reply").expect("healthy request served");
+    }
+    let stats = gw.shutdown();
+    assert_eq!(stats.shed_deadline, 3);
+    assert_eq!(stats.completed, 5);
+    assert_eq!(stats.accepted, stats.completed + stats.shed_deadline);
+}
+
+#[test]
+fn block_policy_applies_backpressure_without_sheds() {
+    // closed-loop producer against a capacity-2 queue: Block admits
+    // everything eventually, rejecting nothing
+    let gw = Gateway::spawn(overload_cfg(11, 2, ShedPolicy::Block));
+    let sub = gw.submitter();
+    let producer = std::thread::spawn(move || {
+        (0..10)
+            .map(|i| {
+                sub.submit(vec![6i32; 4 + i], vec![0i32; 4 + i])
+                    .expect("Block never rejects while open")
+            })
+            .collect::<Vec<_>>()
+    });
+    for rx in producer.join().expect("producer thread") {
+        rx.recv().expect("reply").expect("served");
+    }
+    let stats = gw.shutdown();
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.accepted, 10);
+    assert_eq!(stats.completed, 10);
+}
+
+#[test]
+fn shutdown_returns_with_live_submitters_then_rejects() {
+    let gw = Gateway::spawn(overload_cfg(13, 16, ShedPolicy::Reject));
+    let sub = gw.submitter();
+    let rx = sub.submit(vec![5i32; 8], vec![0i32; 8]).expect("admitted");
+    rx.recv().expect("reply").expect("served");
+    // `sub` is still alive: shutdown must drain and return anyway
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(
+        sub.submit(vec![5i32; 8], vec![0i32; 8]).unwrap_err(),
+        Shed::Closed
+    );
+}
+
+#[test]
+fn multi_replica_gateway_serves_concurrent_producers() {
+    // the replicated path under concurrency: replicas {test_threads(2)}
+    // with 1-wide pools, many producers, everything answered once
+    let mut cfg = overload_cfg(3, 256, ShedPolicy::Reject);
+    cfg.replicas = test_threads(2).clamp(1, 4);
+    let gw = Gateway::spawn(cfg);
+    let mut joins = Vec::new();
+    for p in 0..4usize {
+        let sub = gw.submitter();
+        joins.push(std::thread::spawn(move || {
+            (0..8usize)
+                .map(|i| {
+                    let len = 3 + (p + i * 5) % 28;
+                    sub.submit(vec![11i32; len], vec![0i32; len])
+                        .expect("capacity is ample")
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut served = 0u64;
+    for j in joins {
+        for rx in j.join().expect("producer") {
+            let resp = rx.recv().expect("one reply").expect("served");
+            assert_eq!(resp.logits.len(), 2);
+            assert!(resp.total_ms >= resp.queue_ms);
+            served += 1;
+        }
+    }
+    let stats = gw.shutdown();
+    assert_eq!(served, 32);
+    assert_eq!(stats.completed, 32);
+    assert_eq!(stats.accepted, stats.completed + stats.shed_deadline);
+    // every replica's stats are present in the merge
+    assert_eq!(stats.per_replica.len(), test_threads(2).clamp(1, 4));
+    let sum: u64 = stats.per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(sum, stats.completed);
+}

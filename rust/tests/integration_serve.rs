@@ -162,6 +162,24 @@ fn cpu_fallback_deterministic_for_identical_inputs() {
 }
 
 #[test]
+fn shutdown_returns_while_submitter_clones_alive() {
+    // the shutdown-liveness contract: `shutdown` closes the queue
+    // itself; producers holding Submitter clones must not block it
+    let handle = ServerHandle::spawn_cpu(
+        tiny_cpu_config("yoso_8", 3),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    let sub = handle.submitter();
+    let rx = sub.submit(vec![5i32; 8], vec![0i32; 8]);
+    rx.recv().expect("served before shutdown");
+    // `sub` still alive here — shutdown must drain and return anyway
+    let stats = handle.shutdown().expect("stats");
+    assert_eq!(stats.requests, 1);
+    // post-shutdown submits fail fast: dead receiver, no hang
+    assert!(sub.submit(vec![5i32; 8], vec![0i32; 8]).recv().is_err());
+}
+
+#[test]
 fn cpu_fallback_logits_independent_of_worker_width_and_policy() {
     // The scheduler determinism contract, end to end: the same request
     // served by 1-wide and 3-wide pools, under the fixed and the

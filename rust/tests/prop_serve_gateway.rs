@@ -1,0 +1,173 @@
+//! The gateway determinism contract, end to end: CPU-path logits are a
+//! pure function of (config seed, request content). The gateway must be
+//! **bit-identical** to the single-loop `ServerHandle::spawn_cpu` path
+//! for the same seed/content across replica counts {1, 2, 4}, every
+//! bucket layout (single-bucket baseline and two power-of-two layouts),
+//! and shuffled arrival order — bucketing, batching, and replication are
+//! wall-clock knobs only. Requests include hostile tokens so the shared
+//! canonicalization is part of the tested contract. Pool widths honor
+//! `YOSO_TEST_THREADS` so CI sweeps them.
+
+use std::time::Duration;
+use yoso::attention::ChunkPolicy;
+use yoso::model::encoder::EncoderConfig;
+use yoso::serve::{
+    BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig,
+    ServerHandle, ShedPolicy,
+};
+use yoso::testing::test_threads;
+use yoso::util::Rng;
+
+/// Small geometry so the debug-build encoder forward stays in the
+/// millisecond range; d_head = 32 (power of two) suits every variant.
+fn tiny_cfg(seed: u64) -> CpuServeConfig {
+    CpuServeConfig {
+        attention: "yoso_8".into(),
+        encoder: EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 32,
+            n_classes: 2,
+        },
+        threads: test_threads(2),
+        chunk_policy: ChunkPolicy::default(),
+        seed,
+    }
+}
+
+/// Variable-length requests spanning several buckets, with hostile
+/// tokens (negative / out-of-vocab ids, bad segments) mixed in.
+fn request_set(rng: &mut Rng) -> Vec<(Vec<i32>, Vec<i32>)> {
+    (0..8)
+        .map(|_| {
+            let len = 3 + rng.below(29);
+            let ids: Vec<i32> = (0..len)
+                .map(|_| match rng.below(12) {
+                    0 => -5,
+                    1 => 999_999,
+                    _ => 5 + rng.below(1990) as i32,
+                })
+                .collect();
+            let segs: Vec<i32> =
+                (0..len).map(|_| rng.below(3) as i32 - 1).collect();
+            (ids, segs)
+        })
+        .collect()
+}
+
+#[test]
+fn gateway_bit_identical_to_single_loop_path() {
+    let seed = 17u64;
+    let mut rng = Rng::new(0xBEEF);
+    let reqs = request_set(&mut rng);
+
+    // reference bytes: the single-loop CPU serve path
+    let handle = ServerHandle::spawn_cpu(
+        tiny_cfg(seed),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    let reference: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|(ids, segs)| {
+            handle
+                .submit(ids.clone(), segs.clone())
+                .recv()
+                .expect("reference reply")
+                .logits
+        })
+        .collect();
+    let ref_stats = handle.shutdown().expect("reference stats");
+    assert_eq!(ref_stats.requests, reqs.len());
+
+    let layouts = [
+        BucketLayout::single(32),
+        BucketLayout::pow2(8, 32),
+        BucketLayout::pow2(16, 32),
+    ];
+    for replicas in [1usize, 2, 4] {
+        for (li, layout) in layouts.iter().enumerate() {
+            let mut cfg = GatewayConfig::new(tiny_cfg(seed));
+            cfg.replicas = replicas;
+            cfg.queue_capacity = 64;
+            cfg.shed = ShedPolicy::Reject;
+            cfg.batch =
+                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+            cfg.buckets = layout.clone();
+            cfg.bucketing = true;
+            let gw = Gateway::spawn(cfg);
+
+            // arrival order shuffled differently per (replicas, layout)
+            let mut order: Vec<usize> = (0..reqs.len()).collect();
+            Rng::new(0xD1CE ^ ((replicas as u64) << 8) ^ li as u64)
+                .shuffle(&mut order);
+            let mut rxs: Vec<Option<_>> = (0..reqs.len()).map(|_| None).collect();
+            for &i in &order {
+                let (ids, segs) = &reqs[i];
+                rxs[i] = Some(
+                    gw.submit(ids.clone(), segs.clone()).expect("admitted"),
+                );
+            }
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let got = rx
+                    .unwrap()
+                    .recv()
+                    .expect("one reply per request")
+                    .expect("served, not shed")
+                    .logits;
+                assert_eq!(reference[i].len(), got.len());
+                for (a, b) in reference[i].iter().zip(&got) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "request {i} diverged from the single-loop path \
+                         (replicas={replicas}, layout={:?})",
+                        layout.widths()
+                    );
+                }
+            }
+            let stats = gw.shutdown();
+            assert_eq!(stats.completed, reqs.len() as u64);
+            assert_eq!(stats.accepted, stats.completed + stats.shed_deadline);
+            if layout.widths().len() > 1 {
+                // the variable-length set must actually exercise
+                // multiple buckets, or the layout sweep proves nothing
+                let used =
+                    stats.per_bucket.iter().filter(|h| h.count() > 0).count();
+                assert!(
+                    used > 1,
+                    "layout {:?} served everything from one bucket",
+                    layout.widths()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gateway_repeated_identical_inputs_reproduce() {
+    // same gateway, same content, different batches/arrival positions:
+    // the content-hash RNG stream must reproduce the logits exactly
+    let gw = Gateway::spawn(GatewayConfig::new(tiny_cfg(9)));
+    let ids = vec![9i32; 20];
+    let segs = vec![0i32; 20];
+    let a = gw
+        .submit(ids.clone(), segs.clone())
+        .expect("admitted")
+        .recv()
+        .unwrap()
+        .expect("served");
+    // interleave some other traffic so the repeat lands elsewhere
+    let noise = gw.submit(vec![7i32; 5], vec![0i32; 5]).expect("admitted");
+    let b = gw
+        .submit(ids, segs)
+        .expect("admitted")
+        .recv()
+        .unwrap()
+        .expect("served");
+    assert_eq!(a.logits, b.logits);
+    noise.recv().unwrap().expect("noise served");
+    gw.shutdown();
+}
