@@ -15,6 +15,7 @@
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
+use yoso::attention::KernelVariant;
 use yoso::data::glue_synth::{GlueGenerator, GlueTask};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
@@ -51,6 +52,7 @@ fn gateway_demo() -> anyhow::Result<()> {
         encoder,
         threads: 1, // replicas are the parallelism axis
         chunk_policy: Default::default(),
+        kernel: KernelVariant::from_env(), // YOSO_KERNEL A/Bs the demo too
         seed: 42,
     });
     cfg.replicas = replicas;

@@ -3,20 +3,28 @@
 //! method's paper hyperparameters (§4.2/§4.3).
 //!
 //! Writes results/fig7_efficiency.csv
-//! (method,n,threads,chunk_policy,sched,time_ms,peak_bytes,model_bytes)
+//! (method,n,threads,chunk_policy,sched,kernel,time_ms,peak_bytes,model_bytes)
 //! and prints the panels. Zoo baselines run serially (threads = 1,
 //! sched = serial); the YOSO parallel engine rows sweep thread counts
 //! (powers of two up to the core count, capped by `YOSO_BENCH_THREADS`)
 //! crossed with the scheduler (work-stealing `steal` vs the legacy
 //! channel pool `chan`) and the chunk policy (`fixed4` vs `adaptiveW`),
 //! so both the scheduler delta and the chunking delta land in the CSV
-//! rather than being asserted. `YOSO_BENCH_SMOKE=1` shrinks the sweep to
-//! the CI-sized smoke run. The paper's shape to reproduce: softmax grows
-//! quadratically and runs out of budget first; the efficient methods
-//! stay near-linear; YOSO has the lowest memory profile.
+//! rather than being asserted. The `kernel` column carries the
+//! seed-vs-fused kernel A/B (`attention::kernel`): dedicated
+//! `yoso_32_kernel` serial rows time both variants on identical inputs,
+//! and in `YOSO_BENCH_SMOKE=1` mode the run **fails** if the fused
+//! kernel loses to the seed kernel by more than the standard 5% noise
+//! margin at any smoke size, or if it is below 1.2x seed throughput at
+//! the largest smoke n — bench-smoke is the kernel-regression gate. The paper's
+//! shape to reproduce: softmax grows quadratically and runs out of
+//! budget first; the efficient methods stay near-linear; YOSO has the
+//! lowest memory profile.
 
 use std::io::Write;
-use yoso::attention::{by_name, ChunkPolicy, Engine, YosoAttention};
+use yoso::attention::{
+    by_name, Attention, ChunkPolicy, Engine, KernelVariant, YosoAttention,
+};
 use yoso::bench_support::{
     bench, bench_threads, human_bytes, peak_bytes, reset_peak, smoke, smoke_or,
     CountingAlloc,
@@ -59,21 +67,30 @@ fn time_engine(
     (r.summary.mean * 1e3, peak_bytes())
 }
 
-/// Best (minimum mean) of `rounds` unconditional repetitions — the same
-/// noise damping for every scheduler, so the A/B stays unbiased: the
-/// stopping rule never looks at which side is winning.
-fn best_engine_time(
-    engine: &Engine,
-    att: &YosoAttention,
+/// One serial trait-forward measurement: mean ms + peak bytes.
+fn time_attention(
+    attn: &dyn Attention,
     q: &Mat,
     k: &Mat,
     v: &Mat,
     iters: usize,
-    rounds: usize,
 ) -> (f64, usize) {
-    let mut best = time_engine(engine, att, q, k, v, iters);
+    let mut run_rng = Rng::new(9);
+    reset_peak();
+    let r = bench("kernel", 1, iters, || {
+        std::hint::black_box(attn.forward(q, k, v, &mut run_rng));
+    });
+    (r.summary.mean * 1e3, peak_bytes())
+}
+
+/// Best (minimum mean) of `rounds` unconditional repetitions of a
+/// measurement — the same symmetric noise damping for every side of
+/// every A/B (scheduler, kernel), so comparisons stay unbiased: the
+/// stopping rule never looks at which side is winning.
+fn best_of(rounds: usize, mut measure: impl FnMut() -> (f64, usize)) -> (f64, usize) {
+    let mut best = measure();
     for _ in 1..rounds {
-        let r = time_engine(engine, att, q, k, v, iters);
+        let r = measure();
         if r.0 < best.0 {
             best = r;
         }
@@ -90,8 +107,11 @@ fn main() {
 
     std::fs::create_dir_all("results").unwrap();
     let mut csv = std::fs::File::create("results/fig7_efficiency.csv").unwrap();
-    writeln!(csv, "method,n,threads,chunk_policy,sched,time_ms,peak_bytes,model_bytes")
-        .unwrap();
+    writeln!(
+        csv,
+        "method,n,threads,chunk_policy,sched,kernel,time_ms,peak_bytes,model_bytes"
+    )
+    .unwrap();
 
     println!("Figure 7 — per-instance forward time (ms) and peak memory\n");
     print!("{:<12}", "method");
@@ -118,9 +138,16 @@ fn main() {
                 std::hint::black_box(attn.forward(&q, &k, &v, &mut run_rng));
             });
             let peak = peak_bytes();
+            // yoso-family rows run the env-selected kernel; the rest of
+            // the zoo has no kernel knob
+            let kcol = if method.starts_with("yoso") && method != "yoso_e" {
+                KernelVariant::from_env().label()
+            } else {
+                "-"
+            };
             writeln!(
                 csv,
-                "{method},{n},1,-,serial,{},{},{}",
+                "{method},{n},1,-,serial,{kcol},{},{},{}",
                 r.summary.mean * 1e3,
                 peak,
                 attn.workspace_bytes(n, d)
@@ -131,6 +158,82 @@ fn main() {
         }
         println!("{time_row}");
         println!("{mem_row}");
+    }
+
+    // Seed-vs-fused kernel A/B (the PR-4 tentpole): identical inputs,
+    // bit-identical outputs (property-tested), so the delta is pure
+    // constant factor — arena reuse, matmul-backed hashing, bucket-
+    // sorted streaming scatter. Symmetric best-of-3 per variant.
+    println!("\nYOSO kernel A/B (yoso_32, serial trait forward)\n");
+    println!("{:>6} {:>8} {:>12} {:>12} {:>9}", "n", "kernel", "seed_ms", "fused_ms", "speedup");
+    let mut fused_losses = 0usize;
+    let mut kernel_speedup_last_n = 0.0f64;
+    for &n in &ns {
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let iters = smoke_or(3, if n >= 2048 { 3 } else { 5 });
+        let seed_att =
+            YosoAttention::new(8, 32, false).with_kernel(KernelVariant::Seed);
+        let fused_att =
+            YosoAttention::new(8, 32, false).with_kernel(KernelVariant::Fused);
+        let (seed_ms, seed_peak) =
+            best_of(3, || time_attention(&seed_att, &q, &k, &v, iters));
+        let (fused_ms, fused_peak) =
+            best_of(3, || time_attention(&fused_att, &q, &k, &v, iters));
+        for (att, ms, peak) in [
+            (&seed_att, seed_ms, seed_peak),
+            (&fused_att, fused_ms, fused_peak),
+        ] {
+            // distinct method label: the zoo loop already emits a
+            // 'yoso_32' serial row (env-selected kernel, single round);
+            // reusing the name would put two conflicting timings under
+            // the same (method,n,threads,policy,sched,kernel) key
+            writeln!(
+                csv,
+                "yoso_32_kernel,{n},1,-,serial,{},{ms},{peak},{}",
+                att.kernel.label(),
+                att.workspace_bytes(n, d)
+            )
+            .unwrap();
+        }
+        let speedup = seed_ms / fused_ms.max(1e-9);
+        println!(
+            "{n:>6} {:>8} {seed_ms:>12.2} {fused_ms:>12.2} {speedup:>8.2}x",
+            "a/b"
+        );
+        // 5% tolerance, same as the scheduler and fig9 gates: catch a
+        // kernel regression, not a noisy-neighbor blip on a shared
+        // runner (the expected fused margin is far larger than 5%)
+        if fused_ms > seed_ms * 1.05 {
+            fused_losses += 1;
+        }
+        if ns.last().copied().unwrap_or(0) == n {
+            kernel_speedup_last_n = speedup;
+        }
+    }
+    if smoke() {
+        // bench-smoke is the kernel-regression gate: the fused kernel
+        // must never lose to the seed kernel at any smoke size, and must
+        // hold >= 1.2x at the largest smoke n (both damped best-of-3)
+        if fused_losses > 0 {
+            println!(
+                "FAIL: fused kernel lost to the seed kernel at \
+                 {fused_losses} smoke size(s)"
+            );
+            std::process::exit(1);
+        }
+        if kernel_speedup_last_n < 1.2 {
+            println!(
+                "FAIL: fused kernel speedup {kernel_speedup_last_n:.2}x < 1.2x \
+                 at the largest smoke n"
+            );
+            std::process::exit(1);
+        }
+    } else if fused_losses > 0 {
+        println!(
+            "WARNING: fused kernel slower than seed at {fused_losses} sweep point(s)"
+        );
     }
 
     // YOSO parallel engine: per-hash fan-out, (threads x scheduler x
@@ -144,6 +247,7 @@ fn main() {
         "n", "threads", "chunk", "sched", "time_ms", "speedup"
     );
     let att = YosoAttention::new(8, 32, false);
+    let kern = att.kernel.label(); // env-selected; CI sweeps both
     let mut serial_ms_last_n = 0.0f64;
     let mut best_speedup_last_n = 1.0f64;
     let mut steal_losses = 0usize;
@@ -165,7 +269,7 @@ fn main() {
                 }
                 writeln!(
                     csv,
-                    "yoso_32_engine,{n},1,{},serial,{ms},{peak},{}",
+                    "yoso_32_engine,{n},1,{},serial,{kern},{ms},{peak},{}",
                     engine.chunk_policy().label(),
                     engine.workspace_bytes(&att, n, d)
                 )
@@ -179,14 +283,14 @@ fn main() {
                 continue;
             }
             // scheduler A/B at fixed chunking: symmetric best-of-3 per
-            // scheduler (unconditional — see best_engine_time) so noisy
+            // scheduler (unconditional — see best_of) so noisy
             // shared-CI boxes are damped without biasing the comparison
             let chan = Engine::new_channel(t);
             let steal = Engine::new(t);
             let (chan_ms, chan_peak) =
-                best_engine_time(&chan, &att, &q, &k, &v, iters, 3);
+                best_of(3, || time_engine(&chan, &att, &q, &k, &v, iters));
             let (steal_ms, steal_peak) =
-                best_engine_time(&steal, &att, &q, &k, &v, iters, 3);
+                best_of(3, || time_engine(&steal, &att, &q, &k, &v, iters));
             // 5% tolerance: the smoke gate must catch a scheduler
             // regression, not a noisy-neighbor blip on a shared runner
             if steal_ms > chan_ms * 1.05 {
@@ -200,7 +304,7 @@ fn main() {
             {
                 writeln!(
                     csv,
-                    "yoso_32_engine,{n},{t},{},{sched},{ms},{peak},{model_bytes}",
+                    "yoso_32_engine,{n},{t},{},{sched},{kern},{ms},{peak},{model_bytes}",
                     steal.chunk_policy().label()
                 )
                 .unwrap();
@@ -216,11 +320,11 @@ fn main() {
             // adaptive chunking on the stealing pool — the policy delta,
             // with the same best-of-3 damping as the fixed-policy rows
             let engine = Engine::with_policy(t, adaptive);
-            let (ms, peak) = best_engine_time(&engine, &att, &q, &k, &v, iters, 3);
+            let (ms, peak) = best_of(3, || time_engine(&engine, &att, &q, &k, &v, iters));
             let speedup = serial_ms / ms.max(1e-9);
             writeln!(
                 csv,
-                "yoso_32_engine,{n},{t},{},steal,{ms},{peak},{}",
+                "yoso_32_engine,{n},{t},{},steal,{kern},{ms},{peak},{}",
                 adaptive.label(),
                 engine.workspace_bytes(&att, n, d)
             )

@@ -22,7 +22,7 @@
 
 use std::io::Write;
 use std::time::{Duration, Instant};
-use yoso::attention::ChunkPolicy;
+use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::bench_support::{smoke, smoke_or};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
@@ -60,6 +60,8 @@ fn spawn_gateway(
         // replica sweep honest on small CI boxes
         threads: 1,
         chunk_policy: ChunkPolicy::default(),
+        // env default so the serve-load sweep can A/B kernels too
+        kernel: KernelVariant::from_env(),
         seed: 42,
     });
     cfg.replicas = replicas;

@@ -49,6 +49,7 @@
 //! one grain per pool: the serve path fans requests and keeps heads
 //! serial inside each job; the benches fan hashes.
 
+use super::kernel::{self, KernelVariant};
 use super::yoso::YosoAttention;
 use super::{Attention, HeadTask};
 use crate::lsh::{HadamardHasher, Hasher, HyperplaneHasher};
@@ -280,6 +281,7 @@ impl Engine {
         let kn = Arc::new(k.unit_rows());
         let vv = Arc::new(v.clone());
         let (tau, m, fast) = (att.tau, att.m, att.fast_hash);
+        let variant = att.kernel;
         let base = rng.clone();
         let chunk = self.chunk.chunk_size(m, nq, d);
         let n_chunks = (m + chunk - 1) / chunk;
@@ -287,12 +289,29 @@ impl Engine {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(m);
             let mut acc = Mat::zeros(qn.rows, vv.cols);
-            for h in lo..hi {
-                let mut hrng = base.fold_in(h as u64);
-                let partial = hash_round(&qn, &kn, &vv, tau, fast, &mut hrng);
-                for (o, s) in acc.data.iter_mut().zip(&partial.data) {
-                    *o += s;
+            match variant {
+                KernelVariant::Seed => {
+                    for h in lo..hi {
+                        let mut hrng = base.fold_in(h as u64);
+                        let partial = hash_round(&qn, &kn, &vv, tau, fast, &mut hrng);
+                        for (o, s) in acc.data.iter_mut().zip(&partial.data) {
+                            *o += s;
+                        }
+                    }
                 }
+                // fused rounds run out of the worker's thread-local
+                // arena: workers are long-lived, so steady-state rounds
+                // allocate only the chunk accumulator above. `acc +=
+                // table[b]` equals the seed partial-then-add bit-for-bit
+                // (the partial is 0 + table[b]).
+                KernelVariant::Fused => kernel::with_arena(|arena| {
+                    for h in lo..hi {
+                        let mut hrng = base.fold_in(h as u64);
+                        kernel::fused_round(
+                            arena, &qn, &kn, &vv, tau, fast, &mut hrng, &mut acc,
+                        );
+                    }
+                }),
             }
             acc
         });
@@ -315,8 +334,20 @@ impl Engine {
         let chunk = self.chunk.chunk_size(att.m, n, d);
         let n_chunks = (att.m + chunk - 1) / chunk;
         let live_tasks = self.threads.min(n_chunks);
-        n_chunks * n * d * 4
-            + live_tasks * (((1 << att.tau) * d + n * d) * 4 + 2 * n * 4)
+        let per_task = match att.kernel {
+            // reused round table + (nq, dv) partial + 1-hash codes
+            KernelVariant::Seed => ((1 << att.tau) * d + n * d) * 4 + 2 * n * 4,
+            // per-worker arena round: table + per-hash codes + bucket
+            // sort + hash scratch; gathers straight into the chunk
+            // accumulator, so no partial
+            KernelVariant::Fused => {
+                (1 << att.tau) * d * 4
+                    + 2 * n * 4
+                    + kernel::sort_scratch_bytes(att.tau, n)
+                    + kernel::hash_scratch_bytes(att.tau, 1, att.fast_hash, n, d)
+            }
+        };
+        n_chunks * n * d * 4 + live_tasks * per_task
     }
 
     /// YOSO forward honoring the variant's `normalize` flag (N-YOSO).
@@ -336,9 +367,12 @@ impl Engine {
     }
 }
 
-/// One hash round: per-round hasher from `rng`, scatter `V` into this
-/// round's own bucket table, gather per query. Returns the (nq, dv)
-/// partial sum (the caller applies 1/m during reduction).
+/// One *seed-kernel* hash round: per-round hasher from `rng`, scatter
+/// `V` into this round's own bucket table, gather per query. Returns
+/// the (nq, dv) partial sum (the caller applies 1/m during reduction).
+/// Preserved verbatim (per-token hashing included) as the fused round's
+/// A/B baseline and bit-identity reference; `kernel::fused_round` is
+/// the arena-backed equivalent.
 fn hash_round(qn: &Mat, kn: &Mat, v: &Mat, tau: usize, fast: bool, rng: &mut Rng) -> Mat {
     let d = qn.cols;
     let (cq, ck) = if fast {
@@ -346,7 +380,7 @@ fn hash_round(qn: &Mat, kn: &Mat, v: &Mat, tau: usize, fast: bool, rng: &mut Rng
         (hasher.hash_all(qn), hasher.hash_all(kn))
     } else {
         let hasher = HyperplaneHasher::new(rng, 1, d, tau);
-        (hasher.hash_all(qn), hasher.hash_all(kn))
+        (hasher.hash_all_seed(qn), hasher.hash_all_seed(kn))
     };
     let dv = v.cols;
     let n_buckets = 1usize << tau;

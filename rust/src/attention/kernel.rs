@@ -1,0 +1,519 @@
+//! Fused, zero-allocation YOSO kernel core.
+//!
+//! The seed-faithful kernel (`YosoAttention` with [`KernelVariant::Seed`])
+//! re-allocates its bucket table, code buffers, hasher projections, and
+//! normalized q/k copies on every forward, hashes one token at a time,
+//! and scatters value rows at random bucket offsets — so serving
+//! throughput measures allocator churn and cache misses, not the
+//! algorithm. This module is the rewrite (Fig. 3 / Remark 3's constant
+//! factor, made real):
+//!
+//! * [`KernelArena`] — one reusable workspace (bucket table, per-hash
+//!   codes, bucket-sort index buffers, hasher plane/sign storage and
+//!   projection scratch, normalized q/k copies). Buffers only grow;
+//!   steady-state forwards at a fixed geometry allocate **zero** heap
+//!   (asserted by `tests/alloc_kernel.rs` via the counting allocator).
+//!   Long-lived workers (pool threads, gateway replicas) reach it
+//!   through a thread-local slot ([`with_arena`]); the explicit API
+//!   (`YosoAttention::forward_fused_into`) is there for callers that
+//!   own their arena.
+//! * **Fused per-hash pipeline** — hash → scatter → gather one hash at a
+//!   time, so code buffers are sized `n` instead of `m·n` and stay hot
+//!   in L1 across the scatter and gather of their hash round.
+//! * **Bucket-sorted streaming scatter** — a *stable* counting sort of
+//!   key indices by bucket turns the seed kernel's random-offset table
+//!   writes into bucket-contiguous sequential accumulation. Stability
+//!   preserves the ascending-`j` addition order within each bucket —
+//!   the seed kernel's exact floating-point summation order — so
+//!   outputs stay **bit-identical** (property-tested in
+//!   `tests/prop_kernel_equiv.rs`).
+//! * **Matmul-backed hashing** — `HyperplaneHasher::hash_block_into`
+//!   projects all tokens of one hash through a tiled matmul (each plane
+//!   row streams once per 8-token tile); every projection is exactly
+//!   `linalg::dot`, so sign bits match the seed per-token loop
+//!   bit-for-bit. `HadamardHasher::hash_block_into` runs the HD3
+//!   transform in the arena's scratch instead of a per-call buffer.
+//!
+//! The accumulation loops run on `chunks_exact(8)` bodies (SIMD-friendly
+//! fixed-width inner loops); each element's add is independent, so the
+//! reordering is layout-only and the bytes are unchanged.
+//!
+//! `YOSO_KERNEL=seed|fused` selects the default variant at construction
+//! ([`KernelVariant::from_env`]) so benches and CI can A/B the two
+//! kernels; the seed kernel stays the property-test oracle.
+
+use super::yoso::{WorkspaceTrace, YosoAttention};
+use crate::lsh::{hadamard, HadamardHasher, HyperplaneHasher};
+use crate::tensor::Mat;
+use crate::util::Rng;
+use std::cell::RefCell;
+
+/// Which implementation runs the YOSO scatter/gather hot path. Outputs
+/// are bit-identical between the variants (property-tested); the choice
+/// is a pure performance knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelVariant {
+    /// The seed repo's kernel, preserved verbatim: per-token hashing,
+    /// random-offset scatter, fresh allocations per forward. The A/B
+    /// baseline and property-test oracle.
+    Seed,
+    /// The arena-backed fused pipeline above.
+    #[default]
+    Fused,
+}
+
+impl KernelVariant {
+    /// Default variant from `YOSO_KERNEL` (`seed` selects the baseline,
+    /// `fused`/unset/empty the fused kernel; anything else panics so a
+    /// typo'd A/B — `YOSO_KERNEL=Sead` — fails loudly instead of
+    /// silently benchmarking fused against fused).
+    pub fn from_env() -> KernelVariant {
+        KernelVariant::from_setting(std::env::var("YOSO_KERNEL").ok().as_deref())
+    }
+
+    /// The `YOSO_KERNEL` parse itself, env-free so tests cover it
+    /// without `set_var` (mutating the process environment races
+    /// parallel tests that call `getenv` — UB on glibc).
+    pub fn from_setting(v: Option<&str>) -> KernelVariant {
+        match v.map(str::trim) {
+            Some("seed") => KernelVariant::Seed,
+            Some("fused") | Some("") | None => KernelVariant::Fused,
+            Some(other) => {
+                panic!("YOSO_KERNEL must be `seed` or `fused`, got `{other}`")
+            }
+        }
+    }
+
+    /// Stable label for CSV columns and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelVariant::Seed => "seed",
+            KernelVariant::Fused => "fused",
+        }
+    }
+}
+
+/// Reusable workspace for the fused kernel. Construct once per
+/// long-lived owner (worker thread, replica, bench loop) and thread it
+/// through every forward: after the first call at a given geometry,
+/// subsequent forwards allocate nothing. Slice buffers never shrink and
+/// engine rounds (m = 1) keep hasher slots separate from full forwards,
+/// so a mixed workload (different sequence lengths, engine rounds
+/// interleaved with forwards) settles at the high-water footprint; only
+/// a change of the *full-forward* hasher geometry (m, d, tau) — e.g.
+/// alternating two different attention configs on one thread — rebuilds
+/// that hasher's plane/sign storage.
+pub struct KernelArena {
+    /// normalized query/key copies (the seed kernel's `unit_rows`)
+    qn: Mat,
+    kn: Mat,
+    /// bucket table H, 2^tau x dv
+    table: Vec<f32>,
+    /// per-hash codes (sized n, not m·n — the fused pipeline's point)
+    codes_q: Vec<u32>,
+    codes_k: Vec<u32>,
+    /// hasher scratch: (n, tau) projections or the (n, d) HD3 buffer
+    proj: Vec<f32>,
+    /// counting-sort bucket offsets (2^tau + 1)
+    counts: Vec<u32>,
+    /// key indices, stable-sorted by bucket
+    order: Vec<u32>,
+    /// arena-held hashers; `refill` redraws them without reallocating.
+    /// Full forwards (m = att.m) and engine rounds (m = 1) keep separate
+    /// slots so a thread interleaving both — a serve worker also running
+    /// engine chunks — settles without per-call hasher reallocation.
+    hyper: Option<HyperplaneHasher>,
+    hada: Option<HadamardHasher>,
+    hyper_round: Option<HyperplaneHasher>,
+    hada_round: Option<HadamardHasher>,
+}
+
+impl Default for KernelArena {
+    fn default() -> Self {
+        KernelArena::new()
+    }
+}
+
+impl KernelArena {
+    /// An empty arena: nothing allocated until the first forward.
+    pub fn new() -> KernelArena {
+        KernelArena {
+            qn: Mat::zeros(0, 0),
+            kn: Mat::zeros(0, 0),
+            table: Vec::new(),
+            codes_q: Vec::new(),
+            codes_k: Vec::new(),
+            proj: Vec::new(),
+            counts: Vec::new(),
+            order: Vec::new(),
+            hyper: None,
+            hada: None,
+            hyper_round: None,
+            hada_round: None,
+        }
+    }
+
+    /// Grow (never shrink) every buffer a forward at this geometry
+    /// touches. No-op — zero allocation — once warm.
+    fn grow(&mut self, nq: usize, nk: usize, d: usize, dv: usize, tau: usize, fast: bool) {
+        let nb = 1usize << tau;
+        grow_f32(&mut self.table, nb * dv);
+        grow_u32(&mut self.codes_q, nq);
+        grow_u32(&mut self.codes_k, nk);
+        grow_u32(&mut self.counts, nb + 1);
+        grow_u32(&mut self.order, nk);
+        let n = nq.max(nk);
+        grow_f32(&mut self.proj, if fast { n * d } else { n * tau });
+    }
+}
+
+fn grow_f32(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+fn grow_u32(v: &mut Vec<u32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0);
+    }
+}
+
+thread_local! {
+    static TLS_ARENA: RefCell<KernelArena> = RefCell::new(KernelArena::new());
+}
+
+/// Run `f` with this thread's kernel arena. Worker threads are
+/// long-lived (pool workers, gateway replicas, the serve loops), so
+/// steady-state forwards find warm buffers here and allocate nothing.
+/// Do not call `with_arena` again from inside `f` (single slot).
+pub fn with_arena<R>(f: impl FnOnce(&mut KernelArena) -> R) -> R {
+    TLS_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Bucket-sort scratch bytes: counting-sort offsets + sorted key order.
+pub(crate) fn sort_scratch_bytes(tau: usize, nk: usize) -> usize {
+    ((1usize << tau) + 1 + nk) * 4
+}
+
+/// Hasher storage + projection scratch bytes for `m` hashes over `n`
+/// tokens: planes and an (n, tau) projection block for the hyperplane
+/// hasher, sign diagonals and the (n, d) HD3 buffer for Hadamard.
+pub(crate) fn hash_scratch_bytes(
+    tau: usize,
+    m: usize,
+    fast: bool,
+    n: usize,
+    d: usize,
+) -> usize {
+    if fast {
+        (m * hadamard::ROUNDS * d + n * d) * 4
+    } else {
+        (m * tau * d + n * tau) * 4
+    }
+}
+
+/// Copy `src` into `dst` and l2-normalize rows in place — the seed
+/// kernel's `unit_rows`, minus the allocation once `dst` has capacity.
+fn copy_unit_rows(dst: &mut Mat, src: &Mat) {
+    dst.rows = src.rows;
+    dst.cols = src.cols;
+    dst.data.clear();
+    dst.data.extend_from_slice(&src.data);
+    dst.l2_normalize_rows();
+}
+
+/// Reuse or (re)build the arena's hyperplane hasher for this geometry,
+/// drawing the exact RNG sequence a fresh construction would.
+fn prep_hyper(
+    slot: &mut Option<HyperplaneHasher>,
+    rng: &mut Rng,
+    m: usize,
+    d: usize,
+    tau: usize,
+) {
+    match slot {
+        Some(h) if h.m == m && h.d == d && h.tau == tau => h.refill(rng),
+        _ => *slot = Some(HyperplaneHasher::new(rng, m, d, tau)),
+    }
+}
+
+fn prep_hada(
+    slot: &mut Option<HadamardHasher>,
+    rng: &mut Rng,
+    m: usize,
+    d: usize,
+    tau: usize,
+) {
+    match slot {
+        Some(h) if h.m == m && h.d == d && h.tau == tau => h.refill(rng),
+        _ => *slot = Some(HadamardHasher::new(rng, m, d, tau)),
+    }
+}
+
+/// `dst[i] += src[i]`, 8-wide fixed chunks (element adds are
+/// independent, so the tiling never changes the bytes).
+#[inline]
+fn add_rows_8(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d8 = dst.chunks_exact_mut(8);
+    let mut s8 = src.chunks_exact(8);
+    for (d, s) in (&mut d8).zip(&mut s8) {
+        for t in 0..8 {
+            d[t] += s[t];
+        }
+    }
+    for (d, s) in d8.into_remainder().iter_mut().zip(s8.remainder()) {
+        *d += s;
+    }
+}
+
+/// `dst[i] += a * src[i]`, 8-wide fixed chunks — elementwise identical
+/// to the seed gather's `*o += inv_m * s`.
+#[inline]
+fn axpy_rows_8(a: f32, src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d8 = dst.chunks_exact_mut(8);
+    let mut s8 = src.chunks_exact(8);
+    for (d, s) in (&mut d8).zip(&mut s8) {
+        for t in 0..8 {
+            d[t] += a * s[t];
+        }
+    }
+    for (d, s) in d8.into_remainder().iter_mut().zip(s8.remainder()) {
+        *d += a * s;
+    }
+}
+
+/// Stable counting sort of key indices by bucket, then bucket-contiguous
+/// accumulation into the table: sequential table writes (each occupied
+/// bucket's row is touched once, not once per key), with stability
+/// keeping each bucket's additions in ascending-`j` order — the seed
+/// kernel's exact floating-point summation order, so the table bytes
+/// are identical.
+fn scatter_sorted(
+    table: &mut [f32],
+    counts: &mut [u32],
+    order: &mut [u32],
+    codes_k: &[u32],
+    v: &Mat,
+    dv: usize,
+) {
+    let nb = counts.len() - 1;
+    counts.fill(0);
+    for &c in codes_k {
+        counts[c as usize + 1] += 1;
+    }
+    for b in 0..nb {
+        counts[b + 1] += counts[b];
+    }
+    for (j, &c) in codes_k.iter().enumerate() {
+        let slot = &mut counts[c as usize];
+        order[*slot as usize] = j as u32;
+        *slot += 1;
+    }
+    // counts[b] is now the end offset of bucket b
+    table.fill(0.0);
+    let mut start = 0usize;
+    for b in 0..nb {
+        let end = counts[b] as usize;
+        if end > start {
+            let dst = &mut table[b * dv..(b + 1) * dv];
+            for &j in &order[start..end] {
+                add_rows_8(dst, v.row(j as usize));
+            }
+        }
+        start = end;
+    }
+}
+
+/// The fused forward: `out` must be (nq, dv) and is overwritten with the
+/// raw (unnormalized) B-hat V estimate. Returns the Remark-3 workspace
+/// trace (a pure function of shape — never of bucket skew). Zero heap
+/// allocation once `arena` is warm at this geometry.
+pub(crate) fn forward_fused_into(
+    att: &YosoAttention,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    rng: &mut Rng,
+    arena: &mut KernelArena,
+    out: &mut Mat,
+) -> WorkspaceTrace {
+    let nq = q.rows;
+    let nk = k.rows;
+    let d = q.cols;
+    let dv = v.cols;
+    assert_eq!(k.cols, d);
+    assert_eq!(v.rows, nk);
+    assert_eq!((out.rows, out.cols), (nq, dv), "out must be (nq, dv)");
+    let (tau, m, fast) = (att.tau, att.m, att.fast_hash);
+    let nb = 1usize << tau;
+
+    arena.grow(nq, nk, d, dv, tau, fast);
+    copy_unit_rows(&mut arena.qn, q);
+    copy_unit_rows(&mut arena.kn, k);
+    // same draw order as the seed kernel: the whole hasher up front
+    if fast {
+        prep_hada(&mut arena.hada, rng, m, d, tau);
+    } else {
+        prep_hyper(&mut arena.hyper, rng, m, d, tau);
+    }
+
+    out.data.fill(0.0);
+    let inv_m = 1.0 / m as f32;
+    let KernelArena {
+        qn, kn, table, codes_q, codes_k, proj, counts, order, hyper, hada, ..
+    } = arena;
+    let table = &mut table[..nb * dv];
+    let codes_q = &mut codes_q[..nq];
+    let codes_k = &mut codes_k[..nk];
+    let counts = &mut counts[..nb + 1];
+    let order = &mut order[..nk];
+
+    for h in 0..m {
+        if fast {
+            let hasher = hada.as_ref().unwrap();
+            hasher.hash_block_into(qn, h, proj, codes_q);
+            hasher.hash_block_into(kn, h, proj, codes_k);
+        } else {
+            let hasher = hyper.as_ref().unwrap();
+            hasher.hash_block_into(qn, h, proj, codes_q);
+            hasher.hash_block_into(kn, h, proj, codes_k);
+        }
+        // scatter: H[f(K_j)] += V_j, bucket-contiguous
+        scatter_sorted(table, counts, order, codes_k, v, dv);
+        // gather: Y_i += H[f(Q_i)] / m
+        for (i, &c) in codes_q.iter().enumerate() {
+            let b = c as usize;
+            axpy_rows_8(inv_m, &table[b * dv..(b + 1) * dv], &mut out.data[i * dv..(i + 1) * dv]);
+        }
+    }
+
+    WorkspaceTrace {
+        table_bytes: nb * dv * 4,
+        codes_bytes: (nq + nk) * 4,
+        scratch_bytes: sort_scratch_bytes(tau, nk)
+            + hash_scratch_bytes(tau, m, fast, nq.max(nk), d)
+            + (nq + nk) * d * 4,
+    }
+}
+
+/// One engine hash round through the fused pipeline: refill a 1-hash
+/// hasher from `rng`, hash, sort-scatter, and gather *raw* sums straight
+/// into `acc` (the engine applies 1/m in its chunk reduction, and
+/// `acc += 0 + table[b]` equals the seed round's partial-then-add
+/// bit-for-bit). `qn`/`kn` are already normalized by the engine.
+pub(crate) fn fused_round(
+    arena: &mut KernelArena,
+    qn: &Mat,
+    kn: &Mat,
+    v: &Mat,
+    tau: usize,
+    fast: bool,
+    rng: &mut Rng,
+    acc: &mut Mat,
+) {
+    let nq = qn.rows;
+    let nk = kn.rows;
+    let d = qn.cols;
+    let dv = v.cols;
+    let nb = 1usize << tau;
+    arena.grow(nq, nk, d, dv, tau, fast);
+    // the m = 1 round slots, not the full-forward hashers: interleaving
+    // engine rounds with trait forwards must not thrash either slot
+    if fast {
+        prep_hada(&mut arena.hada_round, rng, 1, d, tau);
+    } else {
+        prep_hyper(&mut arena.hyper_round, rng, 1, d, tau);
+    }
+    let KernelArena {
+        table, codes_q, codes_k, proj, counts, order, hyper_round, hada_round, ..
+    } = arena;
+    let table = &mut table[..nb * dv];
+    let codes_q = &mut codes_q[..nq];
+    let codes_k = &mut codes_k[..nk];
+    if fast {
+        let hasher = hada_round.as_ref().unwrap();
+        hasher.hash_block_into(qn, 0, proj, codes_q);
+        hasher.hash_block_into(kn, 0, proj, codes_k);
+    } else {
+        let hasher = hyper_round.as_ref().unwrap();
+        hasher.hash_block_into(qn, 0, proj, codes_q);
+        hasher.hash_block_into(kn, 0, proj, codes_k);
+    }
+    scatter_sorted(table, &mut counts[..nb + 1], &mut order[..nk], codes_k, v, dv);
+    for (i, &c) in codes_q.iter().enumerate() {
+        let b = c as usize;
+        add_rows_8(&mut acc.data[i * dv..(i + 1) * dv], &table[b * dv..(b + 1) * dv]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_and_labels() {
+        assert_eq!(KernelVariant::from_setting(Some("seed")), KernelVariant::Seed);
+        assert_eq!(KernelVariant::from_setting(Some("fused")), KernelVariant::Fused);
+        assert_eq!(KernelVariant::from_setting(Some("")), KernelVariant::Fused);
+        assert_eq!(KernelVariant::from_setting(Some(" seed ")), KernelVariant::Seed);
+        assert_eq!(KernelVariant::from_setting(None), KernelVariant::Fused);
+        assert_eq!(KernelVariant::Seed.label(), "seed");
+        assert_eq!(KernelVariant::Fused.label(), "fused");
+        assert_eq!(KernelVariant::default(), KernelVariant::Fused);
+    }
+
+    #[test]
+    #[should_panic(expected = "YOSO_KERNEL")]
+    fn variant_parse_rejects_typos() {
+        // a typo'd A/B must fail loudly, not silently run fused-vs-fused
+        let _ = KernelVariant::from_setting(Some("Sead"));
+    }
+
+    #[test]
+    fn scatter_sorted_matches_random_offset_scatter() {
+        // the streaming scatter vs the seed kernel's loop, same codes
+        let mut rng = Rng::new(3);
+        let nk = 40;
+        let dv = 12; // not a multiple of 8: exercises the remainder path
+        let tau = 3;
+        let nb = 1usize << tau;
+        let v = Mat::randn(nk, dv, 1.0, &mut rng);
+        let codes: Vec<u32> = (0..nk).map(|_| rng.below(nb) as u32).collect();
+        let mut seed_table = vec![0.0f32; nb * dv];
+        for j in 0..nk {
+            let b = codes[j] as usize;
+            let dst = &mut seed_table[b * dv..(b + 1) * dv];
+            for (t, s) in dst.iter_mut().zip(v.row(j)) {
+                *t += s;
+            }
+        }
+        let mut table = vec![0.0f32; nb * dv];
+        let mut counts = vec![0u32; nb + 1];
+        let mut order = vec![0u32; nk];
+        scatter_sorted(&mut table, &mut counts, &mut order, &codes, &v, dv);
+        for (a, b) in table.iter().zip(&seed_table) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // stability: per bucket, sorted indices ascend
+        let mut start = 0usize;
+        for b in 0..nb {
+            let end = counts[b] as usize;
+            assert!(order[start..end].windows(2).all(|w| w[0] < w[1]), "bucket {b}");
+            start = end;
+        }
+    }
+
+    #[test]
+    fn arena_buffers_only_grow() {
+        let mut a = KernelArena::new();
+        a.grow(64, 64, 32, 32, 6, false);
+        let big = a.table.len();
+        a.grow(8, 8, 8, 8, 3, false);
+        assert_eq!(a.table.len(), big, "shrank");
+        a.grow(64, 64, 32, 64, 6, false);
+        assert!(a.table.len() > big, "grew for wider dv");
+    }
+}

@@ -102,6 +102,10 @@ impl Attention for YosoConv {
     fn workspace_bytes(&self, n: usize, d: usize) -> usize {
         self.inner.workspace_bytes(n, d) + n * d * 4
     }
+
+    fn set_kernel(&mut self, kernel: super::KernelVariant) {
+        self.inner.kernel = kernel;
+    }
 }
 
 #[cfg(test)]

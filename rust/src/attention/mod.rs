@@ -12,6 +12,7 @@
 //! `bench_support`.
 
 pub mod engine;
+pub mod kernel;
 pub mod linear;
 pub mod linformer;
 pub mod longformer;
@@ -22,6 +23,7 @@ pub mod softmax;
 pub mod yoso;
 
 pub use engine::{ChunkPolicy, Engine, HASH_CHUNK, MultiHeadAttention};
+pub use kernel::{KernelArena, KernelVariant};
 pub use linear::{LinearTransformer, YosoConv};
 pub use linformer::Linformer;
 pub use longformer::Longformer;
@@ -74,6 +76,12 @@ pub trait Attention: Send + Sync {
     /// Theoretical auxiliary memory (bytes) beyond inputs/outputs for a
     /// sequence length n and head dim d — the Figure 7 memory model.
     fn workspace_bytes(&self, n: usize, d: usize) -> usize;
+
+    /// Pin the YOSO kernel implementation (`attention::kernel`) for
+    /// variants that have one; default no-op for the rest of the zoo.
+    /// Lets config layers (the serve paths) select the kernel without
+    /// downcasting the boxed trait object.
+    fn set_kernel(&mut self, _kernel: KernelVariant) {}
 }
 
 /// Identity mixing (the LRA "None" row).

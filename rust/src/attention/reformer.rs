@@ -72,8 +72,10 @@ impl Attention for Reformer {
     }
 
     fn workspace_bytes(&self, n: usize, _d: usize) -> usize {
-        // codes both sides + bucket membership lists
-        2 * self.rounds * n * 4 + n * 4
+        // codes both sides + bucket membership lists + hash_all's
+        // transient (n, rounds·bits) projection block (matmul-backed
+        // hashing; one side live at a time)
+        2 * self.rounds * n * 4 + n * 4 + n * self.rounds * self.bucket_bits * 4
     }
 }
 

@@ -1,4 +1,4 @@
-//! YOSO attention: the paper's Figure-3 algorithm, verbatim.
+//! YOSO attention: the paper's Figure-3 algorithm.
 //!
 //! For each of m hashes: hash keys, scatter-add each value row into the
 //! bucket table `H[f(K_j)] += V_j` (size 2^tau x dv, *independent* of
@@ -7,9 +7,16 @@
 //! across hashes, so auxiliary memory is O(2^tau * dv), the paper's
 //! memory-optimized variant.
 //!
+//! Two kernels implement the hot path behind [`KernelVariant`]:
+//! the seed repo's loop (`Seed`, preserved verbatim as the A/B baseline
+//! and oracle) and the fused arena-backed kernel (`Fused`, the default —
+//! see `attention::kernel`). Outputs are bit-identical; the variant is a
+//! pure performance knob selected by `YOSO_KERNEL` at construction.
+//!
 //! `YosoE` computes the expectation (infinite hashes) exactly — O(n^2) —
 //! and is the reference for Figures 1, 6, 8.
 
+use super::kernel::{self, KernelArena, KernelVariant};
 use super::Attention;
 use crate::lsh::{collision_probability, Hasher, HyperplaneHasher,
                  HadamardHasher};
@@ -24,11 +31,27 @@ pub struct YosoAttention {
     pub fast_hash: bool,
     /// l2-normalize the output rows (N-YOSO). On by default.
     pub normalize: bool,
+    /// Which kernel runs the hot path (`attention::kernel`); defaults to
+    /// `YOSO_KERNEL` (fused unless `seed`). Bit-identical outputs.
+    pub kernel: KernelVariant,
 }
 
 impl YosoAttention {
     pub fn new(tau: usize, m: usize, fast_hash: bool) -> Self {
-        YosoAttention { tau, m, fast_hash, normalize: true }
+        YosoAttention {
+            tau,
+            m,
+            fast_hash,
+            normalize: true,
+            kernel: KernelVariant::from_env(),
+        }
+    }
+
+    /// Builder-style kernel selection (benches and the A/B tests pin the
+    /// variant explicitly instead of inheriting `YOSO_KERNEL`).
+    pub fn with_kernel(mut self, kernel: KernelVariant) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     /// Forward pass returning the raw (unnormalized) B-hat V estimate.
@@ -38,10 +61,47 @@ impl YosoAttention {
     }
 
     /// `forward_raw` plus a trace of the auxiliary memory the pass
-    /// actually allocated — lets tests assert the Remark-3 property
-    /// (allocation independent of bucket skew) at runtime instead of
-    /// trusting the analytic `workspace_bytes` model.
+    /// requires — lets tests assert the Remark-3 property (workspace
+    /// independent of bucket skew) at runtime instead of trusting the
+    /// analytic `workspace_model`.
     pub fn forward_raw_traced(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        rng: &mut Rng,
+    ) -> (Mat, WorkspaceTrace) {
+        match self.kernel {
+            KernelVariant::Seed => self.forward_seed_traced(q, k, v, rng),
+            KernelVariant::Fused => kernel::with_arena(|arena| {
+                let mut out = Mat::zeros(q.rows, v.cols);
+                let trace =
+                    kernel::forward_fused_into(self, q, k, v, rng, arena, &mut out);
+                (out, trace)
+            }),
+        }
+    }
+
+    /// The fused kernel with an explicit arena and output buffer: zero
+    /// heap allocation once both are warm — the serving hot loop's shape
+    /// and what `tests/alloc_kernel.rs` asserts with the counting
+    /// allocator. Ignores `self.kernel` (this *is* the fused entry).
+    pub fn forward_fused_into(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        rng: &mut Rng,
+        arena: &mut KernelArena,
+        out: &mut Mat,
+    ) -> WorkspaceTrace {
+        kernel::forward_fused_into(self, q, k, v, rng, arena, out)
+    }
+
+    /// The seed repo's kernel, verbatim: per-token hashing, fresh
+    /// allocations, random-offset scatter. The fused kernel's A/B
+    /// baseline and bit-identity oracle.
+    fn forward_seed_traced(
         &self,
         q: &Mat,
         k: &Mat,
@@ -61,8 +121,10 @@ impl YosoAttention {
             let hasher = HadamardHasher::new(rng, self.m, d, self.tau);
             (hasher.hash_all(&qn), hasher.hash_all(&kn))
         } else {
+            // hash_all_seed: the original per-token projection loop (the
+            // public hash_all is matmul-backed now; codes are identical)
             let hasher = HyperplaneHasher::new(rng, self.m, d, self.tau);
-            (hasher.hash_all(&qn), hasher.hash_all(&kn))
+            (hasher.hash_all_seed(&qn), hasher.hash_all_seed(&kn))
         };
 
         let n_buckets = 1usize << self.tau;
@@ -94,23 +156,56 @@ impl YosoAttention {
         let trace = WorkspaceTrace {
             table_bytes: table.len() * 4,
             codes_bytes: (codes_q.len() + codes_k.len()) * 4,
+            scratch_bytes: 0,
         };
         (out, trace)
     }
+
+    /// Analytic auxiliary-memory model in full generality: `nq` queries,
+    /// `nk` keys, head dim `d`, value dim `dv`. Matches
+    /// `forward_raw_traced`'s runtime trace exactly for the active
+    /// kernel (regression-tested with `dv != d` — the seed-era model
+    /// sized the table by `d` and was wrong whenever `dv != d`).
+    pub fn workspace_model(&self, nq: usize, nk: usize, d: usize, dv: usize) -> usize {
+        let table = (1usize << self.tau) * dv * 4;
+        match self.kernel {
+            KernelVariant::Seed => table + self.m * (nq + nk) * 4,
+            KernelVariant::Fused => {
+                table
+                    + (nq + nk) * 4 // per-hash codes
+                    + kernel::sort_scratch_bytes(self.tau, nk)
+                    + kernel::hash_scratch_bytes(
+                        self.tau,
+                        self.m,
+                        self.fast_hash,
+                        nq.max(nk),
+                        d,
+                    )
+                    + (nq + nk) * d * 4 // normalized q/k copies
+            }
+        }
+    }
 }
 
-/// Auxiliary memory actually allocated by one YOSO forward pass.
+/// Auxiliary memory required by one YOSO forward pass — a pure function
+/// of shape, never of bucket skew (Remark 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WorkspaceTrace {
     /// reused bucket table H (2^tau x dv floats)
     pub table_bytes: usize,
-    /// packed hash codes for queries + keys
+    /// packed hash codes for queries + keys (m·(nq+nk) for the seed
+    /// kernel; nq+nk for the fused kernel's per-hash buffers)
     pub codes_bytes: usize,
+    /// fused-kernel arena scratch beyond table + codes: bucket-sort
+    /// buffers, hasher planes/signs + projection scratch, normalized
+    /// q/k copies. 0 for the seed kernel (its equivalents are transient
+    /// per-call allocations, kept untracked as-was for the A/B).
+    pub scratch_bytes: usize,
 }
 
 impl WorkspaceTrace {
     pub fn total(&self) -> usize {
-        self.table_bytes + self.codes_bytes
+        self.table_bytes + self.codes_bytes + self.scratch_bytes
     }
 }
 
@@ -128,8 +223,11 @@ impl Attention for YosoAttention {
     }
 
     fn workspace_bytes(&self, n: usize, d: usize) -> usize {
-        // reused bucket table + packed codes for both sides
-        (1 << self.tau) * d * 4 + 2 * self.m * n * 4
+        self.workspace_model(n, n, d, d)
+    }
+
+    fn set_kernel(&mut self, kernel: KernelVariant) {
+        self.kernel = kernel;
     }
 }
 
@@ -252,23 +350,71 @@ mod tests {
     #[test]
     fn workspace_independent_of_bucket_skew() {
         // All keys identical => one bucket holds everything; the
-        // auxiliary memory actually allocated must not change (the
-        // Remark-3 property), unlike a per-bucket-list realization whose
-        // largest list would grow with the skew. Compare a skewed-keys
-        // run against a uniform-keys run via the runtime trace.
-        let a = YosoAttention::new(8, 4, false);
-        let (q, k_uniform, v, _) = setup(64, 16, 9);
-        let k_skewed =
-            Mat::from_fn(64, 16, |_, j| if j == 0 { 1.0 } else { 0.0 });
-        let mut r1 = Rng::new(5);
-        let (out_u, trace_u) = a.forward_raw_traced(&q, &k_uniform, &v, &mut r1);
-        let mut r2 = Rng::new(5);
-        let (out_s, trace_s) = a.forward_raw_traced(&q, &k_skewed, &v, &mut r2);
-        assert_eq!(trace_u, trace_s, "auxiliary memory must ignore skew");
-        assert_eq!(trace_u.table_bytes, (1 << 8) * 16 * 4);
-        assert!(out_u.data.iter().all(|x| x.is_finite()));
-        assert!(out_s.data.iter().all(|x| x.is_finite()));
-        // the analytic Figure-7 model agrees with the traced allocation
-        assert_eq!(a.workspace_bytes(64, 16), trace_u.total());
+        // auxiliary memory required must not change (the Remark-3
+        // property), unlike a per-bucket-list realization whose largest
+        // list would grow with the skew. Compare a skewed-keys run
+        // against a uniform-keys run via the runtime trace — under both
+        // kernels.
+        for variant in [KernelVariant::Seed, KernelVariant::Fused] {
+            let a = YosoAttention::new(8, 4, false).with_kernel(variant);
+            let (q, k_uniform, v, _) = setup(64, 16, 9);
+            let k_skewed =
+                Mat::from_fn(64, 16, |_, j| if j == 0 { 1.0 } else { 0.0 });
+            let mut r1 = Rng::new(5);
+            let (out_u, trace_u) = a.forward_raw_traced(&q, &k_uniform, &v, &mut r1);
+            let mut r2 = Rng::new(5);
+            let (out_s, trace_s) = a.forward_raw_traced(&q, &k_skewed, &v, &mut r2);
+            assert_eq!(trace_u, trace_s, "auxiliary memory must ignore skew");
+            assert_eq!(trace_u.table_bytes, (1 << 8) * 16 * 4);
+            assert!(out_u.data.iter().all(|x| x.is_finite()));
+            assert!(out_s.data.iter().all(|x| x.is_finite()));
+            // the analytic Figure-7 model agrees with the traced workspace
+            assert_eq!(a.workspace_bytes(64, 16), trace_u.total(), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_model_matches_trace_when_dv_differs_from_d() {
+        // regression for the seed-era bug: the analytic table term used
+        // d, but the real table is 2^tau x dv — wrong whenever dv != d.
+        // The model must match the runtime trace in full generality
+        // (nq != nk, dv != d) under both kernels and both hashers.
+        let mut rng = Rng::new(21);
+        let (nq, nk, d, dv) = (24, 40, 16, 48);
+        let q = Mat::randn(nq, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(nk, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(nk, dv, 1.0, &mut rng);
+        for variant in [KernelVariant::Seed, KernelVariant::Fused] {
+            for fast in [false, true] {
+                let a = YosoAttention::new(5, 6, fast).with_kernel(variant);
+                let mut r = Rng::new(11);
+                let (out, trace) = a.forward_raw_traced(&q, &k, &v, &mut r);
+                assert_eq!((out.rows, out.cols), (nq, dv));
+                assert_eq!(
+                    a.workspace_model(nq, nk, d, dv),
+                    trace.total(),
+                    "{variant:?} fast={fast}"
+                );
+                assert_eq!(trace.table_bytes, (1 << 5) * dv * 4, "table is 2^tau x dv");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_into_reuses_arena_and_matches_trait_forward() {
+        let (q, k, v, _) = setup(48, 16, 13);
+        let att = YosoAttention::new(6, 8, false).with_kernel(KernelVariant::Fused);
+        let mut r1 = Rng::new(7);
+        let reference = att.forward_raw(&q, &k, &v, &mut r1);
+        let mut arena = KernelArena::new();
+        let mut out = Mat::zeros(q.rows, v.cols);
+        for _ in 0..3 {
+            // repeated in-place forwards with one arena: same bytes
+            let mut r2 = Rng::new(7);
+            att.forward_fused_into(&q, &k, &v, &mut r2, &mut arena, &mut out);
+            for (a, b) in out.data.iter().zip(&reference.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

@@ -17,11 +17,13 @@ pub struct CountingAlloc;
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let p = unsafe { System.alloc(layout) };
         if !p.is_null() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
             let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
             PEAK.fetch_max(live, Ordering::Relaxed);
         }
@@ -46,6 +48,15 @@ pub fn peak_bytes() -> usize {
 
 pub fn live_bytes() -> usize {
     LIVE.load(Ordering::Relaxed)
+}
+
+/// Total successful heap allocations (call count, not bytes) since
+/// process start — the zero-allocation steady-state hook: snapshot,
+/// run the fused kernel, assert the delta is 0 (`tests/alloc_kernel.rs`).
+/// Process-global, so keep competing allocators off other threads while
+/// measuring.
+pub fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
 }
 
 /// Timed benchmark: `warmup` unmeasured runs, then `iters` measured runs.

@@ -22,6 +22,15 @@
 //!   exploits the estimator's embarrassing parallelism on a
 //!   `util::ThreadPool`.
 //!
+//! The YOSO hot path itself runs on the **fused zero-allocation kernel**
+//! (`attention::kernel`): a reusable per-thread `KernelArena` (bucket
+//! table, per-hash codes, counting-sort buffers, hasher storage),
+//! matmul-backed hashing, and a stable bucket-sorted streaming scatter —
+//! bit-identical to the preserved seed kernel (`YOSO_KERNEL=seed|fused`
+//! A/Bs them; property tests hold the equality), with zero steady-state
+//! heap allocation in the kernel's scratch per forward (only output
+//! buffers are allocated per call).
+//!
 //! The engine's thread-scaling model: YOSO's m hash rounds and the
 //! `[batch, heads]` fan-out are both independent work items. Each item
 //! draws its randomness from a `fold_in`-derived stream of the caller's

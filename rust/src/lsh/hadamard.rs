@@ -16,13 +16,15 @@ use super::Hasher;
 use crate::tensor::Mat;
 use crate::util::Rng;
 
+/// HD3 rounds of (random sign diagonal, Walsh–Hadamard transform).
+pub const ROUNDS: usize = 3;
+
 pub struct HadamardHasher {
     pub tau: usize,
     pub m: usize,
     pub d: usize,
-    /// (m, rounds, d) sign diagonals, flattened.
+    /// (m, ROUNDS, d) sign diagonals, flattened.
     signs: Vec<f32>,
-    rounds: usize,
 }
 
 /// In-place unnormalized Walsh–Hadamard transform; `x.len()` must be a
@@ -49,12 +51,62 @@ pub fn fwht(x: &mut [f32]) {
 impl HadamardHasher {
     pub fn new(rng: &mut Rng, m: usize, d: usize, tau: usize) -> Self {
         assert!(d.is_power_of_two(), "Hadamard needs power-of-two dim");
-        assert!(tau <= d && tau <= 24);
-        let rounds = 3;
-        let signs = (0..m * rounds * d).map(|_| rng.sign()).collect();
-        HadamardHasher { tau, m, d, signs, rounds }
+        assert!(tau <= d && tau <= 24, "tau too large");
+        let signs = (0..m * ROUNDS * d).map(|_| rng.sign()).collect();
+        HadamardHasher { tau, m, d, signs }
     }
 
+    /// Redraw the sign diagonals in place, consuming the exact RNG
+    /// sequence `new` would: an arena-held hasher refilled this way is
+    /// bit-identical to a freshly constructed one, minus the allocation.
+    pub fn refill(&mut self, rng: &mut Rng) {
+        for s in self.signs.iter_mut() {
+            *s = rng.sign();
+        }
+    }
+
+    /// Codes of hash `h` for every row of `x`, written into caller
+    /// buffers: `buf` is the (n, d) transform scratch (>= n·d floats —
+    /// the fused kernel hands its arena's slot here, so steady-state
+    /// hashing allocates nothing), `codes` gets one slot per row. The
+    /// batch-matrix transform structure (rounds applied matrix-at-a-time
+    /// for sign-diagonal cache reuse and long vectorizable loops; see
+    /// EXPERIMENTS.md §Perf) is unchanged from `hash_all`, so codes are
+    /// identical.
+    pub fn hash_block_into(
+        &self,
+        x: &Mat,
+        h: usize,
+        buf: &mut [f32],
+        codes: &mut [u32],
+    ) {
+        assert_eq!(x.cols, self.d);
+        assert!(h < self.m);
+        let n = x.rows;
+        let d = self.d;
+        let buf = &mut buf[..n * d];
+        let codes = &mut codes[..n];
+        buf.copy_from_slice(&x.data);
+        for r in 0..ROUNDS {
+            let base = (h * ROUNDS + r) * d;
+            let signs = &self.signs[base..base + d];
+            for row in buf.chunks_exact_mut(d) {
+                for (v, s) in row.iter_mut().zip(signs) {
+                    *v *= s;
+                }
+                fwht(row);
+            }
+        }
+        for (i, row) in buf.chunks_exact(d).enumerate() {
+            let mut code = 0u32;
+            for t in 0..self.tau {
+                if row[t] >= 0.0 {
+                    code |= 1 << t;
+                }
+            }
+            codes[i] = code;
+        }
+    }
 }
 
 impl Hasher for HadamardHasher {
@@ -69,34 +121,10 @@ impl Hasher for HadamardHasher {
     fn hash_all(&self, x: &Mat) -> Vec<u32> {
         assert_eq!(x.cols, self.d);
         let n = x.rows;
-        let d = self.d;
         let mut codes = vec![0u32; self.m * n];
-        // Batch the transform: one (n, d) buffer per hash, rounds applied
-        // matrix-at-a-time. ~7x faster than per-token scratch (better
-        // cache reuse of the sign diagonals + longer vectorizable loops);
-        // see EXPERIMENTS.md §Perf.
-        let mut buf = vec![0.0f32; n * d];
+        let mut buf = vec![0.0f32; n * self.d];
         for h in 0..self.m {
-            buf.copy_from_slice(&x.data);
-            for r in 0..self.rounds {
-                let base = (h * self.rounds + r) * d;
-                let signs = &self.signs[base..base + d];
-                for row in buf.chunks_exact_mut(d) {
-                    for (v, s) in row.iter_mut().zip(signs) {
-                        *v *= s;
-                    }
-                    fwht(row);
-                }
-            }
-            for (i, row) in buf.chunks_exact(d).enumerate() {
-                let mut code = 0u32;
-                for t in 0..self.tau {
-                    if row[t] >= 0.0 {
-                        code |= 1 << t;
-                    }
-                }
-                codes[h * n + i] = code;
-            }
+            self.hash_block_into(x, h, &mut buf, &mut codes[h * n..(h + 1) * n]);
         }
         codes
     }
@@ -123,6 +151,33 @@ mod tests {
         let mut x = vec![1.0f32, 2.0];
         fwht(&mut x);
         assert_eq!(x, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "tau too large")]
+    fn tau_beyond_code_width_panics() {
+        let mut rng = Rng::new(7);
+        let _ = HadamardHasher::new(&mut rng, 1, 32, 25);
+    }
+
+    #[test]
+    fn block_into_matches_hash_all_and_refill_matches_new() {
+        let mut rng = Rng::new(5);
+        let fresh = HadamardHasher::new(&mut rng, 4, 32, 6);
+        let x = Mat::randn(19, 32, 1.0, &mut rng).unit_rows();
+        let all = fresh.hash_all(&x);
+        let mut buf = vec![0.0f32; x.rows * 32];
+        let mut codes = vec![0u32; x.rows];
+        for h in 0..fresh.m {
+            fresh.hash_block_into(&x, h, &mut buf, &mut codes);
+            assert_eq!(&codes[..], &all[h * x.rows..(h + 1) * x.rows], "hash {h}");
+        }
+        // arena-style reuse: refill must reproduce a fresh construction
+        let mut r0 = Rng::new(999);
+        let mut reused = HadamardHasher::new(&mut r0, 4, 32, 6);
+        let mut r1 = Rng::new(5);
+        reused.refill(&mut r1);
+        assert_eq!(reused.hash_all(&x), all);
     }
 
     #[test]

@@ -3,6 +3,18 @@
 //! For unit vectors u, v: P[sign(r.u) = sign(r.v)] = 1 - theta(u,v)/pi
 //! per hyperplane; concatenating tau hyperplanes gives the paper's
 //! collision probability (1 - theta/pi)^tau.
+//!
+//! Two hashing paths share the same planes and produce bit-identical
+//! codes (every projection is exactly `linalg::dot`, and f32 multiply
+//! commutes bitwise):
+//!
+//! * `hash_all` — one blocked matmul_t of the input against the whole
+//!   (m·tau, d) plane matrix, then sign extraction. The fast default.
+//! * `hash_one` / `hash_all_seed` — the seed repo's per-token projection
+//!   loop, kept verbatim as the `KernelVariant::Seed` A/B baseline.
+//!
+//! `hash_block_into` is the fused kernel's zero-allocation entry: codes
+//! of one hash for every row, written into caller (arena) buffers.
 
 use super::Hasher;
 use crate::tensor::{linalg, Mat};
@@ -24,6 +36,15 @@ impl HyperplaneHasher {
         HyperplaneHasher { tau, m, d, planes: Mat::randn(m * tau, d, 1.0, rng) }
     }
 
+    /// Redraw the planes in place, consuming the exact RNG sequence
+    /// `new` would: an arena-held hasher refilled this way is
+    /// bit-identical to a freshly constructed one, minus the allocation.
+    pub fn refill(&mut self, rng: &mut Rng) {
+        for p in self.planes.data.iter_mut() {
+            *p = rng.normal();
+        }
+    }
+
     /// Hash one vector for hash function `h`.
     pub fn hash_one(&self, x: &[f32], h: usize) -> u32 {
         let mut code = 0u32;
@@ -34,6 +55,64 @@ impl HyperplaneHasher {
             }
         }
         code
+    }
+
+    /// The seed repo's `hash_all`: per-token, per-hash `hash_one` loop.
+    /// Kept verbatim as the kernel A/B baseline (`KernelVariant::Seed`);
+    /// codes are bit-identical to the matmul-backed `hash_all`.
+    pub fn hash_all_seed(&self, x: &Mat) -> Vec<u32> {
+        assert_eq!(x.cols, self.d);
+        let n = x.rows;
+        let mut codes = vec![0u32; self.m * n];
+        for i in 0..n {
+            let row = x.row(i);
+            for h in 0..self.m {
+                codes[h * n + i] = self.hash_one(row, h);
+            }
+        }
+        codes
+    }
+
+    /// Codes of hash `h` for every row of `x`, matmul-backed and
+    /// allocation-free: projections land in `proj` (>= n·tau floats, an
+    /// (n, tau) block), sign bits in `codes` (>= n slots). Rows are
+    /// tiled 8 at a time so each plane row streams from cache once per
+    /// tile instead of once per token; every projection is still exactly
+    /// `linalg::dot`, so codes match `hash_one` bit-for-bit.
+    pub fn hash_block_into(
+        &self,
+        x: &Mat,
+        h: usize,
+        proj: &mut [f32],
+        codes: &mut [u32],
+    ) {
+        assert_eq!(x.cols, self.d);
+        assert!(h < self.m);
+        let n = x.rows;
+        let tau = self.tau;
+        let proj = &mut proj[..n * tau];
+        let codes = &mut codes[..n];
+        let row0 = h * tau;
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + 8).min(n);
+            for t in 0..tau {
+                let plane = self.planes.row(row0 + t);
+                for i in i0..i1 {
+                    proj[i * tau + t] = linalg::dot(x.row(i), plane);
+                }
+            }
+            i0 = i1;
+        }
+        for (i, code) in codes.iter_mut().enumerate() {
+            let mut c = 0u32;
+            for (t, &p) in proj[i * tau..(i + 1) * tau].iter().enumerate() {
+                if p >= 0.0 {
+                    c |= 1 << t;
+                }
+            }
+            *code = c;
+        }
     }
 }
 
@@ -49,11 +128,23 @@ impl Hasher for HyperplaneHasher {
     fn hash_all(&self, x: &Mat) -> Vec<u32> {
         assert_eq!(x.cols, self.d);
         let n = x.rows;
+        // One blocked matmul against the whole (m·tau, d) plane matrix —
+        // the tiling in `matmul_nt_into` streams the planes once per
+        // 8-token tile instead of once per token — then sign extraction.
+        // Each element is exactly `dot`, so codes equal `hash_one`'s.
+        let mut proj = Mat::zeros(n, self.m * self.tau);
+        linalg::matmul_nt_into(x, &self.planes, &mut proj);
         let mut codes = vec![0u32; self.m * n];
         for i in 0..n {
-            let row = x.row(i);
+            let prow = proj.row(i);
             for h in 0..self.m {
-                codes[h * n + i] = self.hash_one(row, h);
+                let mut code = 0u32;
+                for t in 0..self.tau {
+                    if prow[h * self.tau + t] >= 0.0 {
+                        code |= 1 << t;
+                    }
+                }
+                codes[h * n + i] = code;
             }
         }
         codes
@@ -83,6 +174,51 @@ mod tests {
         let a = hasher.hash_all(&x);
         let b = hasher.hash_all(&x);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "tau too large")]
+    fn tau_beyond_code_width_panics() {
+        // packed codes are u32 with a sign bit per tau: the ctor must
+        // reject widths the code type cannot hold (satellite hardening)
+        let mut rng = Rng::new(2);
+        let _ = HyperplaneHasher::new(&mut rng, 1, 16, 25);
+    }
+
+    #[test]
+    fn matmul_hash_matches_seed_loop_and_hash_one() {
+        // the three hashing paths (blocked matmul, per-hash block into
+        // caller buffers, per-token seed loop) must agree exactly
+        let mut rng = Rng::new(3);
+        let hasher = HyperplaneHasher::new(&mut rng, 5, 24, 7);
+        let x = Mat::randn(37, 24, 1.0, &mut rng).unit_rows();
+        let fast = hasher.hash_all(&x);
+        let seed = hasher.hash_all_seed(&x);
+        assert_eq!(fast, seed);
+        let n = x.rows;
+        let mut proj = vec![0.0f32; n * hasher.tau];
+        let mut codes = vec![0u32; n];
+        for h in 0..hasher.m {
+            hasher.hash_block_into(&x, h, &mut proj, &mut codes);
+            assert_eq!(&codes[..], &fast[h * n..(h + 1) * n], "hash {h}");
+            for i in 0..n {
+                assert_eq!(codes[i], hasher.hash_one(x.row(i), h));
+            }
+        }
+    }
+
+    #[test]
+    fn refill_matches_fresh_construction() {
+        let mut r1 = Rng::new(9);
+        let fresh = HyperplaneHasher::new(&mut r1, 3, 16, 5);
+        // build with one seed, refill with another: must equal `fresh`
+        let mut r0 = Rng::new(1234);
+        let mut reused = HyperplaneHasher::new(&mut r0, 3, 16, 5);
+        let mut r2 = Rng::new(9);
+        reused.refill(&mut r2);
+        let mut rx = Rng::new(77);
+        let x = Mat::randn(12, 16, 1.0, &mut rx).unit_rows();
+        assert_eq!(fresh.hash_all(&x), reused.hash_all(&x));
     }
 
     #[test]

@@ -451,6 +451,31 @@ mod tests {
     }
 
     #[test]
+    fn logits_independent_of_kernel_variant() {
+        // the serving determinism contract extends across kernels: the
+        // fused arena kernel and the seed kernel must produce identical
+        // logits end-to-end through the encoder (hash codes and
+        // per-bucket summation order are preserved bit-for-bit)
+        use crate::attention::KernelVariant;
+        let cfg = EncoderConfig::base(64, 32, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 5);
+        let enc = Encoder::new(cfg, &params);
+        let ids: Vec<i32> = (0..20).map(|i| (i % 60) + 4).collect();
+        let segs = vec![0i32; 20];
+        let mh = MultiHeadAttention::serial();
+        let mut logits = Vec::new();
+        for variant in [KernelVariant::Seed, KernelVariant::Fused] {
+            let attn: Arc<dyn Attention> =
+                Arc::new(YosoAttention::new(5, 8, false).with_kernel(variant));
+            let mut rng = Rng::new(9);
+            logits.push(enc.classify_bucketed(&ids, &segs, 32, &attn, &mh, &mut rng));
+        }
+        for (a, b) in logits[0].iter().zip(&logits[1]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "kernel variant changed logits");
+        }
+    }
+
+    #[test]
     fn repeated_forward_draws_fresh_randomness() {
         // forward advances the caller rng: consecutive calls on the same
         // input must sample different hash functions (Monte-Carlo use).

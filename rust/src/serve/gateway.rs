@@ -533,9 +533,10 @@ impl Gateway {
             cfg.base.seed,
         ));
         crate::info!(
-            "gateway: attention={} replicas={replicas} capacity={} \
+            "gateway: attention={} kernel={} replicas={replicas} capacity={} \
              buckets={:?} bucketing={} threads/replica={}",
             cfg.base.attention,
+            cfg.base.kernel.label(),
             shared.capacity,
             shared.route.widths,
             cfg.bucketing,

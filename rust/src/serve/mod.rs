@@ -33,10 +33,22 @@
 //! CPU-path logits are a pure function of (config seed, request
 //! content): randomness comes from the content-hash RNG stream and the
 //! compute width is the content-canonical `model::encoder::bucket_len`.
-//! Batch placement, bucket layout, replica count, thread count, and
-//! arrival order are all wall-clock knobs only — the gateway property
-//! test asserts bit-identity against the single-loop path across all of
-//! them.
+//! Batch placement, bucket layout, replica count, thread count, arrival
+//! order, and the YOSO kernel variant (`CpuServeConfig::kernel`; seed vs
+//! fused, see `attention::kernel`) are all wall-clock knobs only — the
+//! gateway property test asserts bit-identity against the single-loop
+//! path across all of them.
+//!
+//! # Steady-state allocation
+//!
+//! With the default fused kernel, every long-lived worker (pool worker,
+//! gateway replica) serves YOSO forwards out of a warm thread-local
+//! `KernelArena`: the kernel's internal scratch — bucket table, codes,
+//! hasher storage, sort buffers, normalized q/k copies — allocates
+//! nothing after warm-up (`tests/alloc_kernel.rs` asserts zero for the
+//! arena entry point). Per-request output buffers (the attention output
+//! `Mat`, encoder activations, the logits vec) are still allocated per
+//! forward.
 //!
 //! # Shutdown
 //!

@@ -19,7 +19,9 @@
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::{Request, Response};
-use crate::attention::{by_name, Attention, ChunkPolicy, MultiHeadAttention};
+use crate::attention::{
+    by_name, Attention, ChunkPolicy, KernelVariant, MultiHeadAttention,
+};
 use crate::data::special;
 use crate::model::encoder::{
     bucket_len, encoder_abi_spec, Encoder, EncoderConfig,
@@ -139,6 +141,13 @@ pub struct CpuServeConfig {
     /// contract for engine-level serving paths (fused per-request hash
     /// fan-out, workspace accounting) without a config ABI break later
     pub chunk_policy: ChunkPolicy,
+    /// YOSO kernel variant (`attention::kernel`) every worker's
+    /// attention instance runs. The fused default keeps steady-state
+    /// request forwards allocation-free (each pool worker / gateway
+    /// replica serves out of its warm thread-local `KernelArena`);
+    /// `Seed` pins the baseline for A/B serving benchmarks. Logits are
+    /// bit-identical either way (property-tested).
+    pub kernel: KernelVariant,
     pub seed: u64,
 }
 
@@ -150,6 +159,7 @@ impl Default for CpuServeConfig {
             encoder: EncoderConfig::base(2005, 128, 2),
             threads: 0,
             chunk_policy: ChunkPolicy::default(),
+            kernel: KernelVariant::from_env(),
             seed: 42,
         }
     }
@@ -355,7 +365,11 @@ pub(crate) fn serve_forward(
 /// instance (some zoo variants draw projections from the ctor RNG).
 pub(crate) fn build_attention(cfg: &CpuServeConfig) -> Arc<dyn Attention> {
     let mut ctor_rng = Rng::new(cfg.seed ^ 0x5EED_CAFE);
-    Arc::from(by_name(&cfg.attention, &mut ctor_rng, cfg.encoder.d_head()))
+    let mut attn = by_name(&cfg.attention, &mut ctor_rng, cfg.encoder.d_head());
+    // pin the configured kernel variant (no-op for non-YOSO zoo members)
+    // so every replica and the single-loop path run the same kernel
+    attn.set_kernel(cfg.kernel);
+    Arc::from(attn)
 }
 
 /// `threads == 0` means every available core.
@@ -404,9 +418,10 @@ fn serve_loop_cpu(
     let threads = resolve_threads(cfg.threads);
     let pool = ThreadPool::new(threads);
     crate::info!(
-        "cpu serve: attention={} threads={threads} chunk={} vocab={} seq={}",
+        "cpu serve: attention={} threads={threads} chunk={} kernel={} vocab={} seq={}",
         cfg.attention,
         cfg.chunk_policy.label(),
+        cfg.kernel.label(),
         ecfg.vocab_size,
         ecfg.max_len
     );

@@ -37,17 +37,28 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 }
 
 /// C = A @ B^T (B stored row-major, i.e. dot products of rows).
+///
+/// A's rows are tiled 8 at a time so each B row streams from cache once
+/// per tile instead of once per A row — ~8x less B traffic when B spills
+/// L1 (the hashing and Q K^T shapes). Every element is still exactly
+/// `dot(a_i, b_j)`, so outputs are bit-identical to the untiled loop and
+/// hash sign bits / attention scores are unchanged.
 pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "inner dims");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "out dims");
     let k = a.cols;
-    for i in 0..a.rows {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
-        for j in 0..b.rows {
+    let m = b.rows;
+    let mut i0 = 0;
+    while i0 < a.rows {
+        let i1 = (i0 + 8).min(a.rows);
+        for j in 0..m {
             let brow = &b.data[j * k..(j + 1) * k];
-            crow[j] = dot(arow, brow);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                c.data[i * m + j] = dot(arow, brow);
+            }
         }
+        i0 = i1;
     }
 }
 

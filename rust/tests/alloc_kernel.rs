@@ -1,0 +1,66 @@
+//! Zero-allocation steady state for the fused kernel, asserted with the
+//! counting global allocator (`bench_support::CountingAlloc` + the
+//! `alloc_count` hook): after the arena and output buffer are warm, a
+//! fused forward must perform **zero** heap allocations — the tentpole's
+//! "steady-state serving does zero heap allocation per request" claim,
+//! checked at the kernel layer where it is exact. The seed kernel's
+//! per-forward allocation count is measured alongside (it must be > 0;
+//! the delta is the A/B story EXPERIMENTS.md §Perf tells).
+//!
+//! Single #[test]: the allocation counter is process-global, and a
+//! concurrent test thread's allocations would pollute the window.
+
+use yoso::attention::{KernelArena, KernelVariant, YosoAttention};
+use yoso::bench_support::{alloc_count, CountingAlloc};
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn fused_steady_state_allocates_zero() {
+    let mut gen = Rng::new(1);
+    let n = 96;
+    let d = 32;
+    let q = Mat::randn(n, d, 1.0, &mut gen).unit_rows();
+    let k = Mat::randn(n, d, 1.0, &mut gen).unit_rows();
+    let v = Mat::randn(n, d, 1.0, &mut gen);
+
+    for fast in [false, true] {
+        let att = YosoAttention::new(6, 8, fast).with_kernel(KernelVariant::Fused);
+        let mut arena = KernelArena::new();
+        let mut out = Mat::zeros(n, d);
+        let mut rng = Rng::new(7);
+        // warm-up: first pass allocates the arena to this geometry
+        for _ in 0..2 {
+            att.forward_fused_into(&q, &k, &v, &mut rng, &mut arena, &mut out);
+        }
+        let before = alloc_count();
+        for _ in 0..5 {
+            att.forward_fused_into(&q, &k, &v, &mut rng, &mut arena, &mut out);
+        }
+        let fused_allocs = alloc_count() - before;
+        assert_eq!(
+            fused_allocs, 0,
+            "fused kernel allocated in steady state (fast={fast})"
+        );
+    }
+
+    // the seed kernel allocates every forward (codes, table, unit rows,
+    // hasher, output) — the baseline the arena removes
+    let seed_att = YosoAttention::new(6, 8, false).with_kernel(KernelVariant::Seed);
+    let mut rng = Rng::new(7);
+    let _ = seed_att.forward_raw(&q, &k, &v, &mut rng); // warm allocator caches
+    let before = alloc_count();
+    let iters = 5;
+    for _ in 0..iters {
+        std::hint::black_box(seed_att.forward_raw(&q, &k, &v, &mut rng));
+    }
+    let seed_allocs = alloc_count() - before;
+    assert!(
+        seed_allocs >= iters * 5,
+        "seed kernel should allocate per forward (got {seed_allocs} over {iters})"
+    );
+    println!("seed kernel: {} allocs/forward; fused kernel: 0", seed_allocs / iters);
+}

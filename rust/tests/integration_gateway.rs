@@ -5,7 +5,7 @@
 //! client-observed outcomes match the gateway's own counts).
 
 use std::time::Duration;
-use yoso::attention::ChunkPolicy;
+use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
     BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig, Shed,
@@ -27,6 +27,7 @@ fn tiny_cfg(seed: u64) -> CpuServeConfig {
         },
         threads: 1,
         chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
         seed,
     }
 }

@@ -4,7 +4,7 @@
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
-use yoso::attention::ChunkPolicy;
+use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::data::glue_synth::{GlueGenerator, GlueTask};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{BatchPolicy, CpuServeConfig, ServerHandle};
@@ -90,6 +90,7 @@ fn tiny_cpu_config(attention: &str, seed: u64) -> CpuServeConfig {
         },
         threads: test_threads(2),
         chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
         seed,
     }
 }

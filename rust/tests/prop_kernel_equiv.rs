@@ -1,0 +1,173 @@
+//! Seed-vs-fused kernel equivalence properties (the PR-4 tentpole's
+//! oracle): the fused arena-backed kernel (`attention::kernel`) must be
+//! **bit-identical** to the preserved seed kernel across zoo shapes x
+//! tau x m x uniform/skewed keys x both hashers x thread counts — the
+//! stable counting-sort scatter keeps each bucket's additions in
+//! ascending-j order and every hash projection is exactly `linalg::dot`,
+//! so this is an equality the implementation owes, not a tolerance.
+//! Also: the Remark-3 property (the fused `WorkspaceTrace` is a pure
+//! function of shape, never of bucket skew) and the analytic
+//! `workspace_model` matching the runtime trace under both kernels.
+//! Pool widths honor `YOSO_TEST_THREADS`; CI sweeps `YOSO_KERNEL` too,
+//! which these tests deliberately ignore by pinning variants.
+
+use yoso::attention::{Engine, KernelVariant, YosoAttention};
+use yoso::tensor::Mat;
+use yoso::testing::test_threads;
+use yoso::util::Rng;
+
+fn bits_equal(a: &Mat, b: &Mat) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data
+            .iter()
+            .zip(&b.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// (nq, nk, d, dv) — deliberately asymmetric shapes: cross-attention
+/// counts, dv != d (the workspace-model regression), odd sizes that
+/// exercise the chunks_exact(8) remainders and the matmul row tiling.
+const SHAPES: [(usize, usize, usize, usize); 4] = [
+    (64, 64, 32, 32),
+    (48, 80, 16, 24),
+    (33, 57, 16, 40),
+    (64, 64, 32, 8),
+];
+
+/// Uniform random keys, or maximally skewed (every key identical — one
+/// bucket holds everything).
+fn keys(nk: usize, d: usize, skewed: bool, rng: &mut Rng) -> Mat {
+    if skewed {
+        Mat::from_fn(nk, d, |_, j| if j == 0 { 1.0 } else { 0.0 })
+    } else {
+        Mat::randn(nk, d, 1.0, rng).unit_rows()
+    }
+}
+
+#[test]
+fn fused_bit_identical_to_seed_across_shapes_hashers_and_skew() {
+    for &(nq, nk, d, dv) in &SHAPES {
+        for fast in [false, true] {
+            if fast && !d.is_power_of_two() {
+                continue;
+            }
+            for (tau, m) in [(3usize, 1usize), (5, 8), (8, 32)] {
+                for skewed in [false, true] {
+                    let mut gen = Rng::new(
+                        (nq * 31 + d * 7 + tau * 3 + m) as u64
+                            ^ ((skewed as u64) << 40),
+                    );
+                    let q = Mat::randn(nq, d, 1.0, &mut gen).unit_rows();
+                    let k = keys(nk, d, skewed, &mut gen);
+                    let v = Mat::randn(nk, dv, 1.0, &mut gen);
+                    let seed_att = YosoAttention::new(tau, m, fast)
+                        .with_kernel(KernelVariant::Seed);
+                    let fused_att = YosoAttention::new(tau, m, fast)
+                        .with_kernel(KernelVariant::Fused);
+                    let mut r1 = Rng::new(0xBEEF ^ m as u64);
+                    let (ys, ts) = seed_att.forward_raw_traced(&q, &k, &v, &mut r1);
+                    let mut r2 = Rng::new(0xBEEF ^ m as u64);
+                    let (yf, tf) = fused_att.forward_raw_traced(&q, &k, &v, &mut r2);
+                    assert!(
+                        bits_equal(&ys, &yf),
+                        "fused != seed at nq={nq} nk={nk} d={d} dv={dv} \
+                         tau={tau} m={m} fast={fast} skewed={skewed}"
+                    );
+                    // analytic model == runtime trace, both kernels
+                    assert_eq!(seed_att.workspace_model(nq, nk, d, dv), ts.total());
+                    assert_eq!(fused_att.workspace_model(nq, nk, d, dv), tf.total());
+                    // and the normalized (N-YOSO) trait forward agrees too
+                    let mut r3 = Rng::new(0xF00D);
+                    let mut r4 = Rng::new(0xF00D);
+                    use yoso::attention::Attention;
+                    let ns = seed_att.forward(&q, &k, &v, &mut r3);
+                    let nf = fused_att.forward(&q, &k, &v, &mut r4);
+                    assert!(bits_equal(&ns, &nf), "normalized forward diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_trace_is_skew_independent() {
+    // Remark 3 under the fused kernel: identical keys (one bucket holds
+    // every value row) must not change the arena footprint the pass
+    // requires — the counting sort's buffers are sized by shape alone.
+    for &(nq, nk, d, dv) in &SHAPES {
+        for fast in [false, true] {
+            if fast && !d.is_power_of_two() {
+                continue;
+            }
+            let att = YosoAttention::new(6, 4, fast).with_kernel(KernelVariant::Fused);
+            let mut gen = Rng::new(77);
+            let q = Mat::randn(nq, d, 1.0, &mut gen).unit_rows();
+            let k_uniform = keys(nk, d, false, &mut gen);
+            let k_skewed = keys(nk, d, true, &mut gen);
+            let v = Mat::randn(nk, dv, 1.0, &mut gen);
+            let mut r1 = Rng::new(3);
+            let (_, trace_u) = att.forward_raw_traced(&q, &k_uniform, &v, &mut r1);
+            let mut r2 = Rng::new(3);
+            let (_, trace_s) = att.forward_raw_traced(&q, &k_skewed, &v, &mut r2);
+            assert_eq!(
+                trace_u, trace_s,
+                "fused workspace varied with skew (nq={nq} nk={nk} fast={fast})"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_fused_bit_identical_to_engine_seed_across_thread_counts() {
+    // the per-hash engine fan-out must preserve the equivalence at every
+    // pool width: fused rounds run out of per-worker arenas, and arena
+    // placement (which worker ran which round) must never leak into the
+    // bytes
+    let mut gen = Rng::new(5);
+    let q = Mat::randn(72, 32, 1.0, &mut gen).unit_rows();
+    let k = Mat::randn(72, 32, 1.0, &mut gen).unit_rows();
+    let v = Mat::randn(72, 32, 1.0, &mut gen);
+    for fast in [false, true] {
+        let seed_att = YosoAttention::new(6, 12, fast).with_kernel(KernelVariant::Seed);
+        let fused_att =
+            YosoAttention::new(6, 12, fast).with_kernel(KernelVariant::Fused);
+        let rng = Rng::new(31);
+        let reference = Engine::serial().forward_yoso(&seed_att, &q, &k, &v, &rng);
+        for threads in [1usize, 2, test_threads(4)] {
+            let s = Engine::new(threads).forward_yoso(&seed_att, &q, &k, &v, &rng);
+            let f = Engine::new(threads).forward_yoso(&fused_att, &q, &k, &v, &rng);
+            assert!(bits_equal(&reference, &s), "seed engine t={threads} fast={fast}");
+            assert!(bits_equal(&reference, &f), "fused engine t={threads} fast={fast}");
+        }
+    }
+}
+
+#[test]
+fn arena_reuse_across_geometries_is_stateless() {
+    // one thread serving mixed shapes back-to-back: the thread-local
+    // arena grows to the high-water mark and every pass slices buffers
+    // to its own logical size — stale tails from a larger earlier pass
+    // must never leak into a smaller later pass. Run the whole sweep
+    // twice and require pass-2 bytes == pass-1 bytes.
+    let run_all = || -> Vec<Mat> {
+        SHAPES
+            .iter()
+            .map(|&(nq, nk, d, dv)| {
+                let mut gen = Rng::new((nq + nk + dv) as u64);
+                let q = Mat::randn(nq, d, 1.0, &mut gen).unit_rows();
+                let k = Mat::randn(nk, d, 1.0, &mut gen).unit_rows();
+                let v = Mat::randn(nk, dv, 1.0, &mut gen);
+                let att =
+                    YosoAttention::new(6, 6, false).with_kernel(KernelVariant::Fused);
+                let mut r = Rng::new(13);
+                att.forward_raw(&q, &k, &v, &mut r)
+            })
+            .collect()
+    };
+    let first = run_all();
+    let second = run_all();
+    for (a, b) in first.iter().zip(&second) {
+        assert!(bits_equal(a, b), "arena reuse changed bytes");
+    }
+}

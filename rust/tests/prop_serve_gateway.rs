@@ -9,7 +9,7 @@
 //! `YOSO_TEST_THREADS` so CI sweeps them.
 
 use std::time::Duration;
-use yoso::attention::ChunkPolicy;
+use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
     BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig,
@@ -34,6 +34,9 @@ fn tiny_cfg(seed: u64) -> CpuServeConfig {
         },
         threads: test_threads(2),
         chunk_policy: ChunkPolicy::default(),
+        // env default: CI's scheduler-stress sweep runs this whole
+        // contract under both kernels via YOSO_KERNEL
+        kernel: KernelVariant::from_env(),
         seed,
     }
 }
