@@ -19,8 +19,8 @@ use yoso::attention::KernelVariant;
 use yoso::data::glue_synth::{GlueGenerator, GlueTask};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
-    BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig,
-    ServerHandle, ShedPolicy,
+    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig, Gateway,
+    GatewayConfig, SchedPolicy, ServerHandle, ShedPolicy,
 };
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -58,7 +58,13 @@ fn gateway_demo() -> anyhow::Result<()> {
     cfg.replicas = replicas;
     cfg.queue_capacity = 128;
     cfg.shed = ShedPolicy::Reject;
-    cfg.batch = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) };
+    // width-scaled per-bucket policies + work-conserving deadline-aware
+    // scheduling: the production defaults, spelled out for the demo
+    cfg.batch = BatchPolicyTable::scaled(BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+    });
+    cfg.sched = SchedPolicy::Conserve;
     cfg.buckets = BucketLayout::pow2(16, 128);
     let gw = Gateway::spawn(cfg);
 

@@ -14,8 +14,11 @@
 //!   loads the artifacts, training orchestrator, serving stack (artifact
 //!   executor + an artifact-free CPU fallback, fronted by the
 //!   **multi-replica `serve::gateway`** with bounded-queue admission
-//!   control, length-bucketed dynamic batching, deadline-aware dequeue,
-//!   and log-bucketed `metrics::Histogram` observability), a pure-Rust
+//!   control, length-bucketed dynamic batching with per-bucket policies,
+//!   a work-conserving deadline-earliest-first scheduler
+//!   (`serve::sched`, FIFO kept for A/B) proven on a deterministic
+//!   virtual-clock simulator (`serve::clock` + `serve::sim`), and
+//!   log-bucketed `metrics::Histogram` observability), a pure-Rust
 //!   attention library (YOSO + every baseline) for the
 //!   efficiency/approximation studies, metrics, checkpointing — and a
 //!   **parallel multi-head forward engine** (`attention::engine`) that

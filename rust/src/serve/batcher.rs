@@ -1,10 +1,19 @@
 //! Dynamic batching policy: max-batch-or-max-wait, the same policy the
 //! serving systems the paper's efficiency claims target (vLLM-style
 //! routers) use for non-autoregressive models.
+//!
+//! Time comes off an injected [`Clock`]: under [`SystemClock`] the
+//! aging behavior is the production wall-clock behavior; under
+//! [`SimClock`](super::clock::SimClock) `next_batch` never touches the
+//! wall clock — it drains what is queued and *advances virtual time* to
+//! the aging deadline — so the aging tests below assert exact virtual
+//! durations instead of sleeping and hoping.
 
+use super::clock::{Clock, SystemClock};
 use super::Request;
 use std::sync::mpsc::Receiver;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -20,9 +29,21 @@ impl Default for BatchPolicy {
 
 pub struct Batcher {
     pub policy: BatchPolicy,
+    clock: Arc<dyn Clock>,
 }
 
 impl Batcher {
+    /// Production batcher on a fresh wall clock. Serve loops that stamp
+    /// `Request::enqueued` themselves should share one clock via
+    /// [`Batcher::with_clock`] so stamps and aging live on one timeline.
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher::with_clock(policy, Arc::new(SystemClock::new()))
+    }
+
+    pub fn with_clock(policy: BatchPolicy, clock: Arc<dyn Clock>) -> Batcher {
+        Batcher { policy, clock }
+    }
+
     /// Collect the next batch. Blocks for the first request; then drains
     /// until max_batch or until the first request has aged max_wait
     /// **counted from its `enqueued` timestamp**, not from when `recv`
@@ -35,10 +56,13 @@ impl Batcher {
         let first = rx.recv().ok()?;
         // clamped to now: an over-aged first request makes the deadline
         // "immediately", never a deadline in the past
-        let deadline = (first.enqueued + self.policy.max_wait).max(Instant::now());
+        let deadline = first
+            .enqueued
+            .saturating_add(self.policy.max_wait)
+            .max(self.clock.now());
         let mut batch = vec![first];
         while batch.len() < self.policy.max_batch {
-            let now = Instant::now();
+            let now = self.clock.now();
             if now >= deadline {
                 // wait budget spent: take what is queued, without blocking
                 match rx.try_recv() {
@@ -47,7 +71,16 @@ impl Batcher {
                 }
                 continue;
             }
-            match rx.recv_timeout(deadline - now) {
+            if self.clock.is_virtual() {
+                // virtual time: never wall-block — drain what is queued,
+                // then let the waiter advance the clock to the deadline
+                match rx.try_recv() {
+                    Ok(req) => batch.push(req),
+                    Err(_) => self.clock.wait_until(deadline),
+                }
+                continue;
+            }
+            match rx.recv_timeout(deadline.duration_since(now)) {
                 Ok(req) => batch.push(req),
                 Err(_) => break, // timeout or disconnect: ship what we have
             }
@@ -58,78 +91,94 @@ impl Batcher {
 
 #[cfg(test)]
 mod tests {
+    use super::super::clock::{SimClock, Tick};
     use super::*;
+    use crate::util::Rng;
     use std::sync::mpsc::channel;
 
-    fn req() -> (Request, std::sync::mpsc::Receiver<super::super::Response>) {
+    fn req(clock: &SimClock) -> (Request, std::sync::mpsc::Receiver<super::super::Response>) {
         let (tx, rx) = channel();
         (
             Request {
                 input_ids: vec![1, 2, 3],
                 segment_ids: vec![0, 0, 0],
                 reply: tx,
-                enqueued: Instant::now(),
+                enqueued: clock.now(),
             },
             rx,
         )
     }
 
-    #[test]
-    fn collects_up_to_max_batch() {
-        let (tx, rx) = channel();
-        let mut keep = Vec::new();
-        for _ in 0..5 {
-            let (r, k) = req();
-            keep.push(k);
-            tx.send(r).unwrap();
-        }
-        let b = Batcher {
-            policy: BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(50) },
-        };
-        let batch = b.next_batch(&rx).unwrap();
-        assert_eq!(batch.len(), 3);
-        let batch2 = b.next_batch(&rx).unwrap();
-        assert_eq!(batch2.len(), 2);
+    fn sim_batcher(
+        clock: &Arc<SimClock>,
+        max_batch: usize,
+        max_wait_ms: u64,
+    ) -> Batcher {
+        Batcher::with_clock(
+            BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+            Arc::clone(clock) as Arc<dyn Clock>,
+        )
     }
 
     #[test]
-    fn respects_max_wait() {
+    fn collects_up_to_max_batch() {
+        let clock = Arc::new(SimClock::new());
         let (tx, rx) = channel();
-        let (r, _k) = req();
+        let mut keep = Vec::new();
+        for _ in 0..5 {
+            let (r, k) = req(&clock);
+            keep.push(k);
+            tx.send(r).unwrap();
+        }
+        let b = sim_batcher(&clock, 3, 50);
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        // a full batch ships instantly: zero virtual time consumed
+        assert_eq!(clock.now(), Tick::ZERO);
+        let batch2 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch2.len(), 2);
+        // the short batch aged its full (virtual) wait budget, exactly
+        assert_eq!(clock.now(), Tick::from_ms(50));
+    }
+
+    #[test]
+    fn respects_max_wait_exactly() {
+        let clock = Arc::new(SimClock::new());
+        let (tx, rx) = channel();
+        let (r, _k) = req(&clock);
         tx.send(r).unwrap();
-        let b = Batcher {
-            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(10) },
-        };
-        let t = Instant::now();
+        let b = sim_batcher(&clock, 64, 10);
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.len(), 1);
-        assert!(t.elapsed() < Duration::from_millis(200));
+        // virtual aging is exact: the clock advanced by max_wait, to the
+        // nanosecond, and no wall time was slept
+        assert_eq!(clock.now(), Tick::from_ms(10));
     }
 
     #[test]
     fn aged_request_does_not_wait_max_wait_again() {
         // the aging regression: a request that sat in the channel past
         // max_wait (executor busy) must ship immediately — after a
-        // non-blocking drain of anything else already queued
-        let Some(past) = Instant::now().checked_sub(Duration::from_secs(2)) else {
-            return; // platform epoch too close to boot; nothing to test
-        };
+        // non-blocking drain of anything else already queued. On the
+        // virtual clock this is exact: zero additional time may pass.
+        let clock = Arc::new(SimClock::new());
         let (tx, rx) = channel();
-        let (mut r1, _k1) = req();
-        r1.enqueued = past;
-        let (r2, _k2) = req();
+        let (r1, _k1) = req(&clock); // enqueued at t=0
+        clock.advance(Duration::from_secs(2)); // ...then the executor was busy
+        let (r2, _k2) = req(&clock);
         tx.send(r1).unwrap();
         tx.send(r2).unwrap();
-        let b = Batcher {
-            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(500) },
-        };
-        let t = Instant::now();
+        let b = sim_batcher(&clock, 64, 500);
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.len(), 2, "queued request must ride the aged batch");
-        assert!(
-            t.elapsed() < Duration::from_millis(400),
-            "aged request waited max_wait again: {:?}",
-            t.elapsed()
+        assert_eq!(
+            clock.now(),
+            Tick::from_ms(2000),
+            "aged request waited again: the over-age deadline clamps to \
+             now, so shipping must consume zero additional virtual time"
         );
     }
 
@@ -137,7 +186,65 @@ mod tests {
     fn none_on_closed_channel() {
         let (tx, rx) = channel::<Request>();
         drop(tx);
-        let b = Batcher { policy: BatchPolicy::default() };
+        let b = Batcher::new(BatchPolicy::default());
         assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn prop_first_request_age_never_exceeds_budget_plus_drain() {
+        // batch-aging property, on the virtual clock: for random traces
+        // (random enqueue ages, policies, queue depths), next_batch
+        // returns by max(first.enqueued + max_wait, call time) — the
+        // first request never ages past its budget beyond the one
+        // non-blocking drain, and an under-aged batch never ships early
+        // without being full.
+        let mut rng = Rng::new(0xA61);
+        for case in 0..200u64 {
+            let clock = Arc::new(SimClock::new());
+            let max_batch = 1 + rng.below(6);
+            let max_wait_ms = 1 + rng.below(40) as u64;
+            // let some time pass, then enqueue requests with staggered
+            // ages (some possibly older than max_wait)
+            let t0_ms = rng.below(100) as u64;
+            clock.advance(Duration::from_millis(t0_ms));
+            let (tx, rx) = channel();
+            let n = 1 + rng.below(8);
+            let mut keep = Vec::new();
+            let mut first_enqueued = None;
+            for i in 0..n {
+                let age_ms = rng.below(60) as u64;
+                let (mut r, k) = req(&clock);
+                r.enqueued = Tick::from_ms(t0_ms.saturating_sub(age_ms));
+                if i == 0 {
+                    first_enqueued = Some(r.enqueued);
+                }
+                keep.push(k);
+                tx.send(r).unwrap();
+            }
+            let b = sim_batcher(&clock, max_batch, max_wait_ms);
+            let call_at = clock.now();
+            let batch = b.next_batch(&rx).unwrap();
+            let shipped_at = clock.now();
+            let budget = first_enqueued
+                .unwrap()
+                .saturating_add(Duration::from_millis(max_wait_ms))
+                .max(call_at);
+            assert!(
+                shipped_at <= budget,
+                "case {case}: batch shipped at {shipped_at:?}, budget {budget:?} \
+                 (max_wait {max_wait_ms} ms, n {n}, max_batch {max_batch})"
+            );
+            assert!(batch.len() <= max_batch, "case {case}: overfull batch");
+            // everything queued must ship in FIFO batches: drain the rest
+            let mut total = batch.len();
+            while total < n {
+                match b.next_batch(&rx) {
+                    Some(more) => total += more.len(),
+                    None => break,
+                }
+            }
+            drop(tx);
+            assert_eq!(total, n, "case {case}: requests lost by the batcher");
+        }
     }
 }

@@ -1,0 +1,221 @@
+//! The serving stack's time source: a [`Clock`] trait with a wall-clock
+//! implementation ([`SystemClock`]) and a manually-advanced virtual one
+//! ([`SimClock`]).
+//!
+//! Every timing decision in `serve` — request timestamps, deadline
+//! expiry, batch aging, EWMA retry hints, `GatewayStats::elapsed_secs` —
+//! reads time as a [`Tick`] off an injected `Clock` instead of calling
+//! `Instant::now()` directly. Under `SystemClock` the behavior is
+//! exactly the pre-clock wall-time behavior; under `SimClock` the whole
+//! scheduling stack becomes deterministic, instant, property-testable
+//! code: the batcher aging tests assert *exact* virtual durations, and
+//! the `serve::sim` discrete-event harness replays scripted traces with
+//! zero wall-clock sleeps.
+//!
+//! # Tick
+//!
+//! A [`Tick`] is a point on one clock's timeline — nanoseconds since
+//! that clock's epoch (construction time for `SystemClock`, t=0 for
+//! `SimClock`). Ticks from different clocks are not comparable; the
+//! serving stack threads one shared clock per server/gateway so every
+//! stamp lives on one timeline.
+//!
+//! # Virtual waiting
+//!
+//! `SimClock::wait_until` *advances the clock* to the target instead of
+//! sleeping: in a simulation the waiter owns time, and "nothing happens
+//! until the deadline" is exactly the discrete-event semantics the
+//! batcher's aging loop and the sim harness need. Code that would
+//! otherwise block on a channel or condvar with a wall timeout checks
+//! [`Clock::is_virtual`] and polls + `wait_until` instead, so a virtual
+//! run never touches the wall clock.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A point on a [`Clock`]'s timeline: nanoseconds since the clock's
+/// epoch. Ordered, copyable, and saturating at both ends (a latency
+/// difference never underflows, a far deadline never overflows).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tick(u64);
+
+impl Tick {
+    pub const ZERO: Tick = Tick(0);
+
+    pub fn from_nanos(ns: u64) -> Tick {
+        Tick(ns)
+    }
+
+    pub fn from_ms(ms: u64) -> Tick {
+        Tick(ms.saturating_mul(1_000_000))
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// This tick advanced by `d`, saturating at the end of time.
+    pub fn saturating_add(self, d: Duration) -> Tick {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        Tick(self.0.saturating_add(ns))
+    }
+
+    /// Elapsed time since `earlier`, zero if `earlier` is in the future
+    /// (the same saturation `Instant::duration_since` callers had to
+    /// hand-roll around clock skew).
+    pub fn duration_since(self, earlier: Tick) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(earlier.0))
+    }
+
+    /// `duration_since` in fractional milliseconds — the unit every
+    /// latency histogram and stat in `serve` records.
+    pub fn ms_since(self, earlier: Tick) -> f64 {
+        self.duration_since(earlier).as_secs_f64() * 1e3
+    }
+}
+
+/// The serving stack's time source. Implementations must be cheap to
+/// read — `now` sits on the submit and dequeue hot paths.
+pub trait Clock: Send + Sync {
+    /// Current instant on this clock's timeline.
+    fn now(&self) -> Tick;
+
+    /// Block until `deadline`: `SystemClock` sleeps the wall-clock
+    /// difference; `SimClock` advances the virtual clock to `deadline`
+    /// and returns immediately (the waiter owns virtual time).
+    fn wait_until(&self, deadline: Tick);
+
+    /// True for manually-advanced clocks: time-bounded waits must poll
+    /// + `wait_until` instead of blocking on wall-clock timeouts.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Wall-clock time, epoch = construction. The production clock: under
+/// it the serving stack behaves exactly as the pre-clock
+/// `Instant::now()` code did.
+pub struct SystemClock {
+    epoch: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> Tick {
+        Tick(self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64)
+    }
+
+    fn wait_until(&self, deadline: Tick) {
+        let now = self.now();
+        if deadline > now {
+            std::thread::sleep(deadline.duration_since(now));
+        }
+    }
+}
+
+/// Manually-advanced virtual clock for deterministic tests and the
+/// `serve::sim` harness. Starts at [`Tick::ZERO`]; time moves only via
+/// [`SimClock::advance`]/[`SimClock::advance_to`] (or a virtual waiter's
+/// `wait_until`). Monotonic: advancing to the past is a no-op.
+pub struct SimClock {
+    now: Mutex<u64>,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock { now: Mutex::new(0) }
+    }
+
+    /// Move the clock forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        let mut g = self.now.lock().unwrap();
+        let t = Tick(*g).saturating_add(d);
+        *g = t.as_nanos();
+    }
+
+    /// Move the clock forward to `t` (no-op if `t` is not in the
+    /// future — virtual time never runs backward).
+    pub fn advance_to(&self, t: Tick) {
+        let mut g = self.now.lock().unwrap();
+        if t.as_nanos() > *g {
+            *g = t.as_nanos();
+        }
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        SimClock::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Tick {
+        Tick(*self.now.lock().unwrap())
+    }
+
+    fn wait_until(&self, deadline: Tick) {
+        self.advance_to(deadline);
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_arithmetic_saturates() {
+        let t = Tick::from_ms(5);
+        assert_eq!(t.as_nanos(), 5_000_000);
+        assert_eq!(t.saturating_add(Duration::from_millis(3)), Tick::from_ms(8));
+        // differences never underflow: "earlier minus later" is zero
+        assert_eq!(Tick::ZERO.duration_since(t), Duration::ZERO);
+        assert_eq!(t.duration_since(Tick::ZERO), Duration::from_millis(5));
+        assert_eq!(t.ms_since(Tick::ZERO), 5.0);
+        assert_eq!(Tick::ZERO.ms_since(t), 0.0);
+        // far deadlines clamp at the end of time instead of wrapping
+        let far = Tick::from_nanos(u64::MAX);
+        assert_eq!(far.saturating_add(Duration::from_secs(1)), far);
+    }
+
+    #[test]
+    fn sim_clock_is_manual_and_monotonic() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Tick::ZERO);
+        assert!(c.is_virtual());
+        c.advance(Duration::from_millis(10));
+        assert_eq!(c.now(), Tick::from_ms(10));
+        // advancing into the past is a no-op
+        c.advance_to(Tick::from_ms(3));
+        assert_eq!(c.now(), Tick::from_ms(10));
+        // a virtual waiter owns time: waiting advances the clock
+        c.wait_until(Tick::from_ms(25));
+        assert_eq!(c.now(), Tick::from_ms(25));
+    }
+
+    #[test]
+    fn system_clock_advances_and_waits() {
+        let c = SystemClock::new();
+        assert!(!c.is_virtual());
+        let a = c.now();
+        // a deadline already in the past returns immediately
+        c.wait_until(Tick::ZERO);
+        let b = c.now();
+        assert!(b >= a, "wall clock went backward");
+    }
+}

@@ -1,10 +1,12 @@
 //! Multi-replica serving gateway: admission control, length-bucketed
-//! dynamic batching, deadline-aware dequeue, live latency histograms.
+//! dynamic batching, work-conserving deadline-aware scheduling, live
+//! latency histograms — on an injected [`Clock`].
 //!
 //! ```text
 //!  clients ──▶ GatewaySubmitter ──▶ [bounded, bucketed queue] ──▶ replica 0 (pool)
-//!                 (admission:           one VecDeque per             replica 1 (pool)
-//!                  Reject | Block)      length bucket                ...
+//!                 (admission:           one queue per length         replica 1 (pool)
+//!                  Reject | Block)      bucket; sched core           ...
+//!                                       picks/pops/sheds
 //! ```
 //!
 //! # Admission control
@@ -16,26 +18,38 @@
 //! bound; [`ShedPolicy::Block`] parks the submitter until space frees —
 //! the closed-loop producer's natural backpressure.
 //!
-//! # Length-bucketed batching
+//! # Scheduling
 //!
 //! Requests route to the narrowest [`BucketLayout`] bucket admitting
 //! their (canonical) length, and a batch is always formed within one
-//! bucket, so batchmates have similar cost and a short request is never
-//! stuck behind a long one. Across buckets, dequeue is globally FIFO by
-//! arrival: a replica picks the bucket whose head request is oldest.
+//! bucket, so batchmates have similar cost. Everything else is a
+//! [`SchedPolicy`] decision made by the shared scheduling core
+//! (`serve::sched` — the exact code the deterministic `serve::sim`
+//! harness proves properties about):
+//!
+//! * [`SchedPolicy::Conserve`] (default) — **work conservation**: an
+//!   idle replica drains the bucket holding the globally most urgent
+//!   deadline (or the deepest bucket when no deadline is queued), and a
+//!   partial batch never parks on its aging wait while any bucket still
+//!   holds work; **deadline-earliest-first** dequeue within a bucket.
+//! * [`SchedPolicy::Fifo`] — the PR-3 globally-FIFO scheduler, kept
+//!   verbatim as the A/B baseline (fig9 carries a `sched` column).
+//!
+//! Batch shape is per-bucket: a [`BatchPolicyTable`] keyed by bucket
+//! width gives narrow buckets wider `max_batch` and shorter `max_wait`
+//! (their requests are cheap), wide buckets the base policy.
 //!
 //! # The determinism contract
 //!
-//! Buckets decide *grouping only*. Each request computes at its
-//! content-canonical `model::encoder::bucket_len` width — the smallest
-//! power of two covering its own length, capped at `max_len` — and draws
-//! randomness from the content-hash RNG stream (`content_rng`). Logits
-//! are therefore a pure function of (config seed, request content):
-//! bit-identical across every bucket layout, replica count, batch
-//! placement, and arrival order, and bit-identical to the single-loop
-//! `ServerHandle::spawn_cpu` path (property-tested). `bucketing: false`
-//! disables the canonical width (everything pads to `max_len`, the
-//! legacy cost model) and is kept as the fig9 baseline.
+//! Buckets and scheduling decide *grouping and order only*. Each request
+//! computes at its content-canonical `model::encoder::bucket_len` width
+//! and draws randomness from the content-hash RNG stream, so logits are
+//! a pure function of (config seed, request content): bit-identical
+//! across every bucket layout, replica count, batch placement, arrival
+//! order, **and scheduling policy**, and bit-identical to the
+//! single-loop `ServerHandle::spawn_cpu` path (property-tested).
+//! `bucketing: false` disables the canonical width (everything pads to
+//! `max_len`, the legacy cost model) and is kept as the fig9 baseline.
 //!
 //! # Deadlines
 //!
@@ -43,7 +57,20 @@
 //! request is shed *before execution* — its reply channel delivers
 //! [`Shed::DeadlineExpired`] and it counts in `shed_deadline`, never
 //! silently dropped. Stats reconcile: `accepted == completed +
-//! shed_deadline`.
+//! shed_deadline`. Under `Conserve`, deadline-bearing requests also
+//! dequeue ahead of deadline-free ones within their bucket.
+//!
+//! # Time
+//!
+//! Every timestamp (enqueue, deadline expiry, batch aging, EWMA service
+//! estimate, `GatewayStats::elapsed_secs`) reads an injected
+//! [`Clock`] as a [`Tick`]. [`Gateway::spawn`] uses the wall-clock
+//! [`SystemClock`]; [`Gateway::spawn_with_clock`] accepts any clock.
+//! Note the replica threads' *blocking* waits (condvar parking) convert
+//! tick differences to wall durations, so a live gateway needs a clock
+//! whose ticks track wall time — fully-virtual scheduling runs belong to
+//! the thread-free `serve::sim` harness, which drives this module's
+//! scheduling core directly on a `SimClock`.
 //!
 //! # Observability
 //!
@@ -54,6 +81,8 @@
 //! everything into a `metrics::Recorder` for the CSV/JSON reports.
 
 use super::batcher::BatchPolicy;
+use super::clock::{Clock, SystemClock, Tick};
+use super::sched::{BatchPolicyTable, BucketQueues, Entry, SchedPolicy};
 use super::server::{
     build_attention, canonicalize, resolve_threads, serve_forward,
     CpuServeConfig,
@@ -63,10 +92,9 @@ use crate::metrics::{Histogram, Recorder};
 use crate::model::encoder::{bucket_len, encoder_abi_spec, Encoder};
 use crate::model::ParamSet;
 use crate::util::threadpool::ThreadPool;
-use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Sequence-length buckets for batch grouping: sorted widths, a request
 /// routes to the narrowest bucket covering its canonical length (the
@@ -101,7 +129,7 @@ impl BucketLayout {
 
     /// Index of the narrowest bucket admitting `len` (the widest bucket
     /// admits everything).
-    fn bucket_for(&self, len: usize) -> usize {
+    pub(crate) fn bucket_for(&self, len: usize) -> usize {
         self.widths
             .iter()
             .position(|&w| len <= w)
@@ -110,7 +138,7 @@ impl BucketLayout {
 
     /// Sorted, deduped, clamped into (0, max_len]; empty layouts
     /// degrade to `single(max_len)`.
-    fn normalized(&self, max_len: usize) -> BucketLayout {
+    pub(crate) fn normalized(&self, max_len: usize) -> BucketLayout {
         let mut widths: Vec<usize> = self
             .widths
             .iter()
@@ -176,10 +204,15 @@ pub struct GatewayConfig {
     /// bound on admitted-but-unexecuted requests (0 degrades to 1)
     pub queue_capacity: usize,
     pub shed: ShedPolicy,
-    /// per-batch policy: max batch size, max wait aged from the first
-    /// request's enqueue time
-    pub batch: BatchPolicy,
+    /// per-bucket batch policies keyed by bucket width (max batch size,
+    /// max wait aged from the first request's enqueue time); the default
+    /// width-scales the base policy — narrow buckets batch wider and
+    /// wait shorter
+    pub batch: BatchPolicyTable,
     pub buckets: BucketLayout,
+    /// cross-bucket scheduling policy: work-conserving deadline-aware
+    /// `Conserve` (default) or the PR-3 `Fifo` A/B baseline
+    pub sched: SchedPolicy,
     /// true: requests compute at their content-canonical `bucket_len`
     /// width (O(bucket), the point of this subsystem); false: everything
     /// pads to `encoder.max_len` — the legacy cost model, kept as the
@@ -195,8 +228,9 @@ impl GatewayConfig {
             replicas: 1,
             queue_capacity: 256,
             shed: ShedPolicy::Reject,
-            batch: BatchPolicy::default(),
+            batch: BatchPolicyTable::scaled(BatchPolicy::default()),
             buckets: BucketLayout::pow2(16, max_len),
+            sched: SchedPolicy::Conserve,
             bucketing: true,
         }
     }
@@ -208,22 +242,20 @@ impl Default for GatewayConfig {
     }
 }
 
-/// One admitted request, canonicalized at submission.
-struct GwRequest {
+/// The request bytes + reply channel a queued entry carries (the
+/// scheduling core is payload-generic; this is the live gateway's
+/// payload).
+struct GwPayload {
     ids: Vec<i32>,
     segs: Vec<i32>,
-    deadline: Option<Instant>,
-    enqueued: Instant,
-    /// arrival number: dequeue picks the bucket with the smallest head
-    /// seq, so cross-bucket order stays FIFO
-    seq: u64,
     reply: Sender<GatewayReply>,
 }
 
+type GwEntry = Entry<GwPayload>;
+
 /// Mutable queue state behind the gateway mutex.
 struct GwState {
-    queues: Vec<VecDeque<GwRequest>>,
-    queued: usize,
+    queues: BucketQueues<GwPayload>,
     closed: bool,
     next_seq: u64,
     accepted: u64,
@@ -241,17 +273,25 @@ struct GwShared {
     work_cv: Condvar,
     /// blocked submitters park here for space; dequeues notify
     space_cv: Condvar,
+    clock: Arc<dyn Clock>,
     capacity: usize,
     replicas: usize,
     policy: ShedPolicy,
+    sched: SchedPolicy,
+    batch: BatchPolicyTable,
     route: BucketLayout,
     vocab_size: usize,
     max_len: usize,
 }
 
-fn retry_hint_ms(st: &GwState, replicas: usize) -> u64 {
-    let per_req = if st.svc_ewma_ms > 0.0 { st.svc_ewma_ms } else { 1.0 };
-    let ms = st.queued as f64 * per_req / replicas.max(1) as f64;
+/// Estimated backlog drain time: `queued x EWMA(per-request service
+/// ms) / replicas`, floored at 1 ms so the hint is always actionable.
+/// A cold EWMA (no batch finished yet) estimates 1 ms per request; a
+/// saturated product (`inf`) clamps to `u64::MAX` via the float cast
+/// rather than wrapping.
+fn retry_hint_ms(queued: usize, svc_ewma_ms: f64, replicas: usize) -> u64 {
+    let per_req = if svc_ewma_ms > 0.0 { svc_ewma_ms } else { 1.0 };
+    let ms = queued as f64 * per_req / replicas.max(1) as f64;
     ms.ceil().max(1.0) as u64
 }
 
@@ -275,9 +315,10 @@ impl GatewaySubmitter {
         self.submit_with_deadline(input_ids, segment_ids, None)
     }
 
-    /// Submit with an optional deadline (relative to now). A request
-    /// still queued when its deadline passes is shed before execution
-    /// and its receiver delivers `Err(Shed::DeadlineExpired)`.
+    /// Submit with an optional deadline (relative to now, on the
+    /// gateway's clock). A request still queued when its deadline passes
+    /// is shed before execution and its receiver delivers
+    /// `Err(Shed::DeadlineExpired)`.
     pub fn submit_with_deadline(
         &self,
         input_ids: Vec<i32>,
@@ -292,21 +333,25 @@ impl GatewaySubmitter {
         // accounting both start here, so time parked at Block admission
         // is part of queue_wait/total_ms — under-reporting overload
         // latency would defeat the SLO stats this subsystem exists for
-        let submitted = Instant::now();
-        let deadline = deadline.map(|d| submitted + d);
+        let submitted = sh.clock.now();
+        let deadline = deadline.map(|d| submitted.saturating_add(d));
         let mut st = sh.state.lock().unwrap();
         loop {
             if st.closed {
                 return Err(Shed::Closed);
             }
-            if st.queued < sh.capacity {
+            if st.queues.len() < sh.capacity {
                 break;
             }
             match sh.policy {
                 ShedPolicy::Reject => {
                     st.rejected += 1;
                     return Err(Shed::QueueFull {
-                        retry_after_ms: retry_hint_ms(&st, sh.replicas),
+                        retry_after_ms: retry_hint_ms(
+                            st.queues.len(),
+                            st.svc_ewma_ms,
+                            sh.replicas,
+                        ),
                     });
                 }
                 ShedPolicy::Block => st = sh.space_cv.wait(st).unwrap(),
@@ -315,17 +360,15 @@ impl GatewaySubmitter {
         let (reply, rx) = channel();
         let seq = st.next_seq;
         st.next_seq += 1;
-        st.queues[bucket].push_back(GwRequest {
-            ids,
-            segs,
-            deadline,
-            enqueued: submitted,
+        let entry = Entry {
             seq,
-            reply,
-        });
-        st.queued += 1;
+            enqueued: submitted,
+            deadline,
+            payload: GwPayload { ids, segs, reply },
+        };
+        st.queues.push(bucket, entry);
         st.accepted += 1;
-        st.peak_queue_depth = st.peak_queue_depth.max(st.queued);
+        st.peak_queue_depth = st.peak_queue_depth.max(st.queues.len());
         // notify_all, not notify_one: a replica parked in its batch
         // aging wait could swallow a single wake-up meant for an idle
         // peer watching a different bucket
@@ -389,7 +432,7 @@ pub struct GatewayStats {
 
 impl GatewayStats {
     /// Fraction of offered requests that were shed (either side of
-    /// admission).
+    /// admission). 0.0 — never NaN — when nothing was offered.
     pub fn shed_rate(&self) -> f64 {
         let offered = self.accepted + self.rejected;
         if offered == 0 {
@@ -490,14 +533,27 @@ impl std::fmt::Display for GatewayStats {
 pub struct Gateway {
     shared: Arc<GwShared>,
     workers: Vec<std::thread::JoinHandle<ReplicaStats>>,
-    started: Instant,
+    started: Tick,
 }
 
 impl Gateway {
-    /// Spawn the gateway: N replica worker threads, each owning its own
-    /// params handle, attention instance (identical ctor stream — see
-    /// `build_attention`), and work-stealing pool shard.
+    /// Spawn the gateway on the wall clock: N replica worker threads,
+    /// each owning its own params handle, attention instance (identical
+    /// ctor stream — see `build_attention`), and work-stealing pool
+    /// shard.
     pub fn spawn(cfg: GatewayConfig) -> Gateway {
+        Gateway::spawn_with_clock(cfg, Arc::new(SystemClock::new()))
+    }
+
+    /// Spawn on an explicit clock. All timestamps (deadlines, latency
+    /// stats, aging, `elapsed_secs`) read this clock; the replica
+    /// threads' blocking waits convert tick differences to wall
+    /// durations, so the clock's ticks must track wall time (virtual
+    /// scheduling runs belong to the thread-free `serve::sim` harness).
+    pub fn spawn_with_clock(
+        cfg: GatewayConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Gateway {
         let max_len = cfg.base.encoder.max_len;
         let route = if cfg.bucketing {
             cfg.buckets.normalized(max_len)
@@ -505,10 +561,10 @@ impl Gateway {
             BucketLayout::single(max_len)
         };
         let replicas = cfg.replicas.max(1);
+        let started = clock.now();
         let shared = Arc::new(GwShared {
             state: Mutex::new(GwState {
-                queues: (0..route.widths.len()).map(|_| VecDeque::new()).collect(),
-                queued: 0,
+                queues: BucketQueues::new(route.widths.len()),
                 closed: false,
                 next_seq: 0,
                 accepted: 0,
@@ -519,9 +575,12 @@ impl Gateway {
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
+            clock,
             capacity: cfg.queue_capacity.max(1),
             replicas,
             policy: cfg.shed,
+            sched: cfg.sched,
+            batch: cfg.batch.clone(),
             route,
             vocab_size: cfg.base.encoder.vocab_size,
             max_len,
@@ -534,12 +593,13 @@ impl Gateway {
         ));
         crate::info!(
             "gateway: attention={} kernel={} replicas={replicas} capacity={} \
-             buckets={:?} bucketing={} threads/replica={}",
+             buckets={:?} bucketing={} sched={} threads/replica={}",
             cfg.base.attention,
             cfg.base.kernel.label(),
             shared.capacity,
             shared.route.widths,
             cfg.bucketing,
+            shared.sched.label(),
             resolve_threads(cfg.base.threads),
         );
         let workers = (0..replicas)
@@ -550,7 +610,7 @@ impl Gateway {
                 std::thread::spawn(move || replica_loop(id, shared, cfg, params))
             })
             .collect();
-        Gateway { shared, workers, started: Instant::now() }
+        Gateway { shared, workers, started }
     }
 
     pub fn submitter(&self) -> GatewaySubmitter {
@@ -568,7 +628,7 @@ impl Gateway {
 
     /// Live queue-depth gauge (admitted, not yet dequeued).
     pub fn queue_depth(&self) -> usize {
-        self.shared.state.lock().unwrap().queued
+        self.shared.state.lock().unwrap().queues.len()
     }
 
     /// Close admission and join the replica threads. Idempotent: the
@@ -592,7 +652,12 @@ impl Gateway {
             .into_iter()
             .map(|r| r.expect("gateway replica thread panicked"))
             .collect();
-        let elapsed_secs = self.started.elapsed().as_secs_f64();
+        let elapsed_secs = self
+            .shared
+            .clock
+            .now()
+            .duration_since(self.started)
+            .as_secs_f64();
 
         let widths = self.shared.route.widths.clone();
         let mut latency = Histogram::new();
@@ -642,72 +707,83 @@ impl Drop for Gateway {
 }
 
 /// Shed one expired request under the state lock.
-fn shed_expired(st: &mut GwState, req: GwRequest) {
+fn shed_entry(st: &mut GwState, e: GwEntry) {
     st.shed_deadline += 1;
-    let _ = req.reply.send(Err(Shed::DeadlineExpired));
+    let _ = e.payload.reply.send(Err(Shed::DeadlineExpired));
 }
 
-/// Collect the next single-bucket batch: globally-FIFO bucket pick,
-/// deadline sheds before execution, max-wait aged from the first
-/// request's enqueue time (clamped to now — the Batcher aging rule).
-/// None once the gateway is closed and drained.
-fn next_batch(
-    shared: &GwShared,
-    policy: &BatchPolicy,
-) -> Option<(usize, Vec<GwRequest>)> {
+/// Collect the next single-bucket batch via the shared scheduling core:
+/// policy bucket pick (`Fifo`: oldest head; `Conserve`: the globally
+/// most urgent queued deadline, else deepest backlog — see
+/// `BucketQueues::pick_bucket`), policy dequeue order within the bucket
+/// (arrival vs deadline-earliest-first), deadline sheds before
+/// execution, max-wait aged from the first request's enqueue time
+/// (clamped to now — the Batcher aging rule), and — under `Conserve` —
+/// no aging park while any bucket still holds work *or* while a batch
+/// member's deadline would expire inside the wait. None once the
+/// gateway is closed and drained.
+fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
+    let widest = *shared.route.widths.last().expect("non-empty layout");
     let mut st = shared.state.lock().unwrap();
     loop {
-        let now = Instant::now();
+        let now = shared.clock.now();
         // capacity freed this round; space_cv is notified once per
         // batch/park, not once per pop — a per-pop notify_all would wake
-        // every Block-mode submitter O(batch × waiters) times
+        // every Block-mode submitter O(batch x waiters) times
         let mut freed = false;
-        // pick the bucket whose live head arrived first, shedding
-        // expired heads on the way
-        let mut pick: Option<usize> = None;
-        let mut best_seq = u64::MAX;
-        for b in 0..st.queues.len() {
-            loop {
-                let head_expired = match st.queues[b].front() {
-                    Some(r) => matches!(r.deadline, Some(d) if now >= d),
-                    None => break,
-                };
-                if !head_expired {
-                    break;
-                }
-                let req = st.queues[b].pop_front().unwrap();
-                st.queued -= 1;
-                freed = true;
-                shed_expired(&mut st, req);
-            }
-            if let Some(r) = st.queues[b].front() {
-                if r.seq < best_seq {
-                    best_seq = r.seq;
-                    pick = Some(b);
-                }
-            }
-        }
-        if let Some(b) = pick {
-            let first = st.queues[b].pop_front().unwrap();
-            st.queued -= 1;
+        // shed everything already expired (anywhere in the queues, not
+        // only heads — the EDF pop must never see corpses)
+        for e in st.queues.shed_expired(now) {
             freed = true;
-            let deadline = (first.enqueued + policy.max_wait).max(now);
+            shed_entry(&mut st, e);
+        }
+        if let Some(b) = st.queues.pick_bucket(shared.sched) {
+            let bpolicy =
+                shared.batch.policy_for(shared.route.widths[b], widest);
+            let first = st.queues.pop_next(b, shared.sched).expect("picked");
+            freed = true;
+            let age_deadline =
+                first.enqueued.saturating_add(bpolicy.max_wait).max(now);
             let mut batch = vec![first];
-            while batch.len() < policy.max_batch {
-                if let Some(req) = st.queues[b].pop_front() {
-                    st.queued -= 1;
-                    freed = true;
-                    let now = Instant::now();
-                    if matches!(req.deadline, Some(d) if now >= d) {
-                        shed_expired(&mut st, req);
-                    } else {
-                        batch.push(req);
+            loop {
+                while batch.len() < bpolicy.max_batch {
+                    match st.queues.pop_next(b, shared.sched) {
+                        Some(e) => {
+                            freed = true;
+                            if e.expired(shared.clock.now()) {
+                                shed_entry(&mut st, e);
+                            } else {
+                                batch.push(e);
+                            }
+                        }
+                        None => break,
                     }
-                    continue;
                 }
-                let now = Instant::now();
-                if now >= deadline || st.closed {
+                if batch.len() >= bpolicy.max_batch || st.closed {
                     break;
+                }
+                let now = shared.clock.now();
+                if now >= age_deadline {
+                    break;
+                }
+                if shared.sched == SchedPolicy::Conserve {
+                    // work conservation: a partial batch never parks
+                    // while any other bucket still holds work — ship it
+                    // now and come back for the rest (its own bucket is
+                    // empty here, or the drain above would have filled
+                    // the batch)
+                    if !st.queues.is_empty() {
+                        break;
+                    }
+                    // deadline-aware aging cap: never park a batch past
+                    // a member's deadline — a request absorbed into the
+                    // park would otherwise age into a shed even while
+                    // the gateway had time to serve it
+                    let earliest =
+                        batch.iter().filter_map(|e| e.deadline).min();
+                    if earliest.is_some_and(|d| d <= age_deadline) {
+                        break;
+                    }
                 }
                 // about to park for up to max_wait: release any
                 // submitters waiting on the capacity freed so far
@@ -715,20 +791,22 @@ fn next_batch(
                     shared.space_cv.notify_all();
                     freed = false;
                 }
-                let (guard, _) =
-                    shared.work_cv.wait_timeout(st, deadline - now).unwrap();
+                let (guard, _) = shared
+                    .work_cv
+                    .wait_timeout(st, age_deadline.duration_since(now))
+                    .unwrap();
                 st = guard;
             }
             // a batch member (the head included) can expire while we
             // park waiting for batchmates: re-check so nothing expired
             // ever reaches execution
-            let now = Instant::now();
+            let now = shared.clock.now();
             let mut live = Vec::with_capacity(batch.len());
-            for req in batch {
-                if matches!(req.deadline, Some(d) if now >= d) {
-                    shed_expired(&mut st, req);
+            for e in batch {
+                if e.expired(now) {
+                    shed_entry(&mut st, e);
                 } else {
-                    live.push(req);
+                    live.push(e);
                 }
             }
             if freed {
@@ -763,30 +841,41 @@ fn replica_loop(
     let pool = ThreadPool::new(resolve_threads(cfg.base.threads));
     let mut stats = ReplicaStats::new(id, shared.route.widths.len());
     let max_len = cfg.base.encoder.max_len;
-    while let Some((bucket, batch)) = next_batch(&shared, &cfg.batch) {
-        let exec_start = Instant::now();
+    while let Some((bucket, batch)) = next_batch(&shared) {
+        let exec_start = shared.clock.now();
         {
             let st = shared.state.lock().unwrap();
-            stats.queue_depth.record(st.queued as f64);
+            stats.queue_depth.record(st.queues.len() as f64);
         }
         let n = batch.len();
         let params = Arc::clone(&params);
         let attn = Arc::clone(&attn);
+        let clock = Arc::clone(&shared.clock);
         let ecfg = cfg.base.encoder.clone();
         let (seed, chunk) = (cfg.base.seed, cfg.base.chunk_policy);
         let bucketing = cfg.bucketing;
-        let timings = pool.map(batch, move |req| {
+        let timings = pool.map(batch, move |e| {
             let width = if bucketing {
-                bucket_len(req.ids.len(), max_len)
+                bucket_len(e.payload.ids.len(), max_len)
             } else {
                 max_len
             };
             let enc = Encoder::new(ecfg.clone(), &params);
-            let logits =
-                serve_forward(&enc, &attn, chunk, seed, &req.ids, &req.segs, width);
-            let queue_ms = (exec_start - req.enqueued).as_secs_f64() * 1e3;
-            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let _ = req.reply.send(Ok(Response { logits, queue_ms, total_ms }));
+            let logits = serve_forward(
+                &enc,
+                &attn,
+                chunk,
+                seed,
+                &e.payload.ids,
+                &e.payload.segs,
+                width,
+            );
+            let queue_ms = exec_start.ms_since(e.enqueued);
+            let total_ms = clock.now().ms_since(e.enqueued);
+            let _ = e
+                .payload
+                .reply
+                .send(Ok(Response { logits, queue_ms, total_ms }));
             (queue_ms, total_ms)
         });
         stats.batches += 1;
@@ -798,7 +887,7 @@ fn replica_loop(
         }
         // feed the admission retry hint
         let per_req_ms =
-            exec_start.elapsed().as_secs_f64() * 1e3 / n.max(1) as f64;
+            shared.clock.now().ms_since(exec_start) / n.max(1) as f64;
         let mut st = shared.state.lock().unwrap();
         st.svc_ewma_ms = if st.svc_ewma_ms == 0.0 {
             per_req_ms
@@ -840,19 +929,49 @@ mod tests {
 
     #[test]
     fn retry_hint_scales_with_backlog() {
-        let mut st = GwState {
-            queues: Vec::new(),
-            queued: 10,
-            closed: false,
-            next_seq: 0,
+        assert_eq!(retry_hint_ms(10, 4.0, 2), 20);
+        assert_eq!(retry_hint_ms(0, 4.0, 2), 1, "hint is always >= 1 ms");
+    }
+
+    #[test]
+    fn retry_hint_edge_cases() {
+        // cold EWMA (no batch has finished yet): estimate 1 ms/request
+        assert_eq!(retry_hint_ms(8, 0.0, 4), 2);
+        // a negative EWMA can never arise, but the guard covers it too
+        assert_eq!(retry_hint_ms(8, -3.0, 4), 2);
+        // replicas == 0 guards the division (spawn clamps to 1 anyway)
+        assert_eq!(retry_hint_ms(10, 2.0, 0), 20);
+        // saturating backlog: a huge queue x huge EWMA overflows f64 to
+        // inf, and the float->int cast clamps instead of wrapping
+        assert_eq!(retry_hint_ms(usize::MAX, f64::MAX, 1), u64::MAX);
+        // fractional estimates round up to a whole actionable ms
+        assert_eq!(retry_hint_ms(1, 0.3, 2), 1);
+        assert_eq!(retry_hint_ms(3, 0.5, 1), 2);
+    }
+
+    #[test]
+    fn shed_rate_zero_offered_is_zero_not_nan() {
+        // a gateway that served nothing (shutdown before any submit)
+        // must report 0.0, not 0/0 = NaN, through every stats surface
+        let stats = GatewayStats {
             accepted: 0,
+            completed: 0,
             rejected: 0,
             shed_deadline: 0,
+            batches: 0,
             peak_queue_depth: 0,
-            svc_ewma_ms: 4.0,
+            latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            queue_depth: Histogram::new(),
+            bucket_widths: vec![16],
+            per_bucket: vec![Histogram::new()],
+            per_replica: Vec::new(),
+            elapsed_secs: 0.0,
+            throughput_rps: 0.0,
         };
-        assert_eq!(retry_hint_ms(&st, 2), 20);
-        st.queued = 0;
-        assert_eq!(retry_hint_ms(&st, 2), 1, "hint is always >= 1 ms");
+        assert_eq!(stats.shed_rate(), 0.0);
+        assert!(!stats.shed_rate().is_nan());
+        // and the Display path renders the 0-traffic stats without panic
+        let _ = format!("{stats}");
     }
 }

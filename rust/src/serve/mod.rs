@@ -1,6 +1,8 @@
-//! Serving stack: single-loop coordinator (`server`) and multi-replica
-//! gateway (`gateway`), sharing one batcher, stats, and determinism
-//! contract.
+//! Serving stack: single-loop coordinator (`server`), multi-replica
+//! gateway (`gateway`), the shared scheduling core (`sched`), the time
+//! abstraction (`clock`), and the deterministic scheduling simulator
+//! (`sim`) — one batcher, stats, and determinism contract across all of
+//! it.
 //!
 //! # Architecture
 //!
@@ -16,17 +18,41 @@
 //!   [`gateway::ShedPolicy`] (reject-with-retry-hint or block) so
 //!   overload sheds instead of stacking unbounded latency;
 //!   **length-bucketed batching** ([`gateway::BucketLayout`]) so batches
-//!   group similar-cost requests; **deadline-aware dequeue** (expired
-//!   requests shed before execution, always reported); and **live
-//!   latency histograms** (`metrics::Histogram`) merged into
-//!   [`gateway::GatewayStats`] at shutdown.
+//!   group similar-cost requests; a **[`sched::SchedPolicy`]** choosing
+//!   between the work-conserving deadline-aware scheduler (`Conserve`,
+//!   default: idle replicas serve the globally most urgent deadline
+//!   first and the deepest bucket otherwise, deadline-earliest-first
+//!   within a bucket, partial batches never park while work exists) and
+//!   the globally-FIFO A/B baseline (`Fifo`);
+//!   **per-bucket batch policies** ([`sched::BatchPolicyTable`], keyed
+//!   by bucket width — narrow buckets batch wider and wait shorter);
+//!   **deadline-aware dequeue** (expired requests shed before execution,
+//!   always reported); and **live latency histograms**
+//!   (`metrics::Histogram`) merged into [`gateway::GatewayStats`] at
+//!   shutdown.
+//! * [`sched`] — the scheduling decisions (bucket pick, within-bucket
+//!   order, expiry sheds, per-bucket policy resolution) as pure code
+//!   over payload-generic queues, run bit-for-bit by both the live
+//!   gateway replicas and the simulator.
+//! * [`clock`] — the [`clock::Clock`] trait with wall
+//!   ([`clock::SystemClock`]) and manually-advanced virtual
+//!   ([`clock::SimClock`]) implementations. Every `serve` timestamp is a
+//!   [`clock::Tick`] off an injected clock; nothing in this subsystem
+//!   calls `Instant::now()` directly.
+//! * [`sim`] — a deterministic discrete-event simulator over the
+//!   scheduling core on a `SimClock`: scripted arrival traces, replicas
+//!   that "execute" in simulated service time, and exact assertions on
+//!   scheduling decisions (work conservation, deadline ordering, shed
+//!   accounting) with zero wall-clock sleeps (`tests/sim_gateway.rs`).
 //!
 //! # Batching policy
 //!
 //! [`Batcher`] collects until `max_batch` or until the *oldest* request
 //! has aged `max_wait` counted from its enqueue time (a request that
 //! already waited in the channel never waits the budget twice); the
-//! gateway applies the same aging rule per bucket.
+//! gateway applies the same aging rule per bucket, with the per-bucket
+//! policy from its `BatchPolicyTable`, and — under `Conserve` — cuts
+//! the wait short whenever other buckets hold work.
 //!
 //! # Determinism contract
 //!
@@ -34,8 +60,8 @@
 //! content): randomness comes from the content-hash RNG stream and the
 //! compute width is the content-canonical `model::encoder::bucket_len`.
 //! Batch placement, bucket layout, replica count, thread count, arrival
-//! order, and the YOSO kernel variant (`CpuServeConfig::kernel`; seed vs
-//! fused, see `attention::kernel`) are all wall-clock knobs only — the
+//! order, the YOSO kernel variant (`CpuServeConfig::kernel`), and the
+//! scheduling policy (`SchedPolicy`) are all wall-clock knobs only — the
 //! gateway property test asserts bit-identity against the single-loop
 //! path across all of them.
 //!
@@ -57,14 +83,19 @@
 //! server open, and post-shutdown submits fail fast.
 
 pub mod batcher;
+pub mod clock;
 pub mod gateway;
+pub mod sched;
 pub mod server;
+pub mod sim;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use clock::{Clock, SimClock, SystemClock, Tick};
 pub use gateway::{
     BucketLayout, Gateway, GatewayConfig, GatewayReply, GatewayStats,
     GatewaySubmitter, ReplicaStats, Shed, ShedPolicy,
 };
+pub use sched::{BatchPolicyTable, SchedPolicy};
 pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};
 
 /// One inference request: token ids + segments for a single sequence.
@@ -74,7 +105,8 @@ pub struct Request {
     pub segment_ids: Vec<i32>,
     /// where to deliver the logits
     pub reply: std::sync::mpsc::Sender<Response>,
-    pub enqueued: std::time::Instant,
+    /// submission instant on the server's [`Clock`]
+    pub enqueued: Tick,
 }
 
 /// Logits for one sequence plus timing.

@@ -1,0 +1,547 @@
+//! The gateway's scheduling core: cross-bucket pick, within-bucket
+//! dequeue order, per-bucket batch policies, and deadline sheds — as
+//! plain data-structure decisions over a payload-generic queue set.
+//!
+//! Both consumers run **exactly this code**: the live
+//! [`gateway`](super::gateway) replicas (payload = request bytes + reply
+//! channel) and the deterministic [`sim`](super::sim) harness (payload =
+//! nothing), so every scheduling property the simulator proves on a
+//! virtual clock is a property of the production dequeue path, not of a
+//! model of it.
+//!
+//! # Policies
+//!
+//! [`SchedPolicy::Fifo`] is the PR-3 scheduler, kept verbatim as the A/B
+//! baseline: pick the bucket whose head request arrived first, serve
+//! each bucket in arrival order, and always age a below-max batch up to
+//! its `max_wait`. Its failure mode under skew is an idle replica parked
+//! on a sparse foreign bucket's aging wait while a deep bucket backs up.
+//!
+//! [`SchedPolicy::Conserve`] is the work-conserving deadline-aware
+//! scheduler. The bucket pick is deadline-first **across** buckets:
+//! while any queued entry carries a deadline, an idle replica serves
+//! the bucket holding the globally most urgent one (a deep bucket must
+//! never starve another bucket's deadline); with no deadlines queued it
+//! drains the **deepest** bucket (ties toward the oldest head). Within
+//! a bucket, dequeue is **deadline-earliest-first** (deadline-free
+//! requests rank last, arrival seq breaks ties — a total, deterministic
+//! order); and a partial batch **never parks while any bucket still
+//! holds work** — it ships immediately and the replica comes back. The
+//! invariant the sim suite asserts: no replica idles while any bucket is
+//! non-empty. The EDF-inherent tradeoff is documented, not hidden:
+//! sustained deadline traffic preempts deadline-free backlogs (which
+//! the bounded queue's shed/backpressure policies keep finite).
+//!
+//! # Per-bucket batch policies
+//!
+//! A [`BatchPolicyTable`] keys batch shape off the bucket's width:
+//! narrow buckets batch wider and wait shorter (their requests are
+//! cheap, so a big batch is still fast and latency budget is better
+//! spent elsewhere), wide buckets keep the base policy. Exact-width
+//! overrides take precedence; `scaled` mode derives the rest.
+
+use super::batcher::BatchPolicy;
+use super::clock::Tick;
+use std::collections::VecDeque;
+
+/// Cross-bucket scheduling policy. Dequeue *within* a bucket and the
+/// aging rule follow the same choice (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Globally-FIFO by arrival seq (the PR-3 scheduler, A/B baseline):
+    /// oldest head wins the bucket pick, arrival order within a bucket,
+    /// partial batches always age up to `max_wait`.
+    Fifo,
+    /// Work-conserving deadline-aware: the bucket holding the globally
+    /// most urgent deadline wins the pick while any deadline is queued,
+    /// otherwise the deepest bucket (ties: oldest head, then lowest
+    /// index); deadline-earliest-first within a bucket; and a partial
+    /// batch ships immediately whenever any bucket still holds work.
+    Conserve,
+}
+
+impl SchedPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Conserve => "conserve",
+        }
+    }
+}
+
+/// Per-bucket batch policy table, keyed by `BucketLayout` width.
+///
+/// Resolution order for a bucket of width `w` in a layout whose widest
+/// bucket is `widest`:
+/// 1. an exact-width override, if one was registered;
+/// 2. in `scaled` mode, the base policy scaled by how much narrower
+///    than `widest` the bucket is: each halving of width doubles
+///    `max_batch` and halves `max_wait`, capped at 8x;
+/// 3. otherwise the base policy unchanged (`uniform`).
+#[derive(Clone, Debug)]
+pub struct BatchPolicyTable {
+    base: BatchPolicy,
+    overrides: Vec<(usize, BatchPolicy)>,
+    width_scaled: bool,
+}
+
+impl BatchPolicyTable {
+    /// Every bucket gets `base` — the PR-3 single-policy behavior.
+    pub fn uniform(base: BatchPolicy) -> BatchPolicyTable {
+        BatchPolicyTable { base, overrides: Vec::new(), width_scaled: false }
+    }
+
+    /// Width-scaled: the widest bucket gets `base`; narrower buckets
+    /// batch wider and wait shorter (see struct docs).
+    pub fn scaled(base: BatchPolicy) -> BatchPolicyTable {
+        BatchPolicyTable { base, overrides: Vec::new(), width_scaled: true }
+    }
+
+    /// Pin an exact policy for the bucket of width `width` (replaces a
+    /// previous override for the same width).
+    pub fn with_override(
+        mut self,
+        width: usize,
+        policy: BatchPolicy,
+    ) -> BatchPolicyTable {
+        self.overrides.retain(|(w, _)| *w != width);
+        self.overrides.push((width, policy));
+        self
+    }
+
+    /// The policy for a bucket of `width` in a layout whose widest
+    /// bucket is `widest`. `max_batch` is clamped to >= 1 — the live
+    /// gateway always ships at least the request it popped, and the
+    /// simulator must agree with it rather than wedge on a zero cap.
+    pub fn policy_for(&self, width: usize, widest: usize) -> BatchPolicy {
+        if let Some((_, p)) = self.overrides.iter().find(|(w, _)| *w == width) {
+            return normalize(*p);
+        }
+        if !self.width_scaled {
+            return normalize(self.base);
+        }
+        let mut halvings = 0u32;
+        let mut w = width.max(1);
+        while w < widest && halvings < 3 {
+            w *= 2;
+            halvings += 1;
+        }
+        BatchPolicy {
+            max_batch: self.base.max_batch.saturating_mul(1usize << halvings).max(1),
+            max_wait: self.base.max_wait / (1u32 << halvings),
+        }
+    }
+}
+
+/// A batch policy as the dequeue paths may assume it: `max_batch == 0`
+/// degrades to 1 (a picked request always ships).
+fn normalize(p: BatchPolicy) -> BatchPolicy {
+    BatchPolicy { max_batch: p.max_batch.max(1), max_wait: p.max_wait }
+}
+
+impl Default for BatchPolicyTable {
+    fn default() -> Self {
+        BatchPolicyTable::scaled(BatchPolicy::default())
+    }
+}
+
+impl From<BatchPolicy> for BatchPolicyTable {
+    fn from(base: BatchPolicy) -> Self {
+        BatchPolicyTable::uniform(base)
+    }
+}
+
+/// One queued request as the scheduling core sees it: arrival seq,
+/// timestamps, and an opaque payload (the live gateway carries the
+/// request bytes and reply channel; the sim carries nothing).
+#[derive(Clone, Debug)]
+pub struct Entry<T> {
+    /// arrival number (assigned at admission, unique, monotone)
+    pub seq: u64,
+    pub enqueued: Tick,
+    pub deadline: Option<Tick>,
+    pub payload: T,
+}
+
+impl<T> Entry<T> {
+    pub fn expired(&self, now: Tick) -> bool {
+        matches!(self.deadline, Some(d) if now >= d)
+    }
+
+    /// Deadline-earliest-first sort key: deadline-bearing entries rank
+    /// before deadline-free ones, earlier deadlines first, arrival seq
+    /// as the deterministic tie-break (a total order — seqs are unique).
+    pub fn urgency(&self) -> (u64, u64) {
+        (self.deadline.map_or(u64::MAX, |d| d.as_nanos()), self.seq)
+    }
+}
+
+/// Per-bucket queues plus the pick/pop/shed decisions — the data half
+/// of the scheduler, shared bit-for-bit by the live gateway and the
+/// simulator.
+#[derive(Clone, Debug)]
+pub struct BucketQueues<T> {
+    queues: Vec<VecDeque<Entry<T>>>,
+    /// queued entries carrying a deadline (maintained by push/pop/shed):
+    /// lets the expiry sweep and the Conserve urgency scan short-circuit
+    /// to O(1) on the common deadline-free workload instead of walking
+    /// every queued entry under the gateway lock each round
+    deadlined: usize,
+}
+
+impl<T> BucketQueues<T> {
+    pub fn new(n_buckets: usize) -> BucketQueues<T> {
+        BucketQueues {
+            queues: (0..n_buckets.max(1)).map(|_| VecDeque::new()).collect(),
+            deadlined: 0,
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn depth(&self, bucket: usize) -> usize {
+        self.queues[bucket].len()
+    }
+
+    /// Total queued entries across buckets (the admission gauge).
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Entries arrive in seq order per bucket (admission holds the
+    /// gateway lock), so each queue's front is its oldest entry.
+    pub fn push(&mut self, bucket: usize, entry: Entry<T>) {
+        if entry.deadline.is_some() {
+            self.deadlined += 1;
+        }
+        self.queues[bucket].push_back(entry);
+    }
+
+    /// Remove every expired entry — anywhere in a queue, not only the
+    /// heads, so an EDF pop never has to step over corpses — and return
+    /// them for shed accounting/reply delivery. O(1) when no queued
+    /// entry carries a deadline.
+    pub fn shed_expired(&mut self, now: Tick) -> Vec<Entry<T>> {
+        if self.deadlined == 0 {
+            return Vec::new();
+        }
+        let mut shed = Vec::new();
+        for q in &mut self.queues {
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].expired(now) {
+                    shed.push(q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // only deadline-bearing entries can expire
+        self.deadlined -= shed.len();
+        shed
+    }
+
+    /// The cross-bucket pick. `Fifo`: the bucket whose head arrived
+    /// first. `Conserve`: while any queued entry carries a deadline,
+    /// the bucket holding the globally most urgent one (deadline-EDF
+    /// across buckets — depth must never starve another bucket's
+    /// deadline); otherwise the deepest bucket, ties toward the oldest
+    /// head, then the lowest index. Fully deterministic either way.
+    pub fn pick_bucket(&self, policy: SchedPolicy) -> Option<usize> {
+        match policy {
+            SchedPolicy::Fifo => {
+                let mut best: Option<(u64, usize)> = None;
+                for (b, q) in self.queues.iter().enumerate() {
+                    if let Some(head) = q.front() {
+                        let better = match best {
+                            None => true,
+                            Some((s, _)) => head.seq < s,
+                        };
+                        if better {
+                            best = Some((head.seq, b));
+                        }
+                    }
+                }
+                best.map(|(_, b)| b)
+            }
+            SchedPolicy::Conserve => {
+                if self.deadlined > 0 {
+                    // global EDF: serve the most urgent deadline first,
+                    // wherever it queues
+                    let mut best: Option<((u64, u64), usize)> = None;
+                    for (b, q) in self.queues.iter().enumerate() {
+                        for e in q {
+                            if e.deadline.is_none() {
+                                continue;
+                            }
+                            let k = e.urgency();
+                            let better = match best {
+                                None => true,
+                                Some((bk, _)) => k < bk,
+                            };
+                            if better {
+                                best = Some((k, b));
+                            }
+                        }
+                    }
+                    if let Some((_, b)) = best {
+                        return Some(b);
+                    }
+                }
+                // no deadlines queued: deepest backlog wins; for
+                // deadline-free entries EDF pops in seq order, so each
+                // queue's front is its oldest — head seq breaks ties
+                let mut best: Option<(usize, u64, usize)> = None;
+                for (b, q) in self.queues.iter().enumerate() {
+                    let Some(head) = q.front() else {
+                        continue;
+                    };
+                    let better = match best {
+                        None => true,
+                        Some((d, s, _)) => {
+                            q.len() > d || (q.len() == d && head.seq < s)
+                        }
+                    };
+                    if better {
+                        best = Some((q.len(), head.seq, b));
+                    }
+                }
+                best.map(|(_, _, b)| b)
+            }
+        }
+    }
+
+    /// Pop bucket `b`'s next entry in policy order: arrival order under
+    /// `Fifo`, deadline-earliest-first under `Conserve`.
+    pub fn pop_next(
+        &mut self,
+        bucket: usize,
+        policy: SchedPolicy,
+    ) -> Option<Entry<T>> {
+        let popped = match policy {
+            SchedPolicy::Fifo => self.queues[bucket].pop_front(),
+            SchedPolicy::Conserve => {
+                let q = &mut self.queues[bucket];
+                if self.deadlined == 0 {
+                    // no deadlines anywhere: EDF degenerates to seq
+                    // order, and entries are pushed in seq order
+                    q.pop_front()
+                } else {
+                    let idx = q
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, e)| e.urgency())
+                        .map(|(i, _)| i);
+                    idx.and_then(|i| q.remove(i))
+                }
+            }
+        };
+        if let Some(e) = &popped {
+            if e.deadline.is_some() {
+                self.deadlined -= 1;
+            }
+        }
+        popped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn entry(seq: u64, deadline_ms: Option<u64>) -> Entry<()> {
+        Entry {
+            seq,
+            enqueued: Tick::from_ms(seq),
+            deadline: deadline_ms.map(Tick::from_ms),
+            payload: (),
+        }
+    }
+
+    #[test]
+    fn fifo_picks_oldest_head_and_pops_in_arrival_order() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(3);
+        qs.push(1, entry(2, None));
+        qs.push(2, entry(0, Some(1)));
+        qs.push(2, entry(3, None));
+        // bucket 2's head (seq 0) is globally oldest
+        assert_eq!(qs.pick_bucket(SchedPolicy::Fifo), Some(2));
+        assert_eq!(qs.pop_next(2, SchedPolicy::Fifo).unwrap().seq, 0);
+        // now bucket 1's head (seq 2) beats bucket 2's (seq 3)
+        assert_eq!(qs.pick_bucket(SchedPolicy::Fifo), Some(1));
+        assert_eq!(qs.pop_next(1, SchedPolicy::Fifo).unwrap().seq, 2);
+        assert_eq!(qs.pop_next(1, SchedPolicy::Fifo).map(|e| e.seq), None);
+    }
+
+    #[test]
+    fn conserve_picks_deepest_bucket_when_no_deadlines() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(3);
+        qs.push(0, entry(0, None));
+        qs.push(2, entry(1, None));
+        qs.push(2, entry(2, None));
+        // bucket 2 is deepest despite bucket 0 holding the oldest entry
+        assert_eq!(qs.pick_bucket(SchedPolicy::Conserve), Some(2));
+        // depth tie: the oldest head breaks it
+        qs.push(0, entry(3, None));
+        assert_eq!(qs.depth(0), 2);
+        assert_eq!(qs.depth(2), 2);
+        assert_eq!(qs.pick_bucket(SchedPolicy::Conserve), Some(0));
+    }
+
+    #[test]
+    fn conserve_deadline_beats_depth_across_buckets() {
+        // the starvation guard: a deep deadline-free bucket must never
+        // starve another bucket's deadline — the pick is deadline-EDF
+        // across buckets whenever any deadline is queued
+        let mut qs: BucketQueues<()> = BucketQueues::new(3);
+        for s in 0..5 {
+            qs.push(2, entry(s, None));
+        }
+        qs.push(0, entry(5, Some(40)));
+        assert_eq!(qs.depth(2), 5);
+        assert_eq!(qs.depth(0), 1);
+        assert_eq!(qs.pick_bucket(SchedPolicy::Conserve), Some(0));
+        // among deadlines, the globally most urgent wins regardless of
+        // where it queues (earlier deadline in bucket 1)
+        qs.push(1, entry(6, Some(10)));
+        assert_eq!(qs.pick_bucket(SchedPolicy::Conserve), Some(1));
+        // pop both deadlines -> back to deepest-bucket behavior
+        assert_eq!(qs.pop_next(1, SchedPolicy::Conserve).unwrap().seq, 6);
+        assert_eq!(qs.pop_next(0, SchedPolicy::Conserve).unwrap().seq, 5);
+        assert_eq!(qs.pick_bucket(SchedPolicy::Conserve), Some(2));
+        // FIFO is oblivious to deadlines either way
+        qs.push(0, entry(7, Some(1)));
+        assert_eq!(qs.pick_bucket(SchedPolicy::Fifo), Some(2));
+    }
+
+    #[test]
+    fn deadlined_counter_tracks_push_pop_shed() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(2);
+        assert_eq!(qs.deadlined, 0);
+        // deadline-free traffic keeps the sweep on its O(1) fast path
+        qs.push(0, entry(0, None));
+        assert_eq!(qs.deadlined, 0);
+        assert!(qs.shed_expired(Tick::from_ms(1_000_000)).is_empty());
+        qs.push(1, entry(1, Some(10)));
+        qs.push(1, entry(2, Some(20)));
+        assert_eq!(qs.deadlined, 2);
+        // popping (either policy) decrements for deadline-bearers only
+        assert_eq!(qs.pop_next(0, SchedPolicy::Conserve).unwrap().seq, 0);
+        assert_eq!(qs.deadlined, 2);
+        assert_eq!(qs.pop_next(1, SchedPolicy::Fifo).unwrap().seq, 1);
+        assert_eq!(qs.deadlined, 1);
+        // shedding the rest drains the counter
+        assert_eq!(qs.shed_expired(Tick::from_ms(20)).len(), 1);
+        assert_eq!(qs.deadlined, 0);
+        assert!(qs.is_empty());
+    }
+
+    #[test]
+    fn conserve_pops_deadline_earliest_first() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(1);
+        qs.push(0, entry(0, None));
+        qs.push(0, entry(1, Some(300)));
+        qs.push(0, entry(2, Some(100)));
+        qs.push(0, entry(3, Some(100))); // deadline tie -> seq order
+        qs.push(0, entry(4, Some(200)));
+        let order: Vec<u64> = (0..5)
+            .map(|_| qs.pop_next(0, SchedPolicy::Conserve).unwrap().seq)
+            .collect();
+        // deadlines 100(seq2), 100(seq3), 200, 300, then deadline-free
+        assert_eq!(order, vec![2, 3, 4, 1, 0]);
+    }
+
+    #[test]
+    fn shed_expired_reaps_mid_queue_not_only_heads() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(2);
+        qs.push(0, entry(0, None));
+        qs.push(0, entry(1, Some(10)));
+        qs.push(0, entry(2, None));
+        qs.push(1, entry(3, Some(50)));
+        let shed = qs.shed_expired(Tick::from_ms(20));
+        assert_eq!(shed.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(qs.len(), 3);
+        // exactly-at-deadline counts as expired (now >= d)
+        let shed = qs.shed_expired(Tick::from_ms(50));
+        assert_eq!(shed.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(qs.len(), 2);
+    }
+
+    #[test]
+    fn policy_table_uniform_scaled_and_overrides() {
+        let base = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(8),
+        };
+        let uniform = BatchPolicyTable::uniform(base);
+        assert_eq!(uniform.policy_for(8, 128).max_batch, 8);
+        assert_eq!(uniform.policy_for(128, 128).max_wait, base.max_wait);
+
+        let scaled = BatchPolicyTable::scaled(base);
+        // widest bucket keeps the base policy
+        assert_eq!(scaled.policy_for(128, 128).max_batch, 8);
+        // one halving: 2x batch, half the wait
+        assert_eq!(scaled.policy_for(64, 128).max_batch, 16);
+        assert_eq!(
+            scaled.policy_for(64, 128).max_wait,
+            Duration::from_millis(4)
+        );
+        // scaling caps at 8x no matter how narrow the bucket
+        assert_eq!(scaled.policy_for(8, 128).max_batch, 64);
+        assert_eq!(scaled.policy_for(1, 4096).max_batch, 64);
+        assert_eq!(
+            scaled.policy_for(8, 128).max_wait,
+            Duration::from_millis(1)
+        );
+
+        // a zero cap degrades to 1 (the dequeue paths always ship the
+        // entry they popped; the sim must agree with the live gateway)
+        let zero = BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 0,
+            max_wait: Duration::from_millis(1),
+        });
+        assert_eq!(zero.policy_for(8, 128).max_batch, 1);
+        assert_eq!(
+            BatchPolicyTable::uniform(base)
+                .with_override(8, BatchPolicy {
+                    max_batch: 0,
+                    max_wait: Duration::ZERO,
+                })
+                .policy_for(8, 128)
+                .max_batch,
+            1
+        );
+
+        // exact-width override beats scaling; re-override replaces
+        let pinned = BatchPolicyTable::scaled(base)
+            .with_override(64, BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+            })
+            .with_override(64, BatchPolicy {
+                max_batch: 3,
+                max_wait: Duration::from_millis(2),
+            });
+        assert_eq!(pinned.policy_for(64, 128).max_batch, 3);
+        assert_eq!(pinned.policy_for(32, 128).max_batch, 32);
+    }
+
+    #[test]
+    fn urgency_is_a_total_deterministic_order() {
+        let a = entry(0, Some(10));
+        let b = entry(1, Some(10));
+        let c = entry(2, None);
+        assert!(a.urgency() < b.urgency(), "deadline tie breaks by seq");
+        assert!(b.urgency() < c.urgency(), "deadline-free ranks last");
+        assert!(a.expired(Tick::from_ms(10)), "expiry is inclusive");
+        assert!(!a.expired(Tick::from_ms(9)));
+        assert!(!c.expired(Tick::from_nanos(u64::MAX)));
+    }
+}

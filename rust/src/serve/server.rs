@@ -18,6 +18,7 @@
 //!   short request costs O(its own length), not O(max_len).
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::clock::{Clock, SystemClock};
 use super::{Request, Response};
 use crate::attention::{
     by_name, Attention, ChunkPolicy, KernelVariant, MultiHeadAttention,
@@ -36,7 +37,6 @@ use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 use xla::Literal;
 
 /// The request channel's sender behind an explicit close flag. `close`
@@ -65,6 +65,9 @@ impl SharedTx {
 /// Client-side handle: submit sequences, receive logits.
 pub struct ServerHandle {
     tx: Arc<SharedTx>,
+    /// one clock per server: submit stamps, batch aging, and latency
+    /// stats all live on a single timeline (`serve::clock`)
+    clock: Arc<dyn Clock>,
     join: Option<std::thread::JoinHandle<Result<ServeStats>>>,
 }
 
@@ -103,6 +106,7 @@ impl std::fmt::Display for ServeStats {
 #[derive(Clone)]
 pub struct Submitter {
     tx: Arc<SharedTx>,
+    clock: Arc<dyn Clock>,
 }
 
 impl Submitter {
@@ -117,7 +121,7 @@ impl Submitter {
                 input_ids,
                 segment_ids,
                 reply,
-                enqueued: Instant::now(),
+                enqueued: self.clock.now(),
             });
         }
         rx
@@ -176,27 +180,40 @@ impl ServerHandle {
         seed: u64,
         checkpoint: Option<PathBuf>,
     ) -> ServerHandle {
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock::new());
+        let loop_clock = Arc::clone(&clock);
         let (tx, rx) = channel::<Request>();
         let join = std::thread::spawn(move || {
-            serve_loop(artifacts_dir, artifact_name, policy, seed, checkpoint, rx)
+            serve_loop(
+                artifacts_dir,
+                artifact_name,
+                policy,
+                seed,
+                checkpoint,
+                rx,
+                loop_clock,
+            )
         });
-        ServerHandle { tx: SharedTx::new(tx), join: Some(join) }
+        ServerHandle { tx: SharedTx::new(tx), clock, join: Some(join) }
     }
 
     /// Spawn the artifact-free CPU fallback server: pure-Rust encoder on
     /// a request-level worker pool.
     pub fn spawn_cpu(cfg: CpuServeConfig, policy: BatchPolicy) -> ServerHandle {
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock::new());
+        let loop_clock = Arc::clone(&clock);
         let (tx, rx) = channel::<Request>();
-        let join =
-            std::thread::spawn(move || serve_loop_cpu(cfg, policy, rx));
-        ServerHandle { tx: SharedTx::new(tx), join: Some(join) }
+        let join = std::thread::spawn(move || {
+            serve_loop_cpu(cfg, policy, rx, loop_clock)
+        });
+        ServerHandle { tx: SharedTx::new(tx), clock, join: Some(join) }
     }
 
     /// Cloneable submission handle for concurrent producers. Clones may
     /// outlive the server: `shutdown` closes the queue itself, and a
     /// submit after close hands back a dead receiver.
     pub fn submitter(&self) -> Submitter {
-        Submitter { tx: Arc::clone(&self.tx) }
+        Submitter { tx: Arc::clone(&self.tx), clock: Arc::clone(&self.clock) }
     }
 
     /// Submit one sequence; returns the response receiver.
@@ -226,6 +243,7 @@ fn serve_loop(
     seed: u64,
     checkpoint: Option<PathBuf>,
     rx: Receiver<Request>,
+    clock: Arc<dyn Clock>,
 ) -> Result<ServeStats> {
     let runtime = Runtime::open(&artifacts_dir)?;
     let artifact = runtime.artifact(&artifact_name)?;
@@ -249,15 +267,15 @@ fn serve_loop(
         .map(|(v, s)| f32_literal(v, s))
         .collect::<Result<_>>()?;
 
-    let batcher = Batcher { policy };
+    let batcher = Batcher::with_clock(policy, Arc::clone(&clock));
     let mut latencies = Vec::new();
     let mut queue_latencies = Vec::new();
     let mut n_requests = 0usize;
     let mut n_batches = 0usize;
-    let started = Instant::now();
+    let started = clock.now();
 
     while let Some(batch) = batcher.next_batch(&rx) {
-        let exec_start = Instant::now();
+        let exec_start = clock.now();
         n_batches += 1;
         // pad the dynamic batch to the ABI batch size
         let mut ids = vec![special::PAD; abi_batch * seq_len];
@@ -281,9 +299,8 @@ fn serve_loop(
 
         for (row, req) in batch.into_iter().enumerate() {
             n_requests += 1;
-            let queue_ms =
-                (exec_start - req.enqueued).as_secs_f64() * 1e3;
-            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = exec_start.ms_since(req.enqueued);
+            let total_ms = clock.now().ms_since(req.enqueued);
             latencies.push(total_ms);
             queue_latencies.push(queue_ms);
             let _ = req.reply.send(Response {
@@ -294,7 +311,7 @@ fn serve_loop(
         }
     }
 
-    let elapsed = started.elapsed().as_secs_f64();
+    let elapsed = clock.now().duration_since(started).as_secs_f64();
     Ok(make_stats(n_requests, n_batches, &latencies, &queue_latencies, elapsed))
 }
 
@@ -410,6 +427,7 @@ fn serve_loop_cpu(
     cfg: CpuServeConfig,
     policy: BatchPolicy,
     rx: Receiver<Request>,
+    clock: Arc<dyn Clock>,
 ) -> Result<ServeStats> {
     let ecfg = cfg.encoder.clone();
     let params =
@@ -426,19 +444,20 @@ fn serve_loop_cpu(
         ecfg.max_len
     );
 
-    let batcher = Batcher { policy };
+    let batcher = Batcher::with_clock(policy, Arc::clone(&clock));
     let mut latencies = Vec::new();
     let mut queue_latencies = Vec::new();
     let mut n_requests = 0usize;
     let mut n_batches = 0usize;
-    let started = Instant::now();
+    let started = clock.now();
 
     while let Some(batch) = batcher.next_batch(&rx) {
-        let exec_start = Instant::now();
+        let exec_start = clock.now();
         n_batches += 1;
         n_requests += batch.len();
         let params = Arc::clone(&params);
         let attn = Arc::clone(&attn);
+        let worker_clock = Arc::clone(&clock);
         let ecfg = ecfg.clone();
         let (seed, max_len) = (cfg.seed, ecfg.max_len);
         let chunk_policy = cfg.chunk_policy;
@@ -462,8 +481,8 @@ fn serve_loop_cpu(
             let enc = Encoder::new(ecfg.clone(), &params);
             let logits =
                 serve_forward(&enc, &attn, chunk_policy, seed, &ids, &segs, width);
-            let queue_ms = (exec_start - req.enqueued).as_secs_f64() * 1e3;
-            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = exec_start.ms_since(req.enqueued);
+            let total_ms = worker_clock.now().ms_since(req.enqueued);
             let _ = req.reply.send(Response { logits, queue_ms, total_ms });
             (queue_ms, total_ms)
         });
@@ -473,6 +492,6 @@ fn serve_loop_cpu(
         }
     }
 
-    let elapsed = started.elapsed().as_secs_f64();
+    let elapsed = clock.now().duration_since(started).as_secs_f64();
     Ok(make_stats(n_requests, n_batches, &latencies, &queue_latencies, elapsed))
 }

@@ -1,0 +1,601 @@
+//! Deterministic discrete-event simulator for the gateway's scheduling
+//! stack, on a [`SimClock`] — zero threads, zero wall-clock sleeps,
+//! exact assertions.
+//!
+//! The simulator drives the **same scheduling core the live gateway
+//! runs** (`serve::sched`: bucket pick, within-bucket dequeue order,
+//! expiry sheds, per-bucket batch policies) over a scripted arrival
+//! trace, with replicas that "execute" batches in simulated service
+//! time. Every decision is replayed event by event on virtual time, so
+//! tests assert scheduling behavior *exactly*: which requests formed
+//! which batch on which replica at which tick, that no replica idled
+//! while a bucket held work (work conservation), that within-bucket
+//! dequeue order is deadline-earliest-first, and that shed accounting
+//! reconciles to the request (`accepted == completed + shed_deadline`).
+//!
+//! # Faithfulness
+//!
+//! The dispatch rules mirror `gateway::next_batch` one for one:
+//!
+//! * an idle replica picks a bucket via [`BucketQueues::pick_bucket`]
+//!   and drains it via [`BucketQueues::pop_next`] up to the bucket's
+//!   [`BatchPolicyTable`] `max_batch`;
+//! * a below-max batch ages up to `max_wait` counted from its first
+//!   request's enqueue tick (clamped to now), topping up from its
+//!   bucket as arrivals land — the live replica's condvar park + re-drain
+//!   loop, as a `Waiting` state with an aging-deadline event;
+//! * under [`SchedPolicy::Conserve`] a partial batch ships immediately
+//!   whenever any bucket still holds work (work conservation) or a
+//!   batch member's deadline would expire inside the aging wait (the
+//!   deadline-aware park cap); under [`SchedPolicy::Fifo`] it always
+//!   ages — the PR-3 behavior whose idle-while-backlogged ticks the
+//!   audit records. The ship-or-park rule lives in one place
+//!   ([`should_ship`]) so the two replica states cannot drift apart;
+//! * expired entries are shed before execution, both from the queues
+//!   (every event tick) and from held batches (at dispatch — the live
+//!   path's post-park re-check);
+//! * admission is the bounded queue: at capacity, arrivals count as
+//!   `rejected` (the `Reject` policy; `Block` has no meaning without
+//!   real producers to park).
+//!
+//! What the simulator does *not* model: compute itself (no logits — the
+//! bit-identity half of the contract is `tests/prop_serve_gateway.rs`'s
+//! job against the real gateway), pool fan-out inside a replica, and
+//! lock contention. Service time is the declared [`ServiceModel`].
+
+use super::clock::{Clock, SimClock, Tick};
+use super::gateway::BucketLayout;
+use super::sched::{BatchPolicyTable, BucketQueues, Entry, SchedPolicy};
+use std::time::Duration;
+
+/// One scripted arrival: offset from trace start, sequence length
+/// (routes to a bucket), optional relative deadline.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub at: Duration,
+    pub len: usize,
+    pub deadline: Option<Duration>,
+}
+
+/// Linear batch cost model: `batch_overhead + per_width x width x
+/// batch_len`. Width is the routed bucket width — the same quantity the
+/// real bucketed gateway's cost scales with.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceModel {
+    pub batch_overhead: Duration,
+    pub per_width: Duration,
+}
+
+impl ServiceModel {
+    pub fn batch_duration(&self, width: usize, batch_len: usize) -> Duration {
+        let units = (width * batch_len).min(u32::MAX as usize) as u32;
+        self.batch_overhead + self.per_width * units
+    }
+}
+
+impl Default for ServiceModel {
+    fn default() -> Self {
+        ServiceModel {
+            batch_overhead: Duration::from_millis(1),
+            per_width: Duration::from_micros(10),
+        }
+    }
+}
+
+/// Simulation configuration — the scheduling slice of `GatewayConfig`.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub replicas: usize,
+    pub queue_capacity: usize,
+    pub sched: SchedPolicy,
+    pub buckets: BucketLayout,
+    pub batch: BatchPolicyTable,
+    pub service: ServiceModel,
+}
+
+/// One executed batch: where, when, and exactly which requests in which
+/// dequeue order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimBatch {
+    pub replica: usize,
+    pub bucket: usize,
+    pub width: usize,
+    pub formed_at: Tick,
+    pub done_at: Tick,
+    /// arrival seqs in dequeue order (EDF under `Conserve`, arrival
+    /// order under `Fifo`)
+    pub seqs: Vec<u64>,
+}
+
+/// Everything a run decided, for exact assertions.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimReport {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub shed_deadline: u64,
+    pub completed: u64,
+    pub peak_depth: usize,
+    pub batches: Vec<SimBatch>,
+    /// arrival-to-completion latency (virtual ms) per completed request
+    pub latencies_ms: Vec<f64>,
+    /// event ticks at which some replica sat idle (or parked aging a
+    /// partial batch) while live queued work existed — the
+    /// work-conservation audit. Must be empty under
+    /// `SchedPolicy::Conserve`; non-empty ticks under `Fifo` are the
+    /// idle-replica-parked-on-a-foreign-bucket behavior this PR retires.
+    pub conservation_violations: Vec<Tick>,
+}
+
+impl SimReport {
+    pub fn mean_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.latencies_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::quantile_exact(&s, 0.99)
+    }
+
+    /// The accounting identity every trace must satisfy.
+    pub fn reconciles(&self) -> bool {
+        self.accepted == self.completed + self.shed_deadline
+    }
+}
+
+/// Replica state machine: mirrors a live replica's three observable
+/// modes (idle in `pick`, parked in the aging wait, executing).
+enum Rep {
+    Idle,
+    Waiting {
+        bucket: usize,
+        batch: Vec<Entry<()>>,
+        max_batch: usize,
+        age_deadline: Tick,
+    },
+    Busy {
+        until: Tick,
+        batch: SimBatch,
+        entries: Vec<Entry<()>>,
+    },
+}
+
+/// Pop bucket entries into `batch` up to `max_batch` — the live
+/// replica's drain loop.
+fn top_up(
+    queues: &mut BucketQueues<()>,
+    bucket: usize,
+    sched: SchedPolicy,
+    batch: &mut Vec<Entry<()>>,
+    max_batch: usize,
+) {
+    while batch.len() < max_batch {
+        match queues.pop_next(bucket, sched) {
+            Some(e) => batch.push(e),
+            None => break,
+        }
+    }
+}
+
+/// The one ship-or-park rule, shared by the `Idle` and `Waiting` arms —
+/// and the rule `gateway::next_batch` enforces live: ship when full,
+/// when the first request's aging budget is spent, or (Conserve) when
+/// other work is backlogged or a member's deadline would expire inside
+/// the aging wait.
+fn should_ship(
+    batch: &[Entry<()>],
+    max_batch: usize,
+    age_deadline: Tick,
+    now: Tick,
+    sched: SchedPolicy,
+    queues: &BucketQueues<()>,
+) -> bool {
+    if batch.len() >= max_batch || now >= age_deadline {
+        return true;
+    }
+    if sched != SchedPolicy::Conserve {
+        return false;
+    }
+    !queues.is_empty()
+        || batch
+            .iter()
+            .filter_map(|e| e.deadline)
+            .min()
+            .is_some_and(|d| d <= age_deadline)
+}
+
+/// Ship a batch on `replica`: re-check member expiry (the live path's
+/// post-park re-check), then go busy for the modeled service time. All
+/// members expired -> back to idle (the live loop's "pick again").
+fn dispatch(
+    replica: usize,
+    bucket: usize,
+    batch: Vec<Entry<()>>,
+    now: Tick,
+    service: &ServiceModel,
+    width: usize,
+    report: &mut SimReport,
+) -> Rep {
+    let mut live = Vec::with_capacity(batch.len());
+    for e in batch {
+        if e.expired(now) {
+            report.shed_deadline += 1;
+        } else {
+            live.push(e);
+        }
+    }
+    if live.is_empty() {
+        return Rep::Idle;
+    }
+    let done = now.saturating_add(service.batch_duration(width, live.len()));
+    let batch = SimBatch {
+        replica,
+        bucket,
+        width,
+        formed_at: now,
+        done_at: done,
+        seqs: live.iter().map(|e| e.seq).collect(),
+    };
+    Rep::Busy { until: done, batch, entries: live }
+}
+
+/// Run `trace` through the scheduling core under `cfg`. Deterministic:
+/// identical inputs produce an identical report, bit for bit.
+pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
+    let clock = SimClock::new();
+    let widths = cfg.buckets.widths().to_vec();
+    let widest = *widths.last().expect("non-empty layout");
+    let replicas = cfg.replicas.max(1);
+    let capacity = cfg.queue_capacity.max(1);
+
+    // arrivals in time order; equal ticks keep trace order, and seqs
+    // are assigned in that order at admission (like the gateway's
+    // under-lock seq counter)
+    let mut arrivals: Vec<(Tick, usize)> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, a)| (Tick::ZERO.saturating_add(a.at), i))
+        .collect();
+    arrivals.sort_by_key(|&(t, i)| (t, i));
+
+    let mut queues: BucketQueues<()> = BucketQueues::new(widths.len());
+    let mut reps: Vec<Rep> = (0..replicas).map(|_| Rep::Idle).collect();
+    let mut report = SimReport::default();
+    let mut ai = 0usize;
+    let mut next_seq = 0u64;
+    let mut steps = 0usize;
+
+    loop {
+        steps += 1;
+        assert!(
+            steps < 1_000_000,
+            "sim failed to converge after 1M events — scheduling livelock?"
+        );
+        let now = clock.now();
+
+        // 1. completions due now
+        for r in reps.iter_mut() {
+            let due = matches!(r, Rep::Busy { until, .. } if *until <= now);
+            if due {
+                if let Rep::Busy { batch, entries, .. } =
+                    std::mem::replace(r, Rep::Idle)
+                {
+                    for e in &entries {
+                        report
+                            .latencies_ms
+                            .push(batch.done_at.ms_since(e.enqueued));
+                    }
+                    report.completed += entries.len() as u64;
+                    report.batches.push(batch);
+                }
+            }
+        }
+
+        // 2. admissions due now (bounded queue: at capacity -> reject)
+        while ai < arrivals.len() && arrivals[ai].0 <= now {
+            let (at, idx) = arrivals[ai];
+            ai += 1;
+            if queues.len() >= capacity {
+                report.rejected += 1;
+                continue;
+            }
+            let a = &trace[idx];
+            let seq = next_seq;
+            next_seq += 1;
+            report.accepted += 1;
+            let bucket = cfg.buckets.bucket_for(a.len);
+            let entry = Entry {
+                seq,
+                enqueued: at,
+                deadline: a.deadline.map(|d| at.saturating_add(d)),
+                payload: (),
+            };
+            queues.push(bucket, entry);
+            report.peak_depth = report.peak_depth.max(queues.len());
+        }
+
+        // 3. queue-side expiry sheds (live path: shed_expired at the
+        // top of every next_batch round)
+        report.shed_deadline += queues.shed_expired(now).len() as u64;
+
+        // 4. dispatch to fixpoint — each pass mirrors one replica's
+        // next_batch round; replica index order makes ties deterministic
+        loop {
+            let mut changed = false;
+            for r in 0..reps.len() {
+                match std::mem::replace(&mut reps[r], Rep::Idle) {
+                    Rep::Idle => {
+                        let Some(b) = queues.pick_bucket(cfg.sched) else {
+                            continue;
+                        };
+                        let policy = cfg.batch.policy_for(widths[b], widest);
+                        let mut batch = Vec::new();
+                        top_up(
+                            &mut queues,
+                            b,
+                            cfg.sched,
+                            &mut batch,
+                            policy.max_batch,
+                        );
+                        let age_deadline = batch[0]
+                            .enqueued
+                            .saturating_add(policy.max_wait)
+                            .max(now);
+                        let ship = should_ship(
+                            &batch,
+                            policy.max_batch,
+                            age_deadline,
+                            now,
+                            cfg.sched,
+                            &queues,
+                        );
+                        reps[r] = if ship {
+                            dispatch(
+                                r,
+                                b,
+                                batch,
+                                now,
+                                &cfg.service,
+                                widths[b],
+                                &mut report,
+                            )
+                        } else {
+                            Rep::Waiting {
+                                bucket: b,
+                                batch,
+                                max_batch: policy.max_batch,
+                                age_deadline,
+                            }
+                        };
+                        changed = true;
+                    }
+                    Rep::Waiting { bucket, mut batch, max_batch, age_deadline } => {
+                        let before = batch.len();
+                        top_up(
+                            &mut queues,
+                            bucket,
+                            cfg.sched,
+                            &mut batch,
+                            max_batch,
+                        );
+                        let ship = should_ship(
+                            &batch,
+                            max_batch,
+                            age_deadline,
+                            now,
+                            cfg.sched,
+                            &queues,
+                        );
+                        if ship {
+                            reps[r] = dispatch(
+                                r,
+                                bucket,
+                                batch,
+                                now,
+                                &cfg.service,
+                                widths[bucket],
+                                &mut report,
+                            );
+                            changed = true;
+                        } else {
+                            if batch.len() != before {
+                                changed = true;
+                            }
+                            reps[r] = Rep::Waiting {
+                                bucket,
+                                batch,
+                                max_batch,
+                                age_deadline,
+                            };
+                        }
+                    }
+                    busy => reps[r] = busy,
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        // 5. work-conservation audit: after the fixpoint, a non-busy
+        // replica alongside live queued work is a conservation breach
+        // (the queues were expiry-swept at this tick, so "work" is live)
+        if !queues.is_empty()
+            && reps.iter().any(|r| !matches!(r, Rep::Busy { .. }))
+        {
+            report.conservation_violations.push(now);
+        }
+
+        // 6. advance to the next event (arrival, completion, or aging
+        // deadline); none left -> the trace is fully drained
+        let mut next: Option<Tick> = None;
+        if ai < arrivals.len() {
+            next = Some(arrivals[ai].0);
+        }
+        for r in &reps {
+            let t = match r {
+                Rep::Busy { until, .. } => Some(*until),
+                Rep::Waiting { age_deadline, .. } => Some(*age_deadline),
+                Rep::Idle => None,
+            };
+            if let Some(t) = t {
+                next = Some(match next {
+                    Some(n) => n.min(t),
+                    None => t,
+                });
+            }
+        }
+        match next {
+            Some(t) => clock.advance_to(t),
+            None => break,
+        }
+    }
+    debug_assert!(queues.is_empty(), "sim ended with queued work");
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::BatchPolicy;
+
+    fn cfg(sched: SchedPolicy) -> SimConfig {
+        SimConfig {
+            replicas: 1,
+            queue_capacity: 64,
+            sched,
+            buckets: BucketLayout::single(8),
+            batch: BatchPolicyTable::uniform(BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(10),
+            }),
+            service: ServiceModel {
+                batch_overhead: Duration::from_millis(1),
+                per_width: Duration::from_micros(125), // 1 ms per width-8 request
+            },
+        }
+    }
+
+    fn arr(at_ms: u64, len: usize) -> Arrival {
+        Arrival { at: Duration::from_millis(at_ms), len, deadline: None }
+    }
+
+    #[test]
+    fn full_batch_ships_instantly_with_exact_timing() {
+        // two arrivals at t=0 fill max_batch=2: the batch forms at t=0
+        // and completes at overhead + 2 x 1 ms = 3 ms, exactly
+        let report = run(&cfg(SchedPolicy::Conserve), &[arr(0, 4), arr(0, 8)]);
+        assert_eq!(report.accepted, 2);
+        assert_eq!(report.completed, 2);
+        assert!(report.reconciles());
+        assert_eq!(report.batches.len(), 1);
+        let b = &report.batches[0];
+        assert_eq!(b.formed_at, Tick::ZERO);
+        assert_eq!(b.done_at, Tick::from_ms(3));
+        assert_eq!(b.seqs, vec![0, 1]);
+        // exact virtual latency, computed through the same Tick math
+        let lat = Tick::from_ms(3).ms_since(Tick::ZERO);
+        assert_eq!(report.latencies_ms, vec![lat, lat]);
+        assert!(report.conservation_violations.is_empty());
+    }
+
+    #[test]
+    fn lone_partial_batch_ages_exactly_max_wait() {
+        // a single arrival with an otherwise-empty queue waits the full
+        // aging budget (work conservation is vacuous — no other work),
+        // then ships alone: formed at exactly t=10ms
+        for sched in [SchedPolicy::Fifo, SchedPolicy::Conserve] {
+            let report = run(&cfg(sched), &[arr(0, 4)]);
+            assert_eq!(report.batches.len(), 1, "{sched:?}");
+            assert_eq!(report.batches[0].formed_at, Tick::from_ms(10));
+            assert_eq!(report.batches[0].done_at, Tick::from_ms(12));
+            assert!(report.conservation_violations.is_empty(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn late_arrival_tops_up_a_waiting_batch() {
+        // second arrival lands mid-aging-wait: it must join the parked
+        // batch (the live condvar wake + re-drain), shipping at its
+        // arrival tick, not at the aging deadline
+        let report = run(&cfg(SchedPolicy::Conserve), &[arr(0, 4), arr(4, 4)]);
+        assert_eq!(report.batches.len(), 1);
+        let b = &report.batches[0];
+        assert_eq!(b.formed_at, Tick::from_ms(4));
+        assert_eq!(b.seqs, vec![0, 1]);
+        assert!(report.reconciles());
+    }
+
+    #[test]
+    fn capacity_overflow_rejects_exactly() {
+        let mut c = cfg(SchedPolicy::Conserve);
+        c.queue_capacity = 2;
+        // long service keeps the replica busy from t=0; three arrivals
+        // at t=1 hit a capacity-2 queue: third rejects
+        c.service.batch_overhead = Duration::from_millis(100);
+        let report = run(
+            &c,
+            &[arr(0, 8), arr(0, 8), arr(1, 4), arr(1, 4), arr(1, 4)],
+        );
+        assert_eq!(report.accepted, 4);
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.completed, 4);
+        assert!(report.reconciles());
+    }
+
+    #[test]
+    fn deadline_member_cuts_the_aging_park_short() {
+        // a deadline-bearing request absorbed into a parked partial
+        // batch must not age into a shed: under Conserve the park is
+        // capped and the batch ships the moment such a member joins;
+        // Fifo (the verbatim PR-3 baseline) still parks the full aging
+        // budget and sheds it — which is exactly the A/B point
+        let trace = vec![
+            arr(0, 4),
+            Arrival {
+                at: Duration::from_millis(1),
+                len: 4,
+                deadline: Some(Duration::from_millis(5)),
+            },
+        ];
+        let mut c = cfg(SchedPolicy::Conserve);
+        // cap 3 so two members still leave the batch partial
+        c.batch = BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(10),
+        });
+        let report = run(&c, &trace);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.shed_deadline, 0);
+        assert_eq!(report.batches.len(), 1);
+        // shipped the instant the deadline-bearing member joined, well
+        // inside its 6 ms absolute deadline
+        assert_eq!(report.batches[0].formed_at, Tick::from_ms(1));
+
+        let mut f = cfg(SchedPolicy::Fifo);
+        f.batch = c.batch.clone();
+        let fifo = run(&f, &trace);
+        assert_eq!(fifo.shed_deadline, 1);
+        assert_eq!(fifo.completed, 1);
+        assert!(fifo.reconciles());
+    }
+
+    #[test]
+    fn identical_runs_are_bit_identical() {
+        let trace: Vec<Arrival> = (0..20)
+            .map(|i| Arrival {
+                at: Duration::from_millis(i * 3 % 17),
+                len: 1 + (i as usize * 5) % 8,
+                deadline: (i % 4 == 0).then(|| Duration::from_millis(30)),
+            })
+            .collect();
+        let c = cfg(SchedPolicy::Conserve);
+        assert_eq!(run(&c, &trace), run(&c, &trace));
+    }
+}

@@ -8,8 +8,8 @@ use std::time::Duration;
 use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
-    BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig, Shed,
-    ShedPolicy,
+    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig, Gateway,
+    GatewayConfig, SchedPolicy, Shed, ShedPolicy,
 };
 use yoso::testing::test_threads;
 
@@ -37,7 +37,10 @@ fn overload_cfg(seed: u64, capacity: usize, shed: ShedPolicy) -> GatewayConfig {
     cfg.replicas = 1;
     cfg.queue_capacity = capacity;
     cfg.shed = shed;
-    cfg.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    });
     cfg.buckets = BucketLayout::pow2(8, 32);
     cfg
 }
@@ -134,8 +137,11 @@ fn expired_deadlines_shed_before_execution_and_reconcile() {
 #[test]
 fn block_policy_applies_backpressure_without_sheds() {
     // closed-loop producer against a capacity-2 queue: Block admits
-    // everything eventually, rejecting nothing
-    let gw = Gateway::spawn(overload_cfg(11, 2, ShedPolicy::Block));
+    // everything eventually, rejecting nothing. Pinned to the FIFO
+    // baseline so the legacy scheduler keeps live-path coverage.
+    let mut cfg = overload_cfg(11, 2, ShedPolicy::Block);
+    cfg.sched = SchedPolicy::Fifo;
+    let gw = Gateway::spawn(cfg);
     let sub = gw.submitter();
     let producer = std::thread::spawn(move || {
         (0..10)
@@ -167,6 +173,63 @@ fn shutdown_returns_with_live_submitters_then_rejects() {
         sub.submit(vec![5i32; 8], vec![0i32; 8]).unwrap_err(),
         Shed::Closed
     );
+}
+
+#[test]
+fn scaled_policy_table_and_conserve_serve_and_reconcile() {
+    // the new defaults end to end on the live gateway: width-scaled
+    // per-bucket batch policies + work-conserving deadline-aware
+    // scheduling, mixed-length traffic with a deadline slice. Everything
+    // must be answered exactly once and the counters must reconcile.
+    let mut cfg = GatewayConfig::new(tiny_cfg(21));
+    cfg.replicas = 2;
+    cfg.queue_capacity = 64;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.sched = SchedPolicy::Conserve;
+    cfg.batch = BatchPolicyTable::scaled(BatchPolicy {
+        max_batch: 2,
+        max_wait: Duration::from_millis(4),
+    })
+    .with_override(8, BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+    });
+    cfg.buckets = BucketLayout::pow2(8, 32);
+    let gw = Gateway::spawn(cfg);
+    let mut rxs = Vec::new();
+    let mut doomed = 0u64;
+    for i in 0..24usize {
+        let len = 3 + (i * 7) % 30;
+        // a slice of already-expired deadlines exercises EDF + sheds
+        let deadline = (i % 6 == 5).then_some(Duration::ZERO);
+        if deadline.is_some() {
+            doomed += 1;
+        }
+        rxs.push((
+            deadline.is_some(),
+            gw.submitter()
+                .submit_with_deadline(vec![4i32; len], vec![0i32; len], deadline)
+                .expect("admitted"),
+        ));
+    }
+    let (mut served, mut shed) = (0u64, 0u64);
+    for (was_doomed, rx) in rxs {
+        match rx.recv().expect("every request gets exactly one reply") {
+            Ok(resp) => {
+                assert!(!was_doomed, "an expired deadline reached execution");
+                assert_eq!(resp.logits.len(), 2);
+                served += 1;
+            }
+            Err(Shed::DeadlineExpired) => shed += 1,
+            Err(other) => panic!("unexpected shed: {other}"),
+        }
+    }
+    let stats = gw.shutdown();
+    assert_eq!(shed, doomed);
+    assert_eq!(stats.completed, served);
+    assert_eq!(stats.shed_deadline, shed);
+    assert_eq!(stats.accepted, stats.completed + stats.shed_deadline);
+    assert_eq!(stats.accepted, 24);
 }
 
 #[test]

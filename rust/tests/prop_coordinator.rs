@@ -2,10 +2,10 @@
 //! the estimator math, via the in-crate property-testing framework.
 
 use std::sync::mpsc::channel;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 use yoso::attention::{YosoAttention, YosoE};
 use yoso::data::{collate_cls, ClsExample};
-use yoso::serve::{BatchPolicy, Batcher, Request};
+use yoso::serve::{BatchPolicy, Batcher, Request, Tick};
 use yoso::tensor::Mat;
 use yoso::testing::{check, gen, PropConfig};
 use yoso::util::Rng;
@@ -31,17 +31,15 @@ fn prop_batcher_partitions_requests_in_order() {
                     input_ids: vec![i as i32],
                     segment_ids: vec![0],
                     reply,
-                    enqueued: Instant::now(),
+                    enqueued: Tick::ZERO,
                 })
                 .unwrap();
             }
             drop(tx);
-            let b = Batcher {
-                policy: BatchPolicy {
-                    max_batch,
-                    max_wait: Duration::from_millis(1),
-                },
-            };
+            let b = Batcher::new(BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            });
             let mut seen = Vec::new();
             while let Some(batch) = b.next_batch(&rx) {
                 if batch.len() > max_batch {

@@ -1,0 +1,153 @@
+//! Property tests for the serving observability primitives
+//! (`metrics::Histogram`, `util::stats::Welford`) — the merge-at-
+//! shutdown machinery the gateway's per-replica/per-bucket stats lean
+//! on. Proptest-style randomized loops (like `prop_kernel_equiv.rs`):
+//!
+//! * **merge == concatenation**: splitting any value stream into
+//!   arbitrary parts, recording each part into its own histogram, and
+//!   merging must reproduce the whole-stream histogram *exactly* —
+//!   counts, mean, min/max, and every quantile bit-for-bit (the layout
+//!   is fixed, so bucket-wise addition is lossless);
+//! * **quantile error bound**: the 8-sub-buckets-per-octave layout
+//!   promises any quantile within ~9% relative error of the exact
+//!   order statistic; checked against sorted-select ground truth over
+//!   randomized heavy-tailed streams (a 10% assertion leaves margin
+//!   over the analytic 2^(1/8)-geometry bound);
+//! * **`Welford::merge` == single stream**: mean/variance after merging
+//!   arbitrary splits match pushing every sample into one accumulator.
+
+use yoso::metrics::Histogram;
+use yoso::util::stats::{quantile_exact, Welford};
+use yoso::util::Rng;
+
+const QS: [f64; 7] = [0.01, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0];
+
+/// A latency-shaped sample: log-uniform over ~6 orders of magnitude,
+/// with occasional heavy-tail outliers — the distribution shape the
+/// log-bucketed layout exists for.
+fn sample(rng: &mut Rng) -> f64 {
+    let base = (rng.uniform_f64() * 20.0 - 4.0).exp2();
+    if rng.below(50) == 0 {
+        base * 1e4 // tail spike
+    } else {
+        base
+    }
+}
+
+#[test]
+fn prop_histogram_merge_equals_concatenation() {
+    let mut rng = Rng::new(0x4157);
+    for case in 0..50u64 {
+        let n = 100 + rng.below(2900);
+        let parts = 2 + rng.below(5);
+        let mut whole = Histogram::new();
+        let mut shards: Vec<Histogram> =
+            (0..parts).map(|_| Histogram::new()).collect();
+        for _ in 0..n {
+            let v = sample(&mut rng);
+            whole.record(v);
+            shards[rng.below(parts)].record(v);
+        }
+        // merge in a random order (merge must be order-independent)
+        let mut merged = Histogram::new();
+        let mut order: Vec<usize> = (0..parts).collect();
+        rng.shuffle(&mut order);
+        for i in order {
+            merged.merge(&shards[i]);
+        }
+        assert_eq!(merged.count(), whole.count(), "case {case}");
+        assert!(
+            (merged.mean() - whole.mean()).abs()
+                <= 1e-9 * whole.mean().abs().max(1.0),
+            "case {case}: merged mean {} vs whole {}",
+            merged.mean(),
+            whole.mean()
+        );
+        assert_eq!(merged.min(), whole.min(), "case {case}");
+        assert_eq!(merged.max(), whole.max(), "case {case}");
+        for q in QS {
+            assert_eq!(
+                merged.quantile(q).to_bits(),
+                whole.quantile(q).to_bits(),
+                "case {case}: quantile({q}) diverged after merge"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_within_resolution_bound() {
+    let mut rng = Rng::new(0xB0B);
+    for case in 0..30u64 {
+        let n = 500 + rng.below(2500);
+        let mut h = Histogram::new();
+        let mut xs: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // log-uniform across 30 octaves, strictly inside the
+            // resolvable range [2^-16, 2^24): the resolution promise
+            // only covers values the geometric buckets can represent
+            // (out-of-range values fall into under/overflow slots, which
+            // the merge test still covers exactly)
+            let v = (rng.uniform_f64() * 30.0 - 10.0).exp2();
+            h.record(v);
+            xs.push(v);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            let exact = quantile_exact(&xs, q);
+            let approx = h.quantile(q);
+            assert!(
+                (approx - exact).abs() / exact < 0.10,
+                "case {case}: q={q} exact {exact} vs histogram {approx} \
+                 (n={n}) — outside the ~9% log-bucket bound"
+            );
+        }
+        // quantiles stay monotone in q on every random stream
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let v = h.quantile(i as f64 / 20.0);
+            assert!(v >= prev, "case {case}: quantile not monotone");
+            prev = v;
+        }
+    }
+}
+
+#[test]
+fn prop_welford_merge_matches_single_stream() {
+    let mut rng = Rng::new(0x3EF);
+    for case in 0..50u64 {
+        let n = 10 + rng.below(2000);
+        let parts = 2 + rng.below(6);
+        // signed, multi-scale samples: Welford has no sign restriction
+        let xs: Vec<f64> = (0..n)
+            .map(|_| (rng.normal() as f64) * (rng.uniform_f64() * 1e3 + 1e-3))
+            .collect();
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut shards: Vec<Welford> =
+            (0..parts).map(|_| Welford::default()).collect();
+        for &x in &xs {
+            shards[rng.below(parts)].push(x);
+        }
+        let mut merged = Welford::default();
+        for s in &shards {
+            merged.merge(s); // empty shards must merge as no-ops
+        }
+        assert_eq!(merged.count(), whole.count(), "case {case}");
+        let scale = whole.mean().abs().max(whole.variance()).max(1.0);
+        assert!(
+            (merged.mean() - whole.mean()).abs() <= 1e-9 * scale,
+            "case {case}: mean {} vs {}",
+            merged.mean(),
+            whole.mean()
+        );
+        assert!(
+            (merged.variance() - whole.variance()).abs() <= 1e-6 * scale,
+            "case {case}: variance {} vs {}",
+            merged.variance(),
+            whole.variance()
+        );
+    }
+}

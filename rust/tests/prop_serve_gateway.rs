@@ -3,8 +3,10 @@
 //! **bit-identical** to the single-loop `ServerHandle::spawn_cpu` path
 //! for the same seed/content across replica counts {1, 2, 4}, every
 //! bucket layout (single-bucket baseline and two power-of-two layouts),
-//! and shuffled arrival order — bucketing, batching, and replication are
-//! wall-clock knobs only. Requests include hostile tokens so the shared
+//! **both scheduling policies** (the work-conserving deadline-aware
+//! `Conserve` and the FIFO A/B baseline), and shuffled arrival order —
+//! bucketing, batching, scheduling, and replication are wall-clock
+//! knobs only. Requests include hostile tokens so the shared
 //! canonicalization is part of the tested contract. Pool widths honor
 //! `YOSO_TEST_THREADS` so CI sweeps them.
 
@@ -12,8 +14,8 @@ use std::time::Duration;
 use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
-    BatchPolicy, BucketLayout, CpuServeConfig, Gateway, GatewayConfig,
-    ServerHandle, ShedPolicy,
+    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig, Gateway,
+    GatewayConfig, SchedPolicy, ServerHandle, ShedPolicy,
 };
 use yoso::testing::test_threads;
 use yoso::util::Rng;
@@ -92,58 +94,79 @@ fn gateway_bit_identical_to_single_loop_path() {
     ];
     for replicas in [1usize, 2, 4] {
         for (li, layout) in layouts.iter().enumerate() {
-            let mut cfg = GatewayConfig::new(tiny_cfg(seed));
-            cfg.replicas = replicas;
-            cfg.queue_capacity = 64;
-            cfg.shed = ShedPolicy::Reject;
-            cfg.batch =
-                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
-            cfg.buckets = layout.clone();
-            cfg.bucketing = true;
-            let gw = Gateway::spawn(cfg);
+            for (si, sched) in
+                [SchedPolicy::Fifo, SchedPolicy::Conserve].into_iter().enumerate()
+            {
+                let mut cfg = GatewayConfig::new(tiny_cfg(seed));
+                cfg.replicas = replicas;
+                cfg.queue_capacity = 64;
+                cfg.shed = ShedPolicy::Reject;
+                cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                });
+                cfg.buckets = layout.clone();
+                cfg.sched = sched;
+                cfg.bucketing = true;
+                let gw = Gateway::spawn(cfg);
 
-            // arrival order shuffled differently per (replicas, layout)
-            let mut order: Vec<usize> = (0..reqs.len()).collect();
-            Rng::new(0xD1CE ^ ((replicas as u64) << 8) ^ li as u64)
+                // arrival order shuffled differently per
+                // (replicas, layout, sched)
+                let mut order: Vec<usize> = (0..reqs.len()).collect();
+                Rng::new(
+                    0xD1CE
+                        ^ ((replicas as u64) << 8)
+                        ^ ((si as u64) << 4)
+                        ^ li as u64,
+                )
                 .shuffle(&mut order);
-            let mut rxs: Vec<Option<_>> = (0..reqs.len()).map(|_| None).collect();
-            for &i in &order {
-                let (ids, segs) = &reqs[i];
-                rxs[i] = Some(
-                    gw.submit(ids.clone(), segs.clone()).expect("admitted"),
+                let mut rxs: Vec<Option<_>> =
+                    (0..reqs.len()).map(|_| None).collect();
+                for &i in &order {
+                    let (ids, segs) = &reqs[i];
+                    rxs[i] = Some(
+                        gw.submit(ids.clone(), segs.clone()).expect("admitted"),
+                    );
+                }
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let got = rx
+                        .unwrap()
+                        .recv()
+                        .expect("one reply per request")
+                        .expect("served, not shed")
+                        .logits;
+                    assert_eq!(reference[i].len(), got.len());
+                    for (a, b) in reference[i].iter().zip(&got) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "request {i} diverged from the single-loop path \
+                             (replicas={replicas}, layout={:?}, sched={})",
+                            layout.widths(),
+                            sched.label()
+                        );
+                    }
+                }
+                let stats = gw.shutdown();
+                assert_eq!(stats.completed, reqs.len() as u64);
+                assert_eq!(
+                    stats.accepted,
+                    stats.completed + stats.shed_deadline
                 );
-            }
-            for (i, rx) in rxs.into_iter().enumerate() {
-                let got = rx
-                    .unwrap()
-                    .recv()
-                    .expect("one reply per request")
-                    .expect("served, not shed")
-                    .logits;
-                assert_eq!(reference[i].len(), got.len());
-                for (a, b) in reference[i].iter().zip(&got) {
-                    assert_eq!(
-                        a.to_bits(),
-                        b.to_bits(),
-                        "request {i} diverged from the single-loop path \
-                         (replicas={replicas}, layout={:?})",
+                if layout.widths().len() > 1 {
+                    // the variable-length set must actually exercise
+                    // multiple buckets, or the layout sweep proves nothing
+                    let used = stats
+                        .per_bucket
+                        .iter()
+                        .filter(|h| h.count() > 0)
+                        .count();
+                    assert!(
+                        used > 1,
+                        "layout {:?} served everything from one bucket",
                         layout.widths()
                     );
                 }
-            }
-            let stats = gw.shutdown();
-            assert_eq!(stats.completed, reqs.len() as u64);
-            assert_eq!(stats.accepted, stats.completed + stats.shed_deadline);
-            if layout.widths().len() > 1 {
-                // the variable-length set must actually exercise
-                // multiple buckets, or the layout sweep proves nothing
-                let used =
-                    stats.per_bucket.iter().filter(|h| h.count() > 0).count();
-                assert!(
-                    used > 1,
-                    "layout {:?} served everything from one bucket",
-                    layout.widths()
-                );
             }
         }
     }

@@ -1,0 +1,311 @@
+//! The gateway scheduling contract, proven on the deterministic
+//! discrete-event simulator (`serve::sim`) — the same scheduling core
+//! the live replicas run, driven on a virtual clock with **zero
+//! wall-clock sleeps**:
+//!
+//! * **work conservation** — under `SchedPolicy::Conserve`, no replica
+//!   ever idles (or parks on a partial-batch aging wait) while any
+//!   bucket holds live work, on randomized adversarial traces;
+//! * the audit has **teeth** — the PR-3 `Fifo` baseline demonstrably
+//!   violates it on a skewed-bucket trace (an idle replica parked on a
+//!   sparse foreign bucket), and pays for it in mean latency;
+//! * **deadline-earliest-first** dequeue within a bucket — exact batch
+//!   compositions, in order, on a scripted trace;
+//! * **exact shed accounting** — `accepted == completed + shed_deadline`
+//!   and `offered == accepted + rejected`, with hand-computed counts on
+//!   scripted deadline/capacity traces and as an invariant on random
+//!   traces under both policies.
+//!
+//! The other half of the contract — logits bit-identical to the
+//! single-loop path under every `SchedPolicy` x bucket layout x arrival
+//! shuffle — runs against the *real* gateway in
+//! `tests/prop_serve_gateway.rs`. Scheduling decisions are independent
+//! of `YOSO_TEST_THREADS` and `YOSO_KERNEL` by construction (the sim
+//! spawns no threads and builds no attention); CI's scheduler-stress
+//! sweep runs this suite across both to enforce exactly that.
+
+use std::time::Duration;
+use yoso::serve::sim::{run, Arrival, ServiceModel, SimConfig};
+use yoso::serve::{BatchPolicy, BatchPolicyTable, BucketLayout, SchedPolicy};
+use yoso::util::Rng;
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+fn us(v: u64) -> Duration {
+    Duration::from_micros(v)
+}
+
+#[test]
+fn conserve_is_work_conserving_on_random_adversarial_traces() {
+    // proptest-style loop: random replica counts, capacities, batch
+    // policies, service models, and arrival traces (bursts, skewed
+    // lengths, scattered deadlines). Under Conserve the simulator's
+    // audit must record zero idle-while-backlogged ticks, and the
+    // accounting identities must hold exactly. Fifo runs the same
+    // traces for the accounting half (its conservation violations are
+    // expected — that is the A/B point).
+    let mut rng = Rng::new(0x51A7);
+    for case in 0..60u64 {
+        let n = 20 + rng.below(60);
+        let trace: Vec<Arrival> = (0..n)
+            .map(|_| Arrival {
+                at: us(rng.below(150_000) as u64),
+                len: 1 + rng.below(64),
+                deadline: (rng.below(4) == 0)
+                    .then(|| ms(1 + rng.below(40) as u64)),
+            })
+            .collect();
+        let base = BatchPolicy {
+            max_batch: 1 + rng.below(7),
+            max_wait: ms(1 + rng.below(20) as u64),
+        };
+        let mut cfg = SimConfig {
+            replicas: 1 + rng.below(3),
+            queue_capacity: 4 + rng.below(60),
+            sched: SchedPolicy::Conserve,
+            buckets: BucketLayout::pow2(8, 64),
+            batch: if rng.below(2) == 0 {
+                BatchPolicyTable::uniform(base)
+            } else {
+                BatchPolicyTable::scaled(base)
+            },
+            service: ServiceModel {
+                batch_overhead: us(200 + rng.below(2000) as u64),
+                per_width: us(1 + rng.below(50) as u64),
+            },
+        };
+        let report = run(&cfg, &trace);
+        assert!(
+            report.conservation_violations.is_empty(),
+            "case {case}: replica idled while a bucket held work at ticks \
+             {:?}",
+            report.conservation_violations
+        );
+        assert_eq!(report.accepted + report.rejected, n as u64, "case {case}");
+        assert!(
+            report.reconciles(),
+            "case {case}: accepted {} != completed {} + shed {}",
+            report.accepted,
+            report.completed,
+            report.shed_deadline
+        );
+        assert_eq!(
+            report.latencies_ms.len() as u64,
+            report.completed,
+            "case {case}"
+        );
+        // batches partition the completed set: every seq exactly once
+        let mut seqs: Vec<u64> =
+            report.batches.iter().flat_map(|b| b.seqs.clone()).collect();
+        let total = seqs.len();
+        assert_eq!(total as u64, report.completed, "case {case}");
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), total, "case {case}: a request ran twice");
+        // every batch stays within its bucket's policy bound
+        let widest = *cfg.buckets.widths().last().unwrap();
+        for b in &report.batches {
+            let cap = cfg.batch.policy_for(b.width, widest).max_batch;
+            assert!(
+                b.seqs.len() <= cap,
+                "case {case}: batch of {} in a width-{} bucket capped at {cap}",
+                b.seqs.len(),
+                b.width
+            );
+        }
+        // same trace under Fifo: accounting still exact (conservation
+        // violations are allowed — Fifo is the baseline that has them)
+        cfg.sched = SchedPolicy::Fifo;
+        let fifo = run(&cfg, &trace);
+        assert!(fifo.reconciles(), "case {case} (fifo)");
+        assert_eq!(fifo.accepted + fifo.rejected, n as u64, "case {case}");
+    }
+}
+
+#[test]
+fn fifo_parks_on_foreign_buckets_and_conserve_does_not() {
+    // the skewed-bucket scenario the tentpole exists for: one sparse
+    // wide request plus a deep narrow bucket, single replica. Fifo
+    // picks the wide head (oldest seq), parks its 1-of-4 batch on the
+    // 50 ms aging wait while six narrow requests sit queued — the audit
+    // must catch it. Conserve drains the deep bucket first and never
+    // idles against backlog.
+    let mut trace = vec![Arrival { at: ms(0), len: 40, deadline: None }];
+    for _ in 0..6 {
+        trace.push(Arrival { at: ms(0), len: 4, deadline: None });
+    }
+    let mk = |sched| SimConfig {
+        replicas: 1,
+        queue_capacity: 64,
+        sched,
+        buckets: BucketLayout::pow2(8, 64),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 4,
+            max_wait: ms(50),
+        }),
+        service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
+    };
+    let fifo = run(&mk(SchedPolicy::Fifo), &trace);
+    let conserve = run(&mk(SchedPolicy::Conserve), &trace);
+
+    assert!(
+        !fifo.conservation_violations.is_empty(),
+        "the audit lost its teeth: FIFO no longer parks on foreign buckets"
+    );
+    assert!(conserve.conservation_violations.is_empty());
+    assert_eq!(fifo.completed, 7);
+    assert_eq!(conserve.completed, 7);
+    assert!(fifo.reconciles() && conserve.reconciles());
+    // and the parking shows up where it hurts: every narrow request
+    // waited out the wide bucket's aging under FIFO
+    assert!(
+        conserve.mean_ms() < fifo.mean_ms(),
+        "work conservation did not improve mean latency: conserve {:.2} ms \
+         vs fifo {:.2} ms",
+        conserve.mean_ms(),
+        fifo.mean_ms()
+    );
+    assert!(
+        conserve.p99_ms() <= fifo.p99_ms(),
+        "conserve p99 {:.2} ms regressed past fifo p99 {:.2} ms",
+        conserve.p99_ms(),
+        fifo.p99_ms()
+    );
+}
+
+#[test]
+fn dequeue_within_bucket_is_deadline_earliest_first() {
+    // single bucket, single replica. seq0 ships alone at t=0 and holds
+    // the replica busy for ~20 ms; five same-bucket requests arrive at
+    // t=1..5 with shuffled deadlines. When the replica frees, Conserve
+    // must dequeue strictly by (deadline, seq): batch [3, 5, 4] (100,
+    // 200, 300 ms), then [2, 1] (500 ms, none). Fifo on the identical
+    // trace dequeues by arrival: [1, 2, 3], then [4, 5].
+    let deadlines: [Option<Duration>; 5] =
+        [None, Some(ms(500)), Some(ms(100)), Some(ms(300)), Some(ms(200))];
+    let mut trace = vec![Arrival { at: ms(0), len: 8, deadline: None }];
+    for (i, d) in deadlines.into_iter().enumerate() {
+        trace.push(Arrival { at: ms(1 + i as u64), len: 8, deadline: d });
+    }
+    let mk = |sched| SimConfig {
+        replicas: 1,
+        queue_capacity: 64,
+        sched,
+        buckets: BucketLayout::single(8),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::ZERO,
+        }),
+        service: ServiceModel { batch_overhead: ms(20), per_width: us(10) },
+    };
+    let edf = run(&mk(SchedPolicy::Conserve), &trace);
+    assert_eq!(edf.completed, 6);
+    assert!(edf.reconciles());
+    let orders: Vec<&[u64]> =
+        edf.batches.iter().map(|b| b.seqs.as_slice()).collect();
+    assert_eq!(
+        orders,
+        vec![&[0][..], &[3, 5, 4][..], &[2, 1][..]],
+        "Conserve must dequeue by (deadline, seq) within the bucket"
+    );
+
+    let fifo = run(&mk(SchedPolicy::Fifo), &trace);
+    let orders: Vec<&[u64]> =
+        fifo.batches.iter().map(|b| b.seqs.as_slice()).collect();
+    assert_eq!(
+        orders,
+        vec![&[0][..], &[1, 2, 3][..], &[4, 5][..]],
+        "Fifo must dequeue in arrival order within the bucket"
+    );
+}
+
+#[test]
+fn shed_accounting_is_exact_on_scripted_deadline_traces() {
+    // hand-computed outcome, nanosecond-deterministic: seq0 occupies
+    // the only replica for ~30 ms; seq1 (deadline 10 ms) and seq2
+    // (deadline 5 ms) expire in-queue before it frees; seq3 has no
+    // deadline and executes. Exactly 2 deadline sheds, 2 completions.
+    let trace = vec![
+        Arrival { at: ms(0), len: 8, deadline: None },
+        Arrival { at: ms(1), len: 8, deadline: Some(ms(10)) },
+        Arrival { at: ms(2), len: 8, deadline: Some(ms(5)) },
+        Arrival { at: ms(3), len: 8, deadline: None },
+    ];
+    let mut cfg = SimConfig {
+        replicas: 1,
+        queue_capacity: 64,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::single(8),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }),
+        service: ServiceModel { batch_overhead: ms(30), per_width: us(10) },
+    };
+    let report = run(&cfg, &trace);
+    assert_eq!(report.accepted, 4);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.shed_deadline, 2);
+    assert_eq!(report.completed, 2);
+    assert!(report.reconciles());
+    let orders: Vec<&[u64]> =
+        report.batches.iter().map(|b| b.seqs.as_slice()).collect();
+    assert_eq!(orders, vec![&[0][..], &[3][..]]);
+
+    // same trace against a capacity-2 queue: seq3 now rejects at
+    // admission instead, and both queued deadlines still expire
+    cfg.queue_capacity = 2;
+    let report = run(&cfg, &trace);
+    assert_eq!(report.accepted, 3);
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.shed_deadline, 2);
+    assert_eq!(report.completed, 1);
+    assert!(report.reconciles());
+    assert_eq!(report.batches.len(), 1);
+}
+
+#[test]
+fn per_bucket_policies_shape_batches_in_the_sim() {
+    // scaled table on a [8, 64] layout with base max_batch 2: the
+    // narrow bucket's cap scales up (2 -> 16 at 3 halvings... capped at
+    // 8x = 16), the wide bucket keeps 2. Eight narrow + three wide
+    // requests at t=0, one replica: the narrow bucket drains in ONE
+    // wide batch, the wide bucket needs two base-cap batches.
+    let mut trace = Vec::new();
+    for _ in 0..8 {
+        trace.push(Arrival { at: ms(0), len: 4, deadline: None });
+    }
+    for _ in 0..3 {
+        trace.push(Arrival { at: ms(0), len: 64, deadline: None });
+    }
+    let cfg = SimConfig {
+        replicas: 1,
+        queue_capacity: 64,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::pow2(8, 64),
+        batch: BatchPolicyTable::scaled(BatchPolicy {
+            max_batch: 2,
+            max_wait: ms(8),
+        }),
+        service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
+    };
+    let report = run(&cfg, &trace);
+    assert_eq!(report.completed, 11);
+    assert!(report.conservation_violations.is_empty());
+    let narrow: Vec<usize> = report
+        .batches
+        .iter()
+        .filter(|b| b.width == 8)
+        .map(|b| b.seqs.len())
+        .collect();
+    let wide: Vec<usize> = report
+        .batches
+        .iter()
+        .filter(|b| b.width == 64)
+        .map(|b| b.seqs.len())
+        .collect();
+    assert_eq!(narrow, vec![8], "narrow bucket must drain in one batch");
+    assert_eq!(wide, vec![2, 1], "wide bucket keeps the base cap of 2");
+}
