@@ -1,0 +1,250 @@
+//! Streaming amortization (serving scenario family): per-token cost of
+//! keeping a session's encoder state current, streamed vs re-encoded.
+//!
+//! For each session length L, three costs:
+//!
+//! * `append` — amortized ms/token to absorb L tokens one at a time
+//!   into an `EncoderStream` (the O(m·dv) accumulator update; no
+//!   logits);
+//! * `classify` — ms to produce logits from the live session (PAD-tail
+//!   overlay + upper layers; paid only when logits are needed);
+//! * `full` — ms for one cold bucketed batch encode of the same L
+//!   tokens (what a cache miss, or a gateway without the prefix cache,
+//!   pays per request).
+//!
+//! Plus the gateway end to end: the same request submitted twice
+//! through a `Gateway` with the prefix cache on — the second submit
+//! checks the whole session out (`cache_hits == 1`) and pays only the
+//! classify, which is the measured hit-path speedup.
+//!
+//! Writes results/fig_stream.csv with columns
+//! `mode,session_len,ms_per_token,ms_total,cache_hits,cache_misses`.
+//!
+//! Regression gate (CI smoke mode, `YOSO_BENCH_SMOKE=1`; full runs only
+//! warn): at the largest smoke session length, the streamed append must
+//! beat the full re-encode by >= 2x per token — if appending a token
+//! costs half a re-encode, the incremental path has regressed into a
+//! rebuild.
+
+use std::io::Write;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use yoso::attention::{
+    Attention, ChunkPolicy, KernelVariant, MultiHeadAttention, YosoAttention,
+};
+use yoso::bench_support::{smoke, smoke_or};
+use yoso::model::encoder::{
+    bucket_len, encoder_abi_spec, serving_rng, Encoder, EncoderConfig,
+    EncoderStream,
+};
+use yoso::model::ParamSet;
+use yoso::serve::{CpuServeConfig, Gateway, GatewayConfig};
+use yoso::util::Rng;
+
+fn session_tokens(len: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let ids = (0..len).map(|_| 5 + rng.below(1990) as i32).collect();
+    let segs = vec![0i32; len];
+    (ids, segs)
+}
+
+/// Amortized ms/token: absorb the session one token at a time.
+fn time_append(
+    enc: &Encoder,
+    att: &YosoAttention,
+    seed: u64,
+    width: usize,
+    ids: &[i32],
+    segs: &[i32],
+    reps: usize,
+) -> f64 {
+    let mut total = Duration::ZERO;
+    for _ in 0..reps {
+        let mut s = EncoderStream::new(enc, att, seed, width);
+        let t0 = Instant::now();
+        for (id, seg) in ids.iter().zip(segs) {
+            s.append(enc, std::slice::from_ref(id), std::slice::from_ref(seg));
+        }
+        total += t0.elapsed();
+        std::hint::black_box(s.len());
+    }
+    total.as_secs_f64() * 1e3 / (reps * ids.len()) as f64
+}
+
+/// ms per logits readout from a live session.
+fn time_classify(
+    enc: &Encoder,
+    att: &YosoAttention,
+    seed: u64,
+    width: usize,
+    ids: &[i32],
+    segs: &[i32],
+    reps: usize,
+) -> f64 {
+    let mut s = EncoderStream::new(enc, att, seed, width);
+    s.append(enc, ids, segs);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(s.classify(enc));
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+/// ms per cold bucketed batch encode of the whole session.
+fn time_full(
+    enc: &Encoder,
+    shared: &Arc<dyn Attention>,
+    mh: &MultiHeadAttention,
+    seed: u64,
+    width: usize,
+    ids: &[i32],
+    segs: &[i32],
+    reps: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(enc.classify_bucketed(
+            ids,
+            segs,
+            width,
+            shared,
+            mh,
+            &mut serving_rng(seed, width),
+        ));
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+fn main() {
+    yoso::util::log::init_from_env();
+    let ecfg = smoke_or(
+        EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 64,
+            n_classes: 2,
+        },
+        EncoderConfig::base(2005, 128, 2),
+    );
+    let lens: Vec<usize> = smoke_or(vec![12, 32], vec![16, 48, 96]);
+    let reps = smoke_or(3, 10);
+    let seed = 42u64;
+    let att = YosoAttention::new(8, 8, false);
+    let shared: Arc<dyn Attention> = Arc::new(att.clone());
+    let mh = MultiHeadAttention::serial_with_policy(ChunkPolicy::default());
+    let params = ParamSet::init_for(&encoder_abi_spec(&ecfg), seed);
+    let enc = Encoder::new(ecfg.clone(), &params);
+
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = std::fs::File::create("results/fig_stream.csv").unwrap();
+    writeln!(
+        csv,
+        "mode,session_len,ms_per_token,ms_total,cache_hits,cache_misses"
+    )
+    .unwrap();
+
+    println!("Streaming amortization — per-token session cost\n");
+    println!(
+        "{:>5} {:>16} {:>16} {:>12} {:>10}",
+        "L", "append ms/tok", "full ms/tok", "classify ms", "ratio"
+    );
+    let mut gate_ratio = 0.0f64;
+    for &len in &lens {
+        let (ids, segs) = session_tokens(len, 7 + len as u64);
+        let width = bucket_len(len, ecfg.max_len);
+        let app = time_append(&enc, &att, seed, width, &ids, &segs, reps);
+        let cls = time_classify(&enc, &att, seed, width, &ids, &segs, reps);
+        let full =
+            time_full(&enc, &shared, &mh, seed, width, &ids, &segs, reps);
+        let full_per_tok = full / len as f64;
+        let ratio = full_per_tok / app.max(1e-9);
+        gate_ratio = ratio; // the largest length runs last
+        writeln!(csv, "append,{len},{app:.6},{:.6},0,0", app * len as f64)
+            .unwrap();
+        writeln!(csv, "classify,{len},{:.6},{cls:.6},0,0", cls / len as f64)
+            .unwrap();
+        writeln!(csv, "full,{len},{full_per_tok:.6},{full:.6},0,0").unwrap();
+        println!(
+            "{len:>5} {app:>16.5} {full_per_tok:>16.5} {cls:>12.4} \
+             {ratio:>9.2}x"
+        );
+    }
+
+    // gateway end to end: identical request twice; the repeat checks
+    // the whole session out of the prefix cache and pays only the
+    // classify — the hit-path speedup, measured at the front door
+    let gw_len = *lens.last().unwrap();
+    let (ids, segs) = session_tokens(gw_len, 99);
+    let gw = Gateway::spawn(GatewayConfig::new(CpuServeConfig {
+        attention: "yoso_8".into(),
+        encoder: ecfg.clone(),
+        threads: 1,
+        chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
+        seed,
+    }));
+    let serve_ms = |ids: &[i32], segs: &[i32]| {
+        let t0 = Instant::now();
+        gw.submit(ids.to_vec(), segs.to_vec())
+            .expect("admitted")
+            .recv()
+            .unwrap()
+            .expect("served");
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    let cold_ms = serve_ms(&ids, &segs);
+    let hit_ms = serve_ms(&ids, &segs);
+    let stats = gw.shutdown();
+    writeln!(
+        csv,
+        "gateway_cold,{gw_len},{:.6},{cold_ms:.6},{},{}",
+        cold_ms / gw_len as f64,
+        stats.cache_hits,
+        stats.cache_misses
+    )
+    .unwrap();
+    writeln!(
+        csv,
+        "gateway_hit,{gw_len},{:.6},{hit_ms:.6},{},{}",
+        hit_ms / gw_len as f64,
+        stats.cache_hits,
+        stats.cache_misses
+    )
+    .unwrap();
+    println!(
+        "\ngateway (L={gw_len}): cold {cold_ms:.3} ms, cached repeat \
+         {hit_ms:.3} ms ({:.2}x) — {} hits / {} misses",
+        cold_ms / hit_ms.max(1e-9),
+        stats.cache_hits,
+        stats.cache_misses
+    );
+    println!("-> results/fig_stream.csv");
+
+    println!(
+        "\nstream gate: full re-encode vs streamed append at L={} — \
+         {gate_ratio:.2}x per token (need >= 2x)",
+        lens.last().unwrap()
+    );
+    let mut failed = false;
+    if gate_ratio < 2.0 {
+        println!(
+            "WARNING: streamed append no longer beats full re-encode 2x \
+             per token — the incremental path is doing rebuild-scale work"
+        );
+        failed = smoke();
+    }
+    if stats.cache_hits < 1 {
+        println!(
+            "WARNING: identical repeat request did not hit the gateway \
+             prefix cache"
+        );
+        failed = failed || smoke();
+    }
+    if failed {
+        // the bench-smoke CI job is the regression gate
+        std::process::exit(1);
+    }
+}

@@ -167,13 +167,13 @@ impl KernelArena {
     }
 }
 
-fn grow_f32(v: &mut Vec<f32>, len: usize) {
+pub(crate) fn grow_f32(v: &mut Vec<f32>, len: usize) {
     if v.len() < len {
         v.resize(len, 0.0);
     }
 }
 
-fn grow_u32(v: &mut Vec<u32>, len: usize) {
+pub(crate) fn grow_u32(v: &mut Vec<u32>, len: usize) {
     if v.len() < len {
         v.resize(len, 0);
     }
@@ -215,7 +215,7 @@ pub(crate) fn hash_scratch_bytes(
 
 /// Copy `src` into `dst` and l2-normalize rows in place — the seed
 /// kernel's `unit_rows`, minus the allocation once `dst` has capacity.
-fn copy_unit_rows(dst: &mut Mat, src: &Mat) {
+pub(crate) fn copy_unit_rows(dst: &mut Mat, src: &Mat) {
     dst.rows = src.rows;
     dst.cols = src.cols;
     dst.data.clear();
@@ -225,7 +225,7 @@ fn copy_unit_rows(dst: &mut Mat, src: &Mat) {
 
 /// Reuse or (re)build the arena's hyperplane hasher for this geometry,
 /// drawing the exact RNG sequence a fresh construction would.
-fn prep_hyper(
+pub(crate) fn prep_hyper(
     slot: &mut Option<HyperplaneHasher>,
     rng: &mut Rng,
     m: usize,
@@ -238,7 +238,7 @@ fn prep_hyper(
     }
 }
 
-fn prep_hada(
+pub(crate) fn prep_hada(
     slot: &mut Option<HadamardHasher>,
     rng: &mut Rng,
     m: usize,
@@ -254,7 +254,7 @@ fn prep_hada(
 /// `dst[i] += src[i]`, 8-wide fixed chunks (element adds are
 /// independent, so the tiling never changes the bytes).
 #[inline]
-fn add_rows_8(dst: &mut [f32], src: &[f32]) {
+pub(crate) fn add_rows_8(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
     let mut d8 = dst.chunks_exact_mut(8);
     let mut s8 = src.chunks_exact(8);
@@ -271,7 +271,7 @@ fn add_rows_8(dst: &mut [f32], src: &[f32]) {
 /// `dst[i] += a * src[i]`, 8-wide fixed chunks — elementwise identical
 /// to the seed gather's `*o += inv_m * s`.
 #[inline]
-fn axpy_rows_8(a: f32, src: &[f32], dst: &mut [f32]) {
+pub(crate) fn axpy_rows_8(a: f32, src: &[f32], dst: &mut [f32]) {
     debug_assert_eq!(dst.len(), src.len());
     let mut d8 = dst.chunks_exact_mut(8);
     let mut s8 = src.chunks_exact(8);

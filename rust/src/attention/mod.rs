@@ -20,6 +20,7 @@ pub mod nystrom;
 pub mod performer;
 pub mod reformer;
 pub mod softmax;
+pub mod stream;
 pub mod yoso;
 
 pub use engine::{ChunkPolicy, Engine, HASH_CHUNK, MultiHeadAttention};
@@ -31,6 +32,7 @@ pub use nystrom::Nystromformer;
 pub use performer::Performer;
 pub use reformer::Reformer;
 pub use softmax::SoftmaxAttention;
+pub use stream::YosoStream;
 pub use yoso::{YosoAttention, YosoE};
 
 use crate::tensor::Mat;
@@ -101,25 +103,42 @@ impl Attention for NoneAttention {
     }
 }
 
+/// The sampled-YOSO attention a variant name denotes, when it denotes
+/// one: `yoso_<m>` / `yoso_fast_<m>` with the same §4.2 hyperparameters
+/// `by_name` uses (and the same `m` fallback on a malformed suffix).
+/// `None` for the rest of the zoo — including `yoso_e` (exact
+/// expectation, no sampled tables) and `yoso_c_*` (convolutional) —
+/// which is how the serving layer decides whether a config is
+/// streamable ([`stream::YosoStream`] / the gateway prefix cache).
+pub fn yoso_variant(name: &str) -> Option<YosoAttention> {
+    match name {
+        "yoso_e" => None,
+        name if name.starts_with("yoso_fast_") => {
+            let m: usize = name["yoso_fast_".len()..].parse().unwrap_or(32);
+            Some(YosoAttention::new(8, m, true))
+        }
+        name if name.starts_with("yoso_c_") => None,
+        name if name.starts_with("yoso_") => {
+            let m: usize = name["yoso_".len()..].parse().unwrap_or(32);
+            Some(YosoAttention::new(8, m, false))
+        }
+        _ => None,
+    }
+}
+
 /// Construct a variant by name with the paper's §4.2 hyperparameters.
 pub fn by_name(name: &str, rng: &mut Rng, d: usize) -> Box<dyn Attention> {
+    if let Some(yoso) = yoso_variant(name) {
+        return Box::new(yoso);
+    }
     match name {
         "softmax" => Box::new(SoftmaxAttention),
         "none" => Box::new(NoneAttention),
         "yoso_e" => Box::new(YosoE { tau: 8 }),
         "linear" => Box::new(LinearTransformer),
-        name if name.starts_with("yoso_fast_") => {
-            // fast-Hadamard projection variant (the paper's §3.2 speed-up)
-            let m: usize = name["yoso_fast_".len()..].parse().unwrap_or(32);
-            Box::new(YosoAttention::new(8, m, true))
-        }
         name if name.starts_with("yoso_c_") => {
             let m: usize = name["yoso_c_".len()..].parse().unwrap_or(16);
             Box::new(YosoConv::new(8, m, 9, rng))
-        }
-        name if name.starts_with("yoso_") => {
-            let m: usize = name["yoso_".len()..].parse().unwrap_or(32);
-            Box::new(YosoAttention::new(8, m, false))
         }
         "linformer" => Box::new(Linformer::new(rng, 256, d)),
         "performer" => Box::new(Performer { n_features: 256 }),
@@ -153,6 +172,22 @@ mod tests {
             let out = attn.forward(&q, &k, &v, &mut rng);
             assert_eq!((out.rows, out.cols), (64, 32), "{name}");
             assert!(out.data.iter().all(|x| x.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn yoso_variant_mirrors_by_name_arms() {
+        let v = yoso_variant("yoso_16").unwrap();
+        assert!(!v.fast_hash);
+        assert_eq!((v.tau, v.m), (8, 16));
+        let f = yoso_variant("yoso_fast_8").unwrap();
+        assert!(f.fast_hash);
+        assert_eq!(f.m, 8);
+        // malformed suffix falls back to by_name's default m
+        assert_eq!(yoso_variant("yoso_junk").unwrap().m, 32);
+        // not streamable: exact expectation, conv, and the rest of the zoo
+        for name in ["yoso_e", "yoso_c_16", "softmax", "none", "reformer"] {
+            assert!(yoso_variant(name).is_none(), "{name}");
         }
     }
 

@@ -1,0 +1,430 @@
+//! Incremental YOSO encoding: the additive-sketch property, made an API.
+//!
+//! The per-hash bucket table is a *sum* of value rows keyed by key hash
+//! (`H[f(K_j)] += V_j`, paper §3 / Alg. 1), so appending a token is an
+//! O(m·dv) accumulator update — not a re-encode. [`YosoStream`] owns the
+//! per-hash tables for one (head, session) and exposes exactly that:
+//! `append` folds new key/value rows into the tables, `finish_into`
+//! re-gathers any query block against the current state.
+//!
+//! **Bit-identity contract** (property-tested in
+//! `tests/prop_yoso_stream.rs`): a stream fed the same keys/values in
+//! any chunking produces byte-identical output to one batch forward at
+//! the same total width. Three invariants make this hold:
+//!
+//! * the hasher is drawn whole, up front, from the construction RNG —
+//!   the exact draw order of both batch kernels;
+//! * within each (hash, bucket), value rows are accumulated in
+//!   ascending global-`j` order: sequential appends each add their
+//!   chunk's rows in ascending local order, and chunk order is session
+//!   order — the same floating-point summation order as the fused
+//!   kernel's stable `scatter_sorted` and the seed kernel's `j` loop;
+//! * row normalization, hashing, and the gather's `+= table / m` are
+//!   all row-independent, so per-chunk processing never changes bytes.
+//!
+//! Because float addition is not invertible, there is no `remove`:
+//! a query against a *shorter-than-appended* effective width (e.g. the
+//! PAD tail of a bucketed batch) goes through
+//! [`YosoStream::finish_with_tail_into`], which overlays the tail rows
+//! on a scratch copy of the tables — the live session state is never
+//! contaminated. All scratch is grow-only (the `KernelArena` idiom), so
+//! steady-state appends and gathers allocate zero heap
+//! (`tests/alloc_stream.rs`).
+
+use super::kernel::{
+    add_rows_8, axpy_rows_8, copy_unit_rows, grow_f32, grow_u32, prep_hada,
+    prep_hyper,
+};
+use super::yoso::YosoAttention;
+use crate::lsh::{hadamard, HadamardHasher, HyperplaneHasher};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Incremental per-head YOSO state: `m` bucket tables (each 2^tau × dv)
+/// plus the hasher drawn at construction. See the module doc for the
+/// bit-identity contract.
+pub struct YosoStream {
+    tau: usize,
+    m: usize,
+    fast: bool,
+    normalize: bool,
+    d: usize,
+    dv: usize,
+    /// arena-idiom hasher slots: `reset` refills in place, no realloc
+    hyper: Option<HyperplaneHasher>,
+    hada: Option<HadamardHasher>,
+    /// m contiguous tables, hash h at `[h·2^tau·dv ..][.. 2^tau·dv]`
+    tables: Vec<f32>,
+    n_keys: usize,
+    /// grow-only scratch: normalized key/query copies, hasher
+    /// projections, per-hash codes, and the tail-overlay table copy
+    kn: Mat,
+    qn: Mat,
+    proj: Vec<f32>,
+    codes: Vec<u32>,
+    scratch_tables: Vec<f32>,
+}
+
+impl YosoStream {
+    /// A fresh stream for one head of `att`, drawing the hasher from
+    /// `rng` exactly as a batch forward would (same geometry, same draw
+    /// order), so streamed and batch outputs share the randomness.
+    pub fn new(att: &YosoAttention, d: usize, dv: usize, rng: &mut Rng) -> YosoStream {
+        let nb = 1usize << att.tau;
+        let mut s = YosoStream {
+            tau: att.tau,
+            m: att.m,
+            fast: att.fast_hash,
+            normalize: att.normalize,
+            d,
+            dv,
+            hyper: None,
+            hada: None,
+            tables: vec![0.0; att.m * nb * dv],
+            n_keys: 0,
+            kn: Mat::zeros(0, 0),
+            qn: Mat::zeros(0, 0),
+            proj: Vec::new(),
+            codes: Vec::new(),
+            scratch_tables: Vec::new(),
+        };
+        s.reset(rng);
+        s
+    }
+
+    /// Rewind to an empty session with a freshly drawn hasher, reusing
+    /// every buffer (the statelessness surface the property test's
+    /// interleaved-session check exercises): a reset stream is
+    /// bit-identical to a newly constructed one.
+    pub fn reset(&mut self, rng: &mut Rng) {
+        if self.fast {
+            prep_hada(&mut self.hada, rng, self.m, self.d, self.tau);
+        } else {
+            prep_hyper(&mut self.hyper, rng, self.m, self.d, self.tau);
+        }
+        self.tables.fill(0.0);
+        self.n_keys = 0;
+    }
+
+    /// Keys appended so far (the session length this head has absorbed).
+    pub fn n_keys(&self) -> usize {
+        self.n_keys
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_keys == 0
+    }
+
+    /// Approximate resident bytes (tables + grow-only scratch + hasher
+    /// storage) — the cache's eviction currency.
+    pub fn approx_bytes(&self) -> usize {
+        let hasher = if self.fast {
+            self.m * hadamard::ROUNDS * self.d
+        } else {
+            self.m * self.tau * self.d
+        };
+        (self.tables.len()
+            + self.scratch_tables.len()
+            + self.proj.len()
+            + self.kn.data.len()
+            + self.qn.data.len()
+            + hasher)
+            * 4
+            + self.codes.len() * 4
+    }
+
+    fn grow_scratch(&mut self, n: usize) {
+        grow_u32(&mut self.codes, n);
+        grow_f32(
+            &mut self.proj,
+            if self.fast { n * self.d } else { n * self.tau },
+        );
+    }
+
+    /// Fold `t` new tokens into the session: `tables[h][f_h(K_j)] += V_j`
+    /// for each hash, O(m·dv) per token. Rows are accumulated in
+    /// ascending order, continuing the session's global-`j` order.
+    /// Zero heap allocation once scratch is warm at this chunk size.
+    pub fn append(&mut self, k: &Mat, v: &Mat) {
+        assert_eq!(k.cols, self.d, "key dim mismatch");
+        assert_eq!(v.cols, self.dv, "value dim mismatch");
+        assert_eq!(k.rows, v.rows, "key/value row mismatch");
+        let t = k.rows;
+        if t == 0 {
+            return;
+        }
+        copy_unit_rows(&mut self.kn, k);
+        self.grow_scratch(t);
+        let YosoStream {
+            tau, m, fast, dv, hyper, hada, tables, kn, proj, codes, ..
+        } = self;
+        scatter_chunk(
+            hyper.as_ref(),
+            hada.as_ref(),
+            *fast,
+            *m,
+            1usize << *tau,
+            *dv,
+            kn,
+            v,
+            proj,
+            &mut codes[..t],
+            tables,
+        );
+        self.n_keys += t;
+    }
+
+    /// Gather every query row against the current tables:
+    /// `out_i = (1/m) Σ_h tables[h][f_h(Q_i)]`, l2-normalized when the
+    /// source attention does (N-YOSO). `out` must be (q.rows, dv);
+    /// bit-identical to a batch forward over all appended keys.
+    pub fn finish_into(&mut self, q: &Mat, out: &mut Mat) {
+        assert_eq!(q.cols, self.d, "query dim mismatch");
+        assert_eq!((out.rows, out.cols), (q.rows, self.dv), "out must be (nq, dv)");
+        let nq = q.rows;
+        copy_unit_rows(&mut self.qn, q);
+        self.grow_scratch(nq);
+        let YosoStream {
+            tau, m, fast, dv, normalize, hyper, hada, tables, qn, proj, codes, ..
+        } = self;
+        gather_block(
+            hyper.as_ref(),
+            hada.as_ref(),
+            *fast,
+            *m,
+            1usize << *tau,
+            *dv,
+            qn,
+            proj,
+            &mut codes[..nq],
+            tables,
+            *normalize,
+            out,
+        );
+    }
+
+    /// `finish_into`, but with `tail_k`/`tail_v` rows overlaid *after*
+    /// the appended session rows on a scratch copy of the tables — the
+    /// bucketed-batch PAD tail, without contaminating session state.
+    /// Tail rows sit at global indices past every appended row, so
+    /// appending them last preserves the ascending summation order and
+    /// the result is bit-identical to one batch forward over
+    /// session-keys ++ tail-keys.
+    pub fn finish_with_tail_into(
+        &mut self,
+        q: &Mat,
+        tail_k: &Mat,
+        tail_v: &Mat,
+        out: &mut Mat,
+    ) {
+        let t = tail_k.rows;
+        if t == 0 {
+            self.finish_into(q, out);
+            return;
+        }
+        assert_eq!(tail_k.cols, self.d, "tail key dim mismatch");
+        assert_eq!(tail_v.cols, self.dv, "tail value dim mismatch");
+        assert_eq!(tail_k.rows, tail_v.rows, "tail key/value row mismatch");
+        assert_eq!(q.cols, self.d, "query dim mismatch");
+        assert_eq!((out.rows, out.cols), (q.rows, self.dv), "out must be (nq, dv)");
+        grow_f32(&mut self.scratch_tables, self.tables.len());
+        let nq = q.rows;
+        // overlay the tail on a copy of the live tables
+        copy_unit_rows(&mut self.kn, tail_k);
+        self.grow_scratch(t.max(nq));
+        {
+            let YosoStream {
+                tau, m, fast, dv, hyper, hada, tables, scratch_tables, kn, proj,
+                codes, ..
+            } = self;
+            let scratch = &mut scratch_tables[..tables.len()];
+            scratch.copy_from_slice(tables);
+            scatter_chunk(
+                hyper.as_ref(),
+                hada.as_ref(),
+                *fast,
+                *m,
+                1usize << *tau,
+                *dv,
+                kn,
+                tail_v,
+                proj,
+                &mut codes[..t],
+                scratch,
+            );
+        }
+        copy_unit_rows(&mut self.qn, q);
+        let YosoStream {
+            tau, m, fast, dv, normalize, hyper, hada, tables, scratch_tables, qn,
+            proj, codes, ..
+        } = self;
+        gather_block(
+            hyper.as_ref(),
+            hada.as_ref(),
+            *fast,
+            *m,
+            1usize << *tau,
+            *dv,
+            qn,
+            proj,
+            &mut codes[..nq],
+            &scratch_tables[..tables.len()],
+            *normalize,
+            out,
+        );
+    }
+}
+
+/// Hash `kn`'s rows per hash and accumulate `v`'s rows into `tables`,
+/// ascending local order (helper shared by live appends and the
+/// tail overlay).
+#[allow(clippy::too_many_arguments)]
+fn scatter_chunk(
+    hyper: Option<&HyperplaneHasher>,
+    hada: Option<&HadamardHasher>,
+    fast: bool,
+    m: usize,
+    nb: usize,
+    dv: usize,
+    kn: &Mat,
+    v: &Mat,
+    proj: &mut [f32],
+    codes: &mut [u32],
+    tables: &mut [f32],
+) {
+    for h in 0..m {
+        if fast {
+            hada.unwrap().hash_block_into(kn, h, proj, codes);
+        } else {
+            hyper.unwrap().hash_block_into(kn, h, proj, codes);
+        }
+        let table = &mut tables[h * nb * dv..(h + 1) * nb * dv];
+        for (j, &c) in codes.iter().enumerate() {
+            let b = c as usize;
+            add_rows_8(&mut table[b * dv..(b + 1) * dv], v.row(j));
+        }
+    }
+}
+
+/// Hash `qn`'s rows per hash and gather `out_i += tables[h][code] / m`,
+/// then optionally l2-normalize — the batch kernels' gather order.
+#[allow(clippy::too_many_arguments)]
+fn gather_block(
+    hyper: Option<&HyperplaneHasher>,
+    hada: Option<&HadamardHasher>,
+    fast: bool,
+    m: usize,
+    nb: usize,
+    dv: usize,
+    qn: &Mat,
+    proj: &mut [f32],
+    codes: &mut [u32],
+    tables: &[f32],
+    normalize: bool,
+    out: &mut Mat,
+) {
+    out.data.fill(0.0);
+    let inv_m = 1.0 / m as f32;
+    for h in 0..m {
+        if fast {
+            hada.unwrap().hash_block_into(qn, h, proj, codes);
+        } else {
+            hyper.unwrap().hash_block_into(qn, h, proj, codes);
+        }
+        let table = &tables[h * nb * dv..(h + 1) * nb * dv];
+        for (i, &c) in codes.iter().enumerate() {
+            let b = c as usize;
+            axpy_rows_8(
+                inv_m,
+                &table[b * dv..(b + 1) * dv],
+                &mut out.data[i * dv..(i + 1) * dv],
+            );
+        }
+    }
+    if normalize {
+        out.l2_normalize_rows();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{Attention, KernelVariant};
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn one_shot_append_matches_batch_forward() {
+        for fast in [false, true] {
+            let att = YosoAttention::new(5, 4, fast)
+                .with_kernel(KernelVariant::Fused);
+            let (q, k, v) = setup(24, 16, 3);
+            let expected = att.forward(&q, &k, &v, &mut Rng::new(11));
+            let mut s = YosoStream::new(&att, 16, 16, &mut Rng::new(11));
+            s.append(&k, &v);
+            let mut out = Mat::zeros(q.rows, v.cols);
+            s.finish_into(&q, &mut out);
+            assert_eq!(s.n_keys(), 24);
+            for (a, b) in out.data.iter().zip(&expected.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fast={fast}");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_overlay_leaves_session_state_intact() {
+        let att = YosoAttention::new(4, 3, false);
+        let (q, k, v) = setup(20, 16, 7);
+        let real = 12usize;
+        let k_real = Mat::from_fn(real, 16, |i, j| k.at(i, j));
+        let v_real = Mat::from_fn(real, 16, |i, j| v.at(i, j));
+        let k_tail = Mat::from_fn(20 - real, 16, |i, j| k.at(real + i, j));
+        let v_tail = Mat::from_fn(20 - real, 16, |i, j| v.at(real + i, j));
+        let expected = att.forward(&q, &k, &v, &mut Rng::new(5));
+        let mut s = YosoStream::new(&att, 16, 16, &mut Rng::new(5));
+        s.append(&k_real, &v_real);
+        let mut out = Mat::zeros(q.rows, v.cols);
+        // twice: the overlay must not leak tail rows into the session
+        for pass in 0..2 {
+            s.finish_with_tail_into(&q, &k_tail, &v_tail, &mut out);
+            for (a, b) in out.data.iter().zip(&expected.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "pass {pass}");
+            }
+            assert_eq!(s.n_keys(), real, "tail must not count as appended");
+        }
+    }
+
+    #[test]
+    fn reset_replays_a_fresh_stream() {
+        let att = YosoAttention::new(4, 2, true);
+        let (q, k, v) = setup(16, 16, 9);
+        let mut s = YosoStream::new(&att, 16, 16, &mut Rng::new(1));
+        s.append(&k, &v);
+        let mut first = Mat::zeros(q.rows, v.cols);
+        s.finish_into(&q, &mut first);
+        // pollute, then reset with the same seed: bytes must replay
+        s.append(&q, &v);
+        s.reset(&mut Rng::new(1));
+        assert!(s.is_empty());
+        s.append(&k, &v);
+        let mut second = Mat::zeros(q.rows, v.cols);
+        s.finish_into(&q, &mut second);
+        for (a, b) in first.data.iter().zip(&second.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn approx_bytes_counts_tables() {
+        let att = YosoAttention::new(6, 8, false);
+        let s = YosoStream::new(&att, 32, 32, &mut Rng::new(2));
+        // m · 2^tau · dv floats of tables at minimum
+        assert!(s.approx_bytes() >= 8 * 64 * 32 * 4);
+    }
+}

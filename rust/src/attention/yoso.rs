@@ -24,6 +24,7 @@ use crate::tensor::Mat;
 use crate::util::Rng;
 
 /// Sampled YOSO-m attention.
+#[derive(Clone)]
 pub struct YosoAttention {
     pub tau: usize,
     pub m: usize,

@@ -6,7 +6,9 @@
 //! (Figure 6), and the efficiency study's full-model rows.
 
 use super::params::ParamSet;
-use crate::attention::{Attention, HeadTask, MultiHeadAttention};
+use crate::attention::{
+    Attention, HeadTask, MultiHeadAttention, YosoAttention, YosoStream,
+};
 use crate::data::special;
 use crate::runtime::manifest::{ArtifactSpec, Dtype, IoSpec};
 use crate::tensor::{gelu, Mat};
@@ -25,8 +27,17 @@ pub struct EncoderConfig {
 }
 
 impl EncoderConfig {
-    /// The shared encoder geometry of all artifact families.
+    /// The shared encoder geometry of all artifact families. `max_len`
+    /// must be a power of two: every canonical compute width
+    /// ([`bucket_len`]) is one, the serving prefix cache keys on it, and
+    /// the attention zoo's FFT/Hadamard variants require it — a non-pow2
+    /// cap would silently break all three (see [`pow2_floor`] for the
+    /// serving entry points that floor a foreign config instead).
     pub fn base(vocab_size: usize, max_len: usize, n_classes: usize) -> Self {
+        assert!(
+            max_len.is_power_of_two(),
+            "max_len must be a power of two, got {max_len}"
+        );
         EncoderConfig {
             n_layers: 2,
             d_model: 128,
@@ -149,6 +160,15 @@ impl<'a> Encoder<'a> {
 
     /// Token + position + segment embeddings, layer-normed. ids: (n,).
     pub fn embed(&self, ids: &[i32], segs: &[i32]) -> Mat {
+        self.embed_rows_at(ids, segs, 0)
+    }
+
+    /// `embed` for tokens sitting at sequence positions
+    /// `offset..offset + ids.len()` — every step (lookup sum, layer
+    /// norm) is row-local, so these rows are bit-identical to the same
+    /// rows of a full-sequence `embed`. The incremental path
+    /// ([`EncoderStream`]) embeds appended chunks through this.
+    fn embed_rows_at(&self, ids: &[i32], segs: &[i32], offset: usize) -> Mat {
         let d = self.cfg.d_model;
         let (_, tok) = self.p("tok_emb");
         let (_, pos) = self.p("pos_emb");
@@ -160,7 +180,7 @@ impl<'a> Encoder<'a> {
             let s = segs[i].max(0) as usize;
             let row = x.row_mut(i);
             for j in 0..d {
-                row[j] = tok[t * d + j] + pos[i * d + j] + seg[s * d + j];
+                row[j] = tok[t * d + j] + pos[(offset + i) * d + j] + seg[s * d + j];
             }
         }
         x.layer_norm(self.vec("emb_ln_g"), self.vec("emb_ln_b"))
@@ -233,7 +253,18 @@ impl<'a> Encoder<'a> {
         }
         let base = call.fold_in(l as u64);
         let outs = run_heads(heads, &base);
+        self.layer_tail(l, x, &outs)
+    }
 
+    /// Everything in layer `l` after the attention heads: concat + output
+    /// projection, post-LN residual, feed-forward, second LN. Split out so
+    /// the incremental path ([`EncoderStream`]), which produces its head
+    /// outputs from streamed bucket tables instead of `run_heads`, shares
+    /// the exact tail computation with `layer_with`.
+    fn layer_tail(&self, l: usize, x: &Mat, outs: &[Mat]) -> Mat {
+        let p = |s: &str| format!("layer{l}.{s}");
+        let n = x.rows;
+        let dh = self.cfg.d_head();
         let mut concat = Mat::zeros(n, self.cfg.d_model);
         for (head, out) in outs.iter().enumerate() {
             for i in 0..n {
@@ -319,18 +350,44 @@ impl<'a> Encoder<'a> {
     }
 }
 
+/// Largest power of two <= `n` (0 for 0).
+pub fn pow2_floor(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        1usize << (usize::BITS - 1 - n.leading_zeros())
+    }
+}
+
 /// Canonical compute width for a request of `len` tokens: the smallest
 /// power of two >= `len`, floored at 8 and capped at `max_len`. A pure
 /// function of the request's own length — never of which serving bucket
 /// it was grouped into — so logits stay bit-identical under every bucket
 /// layout (the gateway determinism contract). Power-of-two widths keep
-/// the attention zoo's FFT/Hadamard variants constructible at any width.
+/// the attention zoo's FFT/Hadamard variants constructible at any width,
+/// and are what the serving prefix cache keys on — so a non-pow2
+/// `max_len` cap is floored to a power of two rather than returned
+/// verbatim (the serving entry points floor their whole config with
+/// [`pow2_floor`] up front, so truncation agrees with this cap).
 pub fn bucket_len(len: usize, max_len: usize) -> usize {
     let mut w = 8usize;
     while w < len {
         w *= 2;
     }
-    w.min(max_len)
+    w.min(pow2_floor(max_len))
+}
+
+/// The serving RNG stream: a pure function of (config seed, canonical
+/// compute width). Width-keyed — not content-keyed — so every request
+/// landing at the same `bucket_len` width shares its hash functions,
+/// which is what lets the gateway prefix cache reuse a session's bucket
+/// tables across requests (`serve::cache`). Logits stay a pure function
+/// of (seed, content): the width itself is content-canonical. The trade,
+/// relative to a per-content stream, is that same-width requests share
+/// hash-function randomness instead of drawing independent samples —
+/// fine for serving, where each request is classified once.
+pub fn serving_rng(seed: u64, width: usize) -> Rng {
+    Rng::new(seed).fold_in(width as u64)
 }
 
 /// Pad/truncate ids+segs to a model length.
@@ -342,6 +399,247 @@ pub fn pad_to(ids: &[i32], segs: &[i32], len: usize) -> (Vec<i32>, Vec<i32>) {
     i.truncate(len);
     s.truncate(len);
     (i, s)
+}
+
+/// Append `src`'s rows to `dst` (same column count).
+fn append_rows(dst: &mut Mat, src: &Mat) {
+    assert_eq!(dst.cols, src.cols);
+    dst.data.extend_from_slice(&src.data);
+    dst.rows += src.rows;
+}
+
+/// Incremental encoder session at one canonical compute width: the
+/// encoder-level owner of per-head [`YosoStream`]s, serving sliding-window
+/// classification and long-document chunked encode without quadratic
+/// re-encoding.
+///
+/// `append` costs O(per-token projections + m·dv table update) per new
+/// token — layer-0 embeddings, q/k/v rows, and the per-head bucket-table
+/// accumulations, all row-local, with **no** full-table rebuild and no
+/// re-touching of earlier tokens (`tests/alloc_stream.rs` pins the
+/// attention-level claim with the counting allocator). `classify` gathers
+/// the stored layer-0 queries against the streamed tables (overlaying the
+/// PAD tail of the bucketed width on scratch), then runs the remaining
+/// layers densely: a bidirectional encoder's upper layers depend on every
+/// token, so they are recomputed per classify — the streamed savings are
+/// the layer-0 key/value side, which is exactly what grows with session
+/// length.
+///
+/// **Bit-identity contract**: `classify` equals the batch serving path
+/// (`classify_bucketed` at this width under the [`serving_rng`] stream)
+/// byte-for-byte, regardless of how the session was chunked — property-
+/// tested in `tests/prop_yoso_stream.rs`. This is what makes gateway
+/// prefix caching (`serve::cache`) invisible to the determinism contract.
+pub struct EncoderStream {
+    att: YosoAttention,
+    width: usize,
+    /// the per-forward-call stream of the batch path, pinned at creation:
+    /// layer `l`, head `i` derive `call.fold_in(l).fold_in(i)` exactly as
+    /// `forward_mh` does
+    call: Rng,
+    ids: Vec<i32>,
+    segs: Vec<i32>,
+    /// layer-0 invariants of the appended tokens (row-local, so rows are
+    /// final the moment a token arrives): embedded input and query rows
+    x0: Mat,
+    q0: Mat,
+    /// one streamed bucket-table state per layer-0 head
+    heads: Vec<YosoStream>,
+    /// PAD-row caches for positions `pad_filled_from..width` (a PAD row
+    /// at a position is config-constant, so it is computed once, lazily,
+    /// as the needed tail shrinks toward the session length)
+    pad_x: Mat,
+    pad_q: Mat,
+    pad_k: Mat,
+    pad_v: Mat,
+    pad_filled_from: usize,
+}
+
+impl EncoderStream {
+    /// A fresh session at `width` (a power of two <= `max_len`), drawing
+    /// hashers from the same [`serving_rng`] stream the batch path uses
+    /// at this width.
+    pub fn new(
+        enc: &Encoder,
+        att: &YosoAttention,
+        seed: u64,
+        width: usize,
+    ) -> EncoderStream {
+        assert!(
+            width <= enc.cfg.max_len,
+            "stream width {width} exceeds max_len {}",
+            enc.cfg.max_len
+        );
+        assert!(width.is_power_of_two(), "stream width must be a power of two");
+        let mut rng = serving_rng(seed, width);
+        // the batch path's per-call stream: forward_mh's Rng::new(next_u64)
+        let call = Rng::new(rng.next_u64());
+        let base = call.fold_in(0u64);
+        let dh = enc.cfg.d_head();
+        let heads = (0..enc.cfg.n_heads)
+            .map(|i| {
+                let mut r = base.fold_in(i as u64);
+                YosoStream::new(att, dh, dh, &mut r)
+            })
+            .collect();
+        let d = enc.cfg.d_model;
+        EncoderStream {
+            att: att.clone(),
+            width,
+            call,
+            ids: Vec::new(),
+            segs: Vec::new(),
+            x0: Mat::zeros(0, d),
+            q0: Mat::zeros(0, d),
+            heads,
+            pad_x: Mat::zeros(width, d),
+            pad_q: Mat::zeros(width, d),
+            pad_k: Mat::zeros(width, d),
+            pad_v: Mat::zeros(width, d),
+            pad_filled_from: width,
+        }
+    }
+
+    /// Tokens appended so far.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The canonical compute width this session is pinned to.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn ids(&self) -> &[i32] {
+        &self.ids
+    }
+
+    pub fn segs(&self) -> &[i32] {
+        &self.segs
+    }
+
+    /// Approximate resident bytes — the prefix cache's eviction currency.
+    pub fn approx_bytes(&self) -> usize {
+        let mats = self.x0.data.len()
+            + self.q0.data.len()
+            + self.pad_x.data.len()
+            + self.pad_q.data.len()
+            + self.pad_k.data.len()
+            + self.pad_v.data.len();
+        mats * 4
+            + (self.ids.len() + self.segs.len()) * 4
+            + self.heads.iter().map(|h| h.approx_bytes()).sum::<usize>()
+    }
+
+    /// Fold new tokens into the session: embed at their absolute
+    /// positions, project layer-0 q/k/v rows, and accumulate each head's
+    /// key/value rows into its bucket tables. Per-token cost is
+    /// independent of the session length — nothing already appended is
+    /// touched.
+    pub fn append(&mut self, enc: &Encoder, new_ids: &[i32], new_segs: &[i32]) {
+        assert_eq!(new_ids.len(), new_segs.len());
+        let t = new_ids.len();
+        if t == 0 {
+            return;
+        }
+        let n = self.ids.len();
+        assert!(
+            n + t <= self.width,
+            "append past stream width {} (have {n}, adding {t})",
+            self.width
+        );
+        let x_new = enc.embed_rows_at(new_ids, new_segs, n);
+        let q_new = enc.dense(&x_new, "layer0.wq", "layer0.bq");
+        let k_new = enc.dense(&x_new, "layer0.wk", "layer0.bk");
+        let v_new = enc.dense(&x_new, "layer0.wv", "layer0.bv");
+        let dh = enc.cfg.d_head();
+        for (i, head) in self.heads.iter_mut().enumerate() {
+            let kh = Mat::from_fn(t, dh, |r, c| k_new.at(r, i * dh + c));
+            let vh = Mat::from_fn(t, dh, |r, c| v_new.at(r, i * dh + c));
+            head.append(&kh, &vh);
+        }
+        append_rows(&mut self.x0, &x_new);
+        append_rows(&mut self.q0, &q_new);
+        self.ids.extend_from_slice(new_ids);
+        self.segs.extend_from_slice(new_segs);
+    }
+
+    /// Lazily extend the PAD caches down to the current session length:
+    /// position `p`'s PAD row never changes, so each is computed once
+    /// even as successive classifies need shorter tails.
+    fn fill_pads(&mut self, enc: &Encoder) {
+        let n = self.ids.len();
+        if n >= self.pad_filled_from {
+            return;
+        }
+        let cnt = self.pad_filled_from - n;
+        let pids = vec![special::PAD; cnt];
+        let psegs = vec![0i32; cnt];
+        let px = enc.embed_rows_at(&pids, &psegs, n);
+        let pq = enc.dense(&px, "layer0.wq", "layer0.bq");
+        let pk = enc.dense(&px, "layer0.wk", "layer0.bk");
+        let pv = enc.dense(&px, "layer0.wv", "layer0.bv");
+        for local in 0..cnt {
+            let p = n + local;
+            self.pad_x.row_mut(p).copy_from_slice(px.row(local));
+            self.pad_q.row_mut(p).copy_from_slice(pq.row(local));
+            self.pad_k.row_mut(p).copy_from_slice(pk.row(local));
+            self.pad_v.row_mut(p).copy_from_slice(pv.row(local));
+        }
+        self.pad_filled_from = n;
+    }
+
+    /// Full-width hidden states against the current session: layer 0
+    /// gathers the stored queries from the streamed tables (PAD tail
+    /// overlaid on scratch — session state is untouched, so this is
+    /// repeatable), remaining layers run densely on the batch path's
+    /// exact code. Bit-identical to `forward_mh` over the padded session
+    /// at this width under [`serving_rng`].
+    pub fn hidden(&mut self, enc: &Encoder) -> Mat {
+        self.fill_pads(enc);
+        let n = self.ids.len();
+        let w = self.width;
+        let d = enc.cfg.d_model;
+        let dh = enc.cfg.d_head();
+        let tail = w - n;
+        let x0 = &self.x0;
+        let q0 = &self.q0;
+        let (pad_x, pad_q) = (&self.pad_x, &self.pad_q);
+        let x_full = Mat::from_fn(w, d, |i, j| {
+            if i < n { x0.at(i, j) } else { pad_x.at(i, j) }
+        });
+        let q_full = Mat::from_fn(w, d, |i, j| {
+            if i < n { q0.at(i, j) } else { pad_q.at(i, j) }
+        });
+        let (pad_k, pad_v) = (&self.pad_k, &self.pad_v);
+        let mut outs = Vec::with_capacity(self.heads.len());
+        for (i, head) in self.heads.iter_mut().enumerate() {
+            let qh = Mat::from_fn(w, dh, |r, c| q_full.at(r, i * dh + c));
+            let tkh = Mat::from_fn(tail, dh, |r, c| pad_k.at(n + r, i * dh + c));
+            let tvh = Mat::from_fn(tail, dh, |r, c| pad_v.at(n + r, i * dh + c));
+            let mut out = Mat::zeros(w, dh);
+            head.finish_with_tail_into(&qh, &tkh, &tvh, &mut out);
+            outs.push(out);
+        }
+        let mut x = enc.layer_tail(0, &x_full, &outs);
+        for l in 1..enc.cfg.n_layers {
+            x = enc.layer_with(l, &x, &self.call, &mut |heads, base| {
+                self.att.forward_batch(&heads, base)
+            });
+        }
+        x
+    }
+
+    /// [CLS] logits against the current session — the streamed
+    /// equivalent of `classify_bucketed` at this width.
+    pub fn classify(&mut self, enc: &Encoder) -> Vec<f32> {
+        let hidden = self.hidden(enc);
+        enc.pool_logits(&hidden)
+    }
 }
 
 #[cfg(test)]
@@ -423,6 +721,89 @@ mod tests {
         assert_eq!(bucket_len(100, 128), 128);
         assert_eq!(bucket_len(500, 128), 128, "caps at max_len");
         assert_eq!(bucket_len(5, 4), 4, "small max_len wins over the floor");
+    }
+
+    #[test]
+    fn bucket_len_never_returns_non_pow2() {
+        // regression: a non-pow2 max_len used to leak through the cap,
+        // contradicting the doc and breaking prefix-cache keying
+        assert_eq!(bucket_len(100, 100), 64);
+        assert_eq!(bucket_len(500, 100), 64);
+        assert_eq!(bucket_len(5, 100), 8, "cap only binds past the request");
+        assert_eq!(bucket_len(40, 48), 32);
+        assert_eq!(bucket_len(5, 6), 4, "non-pow2 cap floors below the request");
+    }
+
+    #[test]
+    fn pow2_floor_cases() {
+        assert_eq!(pow2_floor(0), 0);
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(2), 2);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(8), 8);
+        assert_eq!(pow2_floor(100), 64);
+        assert_eq!(pow2_floor(usize::MAX), 1usize << (usize::BITS - 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn base_rejects_non_pow2_max_len() {
+        let _ = EncoderConfig::base(64, 48, 3);
+    }
+
+    #[test]
+    fn serving_rng_is_width_keyed() {
+        let mut a = serving_rng(7, 16);
+        let mut b = serving_rng(7, 16);
+        let mut c = serving_rng(7, 32);
+        let mut d = serving_rng(8, 16);
+        let x = a.next_u64();
+        assert_eq!(x, b.next_u64(), "same (seed, width) must reproduce");
+        assert_ne!(x, c.next_u64(), "width keys the stream");
+        assert_ne!(x, d.next_u64(), "seed keys the stream");
+    }
+
+    #[test]
+    fn encoder_stream_matches_bucketed_serving_path() {
+        // chunked appends with interleaved classifies: every classify
+        // must be bit-identical to the batch serving path over the
+        // prefix appended so far, at the same width and serving stream
+        let cfg = EncoderConfig::base(64, 32, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 3);
+        let enc = Encoder::new(cfg, &params);
+        let att = YosoAttention::new(5, 8, false);
+        let attn: Arc<dyn Attention> = Arc::new(att.clone());
+        let mh = MultiHeadAttention::serial();
+        let seed = 21u64;
+        let ids: Vec<i32> = (0..30).map(|i| (i % 60) + 4).collect();
+        let segs: Vec<i32> = (0..30).map(|i| i % 2).collect();
+        let width = 32;
+        let mut stream = EncoderStream::new(&enc, &att, seed, width);
+        for (start, end) in [(0usize, 7usize), (7, 8), (8, 30)] {
+            stream.append(&enc, &ids[start..end], &segs[start..end]);
+            assert_eq!(stream.len(), end);
+            // twice: the PAD-tail overlay must leave session state intact
+            for pass in 0..2 {
+                let got = stream.classify(&enc);
+                let mut rng = serving_rng(seed, width);
+                let expect = enc.classify_bucketed(
+                    &ids[..end],
+                    &segs[..end],
+                    width,
+                    &attn,
+                    &mh,
+                    &mut rng,
+                );
+                assert_eq!(got.len(), expect.len());
+                for (a, b) in got.iter().zip(&expect) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "prefix {end} pass {pass}");
+                }
+            }
+        }
+        assert!(stream.approx_bytes() > 0);
+        assert_eq!(stream.width(), width);
+        assert_eq!(stream.ids(), &ids[..]);
+        assert_eq!(stream.segs(), &segs[..]);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Gateway prefix/session cache: re-serve shared prefixes from streamed
+//! bucket tables instead of re-encoding them.
+//!
+//! Keyed by the content-canonical request identity — the canonicalized
+//! (ids, segs) prefix plus the `bucket_len` width, hashed with a rolling
+//! FNV so one O(n) pass yields every prefix's key. A request that
+//! extends a cached session at the same width checks the session out,
+//! appends only the new tokens (O(m·dv) each via
+//! [`EncoderStream::append`]), classifies, and publishes the grown
+//! session back. Because the streamed path is bit-identical to the batch
+//! recompute (`tests/prop_yoso_stream.rs`), cache hits are invisible to
+//! the gateway determinism contract — they only move wall-clock.
+//!
+//! Width is part of the key: the serving RNG stream and the hash
+//! functions are width-keyed (`model::encoder::serving_rng`), so a
+//! session crossing a width boundary (its `bucket_len` doubles) starts a
+//! fresh stream rather than reusing tables hashed for the old width.
+//!
+//! Eviction is LRU under a byte budget (`approx_bytes` of each resident
+//! stream). Hit/miss counters surface in `GatewayStats`.
+
+use crate::attention::YosoAttention;
+use crate::model::encoder::EncoderStream;
+use std::collections::HashMap;
+
+/// One cached session, stored under its full-content prefix key.
+struct CacheEntry {
+    stream: EncoderStream,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Byte-budgeted LRU of [`EncoderStream`] sessions, keyed by canonical
+/// content prefix + width. Checkout *removes* the entry (streams are
+/// single-owner while a replica appends to them); publish returns the
+/// grown session.
+pub struct PrefixCache {
+    att: YosoAttention,
+    budget: usize,
+    entries: HashMap<u64, CacheEntry>,
+    bytes: usize,
+    tick: u64,
+    /// requests served from a cached prefix
+    pub hits: u64,
+    /// requests that started a fresh stream
+    pub misses: u64,
+}
+
+/// Rolling FNV over the width prefix.
+fn fnv_start(width: usize) -> u64 {
+    fnv_step(0xcbf29ce484222325, width as u64)
+}
+
+/// Fold one (id, seg) token into the rolling key.
+fn fnv_push(h: u64, id: i32, seg: i32) -> u64 {
+    fnv_step(h, (id as u32 as u64) | ((seg as u32 as u64) << 32))
+}
+
+fn fnv_step(mut h: u64, data: u64) -> u64 {
+    for b in data.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl PrefixCache {
+    /// `att` is the streamable attention new sessions are built from
+    /// (see `attention::yoso_variant`); `budget` bounds resident bytes.
+    pub fn new(att: YosoAttention, budget: usize) -> PrefixCache {
+        PrefixCache {
+            att,
+            budget,
+            entries: HashMap::new(),
+            bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The attention template for constructing fresh sessions on a miss.
+    pub fn template(&self) -> YosoAttention {
+        self.att.clone()
+    }
+
+    /// Resident sessions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resident bytes (approximate, the eviction currency).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Take the longest cached session that is a prefix of
+    /// (`ids`, `segs`) at exactly `width`, longest match first. The hit
+    /// is removed — the caller appends the remaining tokens and
+    /// `publish`es the grown session back. Counts one hit or one miss.
+    pub fn checkout(
+        &mut self,
+        ids: &[i32],
+        segs: &[i32],
+        width: usize,
+    ) -> Option<EncoderStream> {
+        debug_assert_eq!(ids.len(), segs.len());
+        let n = ids.len().min(segs.len());
+        let mut keys = Vec::with_capacity(n);
+        let mut h = fnv_start(width);
+        for i in 0..n {
+            h = fnv_push(h, ids[i], segs[i]);
+            keys.push(h);
+        }
+        for k in (1..=n).rev() {
+            let key = keys[k - 1];
+            // verify against the stream's own content: a key collision
+            // is just a miss for this prefix length
+            let hit = self.entries.get(&key).is_some_and(|e| {
+                e.stream.width() == width
+                    && e.stream.ids() == &ids[..k]
+                    && e.stream.segs() == &segs[..k]
+            });
+            if hit {
+                let e = self.entries.remove(&key).unwrap();
+                self.bytes -= e.bytes;
+                self.hits += 1;
+                return Some(e.stream);
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Insert (or re-insert after checkout) a session under its full
+    /// content key, then evict least-recently-used sessions until the
+    /// byte budget holds. An over-budget singleton evicts itself — the
+    /// cache never exceeds its budget to keep one entry.
+    pub fn publish(&mut self, stream: EncoderStream) {
+        if stream.is_empty() {
+            return;
+        }
+        self.tick += 1;
+        let mut h = fnv_start(stream.width());
+        for (&id, &seg) in stream.ids().iter().zip(stream.segs()) {
+            h = fnv_push(h, id, seg);
+        }
+        let bytes = stream.approx_bytes();
+        let entry = CacheEntry { stream, bytes, last_used: self.tick };
+        if let Some(old) = self.entries.insert(h, entry) {
+            self.bytes -= old.bytes;
+        }
+        self.bytes += bytes;
+        while self.bytes > self.budget && !self.entries.is_empty() {
+            let lru = *self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .unwrap()
+                .0;
+            let evicted = self.entries.remove(&lru).unwrap();
+            self.bytes -= evicted.bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::encoder::{
+        encoder_abi_spec, Encoder, EncoderConfig, EncoderStream,
+    };
+    use crate::model::ParamSet;
+
+    fn session(
+        enc: &Encoder,
+        att: &YosoAttention,
+        ids: &[i32],
+    ) -> EncoderStream {
+        let segs = vec![0i32; ids.len()];
+        let mut s = EncoderStream::new(enc, att, 7, 16);
+        s.append(enc, ids, &segs);
+        s
+    }
+
+    #[test]
+    fn checkout_finds_longest_prefix_and_counts() {
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = Encoder::new(cfg, &params);
+        let att = YosoAttention::new(4, 2, false);
+        let mut cache = PrefixCache::new(att.clone(), usize::MAX);
+        cache.publish(session(&enc, &att, &[5, 6]));
+        cache.publish(session(&enc, &att, &[5, 6, 7]));
+        assert_eq!(cache.len(), 2);
+
+        // longest stored prefix wins
+        let ids = [5, 6, 7, 8];
+        let segs = [0, 0, 0, 0];
+        let got = cache.checkout(&ids, &segs, 16).expect("prefix hit");
+        assert_eq!(got.len(), 3, "longest prefix, not the shorter one");
+        assert_eq!((cache.hits, cache.misses), (1, 0));
+        // checkout removed it; the shorter prefix still hits
+        let got2 = cache.checkout(&ids, &segs, 16).expect("shorter prefix");
+        assert_eq!(got2.len(), 2);
+        // width is part of the identity
+        assert!(cache.checkout(&[5, 6], &[0, 0], 8).is_none());
+        // unrelated content misses
+        assert!(cache.checkout(&[9, 9], &[0, 0], 16).is_none());
+        assert_eq!((cache.hits, cache.misses), (2, 2));
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = Encoder::new(cfg, &params);
+        let att = YosoAttention::new(4, 2, false);
+        let a = session(&enc, &att, &[1, 2]);
+        let one = a.approx_bytes();
+        // room for one resident session, not two
+        let mut cache = PrefixCache::new(att.clone(), one + one / 2);
+        cache.publish(a);
+        cache.publish(session(&enc, &att, &[3, 4]));
+        assert_eq!(cache.len(), 1, "older session evicted");
+        assert!(cache.bytes() <= one + one / 2);
+        assert!(cache.checkout(&[1, 2], &[0, 0], 16).is_none(), "A evicted");
+        assert!(cache.checkout(&[3, 4], &[0, 0], 16).is_some(), "B resident");
+
+        // an over-budget singleton evicts itself rather than pinning
+        let mut tiny = PrefixCache::new(att.clone(), 1);
+        tiny.publish(session(&enc, &att, &[1, 2]));
+        assert!(tiny.is_empty());
+        assert_eq!(tiny.bytes(), 0);
+    }
+}

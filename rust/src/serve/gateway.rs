@@ -43,13 +43,28 @@
 //!
 //! Buckets and scheduling decide *grouping and order only*. Each request
 //! computes at its content-canonical `model::encoder::bucket_len` width
-//! and draws randomness from the content-hash RNG stream, so logits are
-//! a pure function of (config seed, request content): bit-identical
-//! across every bucket layout, replica count, batch placement, arrival
-//! order, **and scheduling policy**, and bit-identical to the
-//! single-loop `ServerHandle::spawn_cpu` path (property-tested).
-//! `bucketing: false` disables the canonical width (everything pads to
-//! `max_len`, the legacy cost model) and is kept as the fig9 baseline.
+//! and draws randomness from the width-keyed serving RNG stream
+//! (`model::encoder::serving_rng`), so logits are a pure function of
+//! (config seed, request content): bit-identical across every bucket
+//! layout, replica count, batch placement, arrival order, **and
+//! scheduling policy**, and bit-identical to the single-loop
+//! `ServerHandle::spawn_cpu` path (property-tested). `bucketing: false`
+//! disables the canonical width (everything pads to `max_len`, the
+//! legacy cost model) and is kept as the fig9 baseline.
+//!
+//! # Prefix caching
+//!
+//! Streamable attention variants (`attention::yoso_variant`) serve
+//! through a byte-budgeted LRU [`PrefixCache`] of incremental
+//! [`EncoderStream`] sessions: a request that extends a cached prefix
+//! at the same canonical width checks the session out, appends only its
+//! new tokens (O(m·dv) each), classifies, and publishes the grown
+//! session back. The streamed path is bit-identical to the batch
+//! recompute (property-tested), so hits move wall-clock only — never
+//! logits — and the determinism contract above is unchanged.
+//! `cache_hits`/`cache_misses` surface in [`GatewayStats`];
+//! `prefix_cache_bytes: 0` disables the cache, and non-streamable
+//! variants always take the batch `serve_forward` path.
 //!
 //! # Deadlines
 //!
@@ -81,6 +96,7 @@
 //! everything into a `metrics::Recorder` for the CSV/JSON reports.
 
 use super::batcher::BatchPolicy;
+use super::cache::PrefixCache;
 use super::clock::{Clock, SystemClock, Tick};
 use super::sched::{BatchPolicyTable, BucketQueues, Entry, SchedPolicy};
 use super::server::{
@@ -88,8 +104,11 @@ use super::server::{
     CpuServeConfig,
 };
 use super::Response;
+use crate::attention::yoso_variant;
 use crate::metrics::{Histogram, Recorder};
-use crate::model::encoder::{bucket_len, encoder_abi_spec, Encoder};
+use crate::model::encoder::{
+    bucket_len, encoder_abi_spec, pow2_floor, Encoder, EncoderStream,
+};
 use crate::model::ParamSet;
 use crate::util::threadpool::ThreadPool;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -218,6 +237,10 @@ pub struct GatewayConfig {
     /// pads to `encoder.max_len` — the legacy cost model, kept as the
     /// fig9 baseline
     pub bucketing: bool,
+    /// byte budget for the gateway-wide prefix/session cache
+    /// ([`PrefixCache`]); 0 disables it. Only consulted when the
+    /// configured attention is streamable (`attention::yoso_variant`)
+    pub prefix_cache_bytes: usize,
 }
 
 impl GatewayConfig {
@@ -232,6 +255,7 @@ impl GatewayConfig {
             buckets: BucketLayout::pow2(16, max_len),
             sched: SchedPolicy::Conserve,
             bucketing: true,
+            prefix_cache_bytes: 64 << 20,
         }
     }
 }
@@ -262,8 +286,11 @@ struct GwState {
     rejected: u64,
     shed_deadline: u64,
     peak_queue_depth: usize,
-    /// EWMA of per-request service time, feeding the retry hint
-    svc_ewma_ms: f64,
+    /// EWMA of per-request service time, feeding the retry hint; `None`
+    /// until the first batch completes — explicit warm-up, so a genuine
+    /// 0.0 ms estimate (zero-duration service on a virtual clock) is
+    /// not mistaken for "cold"
+    svc_ewma_ms: Option<f64>,
 }
 
 /// Everything shared between submitters, replicas, and the handle.
@@ -282,17 +309,40 @@ struct GwShared {
     route: BucketLayout,
     vocab_size: usize,
     max_len: usize,
+    /// streamed-session prefix cache (`None`: disabled, or the
+    /// configured attention variant is not streamable)
+    cache: Option<Mutex<PrefixCache>>,
 }
 
 /// Estimated backlog drain time: `queued x EWMA(per-request service
 /// ms) / replicas`, floored at 1 ms so the hint is always actionable.
-/// A cold EWMA (no batch finished yet) estimates 1 ms per request; a
-/// saturated product (`inf`) clamps to `u64::MAX` via the float cast
-/// rather than wrapping.
-fn retry_hint_ms(queued: usize, svc_ewma_ms: f64, replicas: usize) -> u64 {
-    let per_req = if svc_ewma_ms > 0.0 { svc_ewma_ms } else { 1.0 };
+/// A cold EWMA (`None`: no batch has finished yet) estimates 1 ms per
+/// request; a warm estimate is honored as-is — including a genuine
+/// 0.0 ms measured on a virtual clock. A saturated product (`inf`)
+/// clamps to `u64::MAX` via the float cast rather than wrapping.
+fn retry_hint_ms(
+    queued: usize,
+    svc_ewma_ms: Option<f64>,
+    replicas: usize,
+) -> u64 {
+    let per_req = match svc_ewma_ms {
+        Some(ms) if ms >= 0.0 => ms,
+        _ => 1.0,
+    };
     let ms = queued as f64 * per_req / replicas.max(1) as f64;
     ms.ceil().max(1.0) as u64
+}
+
+/// EWMA with explicit warm-up: the first sample becomes the estimate
+/// as-is. The previous encoding used `0.0` both as "cold" and as a
+/// possible real estimate, so a zero-duration first sample (virtual
+/// clock, or a sub-ms batch rounding to zero) kept the EWMA stuck in
+/// warm-up forever.
+fn update_ewma(prev: Option<f64>, sample_ms: f64) -> f64 {
+    match prev {
+        None => sample_ms,
+        Some(p) => 0.8 * p + 0.2 * sample_ms,
+    }
 }
 
 /// Cloneable submission handle. Clones never pin the gateway open —
@@ -418,6 +468,12 @@ pub struct GatewayStats {
     pub completed: u64,
     pub rejected: u64,
     pub shed_deadline: u64,
+    /// requests served by extending a cached [`PrefixCache`] session
+    pub cache_hits: u64,
+    /// streamed requests that found no cached prefix and started a
+    /// fresh session; 0 when the cache is disabled (the batch path
+    /// counts neither way)
+    pub cache_misses: u64,
     pub batches: u64,
     pub peak_queue_depth: usize,
     pub latency: Histogram,
@@ -451,6 +507,8 @@ impl GatewayStats {
             ("gateway/completed", self.completed as f64),
             ("gateway/rejected", self.rejected as f64),
             ("gateway/shed_deadline", self.shed_deadline as f64),
+            ("gateway/cache_hits", self.cache_hits as f64),
+            ("gateway/cache_misses", self.cache_misses as f64),
             ("gateway/batches", self.batches as f64),
             ("gateway/peak_queue_depth", self.peak_queue_depth as f64),
             ("gateway/shed_rate", self.shed_rate()),
@@ -502,6 +560,16 @@ impl std::fmt::Display for GatewayStats {
             self.latency.p99(),
             self.queue_wait.p99(),
         )?;
+        let probes = self.cache_hits + self.cache_misses;
+        if probes > 0 {
+            writeln!(
+                f,
+                "  prefix cache: {} hits / {} misses ({:.1}% hit rate)",
+                self.cache_hits,
+                self.cache_misses,
+                100.0 * self.cache_hits as f64 / probes as f64,
+            )?;
+        }
         for (&w, h) in self.bucket_widths.iter().zip(&self.per_bucket) {
             if h.count() > 0 {
                 writeln!(
@@ -554,6 +622,12 @@ impl Gateway {
         cfg: GatewayConfig,
         clock: Arc<dyn Clock>,
     ) -> Gateway {
+        let mut cfg = cfg;
+        // serving computes at power-of-two canonical widths
+        // (`bucket_len`); floor a non-pow2 configured max_len once here
+        // so routing, canonicalization, the ABI spec, and every replica
+        // agree on the effective cap (mirrors `serve_loop_cpu`)
+        cfg.base.encoder.max_len = pow2_floor(cfg.base.encoder.max_len);
         let max_len = cfg.base.encoder.max_len;
         let route = if cfg.bucketing {
             cfg.buckets.normalized(max_len)
@@ -562,6 +636,16 @@ impl Gateway {
         };
         let replicas = cfg.replicas.max(1);
         let started = clock.now();
+        // the prefix cache only serves streamable attention variants;
+        // the kernel choice is carried over so fresh sessions match the
+        // batch path's configuration exactly
+        let cache = (cfg.prefix_cache_bytes > 0)
+            .then(|| yoso_variant(&cfg.base.attention))
+            .flatten()
+            .map(|mut att| {
+                att.kernel = cfg.base.kernel;
+                Mutex::new(PrefixCache::new(att, cfg.prefix_cache_bytes))
+            });
         let shared = Arc::new(GwShared {
             state: Mutex::new(GwState {
                 queues: BucketQueues::new(route.widths.len()),
@@ -571,7 +655,7 @@ impl Gateway {
                 rejected: 0,
                 shed_deadline: 0,
                 peak_queue_depth: 0,
-                svc_ewma_ms: 0.0,
+                svc_ewma_ms: None,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -584,6 +668,7 @@ impl Gateway {
             route,
             vocab_size: cfg.base.encoder.vocab_size,
             max_len,
+            cache,
         });
         // one weight init shared by value semantics: every replica holds
         // its own Arc handle onto identical bytes
@@ -676,12 +761,21 @@ impl Gateway {
                 acc.merge(h);
             }
         }
+        let (cache_hits, cache_misses) = match &self.shared.cache {
+            Some(c) => {
+                let c = c.lock().unwrap();
+                (c.hits, c.misses)
+            }
+            None => (0, 0),
+        };
         let st = self.shared.state.lock().unwrap();
         GatewayStats {
             accepted: st.accepted,
             completed,
             rejected: st.rejected,
             shed_deadline: st.shed_deadline,
+            cache_hits,
+            cache_misses,
             batches,
             peak_queue_depth: st.peak_queue_depth,
             latency,
@@ -726,7 +820,13 @@ fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
     let widest = *shared.route.widths.last().expect("non-empty layout");
     let mut st = shared.state.lock().unwrap();
     loop {
-        let now = shared.clock.now();
+        // one timestamp pins the whole scheduling round (re-pinned only
+        // after a park): every shed/fill/aging decision in a pass reads
+        // the same instant, so an entry judged live by the shed pass
+        // cannot be shed by a later clock read in the same pass — under
+        // a SimClock stepping mid-fill, the old per-pop reads did
+        // exactly that
+        let mut now = shared.clock.now();
         // capacity freed this round; space_cv is notified once per
         // batch/park, not once per pop — a per-pop notify_all would wake
         // every Block-mode submitter O(batch x waiters) times
@@ -750,7 +850,7 @@ fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
                     match st.queues.pop_next(b, shared.sched) {
                         Some(e) => {
                             freed = true;
-                            if e.expired(shared.clock.now()) {
+                            if e.expired(now) {
                                 shed_entry(&mut st, e);
                             } else {
                                 batch.push(e);
@@ -762,7 +862,6 @@ fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
                 if batch.len() >= bpolicy.max_batch || st.closed {
                     break;
                 }
-                let now = shared.clock.now();
                 if now >= age_deadline {
                     break;
                 }
@@ -796,11 +895,14 @@ fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
                     .wait_timeout(st, age_deadline.duration_since(now))
                     .unwrap();
                 st = guard;
+                // woke from the park: a new decision pass begins on a
+                // freshly pinned instant
+                now = shared.clock.now();
             }
             // a batch member (the head included) can expire while we
-            // park waiting for batchmates: re-check so nothing expired
-            // ever reaches execution
-            let now = shared.clock.now();
+            // park waiting for batchmates — the post-park re-pin keeps
+            // `now` current: re-check so nothing expired ever reaches
+            // execution
             let mut live = Vec::with_capacity(batch.len());
             for e in batch {
                 if e.expired(now) {
@@ -851,6 +953,7 @@ fn replica_loop(
         let params = Arc::clone(&params);
         let attn = Arc::clone(&attn);
         let clock = Arc::clone(&shared.clock);
+        let gw = Arc::clone(&shared);
         let ecfg = cfg.base.encoder.clone();
         let (seed, chunk) = (cfg.base.seed, cfg.base.chunk_policy);
         let bucketing = cfg.bucketing;
@@ -861,15 +964,44 @@ fn replica_loop(
                 max_len
             };
             let enc = Encoder::new(ecfg.clone(), &params);
-            let logits = serve_forward(
-                &enc,
-                &attn,
-                chunk,
-                seed,
-                &e.payload.ids,
-                &e.payload.segs,
-                width,
-            );
+            let logits = if let Some(cache) = &gw.cache {
+                // checkout/compute/publish: the cache lock is never
+                // held across the encode itself, so replicas stream
+                // concurrently and only serialize on the cheap probe
+                // and insert. Bit-identity of the streamed path to
+                // `serve_forward` makes hit vs miss vs batch
+                // unobservable in the logits.
+                let (hit, att) = {
+                    let mut c = cache.lock().unwrap();
+                    let hit =
+                        c.checkout(&e.payload.ids, &e.payload.segs, width);
+                    (hit, c.template())
+                };
+                let mut stream = hit.unwrap_or_else(|| {
+                    EncoderStream::new(&enc, &att, seed, width)
+                });
+                let done = stream.len();
+                if done < e.payload.ids.len() {
+                    stream.append(
+                        &enc,
+                        &e.payload.ids[done..],
+                        &e.payload.segs[done..],
+                    );
+                }
+                let logits = stream.classify(&enc);
+                cache.lock().unwrap().publish(stream);
+                logits
+            } else {
+                serve_forward(
+                    &enc,
+                    &attn,
+                    chunk,
+                    seed,
+                    &e.payload.ids,
+                    &e.payload.segs,
+                    width,
+                )
+            };
             let queue_ms = exec_start.ms_since(e.enqueued);
             let total_ms = clock.now().ms_since(e.enqueued);
             let _ = e
@@ -889,11 +1021,7 @@ fn replica_loop(
         let per_req_ms =
             shared.clock.now().ms_since(exec_start) / n.max(1) as f64;
         let mut st = shared.state.lock().unwrap();
-        st.svc_ewma_ms = if st.svc_ewma_ms == 0.0 {
-            per_req_ms
-        } else {
-            0.8 * st.svc_ewma_ms + 0.2 * per_req_ms
-        };
+        st.svc_ewma_ms = Some(update_ewma(st.svc_ewma_ms, per_req_ms));
     }
     stats
 }
@@ -929,24 +1057,117 @@ mod tests {
 
     #[test]
     fn retry_hint_scales_with_backlog() {
-        assert_eq!(retry_hint_ms(10, 4.0, 2), 20);
-        assert_eq!(retry_hint_ms(0, 4.0, 2), 1, "hint is always >= 1 ms");
+        assert_eq!(retry_hint_ms(10, Some(4.0), 2), 20);
+        assert_eq!(
+            retry_hint_ms(0, Some(4.0), 2),
+            1,
+            "hint is always >= 1 ms"
+        );
     }
 
     #[test]
     fn retry_hint_edge_cases() {
         // cold EWMA (no batch has finished yet): estimate 1 ms/request
-        assert_eq!(retry_hint_ms(8, 0.0, 4), 2);
+        assert_eq!(retry_hint_ms(8, None, 4), 2);
+        // a *warm* 0.0 estimate (zero-duration service on a virtual
+        // clock) is honored, not mistaken for cold — only the 1 ms
+        // floor applies. The old f64 sentinel conflated the two and
+        // answered 2 here.
+        assert_eq!(retry_hint_ms(8, Some(0.0), 4), 1);
         // a negative EWMA can never arise, but the guard covers it too
-        assert_eq!(retry_hint_ms(8, -3.0, 4), 2);
+        assert_eq!(retry_hint_ms(8, Some(-3.0), 4), 2);
         // replicas == 0 guards the division (spawn clamps to 1 anyway)
-        assert_eq!(retry_hint_ms(10, 2.0, 0), 20);
+        assert_eq!(retry_hint_ms(10, Some(2.0), 0), 20);
         // saturating backlog: a huge queue x huge EWMA overflows f64 to
         // inf, and the float->int cast clamps instead of wrapping
-        assert_eq!(retry_hint_ms(usize::MAX, f64::MAX, 1), u64::MAX);
+        assert_eq!(retry_hint_ms(usize::MAX, Some(f64::MAX), 1), u64::MAX);
         // fractional estimates round up to a whole actionable ms
-        assert_eq!(retry_hint_ms(1, 0.3, 2), 1);
-        assert_eq!(retry_hint_ms(3, 0.5, 1), 2);
+        assert_eq!(retry_hint_ms(1, Some(0.3), 2), 1);
+        assert_eq!(retry_hint_ms(3, Some(0.5), 1), 2);
+    }
+
+    #[test]
+    fn ewma_warmup_is_explicit() {
+        // the first sample becomes the estimate as-is — including 0.0,
+        // the value the old sentinel encoding could never warm up from
+        assert_eq!(update_ewma(None, 0.0), 0.0);
+        assert_eq!(update_ewma(None, 5.0), 5.0);
+        // warm updates blend 80/20
+        assert!((update_ewma(Some(0.0), 10.0) - 2.0).abs() < 1e-12);
+        assert!((update_ewma(Some(2.0), 0.0) - 1.6).abs() < 1e-12);
+    }
+
+    /// A clock that advances 1 ms on every read — the adversarial case
+    /// for un-pinned scheduling rounds, where each extra `now()` call
+    /// in a single pass observed a later instant.
+    struct TickingClock(Mutex<u64>);
+
+    impl Clock for TickingClock {
+        fn now(&self) -> Tick {
+            let mut ms = self.0.lock().unwrap();
+            let t = Tick::from_ms(*ms);
+            *ms += 1;
+            t
+        }
+        fn wait_until(&self, _deadline: Tick) {}
+        fn is_virtual(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn round_timestamp_is_pinned_across_batch_fill() {
+        // Two entries enqueued at t=0; B's deadline is 0.5 ms out. The
+        // round's shed pass runs at the pinned t=0 where both are live.
+        // The old code re-read the clock per popped entry during batch
+        // fill, so B was judged at t=1 ms and shed even though it was
+        // live when the scheduling round began.
+        let shared = GwShared {
+            state: Mutex::new(GwState {
+                queues: BucketQueues::new(1),
+                closed: false,
+                next_seq: 0,
+                accepted: 0,
+                rejected: 0,
+                shed_deadline: 0,
+                peak_queue_depth: 0,
+                svc_ewma_ms: None,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            clock: Arc::new(TickingClock(Mutex::new(0))),
+            capacity: 8,
+            replicas: 1,
+            policy: ShedPolicy::Reject,
+            sched: SchedPolicy::Fifo,
+            batch: BatchPolicyTable::uniform(BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::ZERO,
+            }),
+            route: BucketLayout::single(32),
+            vocab_size: 2005,
+            max_len: 32,
+            cache: None,
+        };
+        let mk = |seq: u64, deadline: Option<Tick>| Entry {
+            seq,
+            enqueued: Tick::ZERO,
+            deadline,
+            payload: GwPayload {
+                ids: vec![1],
+                segs: vec![0],
+                reply: channel().0,
+            },
+        };
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.queues.push(0, mk(0, None));
+            st.queues.push(0, mk(1, Some(Tick::from_nanos(500_000))));
+        }
+        let (bucket, batch) = next_batch(&shared).expect("work is queued");
+        assert_eq!(bucket, 0);
+        assert_eq!(batch.len(), 2, "B was live at the pinned round start");
+        assert_eq!(shared.state.lock().unwrap().shed_deadline, 0);
     }
 
     #[test]
@@ -958,6 +1179,8 @@ mod tests {
             completed: 0,
             rejected: 0,
             shed_deadline: 0,
+            cache_hits: 0,
+            cache_misses: 0,
             batches: 0,
             peak_queue_depth: 0,
             latency: Histogram::new(),

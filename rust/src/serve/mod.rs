@@ -57,13 +57,18 @@
 //! # Determinism contract
 //!
 //! CPU-path logits are a pure function of (config seed, request
-//! content): randomness comes from the content-hash RNG stream and the
-//! compute width is the content-canonical `model::encoder::bucket_len`.
+//! content): the compute width is the content-canonical
+//! `model::encoder::bucket_len` and randomness comes from the
+//! width-keyed serving RNG stream (`model::encoder::serving_rng`), so
+//! any two requests sharing a width share their hash draws — which is
+//! what lets a streamed session extend a cached prefix bit-identically.
 //! Batch placement, bucket layout, replica count, thread count, arrival
-//! order, the YOSO kernel variant (`CpuServeConfig::kernel`), and the
-//! scheduling policy (`SchedPolicy`) are all wall-clock knobs only — the
-//! gateway property test asserts bit-identity against the single-loop
-//! path across all of them.
+//! order, the YOSO kernel variant (`CpuServeConfig::kernel`), the
+//! scheduling policy (`SchedPolicy`), and the gateway's prefix cache
+//! ([`cache::PrefixCache`] — a hit replays the exact computation it
+//! skips) are all wall-clock knobs only — the gateway property test
+//! asserts bit-identity against the single-loop path across all of
+//! them.
 //!
 //! # Steady-state allocation
 //!
@@ -83,6 +88,7 @@
 //! server open, and post-shutdown submits fail fast.
 
 pub mod batcher;
+pub mod cache;
 pub mod clock;
 pub mod gateway;
 pub mod sched;
@@ -90,6 +96,7 @@ pub mod server;
 pub mod sim;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use cache::PrefixCache;
 pub use clock::{Clock, SimClock, SystemClock, Tick};
 pub use gateway::{
     BucketLayout, Gateway, GatewayConfig, GatewayReply, GatewayStats,

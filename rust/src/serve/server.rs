@@ -25,7 +25,8 @@ use crate::attention::{
 };
 use crate::data::special;
 use crate::model::encoder::{
-    bucket_len, encoder_abi_spec, Encoder, EncoderConfig,
+    bucket_len, encoder_abi_spec, pow2_floor, serving_rng, Encoder,
+    EncoderConfig,
 };
 use crate::model::ParamSet;
 use crate::runtime::literal::{f32_literal, i32_literal, to_f32_vec};
@@ -315,15 +316,6 @@ fn serve_loop(
     Ok(make_stats(n_requests, n_batches, &latencies, &queue_latencies, elapsed))
 }
 
-/// Hash request content into an RNG stream so identical inputs get
-/// identical randomness — stochastic attention variants then serve
-/// reproducible logits regardless of batching or arrival order. Fed the
-/// *canonical* (sanitized, unpadded) content, so the stream is also
-/// independent of how far the request is padded.
-fn content_rng(seed: u64, ids: &[i32], segs: &[i32]) -> Rng {
-    Rng::new(seed).fold_in_i32s(ids).fold_in_i32s(segs)
-}
-
 /// Clamp untrusted client tokens into the embedding tables' ranges:
 /// out-of-vocabulary ids become UNK, segments clamp to {0, 1}. The
 /// encoder indexes these tables directly, so a raw client value would
@@ -341,10 +333,11 @@ fn sanitize(ids: &mut [i32], segs: &mut [i32], vocab_size: usize) {
 
 /// Canonicalize a raw client request: align segment length to the ids,
 /// truncate to the model length, clamp hostile tokens. The canonical
-/// content is what `content_rng` folds and what the forward computes on,
-/// so identical canonical content always serves identical logits — the
-/// determinism contract every CPU serving path (single loop and gateway
-/// replicas alike) is property-tested against.
+/// content is what the forward computes on (at its `bucket_len` width,
+/// under the width-keyed `serving_rng` stream), so identical canonical
+/// content always serves identical logits — the determinism contract
+/// every CPU serving path (single loop and gateway replicas alike) is
+/// property-tested against.
 pub(crate) fn canonicalize(
     mut ids: Vec<i32>,
     mut segs: Vec<i32>,
@@ -359,9 +352,14 @@ pub(crate) fn canonicalize(
 }
 
 /// One canonical request through the encoder at `width` rows: derive the
-/// content RNG stream, pad to the bucket width, classify. Shared by the
-/// single-loop CPU path and every gateway replica — the gateway
-/// bit-identity property test compares exactly these bytes.
+/// width-keyed serving RNG stream (`model::encoder::serving_rng` — width
+/// is content-canonical, so logits remain a pure function of (seed,
+/// content), and same-width requests share hash functions, which is what
+/// the gateway prefix cache reuses), pad to the bucket width, classify.
+/// Shared by the single-loop CPU path and every gateway replica — the
+/// gateway bit-identity property test compares exactly these bytes, and
+/// the streamed cache path (`model::encoder::EncoderStream`) is
+/// property-tested bit-identical to this function.
 pub(crate) fn serve_forward(
     enc: &Encoder,
     attn: &Arc<dyn Attention>,
@@ -371,7 +369,7 @@ pub(crate) fn serve_forward(
     segs: &[i32],
     width: usize,
 ) -> Vec<f32> {
-    let mut rng = content_rng(seed, ids, segs);
+    let mut rng = serving_rng(seed, width);
     let mh = MultiHeadAttention::serial_with_policy(chunk);
     enc.classify_bucketed(ids, segs, width, attn, &mh, &mut rng)
 }
@@ -429,7 +427,13 @@ fn serve_loop_cpu(
     rx: Receiver<Request>,
     clock: Arc<dyn Clock>,
 ) -> Result<ServeStats> {
-    let ecfg = cfg.encoder.clone();
+    let mut ecfg = cfg.encoder.clone();
+    // every canonical compute width is a power of two, so a non-pow2
+    // max_len is floored up front — truncation, bucket widths, and
+    // prefix-cache keys then all agree on one cap (`bucket_len` floors
+    // its own cap identically, so this is belt-and-suspenders for
+    // configs built without `EncoderConfig::base`'s validation)
+    ecfg.max_len = pow2_floor(ecfg.max_len);
     let params =
         Arc::new(ParamSet::init_for(&encoder_abi_spec(&ecfg), cfg.seed));
     let attn = build_attention(&cfg);

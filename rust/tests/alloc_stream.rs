@@ -1,0 +1,65 @@
+//! Zero-allocation steady state for streamed YOSO sessions: after one
+//! warm pass has grown every scratch buffer, per-token `append`s, full
+//! `finish_into` gathers, and PAD-tail overlays must perform **zero**
+//! heap allocations — the "appending a token is an O(m·dv) accumulator
+//! update, not a rebuild" claim, checked where it is exact. A table
+//! rebuild, hasher redraw, or per-chunk buffer would show up here as a
+//! nonzero count.
+//!
+//! Single #[test]: the allocation counter is process-global, and a
+//! concurrent test thread's allocations would pollute the window.
+
+use yoso::attention::{YosoAttention, YosoStream};
+use yoso::bench_support::{alloc_count, CountingAlloc};
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warm_stream_appends_and_gathers_allocate_zero() {
+    let d = 32;
+    let n = 12;
+    for fast in [false, true] {
+        let att = YosoAttention::new(5, 4, fast);
+        let mut gen = Rng::new(3);
+        let k = Mat::randn(n, d, 1.0, &mut gen).unit_rows();
+        let v = Mat::randn(n, d, 1.0, &mut gen);
+        let q = Mat::randn(6, d, 1.0, &mut gen).unit_rows();
+        let tail_k = Mat::randn(4, d, 1.0, &mut gen).unit_rows();
+        let tail_v = Mat::randn(4, d, 1.0, &mut gen);
+        // pre-split the session into single-token chunks so the
+        // measured loop performs only appends, no Mat construction
+        let chunks: Vec<(Mat, Mat)> = (0..n)
+            .map(|i| {
+                (
+                    Mat::from_fn(1, d, |_, j| k.at(i, j)),
+                    Mat::from_fn(1, d, |_, j| v.at(i, j)),
+                )
+            })
+            .collect();
+
+        let mut s = YosoStream::new(&att, d, d, &mut Rng::new(9));
+        let mut out = Mat::zeros(q.rows, d);
+        // warm-up: one full pass grows all scratch to steady size
+        for (kc, vc) in &chunks {
+            s.append(kc, vc);
+        }
+        s.finish_into(&q, &mut out);
+        s.finish_with_tail_into(&q, &tail_k, &tail_v, &mut out);
+
+        let before = alloc_count();
+        for (kc, vc) in &chunks {
+            s.append(kc, vc);
+        }
+        s.finish_into(&q, &mut out);
+        s.finish_with_tail_into(&q, &tail_k, &tail_v, &mut out);
+        let allocs = alloc_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "warm streamed session allocated in steady state (fast={fast})"
+        );
+        assert_eq!(s.n_keys(), 2 * n, "both passes' tokens are in session");
+    }
+}

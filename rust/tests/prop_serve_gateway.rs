@@ -175,7 +175,8 @@ fn gateway_bit_identical_to_single_loop_path() {
 #[test]
 fn gateway_repeated_identical_inputs_reproduce() {
     // same gateway, same content, different batches/arrival positions:
-    // the content-hash RNG stream must reproduce the logits exactly
+    // the width-keyed serving RNG must reproduce the logits exactly —
+    // including across prefix-cache hits (the repeat is a cache hit)
     let gw = Gateway::spawn(GatewayConfig::new(tiny_cfg(9)));
     let ids = vec![9i32; 20];
     let segs = vec![0i32; 20];

@@ -1,0 +1,245 @@
+//! The streamed-encoding bit-identity contract, property-tested at
+//! every layer:
+//!
+//! * `attention::YosoStream` — appending keys/values in *any* random
+//!   chunking produces byte-identical output to one batch forward at
+//!   the same total width, across shapes × tau × m × both hashers ×
+//!   both kernels (the additive-sketch invariant the prefix cache
+//!   rests on);
+//! * interleaved sessions on separate streams never cross-contaminate,
+//!   and a `reset` stream replays a fresh one byte-for-byte (the
+//!   arena-reuse statelessness surface);
+//! * `model::encoder::EncoderStream` — a session grown in random
+//!   chunks classifies byte-identically to the bucketed batch serving
+//!   path at every intermediate prefix;
+//! * the gateway prefix cache — hits return the same bytes the cold
+//!   path computes, and the hit/miss counters account for every
+//!   streamed request.
+
+use std::sync::Arc;
+use std::time::Duration;
+use yoso::attention::{
+    Attention, ChunkPolicy, KernelVariant, MultiHeadAttention,
+    YosoAttention, YosoStream,
+};
+use yoso::model::encoder::{
+    encoder_abi_spec, serving_rng, Encoder, EncoderConfig, EncoderStream,
+};
+use yoso::model::ParamSet;
+use yoso::serve::{
+    BatchPolicy, CpuServeConfig, Gateway, GatewayConfig, ServerHandle,
+};
+use yoso::tensor::Mat;
+use yoso::util::Rng;
+
+fn slice_rows(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let q = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    (q, k, v)
+}
+
+fn assert_bits(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}");
+    }
+}
+
+#[test]
+fn chunked_appends_match_batch_forward() {
+    let mut chunk_rng = Rng::new(0xC0FFEE);
+    for &(n, d) in &[(17usize, 16usize), (40, 32)] {
+        for &tau in &[4usize, 8] {
+            for &m in &[1usize, 8] {
+                for fast in [false, true] {
+                    for kernel in [KernelVariant::Seed, KernelVariant::Fused]
+                    {
+                        let att = YosoAttention::new(tau, m, fast)
+                            .with_kernel(kernel);
+                        let (q, k, v) =
+                            qkv(n, d, 7 + n as u64 * 31 + tau as u64);
+                        let expected =
+                            att.forward(&q, &k, &v, &mut Rng::new(99));
+                        let mut s =
+                            YosoStream::new(&att, d, d, &mut Rng::new(99));
+                        let mut off = 0;
+                        while off < n {
+                            let step = (1 + chunk_rng.below(5) as usize)
+                                .min(n - off);
+                            s.append(
+                                &slice_rows(&k, off, off + step),
+                                &slice_rows(&v, off, off + step),
+                            );
+                            off += step;
+                        }
+                        assert_eq!(s.n_keys(), n);
+                        let mut out = Mat::zeros(n, d);
+                        s.finish_into(&q, &mut out);
+                        let ctx = format!(
+                            "n={n} d={d} tau={tau} m={m} fast={fast} \
+                             kernel={}",
+                            kernel.label()
+                        );
+                        assert_bits(&out.data, &expected.data, &ctx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_sessions_do_not_cross_contaminate() {
+    for fast in [false, true] {
+        let att = YosoAttention::new(5, 4, fast);
+        let d = 16;
+        let (qa, ka, va) = qkv(20, d, 1);
+        let (qb, kb, vb) = qkv(28, d, 2);
+        let ea = att.forward(&qa, &ka, &va, &mut Rng::new(5));
+        let eb = att.forward(&qb, &kb, &vb, &mut Rng::new(6));
+
+        let mut sa = YosoStream::new(&att, d, d, &mut Rng::new(5));
+        let mut sb = YosoStream::new(&att, d, d, &mut Rng::new(6));
+        // interleave appends chunk by chunk: each stream must see only
+        // its own session
+        let (mut oa, mut ob) = (0usize, 0usize);
+        while oa < 20 || ob < 28 {
+            if oa < 20 {
+                let hi = (oa + 3).min(20);
+                sa.append(&slice_rows(&ka, oa, hi), &slice_rows(&va, oa, hi));
+                oa = hi;
+            }
+            if ob < 28 {
+                let hi = (ob + 5).min(28);
+                sb.append(&slice_rows(&kb, ob, hi), &slice_rows(&vb, ob, hi));
+                ob = hi;
+            }
+        }
+        let mut out = Mat::zeros(20, d);
+        sa.finish_into(&qa, &mut out);
+        assert_bits(&out.data, &ea.data, &format!("A fast={fast}"));
+        let mut out = Mat::zeros(28, d);
+        sb.finish_into(&qb, &mut out);
+        assert_bits(&out.data, &eb.data, &format!("B fast={fast}"));
+
+        // arena-reuse statelessness: resetting A onto B's seed and
+        // content must replay B's bytes off A's recycled buffers
+        sa.reset(&mut Rng::new(6));
+        sa.append(&kb, &vb);
+        let mut out = Mat::zeros(28, d);
+        sa.finish_into(&qb, &mut out);
+        assert_bits(&out.data, &eb.data, &format!("reset fast={fast}"));
+    }
+}
+
+#[test]
+fn encoder_stream_prefix_growth_matches_bucketed_path() {
+    let cfg = EncoderConfig::base(64, 32, 3);
+    let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 11);
+    let enc = Encoder::new(cfg, &params);
+    let att = YosoAttention::new(5, 8, false);
+    let shared: Arc<dyn Attention> = Arc::new(att.clone());
+    let mh = MultiHeadAttention::serial_with_policy(ChunkPolicy::default());
+    let seed = 21u64;
+    let width = 32usize;
+    let ids: Vec<i32> = (0..30).map(|i| (i % 60) + 4).collect();
+    let segs: Vec<i32> = (0..30).map(|i| i % 2).collect();
+
+    let mut stream = EncoderStream::new(&enc, &att, seed, width);
+    let mut chunk_rng = Rng::new(0xFACE);
+    let mut done = 0usize;
+    while done < ids.len() {
+        let step =
+            (1 + chunk_rng.below(6) as usize).min(ids.len() - done);
+        stream.append(&enc, &ids[done..done + step], &segs[done..done + step]);
+        done += step;
+        // every intermediate prefix must match a cold batch encode of
+        // exactly that prefix — the invariant that makes a cache hit
+        // indistinguishable from a recompute
+        let got = stream.classify(&enc);
+        let expect = enc.classify_bucketed(
+            &ids[..done],
+            &segs[..done],
+            width,
+            &shared,
+            &mh,
+            &mut serving_rng(seed, width),
+        );
+        assert_bits(&got, &expect, &format!("prefix len {done}"));
+    }
+}
+
+fn stream_cfg(seed: u64) -> CpuServeConfig {
+    CpuServeConfig {
+        attention: "yoso_8".into(),
+        encoder: EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 32,
+            n_classes: 2,
+        },
+        threads: 1,
+        chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
+        seed,
+    }
+}
+
+#[test]
+fn gateway_prefix_cache_hits_preserve_logits_and_count() {
+    let seed = 23u64;
+    let prefix: Vec<i32> = (0..10).map(|i| 5 + i).collect();
+    let full: Vec<i32> = (0..14).map(|i| 5 + i).collect();
+    let seg = |n: usize| vec![0i32; n];
+
+    // reference bytes: the single-loop batch path, no cache anywhere
+    let handle = ServerHandle::spawn_cpu(
+        stream_cfg(seed),
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+    );
+    let ref_prefix =
+        handle.submit(prefix.clone(), seg(10)).recv().unwrap().logits;
+    let ref_full =
+        handle.submit(full.clone(), seg(14)).recv().unwrap().logits;
+    handle.shutdown().expect("reference stats");
+
+    // both lengths share bucket_len == 16, so the session for `prefix`
+    // is a checkout candidate for `full`
+    let gw = Gateway::spawn(GatewayConfig::new(stream_cfg(seed)));
+    let a = gw
+        .submit(prefix.clone(), seg(10))
+        .expect("admitted")
+        .recv()
+        .unwrap()
+        .expect("served");
+    assert_bits(&a.logits, &ref_prefix, "cold prefix");
+    let b = gw
+        .submit(full.clone(), seg(14))
+        .expect("admitted")
+        .recv()
+        .unwrap()
+        .expect("served");
+    assert_bits(&b.logits, &ref_full, "extend cached prefix");
+    let c = gw
+        .submit(full, seg(14))
+        .expect("admitted")
+        .recv()
+        .unwrap()
+        .expect("served");
+    assert_bits(&c.logits, &ref_full, "exact repeat hit");
+    let stats = gw.shutdown();
+    assert_eq!(
+        (stats.cache_hits, stats.cache_misses),
+        (2, 1),
+        "prefix extension and exact repeat must both hit"
+    );
+}
