@@ -5,9 +5,17 @@
 //! (x-axis is log-scale and the curves are near-linear there). We verify
 //! by fitting error ~ a + b*ln(n) and checking the fit residual is small
 //! relative to a linear-in-n growth.
+//!
+//! A second sweep publishes the **degradation error-vs-m' curve**
+//! (results/fig8_degrade_error.csv): a `YosoStream` session absorbed at
+//! the full `m` and read back at every `m' <= m` — the exact readout the
+//! serving ladder performs under overload (`serve::gateway`). Because an
+//! m'-prefix readout is bit-identical to a fresh m'-round forward
+//! (`tests/prop_yoso_stream.rs`), this is the quality ladder's entire
+//! cost model: the error a client pays at each rung.
 
 use std::io::Write;
-use yoso::attention::{YosoAttention, YosoE};
+use yoso::attention::{YosoAttention, YosoE, YosoStream};
 use yoso::bench_support::smoke_or;
 use yoso::tensor::Mat;
 use yoso::util::stats::radians_between;
@@ -84,4 +92,46 @@ fn main() {
             assert!(w[1] <= w[0] * 1.25, "error should shrink with m: {r:?}");
         }
     }
+
+    // degradation curve: one session absorbed at m_full, read at every
+    // rung m' — the serving ladder's quality cost, measured through the
+    // same streamed readout the gateway runs
+    let m_full = 32usize;
+    let n = smoke_or(256usize, 1024);
+    let m_reads = vec![1usize, 2, 4, 8, 16, 32];
+    let k = Mat::randn(n, d, 1.0, &mut rng).unit_rows();
+    let mut q = k.clone();
+    for x in q.data.iter_mut() {
+        *x += 0.8 * rng.normal();
+    }
+    let q = q.unit_rows();
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    let e = YosoE { tau }.forward_raw(&q, &k, &v);
+    let att = YosoAttention::new(tau, m_full, false);
+    let mut s = YosoStream::new(&att, d, d, &mut Rng::new(33));
+    s.append(&k, &v);
+    let mut dcsv =
+        std::fs::File::create("results/fig8_degrade_error.csv").unwrap();
+    writeln!(dcsv, "m_full,m_read,n,mean_radians").unwrap();
+    println!(
+        "\ndegraded readout error vs m' (session absorbed at m={m_full}, \
+         n={n}):"
+    );
+    let mut out = Mat::zeros(n, d);
+    let mut prev = f64::INFINITY;
+    for &m_read in &m_reads {
+        s.finish_into(&q, m_read, &mut out);
+        let err: f64 = (0..n)
+            .map(|i| radians_between(out.row(i), e.row(i)))
+            .sum::<f64>()
+            / n as f64;
+        writeln!(dcsv, "{m_full},{m_read},{n},{err}").unwrap();
+        println!("  m'={m_read:>3}  {err:>10.4} rad");
+        assert!(
+            err <= prev * 1.25,
+            "degraded error should shrink as m' grows: m'={m_read} {err}"
+        );
+        prev = err;
+    }
+    println!("-> results/fig8_degrade_error.csv");
 }

@@ -27,7 +27,14 @@
 //!   + sparse wide bucket, where FIFO parks replicas on foreign-bucket
 //!   aging waits), work-conserving p99 must not lose to FIFO p99 by
 //!   more than the repo's standard 5% noisy-runner margin (best-of-3
-//!   per scheduler for symmetric noise damping).
+//!   per scheduler for symmetric noise damping);
+//! * **degradation gate** — the overload A/B (same deadline-carrying
+//!   burst run shed-only and then with a `DegradeLadder`) must show the
+//!   ladder matching or beating shed-only on goodput (completions
+//!   inside their deadline): trading hash rounds for latency may never
+//!   serve *fewer* users than shedding them. Rows land in
+//!   results/fig9_overload_ab.csv with the per-quality counters
+//!   (`served_full`/`served_degraded`) from [`GatewayStats`].
 
 use std::io::Write;
 use std::time::{Duration, Instant};
@@ -35,8 +42,9 @@ use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::bench_support::{smoke, smoke_or};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
-    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig, Gateway,
-    GatewayConfig, GatewayStats, SchedPolicy, ShedPolicy,
+    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig,
+    DegradeLadder, Gateway, GatewayConfig, GatewayStats, SchedPolicy,
+    ShedPolicy,
 };
 use yoso::util::stats::quantile_exact;
 use yoso::util::Rng;
@@ -218,6 +226,71 @@ fn closed_loop(
     summarize(latencies, attempted_rps, gw.shutdown())
 }
 
+/// Overload A/B run: paced arrivals past one replica's ceiling, every
+/// request carrying the same relative deadline. With
+/// `DegradeLadder::none()` the only relief valve is the deadline
+/// shedder; with a ladder, BestEffort traffic steps down to fewer hash
+/// rounds first. Returns the run summary plus client-observed goodput
+/// (completions whose `total_ms` landed inside the deadline).
+fn overload_run(
+    encoder: &EncoderConfig,
+    reqs: &[Req],
+    rps: f64,
+    deadline: Duration,
+    degrade: DegradeLadder,
+) -> (RunResult, u64) {
+    let mut cfg = GatewayConfig::new(CpuServeConfig {
+        attention: "yoso_16".into(),
+        encoder: encoder.clone(),
+        threads: 1,
+        chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
+        seed: 42,
+    });
+    // one replica, deep queue: overload shows up as queue delay (the
+    // ladder's input), not as admission rejections
+    cfg.replicas = 1;
+    cfg.queue_capacity = 512;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    });
+    cfg.buckets = BucketLayout::pow2(8, encoder.max_len);
+    cfg.sched = SchedPolicy::Conserve;
+    cfg.bucketing = true;
+    cfg.degrade = degrade;
+    let gw = Gateway::spawn(cfg);
+    let sub = gw.submitter();
+    let gap = Duration::from_secs_f64(1.0 / rps);
+    let start = Instant::now();
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for (i, (ids, segs)) in reqs.iter().enumerate() {
+        let target = start + gap * i as u32;
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        if let Ok(rx) =
+            sub.submit_with_deadline(ids.clone(), segs.clone(), Some(deadline))
+        {
+            rxs.push(rx);
+        }
+    }
+    let deadline_ms = deadline.as_secs_f64() * 1e3;
+    let mut goodput = 0u64;
+    let latencies: Vec<f64> = rxs
+        .into_iter()
+        .filter_map(|rx| rx.recv().ok().and_then(|r| r.ok()))
+        .map(|resp| {
+            if resp.total_ms <= deadline_ms {
+                goodput += 1;
+            }
+            resp.total_ms
+        })
+        .collect();
+    (summarize(latencies, rps, gw.shutdown()), goodput)
+}
+
 fn main() {
     yoso::util::log::init_from_env();
     // short-sequence workload on a much longer model window — exactly
@@ -393,6 +466,82 @@ fn main() {
         );
         failed = failed || smoke();
     }
+
+    // overload A/B: degrade-vs-shed. The same deadline-carrying burst
+    // runs twice — shed-only, then with an aggressive ladder sized to
+    // this workload ("yoso_16": step to m'=8 at 5 ms of estimated
+    // backlog, m'=4 at 15 ms). The ladder must convert deadline sheds
+    // into degraded-but-on-time completions, never serve fewer.
+    let overload_reqs = make_requests(smoke_or(96, 384), 4, 20, 17);
+    let overload_rps = smoke_or(1500.0, 3000.0);
+    let deadline = Duration::from_millis(smoke_or(30, 60));
+    let (shed_r, shed_good) = overload_run(
+        &encoder,
+        &overload_reqs,
+        overload_rps,
+        deadline,
+        DegradeLadder::none(),
+    );
+    let (lad_r, lad_good) = overload_run(
+        &encoder,
+        &overload_reqs,
+        overload_rps,
+        deadline,
+        DegradeLadder::steps(vec![(5, 8), (15, 4)]),
+    );
+    let mut ab = std::fs::File::create("results/fig9_overload_ab.csv").unwrap();
+    writeln!(
+        ab,
+        "ladder,offered_rps,deadline_ms,completed,goodput,shed_deadline,\
+         shed_rate,p50_ms,p99_ms,served_full,served_degraded"
+    )
+    .unwrap();
+    println!(
+        "\noverload A/B @ {overload_rps:.0} rps, {:.0} ms deadline:",
+        deadline.as_secs_f64() * 1e3
+    );
+    println!(
+        "{:>7} {:>10} {:>8} {:>10} {:>8} {:>10} {:>10} {:>10}",
+        "ladder", "completed", "goodput", "shed_ddl", "shed", "p99_ms",
+        "full", "degraded"
+    );
+    for (name, r, good) in
+        [("off", &shed_r, shed_good), ("on", &lad_r, lad_good)]
+    {
+        writeln!(
+            ab,
+            "{name},{:.1},{:.1},{},{good},{},{:.4},{:.3},{:.3},{},{}",
+            r.offered_rps,
+            deadline.as_secs_f64() * 1e3,
+            r.stats.completed,
+            r.stats.shed_deadline,
+            r.shed_rate,
+            r.p50,
+            r.p99,
+            r.stats.served_full,
+            r.stats.served_degraded,
+        )
+        .unwrap();
+        println!(
+            "{name:>7} {:>10} {good:>8} {:>10} {:>7.1}% {:>10.3} {:>10} \
+             {:>10}",
+            r.stats.completed,
+            r.stats.shed_deadline,
+            r.shed_rate * 100.0,
+            r.p99,
+            r.stats.served_full,
+            r.stats.served_degraded,
+        );
+    }
+    println!("-> results/fig9_overload_ab.csv");
+    if lad_good < shed_good {
+        println!(
+            "WARNING: the degradation ladder served fewer within-deadline \
+             requests than shed-only under overload"
+        );
+        failed = failed || smoke();
+    }
+
     if failed {
         // the bench-smoke CI job is the regression gate
         std::process::exit(1);

@@ -30,6 +30,26 @@
 //! contaminated. All scratch is grow-only (the `KernelArena` idiom), so
 //! steady-state appends and gathers allocate zero heap
 //! (`tests/alloc_stream.rs`).
+//!
+//! # The m'-prefix readout contract (degraded quality)
+//!
+//! Both gather entry points take an `m_read` argument: a session
+//! absorbed at `m` hash rounds can be *read* at any `m' ≤ m` by
+//! summing only the first `m'` tables with weight `1/m'`. This is not
+//! an approximation of an approximation — it is **bit-identical to a
+//! fresh m'-round forward** with the same construction RNG, because
+//! both hashers draw their randomness hash-major
+//! ([`HyperplaneHasher::new`] draws plane rows `[h·tau, (h+1)·tau)` in
+//! hash order; [`HadamardHasher`] draws its sign diagonals
+//! `(m, rounds, d)`-flattened), so an m'-round hasher from the same
+//! RNG state *is* the first m' rounds of an m-round hasher, scatter
+//! into table `h` depends only on hash `h`, and the gather visits
+//! `h = 0..m'` in the batch kernels' order. Property-tested across
+//! shapes × tau × hashers × kernels in `tests/prop_yoso_stream.rs`
+//! (`m_prefix_readout_matches_fresh_m_forward`). This is what lets the
+//! serving degradation ladder (`serve::gateway`) trade hash rounds for
+//! latency per *readout*, with zero session mutation and no rebuild:
+//! degraded service costs O(m'·dv) per query row.
 
 use super::kernel::{
     add_rows_8, axpy_rows_8, copy_unit_rows, grow_f32, grow_u32, prep_hada,
@@ -115,6 +135,12 @@ impl YosoStream {
         self.n_keys == 0
     }
 
+    /// Hash rounds this session was absorbed at — the ceiling for the
+    /// `m_read` argument of the gather entry points.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
     /// Approximate resident bytes (tables + grow-only scratch + hasher
     /// storage) — the cache's eviction currency.
     pub fn approx_bytes(&self) -> usize {
@@ -174,24 +200,32 @@ impl YosoStream {
         self.n_keys += t;
     }
 
-    /// Gather every query row against the current tables:
-    /// `out_i = (1/m) Σ_h tables[h][f_h(Q_i)]`, l2-normalized when the
-    /// source attention does (N-YOSO). `out` must be (q.rows, dv);
-    /// bit-identical to a batch forward over all appended keys.
-    pub fn finish_into(&mut self, q: &Mat, out: &mut Mat) {
+    /// Gather every query row against the first `m_read ≤ m` tables:
+    /// `out_i = (1/m') Σ_{h<m'} tables[h][f_h(Q_i)]`, l2-normalized when
+    /// the source attention does (N-YOSO). `out` must be (q.rows, dv).
+    /// At `m_read == m` this is bit-identical to a batch forward over
+    /// all appended keys; at `m_read < m` it is bit-identical to a
+    /// fresh `m_read`-round forward (see the module doc's m'-prefix
+    /// readout contract).
+    pub fn finish_into(&mut self, q: &Mat, m_read: usize, out: &mut Mat) {
+        assert!(
+            (1..=self.m).contains(&m_read),
+            "m_read {m_read} outside [1, {}]",
+            self.m
+        );
         assert_eq!(q.cols, self.d, "query dim mismatch");
         assert_eq!((out.rows, out.cols), (q.rows, self.dv), "out must be (nq, dv)");
         let nq = q.rows;
         copy_unit_rows(&mut self.qn, q);
         self.grow_scratch(nq);
         let YosoStream {
-            tau, m, fast, dv, normalize, hyper, hada, tables, qn, proj, codes, ..
+            tau, fast, dv, normalize, hyper, hada, tables, qn, proj, codes, ..
         } = self;
         gather_block(
             hyper.as_ref(),
             hada.as_ref(),
             *fast,
-            *m,
+            m_read,
             1usize << *tau,
             *dv,
             qn,
@@ -209,42 +243,52 @@ impl YosoStream {
     /// Tail rows sit at global indices past every appended row, so
     /// appending them last preserves the ascending summation order and
     /// the result is bit-identical to one batch forward over
-    /// session-keys ++ tail-keys.
+    /// session-keys ++ tail-keys at `m_read` hash rounds. Only the
+    /// first `m_read` tables are copied and overlaid, so a degraded
+    /// readout pays O(m'·2^tau·dv), not O(m·2^tau·dv).
     pub fn finish_with_tail_into(
         &mut self,
         q: &Mat,
         tail_k: &Mat,
         tail_v: &Mat,
+        m_read: usize,
         out: &mut Mat,
     ) {
         let t = tail_k.rows;
         if t == 0 {
-            self.finish_into(q, out);
+            self.finish_into(q, m_read, out);
             return;
         }
+        assert!(
+            (1..=self.m).contains(&m_read),
+            "m_read {m_read} outside [1, {}]",
+            self.m
+        );
         assert_eq!(tail_k.cols, self.d, "tail key dim mismatch");
         assert_eq!(tail_v.cols, self.dv, "tail value dim mismatch");
         assert_eq!(tail_k.rows, tail_v.rows, "tail key/value row mismatch");
         assert_eq!(q.cols, self.d, "query dim mismatch");
         assert_eq!((out.rows, out.cols), (q.rows, self.dv), "out must be (nq, dv)");
+        let nb = 1usize << self.tau;
+        let read_len = m_read * nb * self.dv;
         grow_f32(&mut self.scratch_tables, self.tables.len());
         let nq = q.rows;
-        // overlay the tail on a copy of the live tables
+        // overlay the tail on a copy of the live table prefix
         copy_unit_rows(&mut self.kn, tail_k);
         self.grow_scratch(t.max(nq));
         {
             let YosoStream {
-                tau, m, fast, dv, hyper, hada, tables, scratch_tables, kn, proj,
+                fast, dv, hyper, hada, tables, scratch_tables, kn, proj,
                 codes, ..
             } = self;
-            let scratch = &mut scratch_tables[..tables.len()];
-            scratch.copy_from_slice(tables);
+            let scratch = &mut scratch_tables[..read_len];
+            scratch.copy_from_slice(&tables[..read_len]);
             scatter_chunk(
                 hyper.as_ref(),
                 hada.as_ref(),
                 *fast,
-                *m,
-                1usize << *tau,
+                m_read,
+                nb,
                 *dv,
                 kn,
                 tail_v,
@@ -255,20 +299,20 @@ impl YosoStream {
         }
         copy_unit_rows(&mut self.qn, q);
         let YosoStream {
-            tau, m, fast, dv, normalize, hyper, hada, tables, scratch_tables, qn,
+            fast, dv, normalize, hyper, hada, scratch_tables, qn,
             proj, codes, ..
         } = self;
         gather_block(
             hyper.as_ref(),
             hada.as_ref(),
             *fast,
-            *m,
-            1usize << *tau,
+            m_read,
+            nb,
             *dv,
             qn,
             proj,
             &mut codes[..nq],
-            &scratch_tables[..tables.len()],
+            &scratch_tables[..read_len],
             *normalize,
             out,
         );
@@ -306,8 +350,10 @@ fn scatter_chunk(
     }
 }
 
-/// Hash `qn`'s rows per hash and gather `out_i += tables[h][code] / m`,
-/// then optionally l2-normalize — the batch kernels' gather order.
+/// Hash `qn`'s rows per hash and gather `out_i += tables[h][code] / m`
+/// over the first `m` tables of `tables` (the m'-prefix readout when
+/// `m` is below the session's absorption rounds), then optionally
+/// l2-normalize — the batch kernels' gather order.
 #[allow(clippy::too_many_arguments)]
 fn gather_block(
     hyper: Option<&HyperplaneHasher>,
@@ -369,7 +415,7 @@ mod tests {
             let mut s = YosoStream::new(&att, 16, 16, &mut Rng::new(11));
             s.append(&k, &v);
             let mut out = Mat::zeros(q.rows, v.cols);
-            s.finish_into(&q, &mut out);
+            s.finish_into(&q, s.m(), &mut out);
             assert_eq!(s.n_keys(), 24);
             for (a, b) in out.data.iter().zip(&expected.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "fast={fast}");
@@ -392,7 +438,7 @@ mod tests {
         let mut out = Mat::zeros(q.rows, v.cols);
         // twice: the overlay must not leak tail rows into the session
         for pass in 0..2 {
-            s.finish_with_tail_into(&q, &k_tail, &v_tail, &mut out);
+            s.finish_with_tail_into(&q, &k_tail, &v_tail, s.m(), &mut out);
             for (a, b) in out.data.iter().zip(&expected.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "pass {pass}");
             }
@@ -407,16 +453,43 @@ mod tests {
         let mut s = YosoStream::new(&att, 16, 16, &mut Rng::new(1));
         s.append(&k, &v);
         let mut first = Mat::zeros(q.rows, v.cols);
-        s.finish_into(&q, &mut first);
+        s.finish_into(&q, s.m(), &mut first);
         // pollute, then reset with the same seed: bytes must replay
         s.append(&q, &v);
         s.reset(&mut Rng::new(1));
         assert!(s.is_empty());
         s.append(&k, &v);
         let mut second = Mat::zeros(q.rows, v.cols);
-        s.finish_into(&q, &mut second);
+        s.finish_into(&q, s.m(), &mut second);
         for (a, b) in first.data.iter().zip(&second.data) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn prefix_readout_matches_fresh_lower_m_forward() {
+        // a session absorbed at m = 8 read at m' ∈ {1, 2, 4} must be
+        // bit-identical to a fresh m'-round forward from the same RNG
+        // seed — the hash-major draw order makes the m'-hasher a prefix
+        // of the m-hasher (the contract the degradation ladder rides)
+        for fast in [false, true] {
+            let att = YosoAttention::new(5, 8, fast);
+            let (q, k, v) = setup(24, 16, 13);
+            let mut s = YosoStream::new(&att, 16, 16, &mut Rng::new(17));
+            s.append(&k, &v);
+            for m_read in [1usize, 2, 4, 8] {
+                let small = YosoAttention::new(5, m_read, fast);
+                let expected = small.forward(&q, &k, &v, &mut Rng::new(17));
+                let mut out = Mat::zeros(q.rows, v.cols);
+                s.finish_into(&q, m_read, &mut out);
+                for (a, b) in out.data.iter().zip(&expected.data) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "fast={fast} m_read={m_read}"
+                    );
+                }
+            }
         }
     }
 

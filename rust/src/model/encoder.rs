@@ -593,6 +593,12 @@ impl EncoderStream {
         self.pad_filled_from = n;
     }
 
+    /// Hash rounds the session absorbs at — the ceiling for `m_read` in
+    /// the `_at` readouts.
+    pub fn m(&self) -> usize {
+        self.att.m
+    }
+
     /// Full-width hidden states against the current session: layer 0
     /// gathers the stored queries from the streamed tables (PAD tail
     /// overlaid on scratch — session state is untouched, so this is
@@ -600,6 +606,18 @@ impl EncoderStream {
     /// exact code. Bit-identical to `forward_mh` over the padded session
     /// at this width under [`serving_rng`].
     pub fn hidden(&mut self, enc: &Encoder) -> Mat {
+        self.hidden_at(enc, self.att.m)
+    }
+
+    /// [`EncoderStream::hidden`], read at `m_read ≤ m` hash rounds — the
+    /// serving degradation ladder's readout. Layer 0 gathers only the
+    /// first `m_read` bucket tables (the m'-prefix contract in
+    /// `attention::stream`) and the upper layers run their attention at
+    /// `m_read` rounds, so the result is **bit-identical to a fresh
+    /// `m_read`-round bucketed encode** of the same prefix at this width
+    /// under [`serving_rng`] — not a mutation of the session, which
+    /// stays absorbed at the full `m`.
+    pub fn hidden_at(&mut self, enc: &Encoder, m_read: usize) -> Mat {
         self.fill_pads(enc);
         let n = self.ids.len();
         let w = self.width;
@@ -622,13 +640,17 @@ impl EncoderStream {
             let tkh = Mat::from_fn(tail, dh, |r, c| pad_k.at(n + r, i * dh + c));
             let tvh = Mat::from_fn(tail, dh, |r, c| pad_v.at(n + r, i * dh + c));
             let mut out = Mat::zeros(w, dh);
-            head.finish_with_tail_into(&qh, &tkh, &tvh, &mut out);
+            head.finish_with_tail_into(&qh, &tkh, &tvh, m_read, &mut out);
             outs.push(out);
         }
         let mut x = enc.layer_tail(0, &x_full, &outs);
+        // upper layers draw fresh hashers per call, so running them on
+        // an m_read-round clone reproduces a fresh m_read-forward's
+        // bytes exactly (same fold_in streams, shorter draw)
+        let att_read = YosoAttention { m: m_read, ..self.att.clone() };
         for l in 1..enc.cfg.n_layers {
             x = enc.layer_with(l, &x, &self.call, &mut |heads, base| {
-                self.att.forward_batch(&heads, base)
+                att_read.forward_batch(&heads, base)
             });
         }
         x
@@ -637,7 +659,15 @@ impl EncoderStream {
     /// [CLS] logits against the current session — the streamed
     /// equivalent of `classify_bucketed` at this width.
     pub fn classify(&mut self, enc: &Encoder) -> Vec<f32> {
-        let hidden = self.hidden(enc);
+        self.classify_at(enc, self.att.m)
+    }
+
+    /// [CLS] logits read at `m_read ≤ m` hash rounds: bit-identical to
+    /// `classify_bucketed` at this width with an attention degraded to
+    /// `m == m_read`, with zero session mutation (see
+    /// [`EncoderStream::hidden_at`]).
+    pub fn classify_at(&mut self, enc: &Encoder, m_read: usize) -> Vec<f32> {
+        let hidden = self.hidden_at(enc, m_read);
         enc.pool_logits(&hidden)
     }
 }

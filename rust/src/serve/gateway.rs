@@ -66,6 +66,41 @@
 //! `prefix_cache_bytes: 0` disables the cache, and non-streamable
 //! variants always take the batch `serve_forward` path.
 //!
+//! # Graceful degradation: shed compute, not users
+//!
+//! YOSO's hash-round count `m` trades approximation error for latency
+//! linearly, per readout, with no retraining and no session rebuild
+//! (the m'-prefix contract in `attention::stream`). The gateway turns
+//! that into an overload ladder:
+//!
+//! * every request carries a [`Quality`] class — `Full` (never
+//!   degraded), `Degraded(m')` (pinned to at most `m'` rounds), or
+//!   `BestEffort` (the default: the overload controller decides);
+//! * a [`DegradeLadder`] (`GatewayConfig::degrade`; disabled by
+//!   default) maps the EWMA backlog estimate to a reduced `m'` — under
+//!   pressure, best-effort batches step down to e.g. m'∈{16, 8}
+//!   *before* the deadline shedder starts shedding users. The decision
+//!   is made once per batch at formation time, off the backlog left
+//!   behind it;
+//! * with `admission_edf: true`, a request whose relative deadline is
+//!   already below the degraded-rate drain estimate is rejected at
+//!   admission ([`Shed::DeadlineInfeasible`], counted in
+//!   `rejected_infeasible`) instead of queuing to die;
+//! * retry hints (both shed variants) quote the **degraded** service
+//!   rate whenever the ladder is active — a client told "retry in N ms"
+//!   must be told the N the ladder can actually deliver.
+//!
+//! Degraded readouts stay deterministic: a request served at `m'` gets
+//! bytes identical to a full encode with an `m == m'` attention at the
+//! same width and seed (property-tested). `Full`/`Degraded` logits are
+//! therefore still a pure function of (seed, content, quality);
+//! `BestEffort` logits additionally depend on the load the controller
+//! reacted to — that is the documented trade. Per-quality counters
+//! (`served_full`/`served_degraded`) land in [`GatewayStats`], and the
+//! ladder is sim-proven on an overload trace in `tests/sim_gateway.rs`
+//! (degradation serves strictly more within-deadline requests than
+//! shed-only).
+//!
 //! # Deadlines
 //!
 //! A request may carry a deadline. Dequeue is deadline-aware: an expired
@@ -98,13 +133,16 @@
 use super::batcher::BatchPolicy;
 use super::cache::PrefixCache;
 use super::clock::{Clock, SystemClock, Tick};
-use super::sched::{BatchPolicyTable, BucketQueues, Entry, SchedPolicy};
+use super::sched::{
+    deadline_infeasible, update_ewma, BatchPolicyTable, BucketQueues,
+    DegradeLadder, DegradePlan, Entry, SchedPolicy,
+};
 use super::server::{
     build_attention, canonicalize, resolve_threads, serve_forward,
     CpuServeConfig,
 };
 use super::Response;
-use crate::attention::yoso_variant;
+use crate::attention::{yoso_variant, Attention, YosoAttention};
 use crate::metrics::{Histogram, Recorder};
 use crate::model::encoder::{
     bucket_len, encoder_abi_spec, pow2_floor, Encoder, EncoderStream,
@@ -172,12 +210,45 @@ impl BucketLayout {
     }
 }
 
+/// Per-request quality class: how far the gateway may trade hash
+/// rounds (and thus approximation error) for latency on this request.
+///
+/// A YOSO readout at `m' <= m` hash rounds costs `O(m'·dv)` and is
+/// bit-identical to a fresh `m'`-round forward at the same seed and
+/// width (the m'-prefix contract in [`crate::attention::YosoStream`]),
+/// so degraded service needs no retraining, no session rebuild, and no
+/// second model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Quality {
+    /// Never degraded: always served at the configured full `m`, even
+    /// when the overload controller has stepped best-effort traffic
+    /// down. Logits are a pure function of (seed, content).
+    Full,
+    /// Pinned to at most this many hash rounds (clamped into
+    /// `[1, m_full]`), regardless of load — a client that has accepted
+    /// the error-vs-m' trade up front. Deterministic per (seed,
+    /// content, m').
+    Degraded(usize),
+    /// The default: served at full quality when the gateway is keeping
+    /// up, stepped down the [`DegradeLadder`] under overload. Logits
+    /// may therefore vary with load — the one documented exception to
+    /// the pure-function determinism contract.
+    #[default]
+    BestEffort,
+}
+
 /// Why the gateway refused or dropped a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Shed {
     /// Rejected at admission: the bounded queue is at capacity. The hint
     /// estimates when the backlog will have drained.
     QueueFull { retry_after_ms: u64 },
+    /// Rejected at admission: the request's deadline is shorter than
+    /// the estimated backlog drain time even at the degraded service
+    /// rate — queuing it would only manufacture a deadline shed.
+    /// Requires `GatewayConfig::admission_edf` and a warm service
+    /// estimate; the hint quotes the degraded-rate drain time.
+    DeadlineInfeasible { retry_after_ms: u64 },
     /// Admitted, but the deadline expired before a replica reached it.
     DeadlineExpired,
     /// The gateway has shut down.
@@ -190,6 +261,11 @@ impl std::fmt::Display for Shed {
             Shed::QueueFull { retry_after_ms } => {
                 write!(f, "queue full (retry after ~{retry_after_ms} ms)")
             }
+            Shed::DeadlineInfeasible { retry_after_ms } => write!(
+                f,
+                "deadline infeasible under current backlog \
+                 (retry after ~{retry_after_ms} ms)"
+            ),
             Shed::DeadlineExpired => write!(f, "deadline expired in queue"),
             Shed::Closed => write!(f, "gateway shut down"),
         }
@@ -241,6 +317,16 @@ pub struct GatewayConfig {
     /// ([`PrefixCache`]); 0 disables it. Only consulted when the
     /// configured attention is streamable (`attention::yoso_variant`)
     pub prefix_cache_bytes: usize,
+    /// overload degradation ladder for `BestEffort` traffic: EWMA
+    /// backlog thresholds (ms) mapped to reduced hash-round counts.
+    /// Disabled by default ([`DegradeLadder::none`]); only effective
+    /// when the configured attention is streamable
+    pub degrade: DegradeLadder,
+    /// true: reject at admission any request whose relative deadline is
+    /// already below the (degraded-rate) backlog drain estimate —
+    /// [`Shed::DeadlineInfeasible`]. A cold service estimate never
+    /// rejects. Default false
+    pub admission_edf: bool,
 }
 
 impl GatewayConfig {
@@ -256,6 +342,8 @@ impl GatewayConfig {
             sched: SchedPolicy::Conserve,
             bucketing: true,
             prefix_cache_bytes: 64 << 20,
+            degrade: DegradeLadder::none(),
+            admission_edf: false,
         }
     }
 }
@@ -272,6 +360,7 @@ impl Default for GatewayConfig {
 struct GwPayload {
     ids: Vec<i32>,
     segs: Vec<i32>,
+    quality: Quality,
     reply: Sender<GatewayReply>,
 }
 
@@ -284,12 +373,18 @@ struct GwState {
     next_seq: u64,
     accepted: u64,
     rejected: u64,
+    /// admission-time EDF rejections (deadline < degraded-rate drain
+    /// estimate); disjoint from `rejected` (queue-full)
+    rejected_infeasible: u64,
     shed_deadline: u64,
     peak_queue_depth: usize,
-    /// EWMA of per-request service time, feeding the retry hint; `None`
-    /// until the first batch completes — explicit warm-up, so a genuine
-    /// 0.0 ms estimate (zero-duration service on a virtual clock) is
-    /// not mistaken for "cold"
+    /// EWMA of **full-quality** per-request service time, feeding the
+    /// retry hint and the degradation ladder; degraded batches scale
+    /// their sample back up by `m_full / m_eff` before blending so the
+    /// estimate keeps one meaning under load. `None` until the first
+    /// batch completes — explicit warm-up, so a genuine 0.0 ms estimate
+    /// (zero-duration service on a virtual clock) is not mistaken for
+    /// "cold"
     svc_ewma_ms: Option<f64>,
 }
 
@@ -312,36 +407,29 @@ struct GwShared {
     /// streamed-session prefix cache (`None`: disabled, or the
     /// configured attention variant is not streamable)
     cache: Option<Mutex<PrefixCache>>,
+    /// overload ladder for best-effort traffic; `none()` when disabled
+    /// or the attention variant is not streamable
+    ladder: DegradeLadder,
+    /// the configured attention's full hash-round count (1 for
+    /// non-streamable variants — the `m_eff == m_full` identity then
+    /// makes every plan a no-op)
+    m_full: usize,
+    /// admission-time EDF feasibility rejection enabled
+    admission_edf: bool,
 }
 
-/// Estimated backlog drain time: `queued x EWMA(per-request service
-/// ms) / replicas`, floored at 1 ms so the hint is always actionable.
-/// A cold EWMA (`None`: no batch has finished yet) estimates 1 ms per
-/// request; a warm estimate is honored as-is — including a genuine
-/// 0.0 ms measured on a virtual clock. A saturated product (`inf`)
-/// clamps to `u64::MAX` via the float cast rather than wrapping.
-fn retry_hint_ms(
-    queued: usize,
-    svc_ewma_ms: Option<f64>,
-    replicas: usize,
-) -> u64 {
-    let per_req = match svc_ewma_ms {
-        Some(ms) if ms >= 0.0 => ms,
-        _ => 1.0,
-    };
-    let ms = queued as f64 * per_req / replicas.max(1) as f64;
-    ms.ceil().max(1.0) as u64
-}
-
-/// EWMA with explicit warm-up: the first sample becomes the estimate
-/// as-is. The previous encoding used `0.0` both as "cold" and as a
-/// possible real estimate, so a zero-duration first sample (virtual
-/// clock, or a sub-ms batch rounding to zero) kept the EWMA stuck in
-/// warm-up forever.
-fn update_ewma(prev: Option<f64>, sample_ms: f64) -> f64 {
-    match prev {
-        None => sample_ms,
-        Some(p) => 0.8 * p + 0.2 * sample_ms,
+impl GwShared {
+    /// One ladder decision off the current queue state: the rung for
+    /// the full-quality backlog estimate, restated at the degraded
+    /// drain rate. Retry hints and admission EDF both read this plan,
+    /// so a client is always quoted the rate the ladder can deliver.
+    fn plan(&self, st: &GwState) -> DegradePlan {
+        self.ladder.plan(
+            st.queues.len(),
+            st.svc_ewma_ms,
+            self.replicas,
+            self.m_full,
+        )
     }
 }
 
@@ -375,6 +463,20 @@ impl GatewaySubmitter {
         segment_ids: Vec<i32>,
         deadline: Option<Duration>,
     ) -> Result<Receiver<GatewayReply>, Shed> {
+        self.submit_with(input_ids, segment_ids, deadline, Quality::default())
+    }
+
+    /// Submit with an optional deadline and an explicit [`Quality`]
+    /// class. With `GatewayConfig::admission_edf`, a deadline already
+    /// infeasible under the degraded-rate backlog estimate is rejected
+    /// here ([`Shed::DeadlineInfeasible`]) instead of queuing to die.
+    pub fn submit_with(
+        &self,
+        input_ids: Vec<i32>,
+        segment_ids: Vec<i32>,
+        deadline: Option<Duration>,
+        quality: Quality,
+    ) -> Result<Receiver<GatewayReply>, Shed> {
         let sh = &*self.shared;
         let (ids, segs) =
             canonicalize(input_ids, segment_ids, sh.vocab_size, sh.max_len);
@@ -384,7 +486,7 @@ impl GatewaySubmitter {
         // is part of queue_wait/total_ms — under-reporting overload
         // latency would defeat the SLO stats this subsystem exists for
         let submitted = sh.clock.now();
-        let deadline = deadline.map(|d| submitted.saturating_add(d));
+        let abs_deadline = deadline.map(|d| submitted.saturating_add(d));
         let mut st = sh.state.lock().unwrap();
         loop {
             if st.closed {
@@ -396,15 +498,28 @@ impl GatewaySubmitter {
             match sh.policy {
                 ShedPolicy::Reject => {
                     st.rejected += 1;
+                    // quote the drain time the ladder would deliver,
+                    // not the full-quality estimate: under a stepped-
+                    // down gateway, the honest retry hint is shorter
                     return Err(Shed::QueueFull {
-                        retry_after_ms: retry_hint_ms(
-                            st.queues.len(),
-                            st.svc_ewma_ms,
-                            sh.replicas,
-                        ),
+                        retry_after_ms: sh.plan(&st).hint_ms(),
                     });
                 }
                 ShedPolicy::Block => st = sh.space_cv.wait(st).unwrap(),
+            }
+        }
+        if sh.admission_edf {
+            if let Some(d) = deadline {
+                let plan = sh.plan(&st);
+                // warm-estimate-only: a cold gateway never rejects on
+                // feasibility (the estimate would be a guess). The
+                // boundary case deadline == backlog is feasible.
+                if deadline_infeasible(&plan, d) {
+                    st.rejected_infeasible += 1;
+                    return Err(Shed::DeadlineInfeasible {
+                        retry_after_ms: plan.hint_ms(),
+                    });
+                }
             }
         }
         let (reply, rx) = channel();
@@ -413,8 +528,8 @@ impl GatewaySubmitter {
         let entry = Entry {
             seq,
             enqueued: submitted,
-            deadline,
-            payload: GwPayload { ids, segs, reply },
+            deadline: abs_deadline,
+            payload: GwPayload { ids, segs, quality, reply },
         };
         st.queues.push(bucket, entry);
         st.accepted += 1;
@@ -433,6 +548,11 @@ pub struct ReplicaStats {
     pub replica: usize,
     pub requests: u64,
     pub batches: u64,
+    /// requests served at the full configured hash-round count
+    pub served_full: u64,
+    /// requests served at a reduced m' — ladder step-down or a pinned
+    /// `Quality::Degraded` class
+    pub served_degraded: u64,
     /// end-to-end ms per request served by this replica
     pub latency: Histogram,
     /// queue-wait ms per request
@@ -449,6 +569,8 @@ impl ReplicaStats {
             replica,
             requests: 0,
             batches: 0,
+            served_full: 0,
+            served_degraded: 0,
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
             queue_depth: Histogram::new(),
@@ -467,7 +589,16 @@ pub struct GatewayStats {
     pub accepted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// admission-time EDF rejections ([`Shed::DeadlineInfeasible`]);
+    /// disjoint from `rejected` (queue-full)
+    pub rejected_infeasible: u64,
     pub shed_deadline: u64,
+    /// completions served at the full configured hash-round count
+    pub served_full: u64,
+    /// completions served at a reduced m' (ladder step-down or pinned
+    /// `Quality::Degraded`); `served_full + served_degraded ==
+    /// completed`
+    pub served_degraded: u64,
     /// requests served by extending a cached [`PrefixCache`] session
     pub cache_hits: u64,
     /// streamed requests that found no cached prefix and started a
@@ -488,13 +619,30 @@ pub struct GatewayStats {
 
 impl GatewayStats {
     /// Fraction of offered requests that were shed (either side of
-    /// admission). 0.0 — never NaN — when nothing was offered.
+    /// admission — queue-full and infeasible-deadline rejections plus
+    /// in-queue deadline sheds). 0.0 — never NaN — when nothing was
+    /// offered.
     pub fn shed_rate(&self) -> f64 {
-        let offered = self.accepted + self.rejected;
+        let offered =
+            self.accepted + self.rejected + self.rejected_infeasible;
         if offered == 0 {
             0.0
         } else {
-            (self.rejected + self.shed_deadline) as f64 / offered as f64
+            (self.rejected + self.rejected_infeasible + self.shed_deadline)
+                as f64
+                / offered as f64
+        }
+    }
+
+    /// Prefix-cache hit rate over all streamed probes. 0.0 — never
+    /// NaN — when no request ever probed the cache (cache disabled, or
+    /// the batch path served everything).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let probes = self.cache_hits + self.cache_misses;
+        if probes == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / probes as f64
         }
     }
 
@@ -506,9 +654,13 @@ impl GatewayStats {
             ("gateway/accepted", self.accepted as f64),
             ("gateway/completed", self.completed as f64),
             ("gateway/rejected", self.rejected as f64),
+            ("gateway/rejected_infeasible", self.rejected_infeasible as f64),
             ("gateway/shed_deadline", self.shed_deadline as f64),
+            ("gateway/served_full", self.served_full as f64),
+            ("gateway/served_degraded", self.served_degraded as f64),
             ("gateway/cache_hits", self.cache_hits as f64),
             ("gateway/cache_misses", self.cache_misses as f64),
+            ("gateway/cache_hit_rate", self.cache_hit_rate()),
             ("gateway/batches", self.batches as f64),
             ("gateway/peak_queue_depth", self.peak_queue_depth as f64),
             ("gateway/shed_rate", self.shed_rate()),
@@ -541,17 +693,28 @@ impl std::fmt::Display for GatewayStats {
         writeln!(
             f,
             "gateway: {} accepted ({} completed, {} deadline-shed), \
-             {} rejected | shed rate {:.1}% | {} batches | peak depth {} | \
-             {:.1} req/s",
+             {} rejected (+{} infeasible) | shed rate {:.1}% | {} batches | \
+             peak depth {} | {:.1} req/s",
             self.accepted,
             self.completed,
             self.shed_deadline,
             self.rejected,
+            self.rejected_infeasible,
             self.shed_rate() * 100.0,
             self.batches,
             self.peak_queue_depth,
             self.throughput_rps,
         )?;
+        if self.served_degraded > 0 {
+            writeln!(
+                f,
+                "  quality: {} full / {} degraded ({:.1}% stepped down)",
+                self.served_full,
+                self.served_degraded,
+                100.0 * self.served_degraded as f64
+                    / (self.served_full + self.served_degraded).max(1) as f64,
+            )?;
+        }
         writeln!(
             f,
             "  latency ms p50 {:.2} p95 {:.2} p99 {:.2} | queue wait p99 {:.2}",
@@ -560,14 +723,13 @@ impl std::fmt::Display for GatewayStats {
             self.latency.p99(),
             self.queue_wait.p99(),
         )?;
-        let probes = self.cache_hits + self.cache_misses;
-        if probes > 0 {
+        if self.cache_hits + self.cache_misses > 0 {
             writeln!(
                 f,
                 "  prefix cache: {} hits / {} misses ({:.1}% hit rate)",
                 self.cache_hits,
                 self.cache_misses,
-                100.0 * self.cache_hits as f64 / probes as f64,
+                100.0 * self.cache_hit_rate(),
             )?;
         }
         for (&w, h) in self.bucket_widths.iter().zip(&self.per_bucket) {
@@ -636,14 +798,26 @@ impl Gateway {
         };
         let replicas = cfg.replicas.max(1);
         let started = clock.now();
-        // the prefix cache only serves streamable attention variants;
-        // the kernel choice is carried over so fresh sessions match the
-        // batch path's configuration exactly
+        // streamable-variant template: the prefix cache and the
+        // degradation ladder both require it (the ladder trades hash
+        // rounds, which only YOSO variants have). The kernel choice is
+        // carried over so fresh sessions match the batch path exactly.
+        let template = yoso_variant(&cfg.base.attention).map(|mut att| {
+            att.kernel = cfg.base.kernel;
+            att
+        });
+        // m_full == 1 for non-streamable variants: every ladder plan
+        // then has m_eff == m_full, a no-op by construction
+        let m_full = template.as_ref().map_or(1, |a| a.m);
+        let ladder = if template.is_some() {
+            cfg.degrade.clone()
+        } else {
+            DegradeLadder::none()
+        };
         let cache = (cfg.prefix_cache_bytes > 0)
-            .then(|| yoso_variant(&cfg.base.attention))
+            .then(|| template.clone())
             .flatten()
-            .map(|mut att| {
-                att.kernel = cfg.base.kernel;
+            .map(|att| {
                 Mutex::new(PrefixCache::new(att, cfg.prefix_cache_bytes))
             });
         let shared = Arc::new(GwShared {
@@ -653,6 +827,7 @@ impl Gateway {
                 next_seq: 0,
                 accepted: 0,
                 rejected: 0,
+                rejected_infeasible: 0,
                 shed_deadline: 0,
                 peak_queue_depth: 0,
                 svc_ewma_ms: None,
@@ -669,6 +844,9 @@ impl Gateway {
             vocab_size: cfg.base.encoder.vocab_size,
             max_len,
             cache,
+            ladder,
+            m_full,
+            admission_edf: cfg.admission_edf,
         });
         // one weight init shared by value semantics: every replica holds
         // its own Arc handle onto identical bytes
@@ -678,7 +856,8 @@ impl Gateway {
         ));
         crate::info!(
             "gateway: attention={} kernel={} replicas={replicas} capacity={} \
-             buckets={:?} bucketing={} sched={} threads/replica={}",
+             buckets={:?} bucketing={} sched={} threads/replica={} \
+             degrade={} edf={}",
             cfg.base.attention,
             cfg.base.kernel.label(),
             shared.capacity,
@@ -686,6 +865,8 @@ impl Gateway {
             cfg.bucketing,
             shared.sched.label(),
             resolve_threads(cfg.base.threads),
+            shared.ladder.is_enabled(),
+            shared.admission_edf,
         );
         let workers = (0..replicas)
             .map(|id| {
@@ -751,9 +932,12 @@ impl Gateway {
         let mut per_bucket: Vec<Histogram> =
             widths.iter().map(|_| Histogram::new()).collect();
         let (mut completed, mut batches) = (0u64, 0u64);
+        let (mut served_full, mut served_degraded) = (0u64, 0u64);
         for r in &per_replica {
             completed += r.requests;
             batches += r.batches;
+            served_full += r.served_full;
+            served_degraded += r.served_degraded;
             latency.merge(&r.latency);
             queue_wait.merge(&r.queue_wait);
             queue_depth.merge(&r.queue_depth);
@@ -773,7 +957,10 @@ impl Gateway {
             accepted: st.accepted,
             completed,
             rejected: st.rejected,
+            rejected_infeasible: st.rejected_infeasible,
             shed_deadline: st.shed_deadline,
+            served_full,
+            served_degraded,
             cache_hits,
             cache_misses,
             batches,
@@ -816,7 +1003,13 @@ fn shed_entry(st: &mut GwState, e: GwEntry) {
 /// no aging park while any bucket still holds work *or* while a batch
 /// member's deadline would expire inside the wait. None once the
 /// gateway is closed and drained.
-fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
+///
+/// Returns `(bucket, m_eff, batch)`: `m_eff` is the degradation
+/// ladder's hash-round budget for this batch's best-effort members,
+/// decided once at formation time off the backlog the batch leaves
+/// behind it (the queue pressure still standing *after* these entries
+/// pop is what the ladder must relieve).
+fn next_batch(shared: &GwShared) -> Option<(usize, usize, Vec<GwEntry>)> {
     let widest = *shared.route.widths.last().expect("non-empty layout");
     let mut st = shared.state.lock().unwrap();
     loop {
@@ -918,7 +1111,8 @@ fn next_batch(shared: &GwShared) -> Option<(usize, Vec<GwEntry>)> {
                 // the whole batch expired during the wait; pick again
                 continue;
             }
-            return Some((b, live));
+            let m_eff = shared.plan(&st).m_eff;
+            return Some((b, m_eff, live));
         }
         if freed {
             shared.space_cv.notify_all();
@@ -940,18 +1134,27 @@ fn replica_loop(
     params: Arc<ParamSet>,
 ) -> ReplicaStats {
     let attn = build_attention(&cfg.base);
+    // streamable template for degraded execution on the non-cache path:
+    // an `m_req`-round clone forwards bit-identically to the stream's
+    // m'-prefix readout (the contract in `attention::stream`)
+    let degrade_template = yoso_variant(&cfg.base.attention).map(|mut a| {
+        a.kernel = cfg.base.kernel;
+        a
+    });
     let pool = ThreadPool::new(resolve_threads(cfg.base.threads));
     let mut stats = ReplicaStats::new(id, shared.route.widths.len());
     let max_len = cfg.base.encoder.max_len;
-    while let Some((bucket, batch)) = next_batch(&shared) {
+    while let Some((bucket, m_eff, batch)) = next_batch(&shared) {
         let exec_start = shared.clock.now();
         {
             let st = shared.state.lock().unwrap();
             stats.queue_depth.record(st.queues.len() as f64);
         }
         let n = batch.len();
+        let m_full = shared.m_full;
         let params = Arc::clone(&params);
         let attn = Arc::clone(&attn);
+        let template = degrade_template.clone();
         let clock = Arc::clone(&shared.clock);
         let gw = Arc::clone(&shared);
         let ecfg = cfg.base.encoder.clone();
@@ -963,6 +1166,15 @@ fn replica_loop(
             } else {
                 max_len
             };
+            // quality resolution: Full pins the configured m even in a
+            // stepped-down batch; Degraded pins its own m' regardless
+            // of load; BestEffort takes the batch's ladder decision
+            let m_req = match e.payload.quality {
+                Quality::Full => m_full,
+                Quality::Degraded(m) => m.clamp(1, m_full),
+                Quality::BestEffort => m_eff.clamp(1, m_full),
+            };
+            let degraded = m_req < m_full;
             let enc = Encoder::new(ecfg.clone(), &params);
             let logits = if let Some(cache) = &gw.cache {
                 // checkout/compute/publish: the cache lock is never
@@ -988,9 +1200,27 @@ fn replica_loop(
                         &e.payload.segs[done..],
                     );
                 }
-                let logits = stream.classify(&enc);
+                // the session is absorbed (and published) at full m;
+                // only the readout narrows to the m'-prefix, so a
+                // degraded hit costs nothing on a later full-quality
+                // reuse of the same session
+                let logits = stream.classify_at(&enc, m_req);
                 cache.lock().unwrap().publish(stream);
                 logits
+            } else if degraded {
+                let att: Arc<dyn Attention> = Arc::new(YosoAttention {
+                    m: m_req,
+                    ..template.clone().expect("degraded implies streamable")
+                });
+                serve_forward(
+                    &enc,
+                    &att,
+                    chunk,
+                    seed,
+                    &e.payload.ids,
+                    &e.payload.segs,
+                    width,
+                )
             } else {
                 serve_forward(
                     &enc,
@@ -1008,20 +1238,33 @@ fn replica_loop(
                 .payload
                 .reply
                 .send(Ok(Response { logits, queue_ms, total_ms }));
-            (queue_ms, total_ms)
+            (queue_ms, total_ms, degraded)
         });
         stats.batches += 1;
-        for (queue_ms, total_ms) in timings {
+        for (queue_ms, total_ms, degraded) in timings {
             stats.requests += 1;
+            if degraded {
+                stats.served_degraded += 1;
+            } else {
+                stats.served_full += 1;
+            }
             stats.queue_wait.record(queue_ms);
             stats.latency.record(total_ms);
             stats.per_bucket[bucket].record(total_ms);
         }
-        // feed the admission retry hint
+        // feed the admission retry hint and the ladder. The EWMA keeps
+        // one meaning — full-quality per-request ms — so a degraded
+        // batch scales its sample back up by m_full/m_eff before
+        // blending. Approximation: the non-attention layers don't scale
+        // with m, and Full-pinned members of a stepped-down batch ran
+        // at full m anyway, so the restated sample over-estimates —
+        // which errs toward degrading earlier, the safe direction under
+        // overload.
         let per_req_ms =
             shared.clock.now().ms_since(exec_start) / n.max(1) as f64;
+        let sample = per_req_ms * m_full as f64 / m_eff.clamp(1, m_full) as f64;
         let mut st = shared.state.lock().unwrap();
-        st.svc_ewma_ms = Some(update_ewma(st.svc_ewma_ms, per_req_ms));
+        st.svc_ewma_ms = Some(update_ewma(st.svc_ewma_ms, sample));
     }
     stats
 }
@@ -1029,6 +1272,7 @@ fn replica_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::sched::retry_hint_ms;
 
     #[test]
     fn bucket_layout_pow2_and_routing() {
@@ -1097,6 +1341,148 @@ mod tests {
         assert!((update_ewma(Some(2.0), 0.0) - 1.6).abs() < 1e-12);
     }
 
+    /// A `GwShared` with inert defaults (ladder off, EDF off, cache
+    /// off) for direct scheduling-core tests; tests mutate fields
+    /// before wrapping in an `Arc`.
+    fn test_shared(clock: impl Clock + 'static) -> GwShared {
+        GwShared {
+            state: Mutex::new(GwState {
+                queues: BucketQueues::new(1),
+                closed: false,
+                next_seq: 0,
+                accepted: 0,
+                rejected: 0,
+                rejected_infeasible: 0,
+                shed_deadline: 0,
+                peak_queue_depth: 0,
+                svc_ewma_ms: None,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            clock: Arc::new(clock),
+            capacity: 8,
+            replicas: 1,
+            policy: ShedPolicy::Reject,
+            sched: SchedPolicy::Fifo,
+            batch: BatchPolicyTable::uniform(BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::ZERO,
+            }),
+            route: BucketLayout::single(32),
+            vocab_size: 2005,
+            max_len: 32,
+            cache: None,
+            ladder: DegradeLadder::none(),
+            m_full: 1,
+            admission_edf: false,
+        }
+    }
+
+    /// A clock pinned at zero — admission tests need deterministic
+    /// submission instants, not wall time.
+    struct FrozenClock;
+
+    impl Clock for FrozenClock {
+        fn now(&self) -> Tick {
+            Tick::ZERO
+        }
+        fn wait_until(&self, _deadline: Tick) {}
+        fn is_virtual(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn queue_full_hint_quotes_the_degraded_rate() {
+        // capacity 4, warm EWMA 8 ms/req at full m=32, ladder steps to
+        // m'=8 above 25 ms of backlog. Four queued requests put the
+        // full-quality backlog at 32 ms, clearing the rung — the plain
+        // full-quality hint would be 32 ms, but the honest hint is the
+        // degraded drain time.
+        let mut sh = test_shared(FrozenClock);
+        sh.capacity = 4;
+        sh.m_full = 32;
+        sh.ladder = DegradeLadder::steps(vec![(25, 8)]);
+        {
+            let mut st = sh.state.lock().unwrap();
+            st.svc_ewma_ms = Some(8.0);
+        }
+        let sub = GatewaySubmitter { shared: Arc::new(sh) };
+        for _ in 0..4 {
+            sub.submit(vec![1], vec![0]).expect("under capacity");
+        }
+        // 5th submit: queue full. Full-quality backlog 4 x 8 = 32 ms
+        // clears the 25 ms rung -> m'=8, so the quoted drain is
+        // 32 x 8/32 = 8 ms, not 32.
+        match sub.submit(vec![1], vec![0]) {
+            Err(Shed::QueueFull { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 8, "hint reflects degraded rate");
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_edf_rejects_infeasible_deadlines_at_the_degraded_rate() {
+        // 6 queued at a warm 10 ms/req, m_full 16, rung to m'=8 above
+        // 50 ms: full backlog 60 ms -> degraded drain 30 ms.
+        let mut sh = test_shared(FrozenClock);
+        sh.capacity = 64;
+        sh.m_full = 16;
+        sh.admission_edf = true;
+        sh.ladder = DegradeLadder::steps(vec![(50, 8)]);
+        {
+            let mut st = sh.state.lock().unwrap();
+            st.svc_ewma_ms = Some(10.0);
+        }
+        let sub = GatewaySubmitter { shared: Arc::new(sh) };
+        for _ in 0..6 {
+            sub.submit(vec![1], vec![0]).expect("no deadline, no EDF check");
+        }
+        // 20 ms < 30 ms degraded drain: infeasible, rejected with the
+        // degraded-rate hint
+        match sub.submit_with_deadline(
+            vec![1],
+            vec![0],
+            Some(Duration::from_millis(20)),
+        ) {
+            Err(Shed::DeadlineInfeasible { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 30);
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        {
+            let st = sub.shared.state.lock().unwrap();
+            assert_eq!(st.rejected_infeasible, 1);
+            assert_eq!(st.rejected, 0, "EDF rejection is its own counter");
+        }
+        // 40 ms >= 30 ms degraded drain: feasible *because* of the
+        // ladder (the full-quality drain would be 60 ms) — this is the
+        // admission-side payoff of degradation
+        sub.submit_with_deadline(
+            vec![1],
+            vec![0],
+            Some(Duration::from_millis(40)),
+        )
+        .expect("feasible at the degraded rate");
+        // a cold estimate never rejects, however short the deadline
+        let mut cold = test_shared(FrozenClock);
+        cold.admission_edf = true;
+        cold.ladder = DegradeLadder::steps(vec![(50, 8)]);
+        cold.m_full = 16;
+        let cold_sub = GatewaySubmitter { shared: Arc::new(cold) };
+        for _ in 0..6 {
+            cold_sub.submit(vec![1], vec![0]).unwrap();
+        }
+        cold_sub
+            .submit_with_deadline(
+                vec![1],
+                vec![0],
+                Some(Duration::from_millis(1)),
+            )
+            .expect("cold estimate: admission EDF stays out of the way");
+    }
+
     /// A clock that advances 1 ms on every read — the adversarial case
     /// for un-pinned scheduling rounds, where each extra `now()` call
     /// in a single pass observed a later instant.
@@ -1122,33 +1508,7 @@ mod tests {
         // The old code re-read the clock per popped entry during batch
         // fill, so B was judged at t=1 ms and shed even though it was
         // live when the scheduling round began.
-        let shared = GwShared {
-            state: Mutex::new(GwState {
-                queues: BucketQueues::new(1),
-                closed: false,
-                next_seq: 0,
-                accepted: 0,
-                rejected: 0,
-                shed_deadline: 0,
-                peak_queue_depth: 0,
-                svc_ewma_ms: None,
-            }),
-            work_cv: Condvar::new(),
-            space_cv: Condvar::new(),
-            clock: Arc::new(TickingClock(Mutex::new(0))),
-            capacity: 8,
-            replicas: 1,
-            policy: ShedPolicy::Reject,
-            sched: SchedPolicy::Fifo,
-            batch: BatchPolicyTable::uniform(BatchPolicy {
-                max_batch: 2,
-                max_wait: Duration::ZERO,
-            }),
-            route: BucketLayout::single(32),
-            vocab_size: 2005,
-            max_len: 32,
-            cache: None,
-        };
+        let shared = test_shared(TickingClock(Mutex::new(0)));
         let mk = |seq: u64, deadline: Option<Tick>| Entry {
             seq,
             enqueued: Tick::ZERO,
@@ -1156,6 +1516,7 @@ mod tests {
             payload: GwPayload {
                 ids: vec![1],
                 segs: vec![0],
+                quality: Quality::default(),
                 reply: channel().0,
             },
         };
@@ -1164,8 +1525,10 @@ mod tests {
             st.queues.push(0, mk(0, None));
             st.queues.push(0, mk(1, Some(Tick::from_nanos(500_000))));
         }
-        let (bucket, batch) = next_batch(&shared).expect("work is queued");
+        let (bucket, m_eff, batch) =
+            next_batch(&shared).expect("work is queued");
         assert_eq!(bucket, 0);
+        assert_eq!(m_eff, 1, "disabled ladder: m_eff is the full m");
         assert_eq!(batch.len(), 2, "B was live at the pinned round start");
         assert_eq!(shared.state.lock().unwrap().shed_deadline, 0);
     }
@@ -1178,7 +1541,10 @@ mod tests {
             accepted: 0,
             completed: 0,
             rejected: 0,
+            rejected_infeasible: 0,
             shed_deadline: 0,
+            served_full: 0,
+            served_degraded: 0,
             cache_hits: 0,
             cache_misses: 0,
             batches: 0,
@@ -1194,7 +1560,15 @@ mod tests {
         };
         assert_eq!(stats.shed_rate(), 0.0);
         assert!(!stats.shed_rate().is_nan());
+        // same guard on the derived cache hit rate: 0 lookups is 0.0,
+        // not 0/0 = NaN
+        assert_eq!(stats.cache_hit_rate(), 0.0);
+        assert!(!stats.cache_hit_rate().is_nan());
         // and the Display path renders the 0-traffic stats without panic
         let _ = format!("{stats}");
+        // a probed cache reports the plain ratio
+        let probed =
+            GatewayStats { cache_hits: 3, cache_misses: 1, ..stats };
+        assert_eq!(probed.cache_hit_rate(), 0.75);
     }
 }

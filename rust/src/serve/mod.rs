@@ -27,11 +27,18 @@
 //!   **per-bucket batch policies** ([`sched::BatchPolicyTable`], keyed
 //!   by bucket width — narrow buckets batch wider and wait shorter);
 //!   **deadline-aware dequeue** (expired requests shed before execution,
-//!   always reported); and **live latency histograms**
+//!   always reported); a **graceful-degradation ladder**
+//!   ([`sched::DegradeLadder`] + per-request [`gateway::Quality`]
+//!   classes: under overload, best-effort traffic steps down to fewer
+//!   hash rounds — exact m'-prefix readouts, see `attention::stream` —
+//!   before the deadline shedder sheds users, and
+//!   `GatewayConfig::admission_edf` rejects already-infeasible deadlines
+//!   at the door); and **live latency histograms**
 //!   (`metrics::Histogram`) merged into [`gateway::GatewayStats`] at
 //!   shutdown.
 //! * [`sched`] — the scheduling decisions (bucket pick, within-bucket
-//!   order, expiry sheds, per-bucket policy resolution) as pure code
+//!   order, expiry sheds, per-bucket policy resolution, EWMA backlog
+//!   estimation, and the degradation-ladder controller) as pure code
 //!   over payload-generic queues, run bit-for-bit by both the live
 //!   gateway replicas and the simulator.
 //! * [`clock`] — the [`clock::Clock`] trait with wall
@@ -68,7 +75,12 @@
 //! ([`cache::PrefixCache`] — a hit replays the exact computation it
 //! skips) are all wall-clock knobs only — the gateway property test
 //! asserts bit-identity against the single-loop path across all of
-//! them.
+//! them. Quality classes refine, not break, the contract:
+//! `Quality::Full` and `Quality::Degraded(m')` logits are pure
+//! functions of (seed, content, m') — a degraded readout is
+//! bit-identical to a fresh forward configured at `m'` — while
+//! `Quality::BestEffort` (the default) additionally depends on the load
+//! the overload controller reacted to, the one documented exception.
 //!
 //! # Steady-state allocation
 //!
@@ -100,9 +112,9 @@ pub use cache::PrefixCache;
 pub use clock::{Clock, SimClock, SystemClock, Tick};
 pub use gateway::{
     BucketLayout, Gateway, GatewayConfig, GatewayReply, GatewayStats,
-    GatewaySubmitter, ReplicaStats, Shed, ShedPolicy,
+    GatewaySubmitter, Quality, ReplicaStats, Shed, ShedPolicy,
 };
-pub use sched::{BatchPolicyTable, SchedPolicy};
+pub use sched::{BatchPolicyTable, DegradeLadder, DegradePlan, SchedPolicy};
 pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};
 
 /// One inference request: token ids + segments for a single sequence.

@@ -39,10 +39,28 @@
 //! cheap, so a big batch is still fast and latency budget is better
 //! spent elsewhere), wide buckets keep the base policy. Exact-width
 //! overrides take precedence; `scaled` mode derives the rest.
+//!
+//! # The degradation ladder
+//!
+//! YOSO has an overload knob nothing else in the attention zoo has: the
+//! hash-round count `m` trades approximation error for latency linearly,
+//! **per readout**, with no retraining and no session rebuild (the
+//! m'-prefix contract in `attention::stream`). A [`DegradeLadder`] maps
+//! the EWMA backlog estimate (the same one powering retry hints) to a
+//! reduced effective `m'`: under pressure the gateway serves
+//! best-effort requests at `m' ∈ {16, 8}` *before* resorting to
+//! deadline sheds — shed compute, not users. The ladder also drives
+//! **admission-time EDF** ([`deadline_infeasible`]): a request whose
+//! relative deadline is already below the estimated (degraded-rate)
+//! drain time of the queue ahead of it is rejected at admission instead
+//! of queuing to die. Both the live gateway and the simulator plan off
+//! this exact code, so the ladder is sim-proven the way `Conserve` was
+//! (`tests/sim_gateway.rs`).
 
 use super::batcher::BatchPolicy;
 use super::clock::Tick;
 use std::collections::VecDeque;
+use std::time::Duration;
 
 /// Cross-bucket scheduling policy. Dequeue *within* a bucket and the
 /// aging rule follow the same choice (see module docs).
@@ -148,6 +166,163 @@ impl Default for BatchPolicyTable {
 impl From<BatchPolicy> for BatchPolicyTable {
     fn from(base: BatchPolicy) -> Self {
         BatchPolicyTable::uniform(base)
+    }
+}
+
+/// One EWMA step over per-request service-time samples (ms): the warm-up
+/// is explicit — the first sample *becomes* the estimate rather than
+/// being averaged against a fake prior. Samples are recorded at
+/// full-quality scale (a batch served at `m'` scales its sample by
+/// `m/m'` before recording), so the estimate stays comparable as the
+/// ladder steps up and down.
+pub fn update_ewma(prev: Option<f64>, sample_ms: f64) -> f64 {
+    match prev {
+        None => sample_ms,
+        Some(p) => 0.8 * p + 0.2 * sample_ms,
+    }
+}
+
+/// Estimated time (ms, unfloored) to drain `queued` requests at the
+/// full-quality EWMA service rate across `replicas` — the raw backlog
+/// pressure signal. A cold estimate (no completed batch yet) assumes
+/// 1 ms/request rather than guessing from nothing.
+pub fn backlog_estimate_ms(
+    queued: usize,
+    svc_ewma_ms: Option<f64>,
+    replicas: usize,
+) -> f64 {
+    let per_req = match svc_ewma_ms {
+        Some(ms) if ms >= 0.0 => ms,
+        _ => 1.0,
+    };
+    queued as f64 * per_req / replicas.max(1) as f64
+}
+
+/// The retry hint a full-quality rejection carries: ceil of the backlog
+/// estimate, floored at 1 ms. When a [`DegradeLadder`] is active the
+/// gateway hints off [`DegradePlan::hint_ms`] instead, which reflects
+/// the *degraded* service rate.
+pub fn retry_hint_ms(
+    queued: usize,
+    svc_ewma_ms: Option<f64>,
+    replicas: usize,
+) -> u64 {
+    hint_from_backlog(backlog_estimate_ms(queued, svc_ewma_ms, replicas))
+}
+
+fn hint_from_backlog(backlog_ms: f64) -> u64 {
+    backlog_ms.ceil().max(1.0) as u64
+}
+
+/// The overload controller's decision for one scheduling moment: the
+/// effective hash rounds to serve best-effort work at, and the backlog
+/// drain estimate *at that degraded rate* (service time scales linearly
+/// with `m`, so stepping down to `m'` divides the drain time by
+/// `m / m'`). Produced by [`DegradeLadder::plan`]; consumed by retry
+/// hints, admission EDF, and the batch-formation quality pick.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegradePlan {
+    /// hash rounds best-effort requests are served at right now
+    pub m_eff: usize,
+    /// the full-quality round count the sessions absorb at
+    pub m_full: usize,
+    /// estimated queue drain time at the degraded rate (ms)
+    pub backlog_ms: f64,
+    /// whether the EWMA behind the estimate has seen a real sample
+    pub warm: bool,
+}
+
+impl DegradePlan {
+    /// Retry hint off the *degraded* service rate (satellite contract:
+    /// a rejection under a half-stepped ladder must not quote the
+    /// Full-quality drain time). Ceil, floored at 1 ms.
+    pub fn hint_ms(&self) -> u64 {
+        hint_from_backlog(self.backlog_ms)
+    }
+
+    /// Is this plan serving below full quality?
+    pub fn degraded(&self) -> bool {
+        self.m_eff < self.m_full
+    }
+}
+
+/// Admission-time EDF feasibility: with a *warm* backlog estimate, a
+/// request whose relative deadline is below the estimated degraded-rate
+/// drain time of the work already queued ahead of it cannot start
+/// before it expires — reject it at admission (with the degraded retry
+/// hint) instead of queuing it to die as a deadline shed. Cold
+/// estimates never reject: one guess must not turn away real traffic.
+pub fn deadline_infeasible(plan: &DegradePlan, deadline: Duration) -> bool {
+    plan.warm && plan.backlog_ms > deadline.as_secs_f64() * 1e3
+}
+
+/// The graceful-degradation ladder: backlog-pressure thresholds (ms of
+/// estimated full-quality drain time) mapped to reduced hash-round
+/// counts. Empty = disabled (every request serves at full quality, the
+/// pre-ladder behavior). See the module docs for the policy rationale
+/// and `attention::stream` for why a reduced readout is exact.
+#[derive(Clone, Debug, Default)]
+pub struct DegradeLadder {
+    /// (threshold ms, m') sorted ascending by threshold; the highest
+    /// threshold at or below the current backlog estimate wins
+    rungs: Vec<(u64, usize)>,
+}
+
+impl DegradeLadder {
+    /// Disabled: always serve at full quality.
+    pub fn none() -> DegradeLadder {
+        DegradeLadder::default()
+    }
+
+    /// A ladder from explicit `(backlog_ms threshold, m')` rungs.
+    /// Rungs are sorted by threshold; `m' == 0` rungs are dropped.
+    pub fn steps(mut rungs: Vec<(u64, usize)>) -> DegradeLadder {
+        rungs.retain(|&(_, m)| m >= 1);
+        rungs.sort_by_key(|&(t, _)| t);
+        DegradeLadder { rungs }
+    }
+
+    /// The ROADMAP ladder: step to m'=16 once the estimated drain time
+    /// reaches 25 ms, to m'=8 at 100 ms — shedding compute well before
+    /// the deadline shedder would start shedding users.
+    pub fn standard() -> DegradeLadder {
+        DegradeLadder::steps(vec![(25, 16), (100, 8)])
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        !self.rungs.is_empty()
+    }
+
+    /// The m' of the highest rung at or below `backlog_ms`, if any.
+    fn rung_for(&self, backlog_ms: f64) -> Option<usize> {
+        self.rungs
+            .iter()
+            .rev()
+            .find(|&&(t, _)| backlog_ms >= t as f64)
+            .map(|&(_, m)| m)
+    }
+
+    /// One controller decision: measure pressure at the full-quality
+    /// rate, pick the rung, then restate the backlog at the degraded
+    /// rate (one step, no fixpoint — the rung choice deliberately keys
+    /// off full-quality pressure so it is monotone in queue depth and
+    /// cannot oscillate within a single decision).
+    pub fn plan(
+        &self,
+        queued: usize,
+        svc_ewma_ms: Option<f64>,
+        replicas: usize,
+        m_full: usize,
+    ) -> DegradePlan {
+        let m_full = m_full.max(1);
+        let full_ms = backlog_estimate_ms(queued, svc_ewma_ms, replicas);
+        let m_eff = self.rung_for(full_ms).map_or(m_full, |m| m.clamp(1, m_full));
+        DegradePlan {
+            m_eff,
+            m_full,
+            backlog_ms: full_ms * m_eff as f64 / m_full as f64,
+            warm: svc_ewma_ms.is_some(),
+        }
     }
 }
 
@@ -531,6 +706,75 @@ mod tests {
             });
         assert_eq!(pinned.policy_for(64, 128).max_batch, 3);
         assert_eq!(pinned.policy_for(32, 128).max_batch, 32);
+    }
+
+    #[test]
+    fn ladder_plan_scales_backlog_and_hint_to_the_degraded_rate() {
+        let ladder = DegradeLadder::steps(vec![(25, 16), (100, 8)]);
+        // below the first rung: full quality, hint matches the plain one
+        let p = ladder.plan(10, Some(1.0), 1, 32);
+        assert_eq!((p.m_eff, p.m_full), (32, 32));
+        assert!(!p.degraded());
+        assert_eq!(p.hint_ms(), retry_hint_ms(10, Some(1.0), 1));
+        // past the first rung: m'=16 halves the drain estimate — the
+        // hint must quote the degraded rate, not the full-quality EWMA
+        let p = ladder.plan(50, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 16);
+        assert!(p.degraded());
+        assert_eq!(p.backlog_ms, 25.0);
+        assert_eq!(p.hint_ms(), 25);
+        assert!(p.hint_ms() < retry_hint_ms(50, Some(1.0), 1));
+        // deepest rung at heavy pressure
+        let p = ladder.plan(400, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8);
+        assert_eq!(p.backlog_ms, 100.0);
+        // a rung below the session's own m clamps to m_full
+        let p = ladder.plan(50, Some(1.0), 1, 8);
+        assert_eq!(p.m_eff, 8);
+        assert!(!p.degraded());
+        // replicas divide the pressure signal before the rung pick
+        let p = ladder.plan(50, Some(1.0), 4, 32);
+        assert_eq!(p.m_eff, 32, "12.5 ms of backlog is below every rung");
+        // disabled ladder: the plan is the identity signal
+        let p = DegradeLadder::none().plan(50, Some(2.0), 2, 32);
+        assert!(!DegradeLadder::none().is_enabled());
+        assert_eq!(p.m_eff, 32);
+        assert_eq!(p.hint_ms(), retry_hint_ms(50, Some(2.0), 2));
+    }
+
+    #[test]
+    fn admission_edf_rejects_only_warm_infeasible_deadlines() {
+        let ladder = DegradeLadder::standard();
+        // warm + degraded: 200 queued at 1 ms -> 200 ms full-quality
+        // pressure -> m'=8 rung -> 50 ms drain at the degraded rate
+        let p = ladder.plan(200, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8);
+        assert_eq!(p.backlog_ms, 50.0);
+        assert!(deadline_infeasible(&p, Duration::from_millis(40)));
+        assert!(
+            !deadline_infeasible(&p, Duration::from_millis(50)),
+            "a deadline exactly at the estimate is still feasible"
+        );
+        // the degraded rate must drive the check: the full-quality
+        // estimate (200 ms) would wrongly reject a 120 ms deadline the
+        // ladder can in fact meet
+        assert!(!deadline_infeasible(&p, Duration::from_millis(120)));
+        let full = DegradeLadder::none().plan(200, Some(1.0), 1, 32);
+        assert!(deadline_infeasible(&full, Duration::from_millis(120)));
+        // a cold estimate never rejects — one guess must not turn away
+        // real traffic before the first batch completes
+        let cold = ladder.plan(10_000, None, 1, 32);
+        assert!(!cold.warm);
+        assert!(!deadline_infeasible(&cold, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn ewma_warmup_is_explicit_and_steps_blend() {
+        assert_eq!(update_ewma(None, 7.5), 7.5);
+        assert_eq!(update_ewma(Some(10.0), 20.0), 0.8 * 10.0 + 0.2 * 20.0);
+        // hint floors at 1 ms and assumes 1 ms/request when cold
+        assert_eq!(retry_hint_ms(0, Some(5.0), 1), 1);
+        assert_eq!(retry_hint_ms(8, None, 2), 4);
     }
 
     #[test]

@@ -36,7 +36,14 @@
 //!   path's post-park re-check);
 //! * admission is the bounded queue: at capacity, arrivals count as
 //!   `rejected` (the `Reject` policy; `Block` has no meaning without
-//!   real producers to park).
+//!   real producers to park);
+//! * the degradation ladder and admission EDF mirror the gateway: the
+//!   sim maintains the same full-quality EWMA service estimate (updated
+//!   at batch completion; a degraded batch's sample scales back up by
+//!   `m/m'`), picks each batch's `m'` off the post-pop backlog at
+//!   dispatch — `next_batch`'s exact decision point — and, with
+//!   `admission_edf`, rejects warm-infeasible deadlines at admission
+//!   (`rejected_infeasible`, never queued).
 //!
 //! What the simulator does *not* model: compute itself (no logits — the
 //! bit-identity half of the contract is `tests/prop_serve_gateway.rs`'s
@@ -45,7 +52,10 @@
 
 use super::clock::{Clock, SimClock, Tick};
 use super::gateway::BucketLayout;
-use super::sched::{BatchPolicyTable, BucketQueues, Entry, SchedPolicy};
+use super::sched::{
+    deadline_infeasible, update_ewma, BatchPolicyTable, BucketQueues,
+    DegradeLadder, Entry, SchedPolicy,
+};
 use std::time::Duration;
 
 /// One scripted arrival: offset from trace start, sequence length
@@ -68,8 +78,30 @@ pub struct ServiceModel {
 
 impl ServiceModel {
     pub fn batch_duration(&self, width: usize, batch_len: usize) -> Duration {
+        self.batch_duration_at(width, batch_len, 1, 1)
+    }
+
+    /// Degradation-aware batch cost: the width-proportional term (the
+    /// attention sweep, linear in hash rounds) scales by `m_eff /
+    /// m_full`; `batch_overhead` (dispatch, pool fan-out, the
+    /// non-attention layers) does not — mirroring why the gateway's
+    /// restated EWMA sample is a deliberate over-estimate.
+    pub fn batch_duration_at(
+        &self,
+        width: usize,
+        batch_len: usize,
+        m_eff: usize,
+        m_full: usize,
+    ) -> Duration {
         let units = (width * batch_len).min(u32::MAX as usize) as u32;
-        self.batch_overhead + self.per_width * units
+        let m_full = m_full.max(1);
+        let m_eff = m_eff.clamp(1, m_full);
+        let sweep = if m_eff == m_full {
+            self.per_width * units
+        } else {
+            (self.per_width * units).mul_f64(m_eff as f64 / m_full as f64)
+        };
+        self.batch_overhead + sweep
     }
 }
 
@@ -91,6 +123,15 @@ pub struct SimConfig {
     pub buckets: BucketLayout,
     pub batch: BatchPolicyTable,
     pub service: ServiceModel,
+    /// overload degradation ladder (disabled: every batch runs at
+    /// `m_full`, the pre-ladder behavior — and, since `m_eff ==
+    /// m_full`, bit-identical reports to the pre-ladder simulator)
+    pub degrade: DegradeLadder,
+    /// the full-quality hash-round count the [`ServiceModel`]'s
+    /// width-proportional term is calibrated at
+    pub m_full: usize,
+    /// mirror of `GatewayConfig::admission_edf`
+    pub admission_edf: bool,
 }
 
 /// One executed batch: where, when, and exactly which requests in which
@@ -100,6 +141,9 @@ pub struct SimBatch {
     pub replica: usize,
     pub bucket: usize,
     pub width: usize,
+    /// the ladder's hash-round budget for this batch (`m_full` when the
+    /// ladder is disabled or pressure is low)
+    pub m_eff: usize,
     pub formed_at: Tick,
     pub done_at: Tick,
     /// arrival seqs in dequeue order (EDF under `Conserve`, arrival
@@ -112,8 +156,16 @@ pub struct SimBatch {
 pub struct SimReport {
     pub accepted: u64,
     pub rejected: u64,
+    /// admission-time EDF rejections (never queued, not in `accepted`)
+    pub rejected_infeasible: u64,
     pub shed_deadline: u64,
     pub completed: u64,
+    /// completions that met their deadline (`done_at <= deadline`;
+    /// deadline-free requests count as met) — the overload A/B metric:
+    /// degradation exists to raise this, not raw `completed`
+    pub goodput: u64,
+    /// completions executed below `m_full` (ladder step-downs)
+    pub served_degraded: u64,
     pub peak_depth: usize,
     pub batches: Vec<SimBatch>,
     /// arrival-to-completion latency (virtual ms) per completed request
@@ -220,6 +272,8 @@ fn dispatch(
     now: Tick,
     service: &ServiceModel,
     width: usize,
+    m_eff: usize,
+    m_full: usize,
     report: &mut SimReport,
 ) -> Rep {
     let mut live = Vec::with_capacity(batch.len());
@@ -233,11 +287,17 @@ fn dispatch(
     if live.is_empty() {
         return Rep::Idle;
     }
-    let done = now.saturating_add(service.batch_duration(width, live.len()));
+    let done = now.saturating_add(service.batch_duration_at(
+        width,
+        live.len(),
+        m_eff,
+        m_full,
+    ));
     let batch = SimBatch {
         replica,
         bucket,
         width,
+        m_eff,
         formed_at: now,
         done_at: done,
         seqs: live.iter().map(|e| e.seq).collect(),
@@ -253,6 +313,10 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
     let widest = *widths.last().expect("non-empty layout");
     let replicas = cfg.replicas.max(1);
     let capacity = cfg.queue_capacity.max(1);
+    let m_full = cfg.m_full.max(1);
+    // the live gateway's svc_ewma_ms, fed the same way (per-request
+    // batch time restated at full quality, explicit warm-up)
+    let mut svc_ewma_ms: Option<f64> = None;
 
     // arrivals in time order; equal ticks keep trace order, and seqs
     // are assigned in that order at admission (like the gateway's
@@ -290,8 +354,24 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                         report
                             .latencies_ms
                             .push(batch.done_at.ms_since(e.enqueued));
+                        // goodput: completed within deadline (or none)
+                        if !matches!(e.deadline, Some(d) if batch.done_at > d)
+                        {
+                            report.goodput += 1;
+                        }
                     }
                     report.completed += entries.len() as u64;
+                    if batch.m_eff < m_full {
+                        report.served_degraded += entries.len() as u64;
+                    }
+                    // the gateway replica's EWMA feed: per-request
+                    // batch time, restated at full quality so the
+                    // estimate keeps one meaning as the ladder steps
+                    let per_req = batch.done_at.ms_since(batch.formed_at)
+                        / entries.len() as f64;
+                    let sample = per_req * m_full as f64
+                        / batch.m_eff.clamp(1, m_full) as f64;
+                    svc_ewma_ms = Some(update_ewma(svc_ewma_ms, sample));
                     report.batches.push(batch);
                 }
             }
@@ -306,6 +386,20 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                 continue;
             }
             let a = &trace[idx];
+            if cfg.admission_edf {
+                if let Some(d) = a.deadline {
+                    let plan = cfg.degrade.plan(
+                        queues.len(),
+                        svc_ewma_ms,
+                        replicas,
+                        m_full,
+                    );
+                    if deadline_infeasible(&plan, d) {
+                        report.rejected_infeasible += 1;
+                        continue;
+                    }
+                }
+            }
             let seq = next_seq;
             next_seq += 1;
             report.accepted += 1;
@@ -356,6 +450,13 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                             &queues,
                         );
                         reps[r] = if ship {
+                            // next_batch's decision point: the rung is
+                            // picked off the backlog the batch leaves
+                            // behind it (post-pop queue depth)
+                            let m_eff = cfg
+                                .degrade
+                                .plan(queues.len(), svc_ewma_ms, replicas, m_full)
+                                .m_eff;
                             dispatch(
                                 r,
                                 b,
@@ -363,6 +464,8 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                                 now,
                                 &cfg.service,
                                 widths[b],
+                                m_eff,
+                                m_full,
                                 &mut report,
                             )
                         } else {
@@ -393,6 +496,10 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                             &queues,
                         );
                         if ship {
+                            let m_eff = cfg
+                                .degrade
+                                .plan(queues.len(), svc_ewma_ms, replicas, m_full)
+                                .m_eff;
                             reps[r] = dispatch(
                                 r,
                                 bucket,
@@ -400,6 +507,8 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                                 now,
                                 &cfg.service,
                                 widths[bucket],
+                                m_eff,
+                                m_full,
                                 &mut report,
                             );
                             changed = true;
@@ -479,6 +588,9 @@ mod tests {
                 batch_overhead: Duration::from_millis(1),
                 per_width: Duration::from_micros(125), // 1 ms per width-8 request
             },
+            degrade: DegradeLadder::none(),
+            m_full: 32,
+            admission_edf: false,
         }
     }
 
@@ -584,6 +696,59 @@ mod tests {
         assert_eq!(fifo.shed_deadline, 1);
         assert_eq!(fifo.completed, 1);
         assert!(fifo.reconciles());
+    }
+
+    #[test]
+    fn admission_edf_rejects_warm_infeasible_arrivals_exactly() {
+        // width-8, 4 ms/request full quality, no overhead; no ladder
+        let mut c = cfg(SchedPolicy::Conserve);
+        c.admission_edf = true;
+        c.m_full = 8;
+        c.batch = BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        });
+        c.service = ServiceModel {
+            batch_overhead: Duration::ZERO,
+            per_width: Duration::from_micros(500),
+        };
+        let mut trace = vec![arr(0, 8)]; // warms the EWMA to 4 ms
+        for _ in 0..3 {
+            trace.push(Arrival {
+                at: Duration::from_millis(4),
+                len: 8,
+                deadline: Some(Duration::from_millis(2)),
+            });
+        }
+        let report = run(&c, &trace);
+        // at t=4 the EWMA is warm (the t=0 request completed at t=4,
+        // completions land before admissions at the same tick). Burst
+        // admission: the first sees an empty queue (backlog 0 ms,
+        // feasible), the second and third see 1 queued x 4 ms = 4 ms >
+        // 2 ms — infeasible, rejected at the door
+        assert_eq!(report.rejected_infeasible, 2);
+        assert_eq!(report.accepted, 2);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 0);
+        assert!(report.reconciles());
+        // the admitted burst request runs 4..8 ms against an absolute
+        // deadline of 6 ms: completed late, so it is not goodput — only
+        // the deadline-free warm-up counts
+        assert_eq!(report.goodput, 1);
+        // cold estimates never EDF-reject: the same burst with no
+        // warm-up admits everything
+        let cold = run(&c, &trace[1..].to_vec());
+        assert_eq!(cold.rejected_infeasible, 0);
+        assert_eq!(cold.accepted, 3);
+    }
+
+    #[test]
+    fn disabled_ladder_reports_full_quality_everywhere() {
+        let report = run(&cfg(SchedPolicy::Conserve), &[arr(0, 4), arr(0, 8)]);
+        assert!(report.batches.iter().all(|b| b.m_eff == 32));
+        assert_eq!(report.served_degraded, 0);
+        // deadline-free completions all count as goodput
+        assert_eq!(report.goodput, report.completed);
     }
 
     #[test]

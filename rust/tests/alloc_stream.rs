@@ -46,15 +46,19 @@ fn warm_stream_appends_and_gathers_allocate_zero() {
         for (kc, vc) in &chunks {
             s.append(kc, vc);
         }
-        s.finish_into(&q, &mut out);
-        s.finish_with_tail_into(&q, &tail_k, &tail_v, &mut out);
+        s.finish_into(&q, s.m(), &mut out);
+        s.finish_with_tail_into(&q, &tail_k, &tail_v, s.m(), &mut out);
 
         let before = alloc_count();
         for (kc, vc) in &chunks {
             s.append(kc, vc);
         }
-        s.finish_into(&q, &mut out);
-        s.finish_with_tail_into(&q, &tail_k, &tail_v, &mut out);
+        s.finish_into(&q, s.m(), &mut out);
+        s.finish_with_tail_into(&q, &tail_k, &tail_v, s.m(), &mut out);
+        // degraded m'-prefix readouts ride the same warm scratch: a
+        // quality step-down must never cost an allocation
+        s.finish_into(&q, 2, &mut out);
+        s.finish_with_tail_into(&q, &tail_k, &tail_v, 2, &mut out);
         let allocs = alloc_count() - before;
         assert_eq!(
             allocs, 0,

@@ -14,7 +14,14 @@
 //!   path at every intermediate prefix;
 //! * the gateway prefix cache — hits return the same bytes the cold
 //!   path computes, and the hit/miss counters account for every
-//!   streamed request.
+//!   streamed request;
+//! * the m'-prefix degradation contract — a session absorbed at `m`
+//!   hash rounds and read at any `m' <= m` produces byte-identical
+//!   output to a fresh `m'`-round forward, across shapes × tau × both
+//!   hashers × both kernels (`m_prefix_readout_matches_fresh_m_forward`),
+//!   and a gateway request pinned to `Quality::Degraded(m')` returns
+//!   the exact bytes of a server configured at `m'` end to end —
+//!   through both the prefix-cache readout and the batch fallback.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -27,7 +34,8 @@ use yoso::model::encoder::{
 };
 use yoso::model::ParamSet;
 use yoso::serve::{
-    BatchPolicy, CpuServeConfig, Gateway, GatewayConfig, ServerHandle,
+    BatchPolicy, CpuServeConfig, Gateway, GatewayConfig, Quality,
+    ServerHandle,
 };
 use yoso::tensor::Mat;
 use yoso::util::Rng;
@@ -80,7 +88,7 @@ fn chunked_appends_match_batch_forward() {
                         }
                         assert_eq!(s.n_keys(), n);
                         let mut out = Mat::zeros(n, d);
-                        s.finish_into(&q, &mut out);
+                        s.finish_into(&q, s.m(), &mut out);
                         let ctx = format!(
                             "n={n} d={d} tau={tau} m={m} fast={fast} \
                              kernel={}",
@@ -122,10 +130,10 @@ fn interleaved_sessions_do_not_cross_contaminate() {
             }
         }
         let mut out = Mat::zeros(20, d);
-        sa.finish_into(&qa, &mut out);
+        sa.finish_into(&qa, sa.m(), &mut out);
         assert_bits(&out.data, &ea.data, &format!("A fast={fast}"));
         let mut out = Mat::zeros(28, d);
-        sb.finish_into(&qb, &mut out);
+        sb.finish_into(&qb, sb.m(), &mut out);
         assert_bits(&out.data, &eb.data, &format!("B fast={fast}"));
 
         // arena-reuse statelessness: resetting A onto B's seed and
@@ -133,7 +141,7 @@ fn interleaved_sessions_do_not_cross_contaminate() {
         sa.reset(&mut Rng::new(6));
         sa.append(&kb, &vb);
         let mut out = Mat::zeros(28, d);
-        sa.finish_into(&qb, &mut out);
+        sa.finish_into(&qb, sa.m(), &mut out);
         assert_bits(&out.data, &eb.data, &format!("reset fast={fast}"));
     }
 }
@@ -242,4 +250,104 @@ fn gateway_prefix_cache_hits_preserve_logits_and_count() {
         (2, 1),
         "prefix extension and exact repeat must both hit"
     );
+}
+
+#[test]
+fn m_prefix_readout_matches_fresh_m_forward() {
+    // the contract the degradation ladder rides: a session absorbed at
+    // m = 8 rounds and read at any m' <= m — including a non-divisor
+    // m' = 3 — is bit-identical to a fresh m'-round forward from the
+    // same seed, because hashers draw hash-major so the m'-hasher is a
+    // literal prefix of the m-hasher. Checked for the plain readout and
+    // the tail-overlay readout, across shapes × tau × hashers × kernels.
+    let tail = 5usize;
+    for &(n, d) in &[(12usize, 16usize), (33, 32)] {
+        for &tau in &[4usize, 6] {
+            for fast in [false, true] {
+                for kernel in [KernelVariant::Seed, KernelVariant::Fused] {
+                    let att =
+                        YosoAttention::new(tau, 8, fast).with_kernel(kernel);
+                    let (q, k, v) = qkv(n, d, 3 + n as u64 + tau as u64 * 7);
+                    let mut full = YosoStream::new(&att, d, d, &mut Rng::new(41));
+                    full.append(&k, &v);
+                    let real = n - tail;
+                    let mut part = YosoStream::new(&att, d, d, &mut Rng::new(41));
+                    part.append(&slice_rows(&k, 0, real), &slice_rows(&v, 0, real));
+                    for m_read in [1usize, 2, 3, 8] {
+                        let small = YosoAttention::new(tau, m_read, fast)
+                            .with_kernel(kernel);
+                        let expected =
+                            small.forward(&q, &k, &v, &mut Rng::new(41));
+                        let ctx = format!(
+                            "n={n} d={d} tau={tau} fast={fast} kernel={} \
+                             m_read={m_read}",
+                            kernel.label()
+                        );
+                        let mut out = Mat::zeros(n, d);
+                        full.finish_into(&q, m_read, &mut out);
+                        assert_bits(&out.data, &expected.data, &ctx);
+                        part.finish_with_tail_into(
+                            &q,
+                            &slice_rows(&k, real, n),
+                            &slice_rows(&v, real, n),
+                            m_read,
+                            &mut out,
+                        );
+                        assert_bits(
+                            &out.data,
+                            &expected.data,
+                            &format!("{ctx} (tail overlay)"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gateway_degraded_quality_matches_a_fresh_lower_m_gateway() {
+    let seed = 29u64;
+    let ids: Vec<i32> = (0..12).map(|i| 7 + i).collect();
+    let seg = vec![0i32; 12];
+
+    // reference bytes: a server configured at m' = 4 outright (same
+    // tau — `yoso_4` and `yoso_8` both fix tau = 8)
+    let mut ref_cfg = stream_cfg(seed);
+    ref_cfg.attention = "yoso_4".into();
+    let handle = ServerHandle::spawn_cpu(
+        ref_cfg,
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+    );
+    let reference =
+        handle.submit(ids.clone(), seg.clone()).recv().unwrap().logits;
+    handle.shutdown().expect("reference stats");
+
+    // the gateway runs at m_full = 8; a request pinned to Degraded(4)
+    // must return the m' = 4 bytes exactly — first through the prefix
+    // cache's m'-prefix readout, then with the cache disabled so the
+    // degraded batch fallback (a cloned m'-attention) is exercised
+    for cache_bytes in [64usize << 20, 0] {
+        let mut cfg = GatewayConfig::new(stream_cfg(seed));
+        cfg.prefix_cache_bytes = cache_bytes;
+        let gw = Gateway::spawn(cfg);
+        let got = gw
+            .submitter()
+            .submit_with(ids.clone(), seg.clone(), None, Quality::Degraded(4))
+            .expect("admitted")
+            .recv()
+            .unwrap()
+            .expect("served");
+        assert_bits(
+            &got.logits,
+            &reference,
+            &format!("cache_bytes={cache_bytes}"),
+        );
+        let stats = gw.shutdown();
+        assert_eq!(
+            (stats.served_degraded, stats.served_full),
+            (1, 0),
+            "cache_bytes={cache_bytes}"
+        );
+    }
 }

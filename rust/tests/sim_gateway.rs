@@ -14,7 +14,11 @@
 //! * **exact shed accounting** — `accepted == completed + shed_deadline`
 //!   and `offered == accepted + rejected`, with hand-computed counts on
 //!   scripted deadline/capacity traces and as an invariant on random
-//!   traces under both policies.
+//!   traces under both policies;
+//! * **the degradation ladder earns its keep** — on a hand-computed
+//!   overload trace, a ladder-enabled run serves strictly more
+//!   within-deadline requests (goodput) than the shed-only baseline,
+//!   with exact per-batch m' and completion-tick assertions.
 //!
 //! The other half of the contract — logits bit-identical to the
 //! single-loop path under every `SchedPolicy` x bucket layout x arrival
@@ -26,7 +30,9 @@
 
 use std::time::Duration;
 use yoso::serve::sim::{run, Arrival, ServiceModel, SimConfig};
-use yoso::serve::{BatchPolicy, BatchPolicyTable, BucketLayout, SchedPolicy};
+use yoso::serve::{
+    BatchPolicy, BatchPolicyTable, BucketLayout, DegradeLadder, SchedPolicy,
+};
 use yoso::util::Rng;
 
 fn ms(v: u64) -> Duration {
@@ -75,6 +81,9 @@ fn conserve_is_work_conserving_on_random_adversarial_traces() {
                 batch_overhead: us(200 + rng.below(2000) as u64),
                 per_width: us(1 + rng.below(50) as u64),
             },
+            degrade: DegradeLadder::none(),
+            m_full: 16,
+            admission_edf: false,
         };
         let report = run(&cfg, &trace);
         assert!(
@@ -146,6 +155,9 @@ fn fifo_parks_on_foreign_buckets_and_conserve_does_not() {
             max_wait: ms(50),
         }),
         service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
+        degrade: DegradeLadder::none(),
+        m_full: 16,
+        admission_edf: false,
     };
     let fifo = run(&mk(SchedPolicy::Fifo), &trace);
     let conserve = run(&mk(SchedPolicy::Conserve), &trace);
@@ -199,6 +211,9 @@ fn dequeue_within_bucket_is_deadline_earliest_first() {
             max_wait: Duration::ZERO,
         }),
         service: ServiceModel { batch_overhead: ms(20), per_width: us(10) },
+        degrade: DegradeLadder::none(),
+        m_full: 16,
+        admission_edf: false,
     };
     let edf = run(&mk(SchedPolicy::Conserve), &trace);
     assert_eq!(edf.completed, 6);
@@ -243,6 +258,9 @@ fn shed_accounting_is_exact_on_scripted_deadline_traces() {
             max_wait: Duration::ZERO,
         }),
         service: ServiceModel { batch_overhead: ms(30), per_width: us(10) },
+        degrade: DegradeLadder::none(),
+        m_full: 16,
+        admission_edf: false,
     };
     let report = run(&cfg, &trace);
     assert_eq!(report.accepted, 4);
@@ -290,6 +308,9 @@ fn per_bucket_policies_shape_batches_in_the_sim() {
             max_wait: ms(8),
         }),
         service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
+        degrade: DegradeLadder::none(),
+        m_full: 16,
+        admission_edf: false,
     };
     let report = run(&cfg, &trace);
     assert_eq!(report.completed, 11);
@@ -308,4 +329,94 @@ fn per_bucket_policies_shape_batches_in_the_sim() {
         .collect();
     assert_eq!(narrow, vec![8], "narrow bucket must drain in one batch");
     assert_eq!(wide, vec![2, 1], "wide bucket keeps the base cap of 2");
+}
+
+#[test]
+fn degradation_ladder_beats_shed_only_on_an_overload_burst() {
+    // The tentpole's existence proof, hand-computed on the virtual
+    // clock. One replica, width-8 bucket, one request per batch, 4 ms
+    // full-quality service (m=8), no batch overhead. A warm-up request
+    // at t=0 (no deadline) calibrates the EWMA to exactly 4 ms; six
+    // requests land at t=4, each with a 12 ms deadline (absolute 16 ms).
+    //
+    // Shed-only: requests serve at 4 ms each — seq1..3 complete at 8,
+    // 12, 16 ms (all within deadline, 16 exactly on it), and seq4..6
+    // expire in-queue at t=16. Goodput 4, three users shed.
+    //
+    // Ladder (step to m'=2 at >=10 ms of backlog): the rung is picked
+    // off the post-pop backlog, so seq1..3 see 20/16/12 ms of pressure
+    // and serve at m'=2 (1 ms each, done at 5/6/7 ms); the backlog the
+    // controller measures then falls to 8 ms, below the rung, and
+    // seq4..6 serve at full quality (done 11/15/19 ms). Only seq6
+    // misses its deadline — and it still completes rather than
+    // shedding. Goodput 6 > 4: the ladder turned two would-be sheds
+    // into on-time (cheaper) answers and a third into a late answer.
+    let mk = |degrade: DegradeLadder| SimConfig {
+        replicas: 1,
+        queue_capacity: 64,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::single(8),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }),
+        service: ServiceModel {
+            batch_overhead: Duration::ZERO,
+            per_width: us(500), // 8 x 500 us = 4 ms per request at full m
+        },
+        degrade,
+        m_full: 8,
+        admission_edf: false,
+    };
+    let mut trace = vec![Arrival { at: ms(0), len: 8, deadline: None }];
+    for _ in 0..6 {
+        trace.push(Arrival { at: ms(4), len: 8, deadline: Some(ms(12)) });
+    }
+
+    let shed_only = run(&mk(DegradeLadder::none()), &trace);
+    assert_eq!(shed_only.accepted, 7);
+    assert_eq!(shed_only.completed, 4);
+    assert_eq!(shed_only.shed_deadline, 3);
+    assert_eq!(shed_only.goodput, 4);
+    assert_eq!(shed_only.served_degraded, 0);
+    assert!(shed_only.reconciles());
+    assert!(shed_only.batches.iter().all(|b| b.m_eff == 8));
+    let done: Vec<f64> = shed_only
+        .batches
+        .iter()
+        .map(|b| b.done_at.ms_since(yoso::serve::Tick::ZERO))
+        .collect();
+    assert_eq!(done, vec![4.0, 8.0, 12.0, 16.0]);
+
+    let ladder = run(&mk(DegradeLadder::steps(vec![(10, 2)])), &trace);
+    assert_eq!(ladder.accepted, 7);
+    assert_eq!(ladder.completed, 7, "nothing sheds under the ladder");
+    assert_eq!(ladder.shed_deadline, 0);
+    assert_eq!(ladder.goodput, 6);
+    assert_eq!(ladder.served_degraded, 3);
+    assert!(ladder.reconciles());
+    let m_effs: Vec<usize> =
+        ladder.batches.iter().map(|b| b.m_eff).collect();
+    assert_eq!(
+        m_effs,
+        vec![8, 2, 2, 2, 8, 8, 8],
+        "rungs engage while backlog >= 10 ms and release as it drains"
+    );
+    let done: Vec<f64> = ladder
+        .batches
+        .iter()
+        .map(|b| b.done_at.ms_since(yoso::serve::Tick::ZERO))
+        .collect();
+    assert_eq!(done, vec![4.0, 5.0, 6.0, 7.0, 11.0, 15.0, 19.0]);
+
+    // the headline inequality the bench smoke-gates at scale
+    assert!(
+        ladder.goodput > shed_only.goodput,
+        "degradation must serve strictly more within-deadline requests \
+         than shedding: {} vs {}",
+        ladder.goodput,
+        shed_only.goodput
+    );
+    assert!(ladder.conservation_violations.is_empty());
+    assert!(shed_only.conservation_violations.is_empty());
 }
