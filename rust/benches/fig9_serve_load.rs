@@ -34,7 +34,15 @@
 //!   inside their deadline): trading hash rounds for latency may never
 //!   serve *fewer* users than shedding them. Rows land in
 //!   results/fig9_overload_ab.csv with the per-quality counters
-//!   (`served_full`/`served_degraded`) from [`GatewayStats`].
+//!   (`served_full`/`served_degraded`) from [`GatewayStats`];
+//! * **flight-recorder gate** — the same closed loop runs with tracing
+//!   off and on (`obs::set_trace_enabled`, best-of-3 mean each);
+//!   traced mean latency must stay within the same 5% margin. The
+//!   traced arm's event stream plus the fused kernel's phase sub-spans
+//!   are always written as a Chrome `trace_event` timeline to
+//!   results/trace_fig9.json (a CI artifact). Running the whole bench
+//!   under `YOSO_TRACE=1` traces the main sweep too — `GatewayConfig`
+//!   defaults its `trace` knob from the env gate.
 
 use std::io::Write;
 use std::time::{Duration, Instant};
@@ -541,6 +549,78 @@ fn main() {
         );
         failed = failed || smoke();
     }
+
+    // flight-recorder overhead gate: the same single-replica closed
+    // loop, tracing off vs on (the process gate also flips every
+    // gateway spawned inside the arm — `GatewayConfig::new` defaults
+    // its `trace` knob from it). Best-of-3 mean per arm damps runner
+    // noise symmetrically, same margin as the other gates.
+    let trace_reqs = make_requests(smoke_or(40, 160), 4, 20, 23);
+    let trace_arm = |on: bool| -> f64 {
+        yoso::obs::set_trace_enabled(on);
+        let mut means: Vec<f64> = (0..3)
+            .map(|_| {
+                closed_loop(
+                    1,
+                    true,
+                    SchedPolicy::Conserve,
+                    1,
+                    &encoder,
+                    &trace_reqs,
+                    4,
+                )
+                .mean
+            })
+            .collect();
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        means[0]
+    };
+    let untraced_mean = trace_arm(false);
+    // reset so the artifact below holds only the traced arm's spans
+    yoso::obs::reset_kernel_profile();
+    let traced_mean = trace_arm(true);
+    println!(
+        "\nflight-recorder gate: mean ms traced {traced_mean:.3} vs \
+         untraced {untraced_mean:.3} ({:.2}x)",
+        traced_mean / untraced_mean.max(1e-9)
+    );
+    if traced_mean > untraced_mean * 1.05 {
+        println!(
+            "WARNING: flight-recorder tracing cost more than 5% mean \
+             latency on the closed loop"
+        );
+        failed = failed || smoke();
+    }
+
+    // one more traced run feeds the Chrome timeline artifact — this one
+    // keeps its gateway in scope so the sink survives shutdown
+    let gw = spawn_gateway(1, true, SchedPolicy::Conserve, 1, &encoder);
+    let sub = gw.submitter();
+    let mut rxs = Vec::with_capacity(trace_reqs.len());
+    for (ids, segs) in &trace_reqs {
+        if let Ok(rx) = sub.submit(ids.clone(), segs.clone()) {
+            rxs.push(rx);
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let sink = gw.trace_sink();
+    gw.shutdown();
+    yoso::obs::set_trace_enabled(false);
+    let log = sink.expect("tracing was enabled").drain();
+    let kernel = yoso::obs::kernel_snapshot();
+    yoso::obs::write_chrome_trace(
+        std::path::Path::new("results/trace_fig9.json"),
+        &log,
+        &kernel,
+    )
+    .unwrap();
+    println!(
+        "-> results/trace_fig9.json ({} events, {} kernel spans)",
+        log.events.len(),
+        kernel.spans.len()
+    );
 
     if failed {
         // the bench-smoke CI job is the regression gate

@@ -44,6 +44,7 @@
 
 use super::yoso::{WorkspaceTrace, YosoAttention};
 use crate::lsh::{hadamard, HadamardHasher, HyperplaneHasher};
+use crate::obs::{KernelProbe, Phase};
 use crate::tensor::Mat;
 use crate::util::Rng;
 use std::cell::RefCell;
@@ -126,6 +127,10 @@ pub struct KernelArena {
     hada: Option<HadamardHasher>,
     hyper_round: Option<HyperplaneHasher>,
     hada_round: Option<HadamardHasher>,
+    /// phase timers (`obs`): latches the global trace gate once per
+    /// forward; pure branches when tracing is off, zero-alloc once its
+    /// span scratch is warm when on
+    probe: KernelProbe,
 }
 
 impl Default for KernelArena {
@@ -150,7 +155,15 @@ impl KernelArena {
             hada: None,
             hyper_round: None,
             hada_round: None,
+            probe: KernelProbe::new(),
         }
+    }
+
+    /// This arena's cumulative kernel phase profile (see
+    /// [`KernelProbe::phase_total`]); all zeros unless tracing
+    /// (`YOSO_TRACE` / `obs::set_trace_enabled`) was on during forwards.
+    pub fn probe(&self) -> &KernelProbe {
+        &self.probe
     }
 
     /// Grow (never shrink) every buffer a forward at this geometry
@@ -350,6 +363,8 @@ pub(crate) fn forward_fused_into(
     let (tau, m, fast) = (att.tau, att.m, att.fast_hash);
     let nb = 1usize << tau;
 
+    arena.probe.begin_forward();
+    arena.probe.enter(Phase::Prep);
     arena.grow(nq, nk, d, dv, tau, fast);
     copy_unit_rows(&mut arena.qn, q);
     copy_unit_rows(&mut arena.kn, k);
@@ -359,11 +374,12 @@ pub(crate) fn forward_fused_into(
     } else {
         prep_hyper(&mut arena.hyper, rng, m, d, tau);
     }
+    arena.probe.exit();
 
     out.data.fill(0.0);
     let inv_m = 1.0 / m as f32;
     let KernelArena {
-        qn, kn, table, codes_q, codes_k, proj, counts, order, hyper, hada, ..
+        qn, kn, table, codes_q, codes_k, proj, counts, order, hyper, hada, probe, ..
     } = arena;
     let table = &mut table[..nb * dv];
     let codes_q = &mut codes_q[..nq];
@@ -372,6 +388,9 @@ pub(crate) fn forward_fused_into(
     let order = &mut order[..nk];
 
     for h in 0..m {
+        // Hash is the matmul-backed phase: codes come out of a tiled
+        // matrix product, so its timer doubles as the matmul timer
+        probe.enter(Phase::Hash);
         if fast {
             let hasher = hada.as_ref().unwrap();
             hasher.hash_block_into(qn, h, proj, codes_q);
@@ -381,14 +400,20 @@ pub(crate) fn forward_fused_into(
             hasher.hash_block_into(qn, h, proj, codes_q);
             hasher.hash_block_into(kn, h, proj, codes_k);
         }
+        probe.exit();
         // scatter: H[f(K_j)] += V_j, bucket-contiguous
+        probe.enter(Phase::Scatter);
         scatter_sorted(table, counts, order, codes_k, v, dv);
+        probe.exit();
         // gather: Y_i += H[f(Q_i)] / m
+        probe.enter(Phase::Gather);
         for (i, &c) in codes_q.iter().enumerate() {
             let b = c as usize;
             axpy_rows_8(inv_m, &table[b * dv..(b + 1) * dv], &mut out.data[i * dv..(i + 1) * dv]);
         }
+        probe.exit();
     }
+    probe.finish_forward();
 
     WorkspaceTrace {
         table_bytes: nb * dv * 4,
@@ -419,6 +444,8 @@ pub(crate) fn fused_round(
     let d = qn.cols;
     let dv = v.cols;
     let nb = 1usize << tau;
+    arena.probe.begin_forward();
+    arena.probe.enter(Phase::Prep);
     arena.grow(nq, nk, d, dv, tau, fast);
     // the m = 1 round slots, not the full-forward hashers: interleaving
     // engine rounds with trait forwards must not thrash either slot
@@ -427,12 +454,14 @@ pub(crate) fn fused_round(
     } else {
         prep_hyper(&mut arena.hyper_round, rng, 1, d, tau);
     }
+    arena.probe.exit();
     let KernelArena {
-        table, codes_q, codes_k, proj, counts, order, hyper_round, hada_round, ..
+        table, codes_q, codes_k, proj, counts, order, hyper_round, hada_round, probe, ..
     } = arena;
     let table = &mut table[..nb * dv];
     let codes_q = &mut codes_q[..nq];
     let codes_k = &mut codes_k[..nk];
+    probe.enter(Phase::Hash);
     if fast {
         let hasher = hada_round.as_ref().unwrap();
         hasher.hash_block_into(qn, 0, proj, codes_q);
@@ -442,11 +471,17 @@ pub(crate) fn fused_round(
         hasher.hash_block_into(qn, 0, proj, codes_q);
         hasher.hash_block_into(kn, 0, proj, codes_k);
     }
+    probe.exit();
+    probe.enter(Phase::Scatter);
     scatter_sorted(table, &mut counts[..nb + 1], &mut order[..nk], codes_k, v, dv);
+    probe.exit();
+    probe.enter(Phase::Gather);
     for (i, &c) in codes_q.iter().enumerate() {
         let b = c as usize;
         add_rows_8(&mut acc.data[i * dv..(i + 1) * dv], &table[b * dv..(b + 1) * dv]);
     }
+    probe.exit();
+    probe.finish_forward();
 }
 
 #[cfg(test)]

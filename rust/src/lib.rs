@@ -17,8 +17,11 @@
 //!   control, length-bucketed dynamic batching with per-bucket policies,
 //!   a work-conserving deadline-earliest-first scheduler
 //!   (`serve::sched`, FIFO kept for A/B) proven on a deterministic
-//!   virtual-clock simulator (`serve::clock` + `serve::sim`), and
-//!   log-bucketed `metrics::Histogram` observability), a pure-Rust
+//!   virtual-clock simulator (`serve::clock` + `serve::sim`),
+//!   log-bucketed `metrics::Histogram` observability, and flight-recorder
+//!   tracing (`obs`: per-request lifecycle events + kernel phase
+//!   profiling, exported as Chrome timelines / Prometheus text)), a
+//!   pure-Rust
 //!   attention library (YOSO + every baseline) for the
 //!   efficiency/approximation studies, metrics, checkpointing — and a
 //!   **parallel multi-head forward engine** (`attention::engine`) that
@@ -67,6 +70,7 @@ pub mod json;
 pub mod lsh;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -6,6 +6,9 @@
 //!   finetune --task mrpc --variant yoso_32 --checkpoint PATH
 //!   lra      --task listops --variant yoso_32
 //!   serve    --variant yoso_32 [--requests N]   demo serving run
+//!            [--cpu]    artifact-free multi-replica CPU gateway
+//!            [--trace]  flight recorder -> results/trace_serve.json
+//!                       (CPU gateway only; YOSO_TRACE=1 equivalent)
 //!
 //! Config: defaults < --config file.json < CLI flags (see config module).
 
@@ -182,7 +185,24 @@ fn cmd_lra(args: &Args, cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
+/// `--trace` flag (or `YOSO_TRACE=1`): flight-recorder tracing on.
+fn trace_requested(args: &Args) -> bool {
+    args.has_flag("trace")
+        || args.get("trace").is_some_and(|v| yoso::obs::trace_setting(Some(v)))
+        || yoso::obs::trace_enabled()
+}
+
 fn cmd_serve(args: &Args, cfg: &RunConfig) -> Result<()> {
+    if args.has_flag("cpu") || args.get("cpu").is_some() {
+        return cmd_serve_cpu(args, cfg);
+    }
+    if trace_requested(args) {
+        info!(
+            "--trace: the artifact executor has no flight recorder \
+             (request lifecycle + kernel phases are CPU-gateway \
+             instruments) — use `serve --cpu --trace`"
+        );
+    }
     let variant = &cfg.train.variant;
     let n_requests = args.get_usize("requests", 256);
     let artifact = format!("fwd_glue_{variant}");
@@ -215,5 +235,67 @@ fn cmd_serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     }
     let stats = handle.shutdown()?;
     println!("served {got}/{n_requests} (artifact {artifact}) | {stats}");
+    Ok(())
+}
+
+/// `serve --cpu`: the artifact-free multi-replica gateway (pure-Rust
+/// encoder + attention zoo). With `--trace` (or `YOSO_TRACE=1`) the
+/// run's flight-recorder events and kernel phase spans are written as a
+/// Chrome `trace_event` timeline to `results/trace_serve.json` and a
+/// Prometheus-style snapshot is printed.
+fn cmd_serve_cpu(args: &Args, cfg: &RunConfig) -> Result<()> {
+    use yoso::serve::{CpuServeConfig, Gateway, GatewayConfig};
+
+    let trace = trace_requested(args);
+    if trace {
+        // flip the process gate too, so the fused kernel's phase probes
+        // record alongside the gateway's lifecycle events
+        yoso::obs::set_trace_enabled(true);
+    }
+    let n_requests = args.get_usize("requests", 256);
+    let mut gcfg = GatewayConfig::new(CpuServeConfig {
+        attention: cfg.train.variant.clone(),
+        seed: cfg.seed,
+        threads: 1,
+        ..CpuServeConfig::default()
+    });
+    gcfg.replicas = cfg.serve.workers.max(1);
+    gcfg.trace = trace;
+    let gw = Gateway::spawn(gcfg);
+    let submitter = gw.submitter();
+
+    let gen = GlueGenerator::new(GlueTask::Qnli, 128, cfg.seed + 1);
+    let mut receivers = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let ex = gen.example(i as u64);
+        if let Ok(rx) = submitter.submit(ex.input_ids, ex.segment_ids) {
+            receivers.push(rx);
+        }
+        if i % 8 == 7 {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+    }
+    let mut got = 0usize;
+    for rx in receivers {
+        if matches!(rx.recv(), Ok(Ok(_))) {
+            got += 1;
+        }
+    }
+    let sink = gw.trace_sink();
+    let stats = gw.shutdown();
+    println!("served {got}/{n_requests} (cpu gateway) | {stats}");
+    if let Some(sink) = sink {
+        let log = sink.drain();
+        let kernel = yoso::obs::kernel_snapshot();
+        let path = PathBuf::from(&cfg.results_dir).join("trace_serve.json");
+        yoso::obs::write_chrome_trace(&path, &log, &kernel)?;
+        println!(
+            "trace: {} events, {} kernel spans -> {}",
+            log.events.len(),
+            kernel.spans.len(),
+            path.display()
+        );
+        print!("{}", yoso::obs::prometheus_text(&log, &kernel));
+    }
     Ok(())
 }

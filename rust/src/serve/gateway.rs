@@ -135,7 +135,7 @@ use super::cache::PrefixCache;
 use super::clock::{Clock, SystemClock, Tick};
 use super::sched::{
     deadline_infeasible, update_ewma, BatchPolicyTable, BucketQueues,
-    DegradeLadder, DegradePlan, Entry, SchedPolicy,
+    DegradeLadder, DegradePlan, Entry, LadderState, SchedPolicy,
 };
 use super::server::{
     build_attention, canonicalize, resolve_threads, serve_forward,
@@ -144,6 +144,9 @@ use super::server::{
 use super::Response;
 use crate::attention::{yoso_variant, Attention, YosoAttention};
 use crate::metrics::{Histogram, Recorder};
+use crate::obs::{
+    self, CacheTag, Event, EventKind, QualityTag, ShedTag, TraceSink,
+};
 use crate::model::encoder::{
     bucket_len, encoder_abi_spec, pow2_floor, Encoder, EncoderStream,
 };
@@ -327,6 +330,12 @@ pub struct GatewayConfig {
     /// [`Shed::DeadlineInfeasible`]. A cold service estimate never
     /// rejects. Default false
     pub admission_edf: bool,
+    /// true: record flight-recorder lifecycle events
+    /// (admitted/queued/batch_formed/exec/replied/shed) into a per-lane
+    /// [`TraceSink`] readable via [`Gateway::trace_sink`]. Defaults from
+    /// the `YOSO_TRACE` env var (see [`obs::trace_enabled`]); the
+    /// disabled path emits nothing and allocates nothing
+    pub trace: bool,
 }
 
 impl GatewayConfig {
@@ -344,6 +353,7 @@ impl GatewayConfig {
             prefix_cache_bytes: 64 << 20,
             degrade: DegradeLadder::none(),
             admission_edf: false,
+            trace: obs::trace_enabled(),
         }
     }
 }
@@ -386,6 +396,11 @@ struct GwState {
     /// (zero-duration service on a virtual clock) is not mistaken for
     /// "cold"
     svc_ewma_ms: Option<f64>,
+    /// degradation-ladder hysteresis state: the rung currently being
+    /// served and the step-up lag timer. Mutated only at batch
+    /// formation (`DegradeLadder::plan_at`); admission-side reads use
+    /// the read-only `peek_at`
+    ladder_state: LadderState,
 }
 
 /// Everything shared between submitters, replicas, and the handle.
@@ -416,6 +431,9 @@ struct GwShared {
     m_full: usize,
     /// admission-time EDF feasibility rejection enabled
     admission_edf: bool,
+    /// flight-recorder event sink; `None` when tracing is off — the
+    /// disabled path is one branch per would-be event
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl GwShared {
@@ -423,13 +441,33 @@ impl GwShared {
     /// the full-quality backlog estimate, restated at the degraded
     /// drain rate. Retry hints and admission EDF both read this plan,
     /// so a client is always quoted the rate the ladder can deliver.
+    /// Read-only: a pending hysteresis step-up shows its *held* rung
+    /// (`peek_at`), so hints quote the rate actually being served.
     fn plan(&self, st: &GwState) -> DegradePlan {
-        self.ladder.plan(
+        self.ladder.peek_at(
+            &st.ladder_state,
             st.queues.len(),
             st.svc_ewma_ms,
             self.replicas,
             self.m_full,
         )
+    }
+
+    /// Record a flight-recorder event if tracing is on (one branch when
+    /// off; never blocks on any other lane when on).
+    fn emit(&self, lane: usize, e: Event) {
+        if let Some(sink) = &self.trace {
+            sink.emit(lane, e);
+        }
+    }
+}
+
+/// The [`QualityTag`] a request's *submitted* quality class maps to.
+fn quality_tag(q: Quality) -> QualityTag {
+    match q {
+        Quality::Full => QualityTag::Full,
+        Quality::Degraded(_) => QualityTag::Degraded,
+        Quality::BestEffort => QualityTag::BestEffort,
     }
 }
 
@@ -490,6 +528,11 @@ impl GatewaySubmitter {
         let mut st = sh.state.lock().unwrap();
         loop {
             if st.closed {
+                sh.emit(
+                    0,
+                    Event::new(EventKind::Shed, submitted, obs::NO_SEQ)
+                        .with_shed(ShedTag::Closed),
+                );
                 return Err(Shed::Closed);
             }
             if st.queues.len() < sh.capacity {
@@ -498,6 +541,12 @@ impl GatewaySubmitter {
             match sh.policy {
                 ShedPolicy::Reject => {
                     st.rejected += 1;
+                    sh.emit(
+                        0,
+                        Event::new(EventKind::Shed, submitted, obs::NO_SEQ)
+                            .with_width(sh.route.widths[bucket])
+                            .with_shed(ShedTag::QueueFull),
+                    );
                     // quote the drain time the ladder would deliver,
                     // not the full-quality estimate: under a stepped-
                     // down gateway, the honest retry hint is shorter
@@ -516,6 +565,12 @@ impl GatewaySubmitter {
                 // boundary case deadline == backlog is feasible.
                 if deadline_infeasible(&plan, d) {
                     st.rejected_infeasible += 1;
+                    sh.emit(
+                        0,
+                        Event::new(EventKind::Shed, submitted, obs::NO_SEQ)
+                            .with_width(sh.route.widths[bucket])
+                            .with_shed(ShedTag::Infeasible),
+                    );
                     return Err(Shed::DeadlineInfeasible {
                         retry_after_ms: plan.hint_ms(),
                     });
@@ -525,6 +580,7 @@ impl GatewaySubmitter {
         let (reply, rx) = channel();
         let seq = st.next_seq;
         st.next_seq += 1;
+        let n_tokens = ids.len();
         let entry = Entry {
             seq,
             enqueued: submitted,
@@ -534,6 +590,14 @@ impl GatewaySubmitter {
         st.queues.push(bucket, entry);
         st.accepted += 1;
         st.peak_queue_depth = st.peak_queue_depth.max(st.queues.len());
+        if sh.trace.is_some() {
+            let base = Event::new(EventKind::Admitted, submitted, seq)
+                .with_width(sh.route.widths[bucket])
+                .with_quality(quality_tag(quality))
+                .with_n(n_tokens);
+            sh.emit(0, base);
+            sh.emit(0, Event { kind: EventKind::Queued, ..base });
+        }
         // notify_all, not notify_one: a replica parked in its batch
         // aging wait could swallow a single wake-up meant for an idle
         // peer watching a different bucket
@@ -820,6 +884,20 @@ impl Gateway {
             .map(|att| {
                 Mutex::new(PrefixCache::new(att, cfg.prefix_cache_bytes))
             });
+        // lane 0 = admission/scheduler events, lanes 1..=replicas = one
+        // per replica worker. The epoch offset is captured *here*, next
+        // to the clock the events will be stamped with, so the Chrome
+        // exporter can shift kernel phase spans (process-global
+        // `obs::now_ns` timeline) onto this gateway's event timeline.
+        let trace = cfg.trace.then(|| {
+            let offset =
+                obs::now_ns() as i64 - clock.now().as_nanos() as i64;
+            Arc::new(TraceSink::new(
+                replicas + 1,
+                TraceSink::DEFAULT_LANE_CAPACITY,
+                offset,
+            ))
+        });
         let shared = Arc::new(GwShared {
             state: Mutex::new(GwState {
                 queues: BucketQueues::new(route.widths.len()),
@@ -831,6 +909,7 @@ impl Gateway {
                 shed_deadline: 0,
                 peak_queue_depth: 0,
                 svc_ewma_ms: None,
+                ladder_state: LadderState::default(),
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -847,6 +926,7 @@ impl Gateway {
             ladder,
             m_full,
             admission_edf: cfg.admission_edf,
+            trace,
         });
         // one weight init shared by value semantics: every replica holds
         // its own Arc handle onto identical bytes
@@ -895,6 +975,16 @@ impl Gateway {
     /// Live queue-depth gauge (admitted, not yet dequeued).
     pub fn queue_depth(&self) -> usize {
         self.shared.state.lock().unwrap().queues.len()
+    }
+
+    /// The flight-recorder event sink, when `GatewayConfig::trace` is
+    /// on. Drain it (typically after [`Gateway::shutdown`] — the sink
+    /// outlives the gateway through this handle) to export a Chrome
+    /// timeline ([`obs::write_chrome_trace`]), a Prometheus snapshot
+    /// ([`obs::prometheus_text`]), or to reconcile against
+    /// [`GatewayStats`].
+    pub fn trace_sink(&self) -> Option<Arc<TraceSink>> {
+        self.shared.trace.clone()
     }
 
     /// Close admission and join the replica threads. Idempotent: the
@@ -987,9 +1077,16 @@ impl Drop for Gateway {
     }
 }
 
-/// Shed one expired request under the state lock.
-fn shed_entry(st: &mut GwState, e: GwEntry) {
+/// Shed one expired request under the state lock. `now` is the pinned
+/// scheduling-round instant the expiry was judged at.
+fn shed_entry(shared: &GwShared, st: &mut GwState, now: Tick, e: GwEntry) {
     st.shed_deadline += 1;
+    shared.emit(
+        0,
+        Event::new(EventKind::Shed, now, e.seq)
+            .with_quality(quality_tag(e.payload.quality))
+            .with_shed(ShedTag::Expired),
+    );
     let _ = e.payload.reply.send(Err(Shed::DeadlineExpired));
 }
 
@@ -1008,8 +1105,13 @@ fn shed_entry(st: &mut GwState, e: GwEntry) {
 /// ladder's hash-round budget for this batch's best-effort members,
 /// decided once at formation time off the backlog the batch leaves
 /// behind it (the queue pressure still standing *after* these entries
-/// pop is what the ladder must relieve).
-fn next_batch(shared: &GwShared) -> Option<(usize, usize, Vec<GwEntry>)> {
+/// pop is what the ladder must relieve). This formation-time decision
+/// is the one site that advances the ladder's hysteresis state
+/// (`DegradeLadder::plan_at`); `replica` tags the trace event.
+fn next_batch(
+    shared: &GwShared,
+    replica: usize,
+) -> Option<(usize, usize, Vec<GwEntry>)> {
     let widest = *shared.route.widths.last().expect("non-empty layout");
     let mut st = shared.state.lock().unwrap();
     loop {
@@ -1028,7 +1130,7 @@ fn next_batch(shared: &GwShared) -> Option<(usize, usize, Vec<GwEntry>)> {
         // only heads — the EDF pop must never see corpses)
         for e in st.queues.shed_expired(now) {
             freed = true;
-            shed_entry(&mut st, e);
+            shed_entry(shared, &mut st, now, e);
         }
         if let Some(b) = st.queues.pick_bucket(shared.sched) {
             let bpolicy =
@@ -1044,7 +1146,7 @@ fn next_batch(shared: &GwShared) -> Option<(usize, usize, Vec<GwEntry>)> {
                         Some(e) => {
                             freed = true;
                             if e.expired(now) {
-                                shed_entry(&mut st, e);
+                                shed_entry(shared, &mut st, now, e);
                             } else {
                                 batch.push(e);
                             }
@@ -1099,7 +1201,7 @@ fn next_batch(shared: &GwShared) -> Option<(usize, usize, Vec<GwEntry>)> {
             let mut live = Vec::with_capacity(batch.len());
             for e in batch {
                 if e.expired(now) {
-                    shed_entry(&mut st, e);
+                    shed_entry(shared, &mut st, now, e);
                 } else {
                     live.push(e);
                 }
@@ -1111,7 +1213,30 @@ fn next_batch(shared: &GwShared) -> Option<(usize, usize, Vec<GwEntry>)> {
                 // the whole batch expired during the wait; pick again
                 continue;
             }
-            let m_eff = shared.plan(&st).m_eff;
+            // the formation-time ladder decision — the one site that
+            // advances the hysteresis state (step-down immediate,
+            // step-up only after the backlog has stayed below the rung
+            // for the configured lag)
+            let (queued, ewma) = (st.queues.len(), st.svc_ewma_ms);
+            let m_eff = shared
+                .ladder
+                .plan_at(
+                    &mut st.ladder_state,
+                    now,
+                    queued,
+                    ewma,
+                    shared.replicas,
+                    shared.m_full,
+                )
+                .m_eff;
+            shared.emit(
+                replica + 1,
+                Event::new(EventKind::BatchFormed, now, obs::NO_SEQ)
+                    .with_worker(replica)
+                    .with_width(shared.route.widths[b])
+                    .with_m_eff(m_eff)
+                    .with_n(live.len()),
+            );
             return Some((b, m_eff, live));
         }
         if freed {
@@ -1144,13 +1269,22 @@ fn replica_loop(
     let pool = ThreadPool::new(resolve_threads(cfg.base.threads));
     let mut stats = ReplicaStats::new(id, shared.route.widths.len());
     let max_len = cfg.base.encoder.max_len;
-    while let Some((bucket, m_eff, batch)) = next_batch(&shared) {
+    while let Some((bucket, m_eff, batch)) = next_batch(&shared, id) {
         let exec_start = shared.clock.now();
         {
             let st = shared.state.lock().unwrap();
             stats.queue_depth.record(st.queues.len() as f64);
         }
         let n = batch.len();
+        let width_b = shared.route.widths[bucket];
+        shared.emit(
+            id + 1,
+            Event::new(EventKind::ExecStart, exec_start, obs::NO_SEQ)
+                .with_worker(id)
+                .with_width(width_b)
+                .with_m_eff(m_eff)
+                .with_n(n),
+        );
         let m_full = shared.m_full;
         let params = Arc::clone(&params);
         let attn = Arc::clone(&attn);
@@ -1176,7 +1310,7 @@ fn replica_loop(
             };
             let degraded = m_req < m_full;
             let enc = Encoder::new(ecfg.clone(), &params);
-            let logits = if let Some(cache) = &gw.cache {
+            let (logits, cache_tag) = if let Some(cache) = &gw.cache {
                 // checkout/compute/publish: the cache lock is never
                 // held across the encode itself, so replicas stream
                 // concurrently and only serialize on the cheap probe
@@ -1189,6 +1323,7 @@ fn replica_loop(
                         c.checkout(&e.payload.ids, &e.payload.segs, width);
                     (hit, c.template())
                 };
+                let was_hit = hit.is_some();
                 let mut stream = hit.unwrap_or_else(|| {
                     EncoderStream::new(&enc, &att, seed, width)
                 });
@@ -1206,13 +1341,15 @@ fn replica_loop(
                 // reuse of the same session
                 let logits = stream.classify_at(&enc, m_req);
                 cache.lock().unwrap().publish(stream);
-                logits
+                let tag =
+                    if was_hit { CacheTag::Hit } else { CacheTag::Miss };
+                (logits, tag)
             } else if degraded {
                 let att: Arc<dyn Attention> = Arc::new(YosoAttention {
                     m: m_req,
                     ..template.clone().expect("degraded implies streamable")
                 });
-                serve_forward(
+                let logits = serve_forward(
                     &enc,
                     &att,
                     chunk,
@@ -1220,9 +1357,10 @@ fn replica_loop(
                     &e.payload.ids,
                     &e.payload.segs,
                     width,
-                )
+                );
+                (logits, CacheTag::Unspecified)
             } else {
-                serve_forward(
+                let logits = serve_forward(
                     &enc,
                     &attn,
                     chunk,
@@ -1230,16 +1368,47 @@ fn replica_loop(
                     &e.payload.ids,
                     &e.payload.segs,
                     width,
-                )
+                );
+                (logits, CacheTag::Unspecified)
             };
+            let done = clock.now();
             let queue_ms = exec_start.ms_since(e.enqueued);
-            let total_ms = clock.now().ms_since(e.enqueued);
-            let _ = e
-                .payload
-                .reply
-                .send(Ok(Response { logits, queue_ms, total_ms }));
+            let total_ms = done.ms_since(e.enqueued);
+            // the served-at quality: what the logits were actually
+            // computed with, not what was asked for — a BestEffort
+            // request served at full rounds reports Full
+            let quality = if degraded {
+                Quality::Degraded(m_req)
+            } else {
+                Quality::Full
+            };
+            gw.emit(
+                id + 1,
+                Event::new(EventKind::Replied, done, e.seq)
+                    .with_worker(id)
+                    .with_width(width)
+                    .with_quality(quality_tag(quality))
+                    .with_m_eff(m_req)
+                    .with_cache(cache_tag),
+            );
+            let _ = e.payload.reply.send(Ok(Response {
+                logits,
+                queue_ms,
+                total_ms,
+                m_served: m_req,
+                quality,
+            }));
             (queue_ms, total_ms, degraded)
         });
+        let exec_end = shared.clock.now();
+        shared.emit(
+            id + 1,
+            Event::new(EventKind::ExecEnd, exec_end, obs::NO_SEQ)
+                .with_worker(id)
+                .with_width(width_b)
+                .with_m_eff(m_eff)
+                .with_n(n),
+        );
         stats.batches += 1;
         for (queue_ms, total_ms, degraded) in timings {
             stats.requests += 1;
@@ -1260,8 +1429,7 @@ fn replica_loop(
         // at full m anyway, so the restated sample over-estimates —
         // which errs toward degrading earlier, the safe direction under
         // overload.
-        let per_req_ms =
-            shared.clock.now().ms_since(exec_start) / n.max(1) as f64;
+        let per_req_ms = exec_end.ms_since(exec_start) / n.max(1) as f64;
         let sample = per_req_ms * m_full as f64 / m_eff.clamp(1, m_full) as f64;
         let mut st = shared.state.lock().unwrap();
         st.svc_ewma_ms = Some(update_ewma(st.svc_ewma_ms, sample));
@@ -1356,6 +1524,7 @@ mod tests {
                 shed_deadline: 0,
                 peak_queue_depth: 0,
                 svc_ewma_ms: None,
+                ladder_state: LadderState::default(),
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -1375,6 +1544,7 @@ mod tests {
             ladder: DegradeLadder::none(),
             m_full: 1,
             admission_edf: false,
+            trace: None,
         }
     }
 
@@ -1526,7 +1696,7 @@ mod tests {
             st.queues.push(0, mk(1, Some(Tick::from_nanos(500_000))));
         }
         let (bucket, m_eff, batch) =
-            next_batch(&shared).expect("work is queued");
+            next_batch(&shared, 0).expect("work is queued");
         assert_eq!(bucket, 0);
         assert_eq!(m_eff, 1, "disabled ladder: m_eff is the full m");
         assert_eq!(batch.len(), 2, "B was live at the pinned round start");

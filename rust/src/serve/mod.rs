@@ -51,6 +51,16 @@
 //!   that "execute" in simulated service time, and exact assertions on
 //!   scheduling decisions (work conservation, deadline ordering, shed
 //!   accounting) with zero wall-clock sleeps (`tests/sim_gateway.rs`).
+//! * **Observability** — both executors emit the same typed
+//!   flight-recorder events (admitted/queued/batch_formed/exec/replied/
+//!   shed) into a per-lane ring-buffer `obs::TraceSink`
+//!   (`GatewayConfig::trace` / [`sim::run_traced`], default off, env
+//!   opt-in via `YOSO_TRACE`); `crate::obs` exports Chrome trace-event
+//!   timelines, Prometheus text snapshots, and a `metrics::Recorder`
+//!   bridge, and the fused kernel's per-arena phase timers land in the
+//!   same timeline. `tests/trace_reconcile.rs` proves the event stream
+//!   reconciles exactly with [`gateway::GatewayStats`] / `sim::SimReport`
+//!   on both executors.
 //!
 //! # Batching policy
 //!
@@ -114,7 +124,7 @@ pub use gateway::{
     BucketLayout, Gateway, GatewayConfig, GatewayReply, GatewayStats,
     GatewaySubmitter, Quality, ReplicaStats, Shed, ShedPolicy,
 };
-pub use sched::{BatchPolicyTable, DegradeLadder, DegradePlan, SchedPolicy};
+pub use sched::{BatchPolicyTable, DegradeLadder, DegradePlan, LadderState, SchedPolicy};
 pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};
 
 /// One inference request: token ids + segments for a single sequence.
@@ -128,10 +138,24 @@ pub struct Request {
     pub enqueued: Tick,
 }
 
-/// Logits for one sequence plus timing.
+/// Logits for one sequence plus timing and the served-at quality: the
+/// client sees *what it actually got* — the hash-round count its logits
+/// were computed with and the quality class that count realized — not
+/// just aggregate gateway stats after the fact.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub logits: Vec<f32>,
     pub queue_ms: f64,
     pub total_ms: f64,
+    /// Hash rounds these logits were computed with. Equal to the
+    /// configured full `m` unless the request was served degraded
+    /// (pinned `Quality::Degraded(m')`, or `BestEffort` stepped down by
+    /// the overload ladder). The single-loop `server` paths always
+    /// serve full quality; the artifact path, whose round count is
+    /// baked into the HLO and invisible to the server, reports 0.
+    pub m_served: usize,
+    /// The quality class realized: `Full` when `m_served` equals the
+    /// configured full `m`, otherwise `Degraded(m_served)`. A
+    /// `BestEffort` submission served at full rounds reports `Full`.
+    pub quality: Quality,
 }

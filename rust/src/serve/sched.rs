@@ -55,7 +55,10 @@
 //! drain time of the queue ahead of it is rejected at admission instead
 //! of queuing to die. Both the live gateway and the simulator plan off
 //! this exact code, so the ladder is sim-proven the way `Conserve` was
-//! (`tests/sim_gateway.rs`).
+//! (`tests/sim_gateway.rs`). An optional **step-up lag**
+//! ([`DegradeLadder::with_step_up_lag`], state in [`LadderState`])
+//! damps rung flapping under oscillating backlog: step-downs stay
+//! immediate, step-ups wait out the lag.
 
 use super::batcher::BatchPolicy;
 use super::clock::Tick;
@@ -261,11 +264,49 @@ pub fn deadline_infeasible(plan: &DegradePlan, deadline: Duration) -> bool {
 /// counts. Empty = disabled (every request serves at full quality, the
 /// pre-ladder behavior). See the module docs for the policy rationale
 /// and `attention::stream` for why a reduced readout is exact.
+///
+/// # Step-up hysteresis
+///
+/// A purely backlog-keyed rung flaps under oscillating load: each
+/// served batch drains the queue below the threshold, the next decision
+/// steps back up to full quality, the queue refills, and consecutive
+/// batches alternate `m'` values. [`DegradeLadder::with_step_up_lag`]
+/// adds the damping: stepping **down** (more degraded — protecting
+/// latency) stays immediate, but stepping **up** (toward full quality)
+/// only happens after the raw backlog target has stayed above the held
+/// rung for the whole lag. The state lives in a caller-owned
+/// [`LadderState`] evolved by [`DegradeLadder::plan_at`] at **batch
+/// formation only**; admission-time consumers (retry hints, EDF) read
+/// the held rung through [`DegradeLadder::peek_at`] without evolving
+/// it, so live gateway and sim state machines stay bit-identical. The
+/// default lag is zero, which is exactly the stateless
+/// [`DegradeLadder::plan`] behavior.
 #[derive(Clone, Debug, Default)]
 pub struct DegradeLadder {
     /// (threshold ms, m') sorted ascending by threshold; the highest
     /// threshold at or below the current backlog estimate wins
     rungs: Vec<(u64, usize)>,
+    /// how long the raw target must stay above the held rung before a
+    /// step up is taken; zero = no hysteresis (legacy behavior)
+    step_up_lag: Duration,
+}
+
+/// Hysteresis state for one controller instance (the live gateway keeps
+/// it in `GwState`; the sim keeps a local). Mutated only by
+/// [`DegradeLadder::plan_at`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LadderState {
+    /// the rung currently being served, once a decision has been made
+    cur_m: Option<usize>,
+    /// when the raw target first rose above `cur_m` (the step-up timer)
+    up_since: Option<Tick>,
+}
+
+impl LadderState {
+    /// The held rung, if any batch-formation decision has been made.
+    pub fn current_m(&self) -> Option<usize> {
+        self.cur_m
+    }
 }
 
 impl DegradeLadder {
@@ -279,7 +320,20 @@ impl DegradeLadder {
     pub fn steps(mut rungs: Vec<(u64, usize)>) -> DegradeLadder {
         rungs.retain(|&(_, m)| m >= 1);
         rungs.sort_by_key(|&(t, _)| t);
-        DegradeLadder { rungs }
+        DegradeLadder { rungs, step_up_lag: Duration::ZERO }
+    }
+
+    /// Damp rung flapping: hold a degraded rung until the raw target has
+    /// stayed *above* it for `lag` (see the struct docs). Zero disables
+    /// (the default).
+    pub fn with_step_up_lag(mut self, lag: Duration) -> DegradeLadder {
+        self.step_up_lag = lag;
+        self
+    }
+
+    /// The configured step-up lag (zero = no hysteresis).
+    pub fn step_up_lag(&self) -> Duration {
+        self.step_up_lag
     }
 
     /// The ROADMAP ladder: step to m'=16 once the estimated drain time
@@ -317,6 +371,102 @@ impl DegradeLadder {
         let m_full = m_full.max(1);
         let full_ms = backlog_estimate_ms(queued, svc_ewma_ms, replicas);
         let m_eff = self.rung_for(full_ms).map_or(m_full, |m| m.clamp(1, m_full));
+        DegradePlan {
+            m_eff,
+            m_full,
+            backlog_ms: full_ms * m_eff as f64 / m_full as f64,
+            warm: svc_ewma_ms.is_some(),
+        }
+    }
+
+    /// The raw (stateless) rung for the current pressure: the target the
+    /// hysteresis machinery steps toward.
+    fn target_m(&self, full_ms: f64, m_full: usize) -> usize {
+        self.rung_for(full_ms).map_or(m_full, |m| m.clamp(1, m_full))
+    }
+
+    /// The batch-formation decision with step-up hysteresis: evolve
+    /// `state` at `now` and return the plan actually served. Stepping
+    /// down (raw target below the held rung) is immediate; stepping up
+    /// waits until the target has stayed above the held rung for the
+    /// whole [`step_up_lag`](Self::with_step_up_lag) (the timer resets
+    /// whenever the target falls back). With a zero lag this is exactly
+    /// [`plan`](Self::plan). Call this **only** where a batch is formed
+    /// — state must evolve identically in the live gateway and the sim.
+    pub fn plan_at(
+        &self,
+        state: &mut LadderState,
+        now: Tick,
+        queued: usize,
+        svc_ewma_ms: Option<f64>,
+        replicas: usize,
+        m_full: usize,
+    ) -> DegradePlan {
+        let m_full = m_full.max(1);
+        let full_ms = backlog_estimate_ms(queued, svc_ewma_ms, replicas);
+        let target = self.target_m(full_ms, m_full);
+        let held = state.cur_m.filter(|_| !self.step_up_lag.is_zero());
+        let m_eff = match held {
+            None => {
+                // no hysteresis, or first decision: adopt the raw target
+                state.up_since = None;
+                target
+            }
+            Some(cur) => {
+                let cur = cur.clamp(1, m_full);
+                if target <= cur {
+                    // step down (or hold): immediate, timer reset
+                    state.up_since = None;
+                    target
+                } else {
+                    match state.up_since {
+                        None => {
+                            state.up_since = Some(now);
+                            cur
+                        }
+                        Some(t0) if now.duration_since(t0) >= self.step_up_lag => {
+                            state.up_since = None;
+                            target
+                        }
+                        Some(_) => cur,
+                    }
+                }
+            }
+        };
+        state.cur_m = Some(m_eff);
+        DegradePlan {
+            m_eff,
+            m_full,
+            backlog_ms: full_ms * m_eff as f64 / m_full as f64,
+            warm: svc_ewma_ms.is_some(),
+        }
+    }
+
+    /// Read-only view of the rung `plan_at` would serve right now,
+    /// without evolving `state` or its step-up timer: step-downs show
+    /// through immediately (`target < held`), a pending step up shows
+    /// the held rung. Admission-time consumers (retry hints, EDF
+    /// feasibility) hint off this so a rejection under a held rung
+    /// quotes the drain time actually being served.
+    pub fn peek_at(
+        &self,
+        state: &LadderState,
+        queued: usize,
+        svc_ewma_ms: Option<f64>,
+        replicas: usize,
+        m_full: usize,
+    ) -> DegradePlan {
+        let m_full = m_full.max(1);
+        let full_ms = backlog_estimate_ms(queued, svc_ewma_ms, replicas);
+        let target = self.target_m(full_ms, m_full);
+        let m_eff = if self.step_up_lag.is_zero() {
+            target
+        } else {
+            match state.cur_m {
+                None => target,
+                Some(cur) => target.min(cur.clamp(1, m_full)),
+            }
+        };
         DegradePlan {
             m_eff,
             m_full,
@@ -740,6 +890,57 @@ mod tests {
         assert!(!DegradeLadder::none().is_enabled());
         assert_eq!(p.m_eff, 32);
         assert_eq!(p.hint_ms(), retry_hint_ms(50, Some(2.0), 2));
+    }
+
+    #[test]
+    fn hysteresis_steps_down_immediately_but_lags_step_up() {
+        let ladder = DegradeLadder::steps(vec![(25, 16), (100, 8)])
+            .with_step_up_lag(Duration::from_millis(50));
+        assert_eq!(ladder.step_up_lag(), Duration::from_millis(50));
+        let mut st = LadderState::default();
+        assert_eq!(st.current_m(), None);
+        // heavy backlog: first decision adopts the deep rung directly
+        let p = ladder.plan_at(&mut st, Tick::from_ms(0), 400, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8);
+        assert_eq!(st.current_m(), Some(8));
+        // backlog clears: raw target is 32, but the rung holds for lag
+        let p = ladder.plan_at(&mut st, Tick::from_ms(10), 0, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8, "step up must wait out the lag");
+        // the read-only peek shows the held rung without evolving state
+        let peek = ladder.peek_at(&st, 0, Some(1.0), 1, 32);
+        assert_eq!(peek.m_eff, 8);
+        // pressure returns mid-lag: timer resets, rung still 8
+        let p = ladder.plan_at(&mut st, Tick::from_ms(30), 400, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8);
+        let p = ladder.plan_at(&mut st, Tick::from_ms(40), 0, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8, "timer restarted by the mid-lag relapse");
+        // ... and a peeked step *down* shows through immediately
+        let peek = ladder.peek_at(&st, 400, Some(1.0), 1, 32);
+        assert_eq!(peek.m_eff, 8);
+        // 50 ms after the restart the step up finally lands
+        let p = ladder.plan_at(&mut st, Tick::from_ms(90), 0, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 32);
+        assert_eq!(st.current_m(), Some(32));
+        // intermediate steps lag too: 8 -> 16 needs its own full lag
+        let p = ladder.plan_at(&mut st, Tick::from_ms(100), 400, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8, "step down from 32 is immediate");
+        let p = ladder.plan_at(&mut st, Tick::from_ms(110), 50, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 8, "raw target 16 is a step up: held");
+        let p = ladder.plan_at(&mut st, Tick::from_ms(161), 50, Some(1.0), 1, 32);
+        assert_eq!(p.m_eff, 16, "lag elapsed: adopt the 16 rung");
+    }
+
+    #[test]
+    fn zero_lag_plan_at_and_peek_match_stateless_plan() {
+        let ladder = DegradeLadder::standard();
+        let mut st = LadderState::default();
+        for (t, queued) in [(0u64, 400usize), (1, 0), (2, 400), (3, 0), (4, 50)] {
+            let stateless = ladder.plan(queued, Some(1.0), 1, 32);
+            let at = ladder.plan_at(&mut st, Tick::from_ms(t), queued, Some(1.0), 1, 32);
+            assert_eq!(at, stateless, "lag-0 plan_at must be the legacy plan");
+            let peek = ladder.peek_at(&st, queued, Some(1.0), 1, 32);
+            assert_eq!(peek, stateless, "lag-0 peek must be the legacy plan");
+        }
     }
 
     #[test]

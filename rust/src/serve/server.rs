@@ -21,7 +21,8 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::clock::{Clock, SystemClock};
 use super::{Request, Response};
 use crate::attention::{
-    by_name, Attention, ChunkPolicy, KernelVariant, MultiHeadAttention,
+    by_name, yoso_variant, Attention, ChunkPolicy, KernelVariant,
+    MultiHeadAttention,
 };
 use crate::data::special;
 use crate::model::encoder::{
@@ -304,10 +305,15 @@ fn serve_loop(
             let total_ms = clock.now().ms_since(req.enqueued);
             latencies.push(total_ms);
             queue_latencies.push(queue_ms);
+            // the artifact path never degrades; its hash-round count is
+            // baked into the HLO and not visible to the server, so
+            // m_served reports 0 ("not applicable") at Full quality
             let _ = req.reply.send(Response {
                 logits: logits[row * per_row..(row + 1) * per_row].to_vec(),
                 queue_ms,
                 total_ms,
+                m_served: 0,
+                quality: super::Quality::Full,
             });
         }
     }
@@ -454,6 +460,10 @@ fn serve_loop_cpu(
     let mut n_requests = 0usize;
     let mut n_batches = 0usize;
     let started = clock.now();
+    // the single-loop path never degrades: every response reports the
+    // configured full hash-round count (1 for non-YOSO variants — the
+    // same convention as the gateway's m_full)
+    let m_full = yoso_variant(&cfg.attention).map_or(1, |a| a.m);
 
     while let Some(batch) = batcher.next_batch(&rx) {
         let exec_start = clock.now();
@@ -487,7 +497,13 @@ fn serve_loop_cpu(
                 serve_forward(&enc, &attn, chunk_policy, seed, &ids, &segs, width);
             let queue_ms = exec_start.ms_since(req.enqueued);
             let total_ms = worker_clock.now().ms_since(req.enqueued);
-            let _ = req.reply.send(Response { logits, queue_ms, total_ms });
+            let _ = req.reply.send(Response {
+                logits,
+                queue_ms,
+                total_ms,
+                m_served: m_full,
+                quality: super::Quality::Full,
+            });
             (queue_ms, total_ms)
         });
         for (queue_ms, total_ms) in timings {

@@ -41,9 +41,14 @@
 //!   sim maintains the same full-quality EWMA service estimate (updated
 //!   at batch completion; a degraded batch's sample scales back up by
 //!   `m/m'`), picks each batch's `m'` off the post-pop backlog at
-//!   dispatch — `next_batch`'s exact decision point — and, with
-//!   `admission_edf`, rejects warm-infeasible deadlines at admission
-//!   (`rejected_infeasible`, never queued).
+//!   dispatch — `next_batch`'s exact decision point, advancing the same
+//!   step-up hysteresis state (`DegradeLadder::plan_at`) the live
+//!   gateway does — and, with `admission_edf`, rejects warm-infeasible
+//!   deadlines at admission (`rejected_infeasible`, never queued);
+//! * [`run_traced`] mirrors every decision into an `obs::TraceSink`
+//!   with the live gateway's exact event schema and lane layout, and
+//!   tracing never changes a decision (the report is bit-identical to
+//!   the untraced run).
 //!
 //! What the simulator does *not* model: compute itself (no logits — the
 //! bit-identity half of the contract is `tests/prop_serve_gateway.rs`'s
@@ -54,9 +59,18 @@ use super::clock::{Clock, SimClock, Tick};
 use super::gateway::BucketLayout;
 use super::sched::{
     deadline_infeasible, update_ewma, BatchPolicyTable, BucketQueues,
-    DegradeLadder, Entry, SchedPolicy,
+    DegradeLadder, Entry, LadderState, SchedPolicy,
 };
+use crate::obs::{self, Event, EventKind, QualityTag, ShedTag, TraceSink};
 use std::time::Duration;
+
+/// Record `e` on `lane` when a sink is attached (the untraced run pays
+/// one branch per would-be event — same contract as the live gateway).
+fn emit(sink: Option<&TraceSink>, lane: usize, e: Event) {
+    if let Some(s) = sink {
+        s.emit(lane, e);
+    }
+}
 
 /// One scripted arrival: offset from trace start, sequence length
 /// (routes to a bucket), optional relative deadline.
@@ -265,6 +279,7 @@ fn should_ship(
 /// Ship a batch on `replica`: re-check member expiry (the live path's
 /// post-park re-check), then go busy for the modeled service time. All
 /// members expired -> back to idle (the live loop's "pick again").
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     replica: usize,
     bucket: usize,
@@ -275,11 +290,19 @@ fn dispatch(
     m_eff: usize,
     m_full: usize,
     report: &mut SimReport,
+    sink: Option<&TraceSink>,
 ) -> Rep {
     let mut live = Vec::with_capacity(batch.len());
     for e in batch {
         if e.expired(now) {
             report.shed_deadline += 1;
+            emit(
+                sink,
+                0,
+                Event::new(EventKind::Shed, now, e.seq)
+                    .with_quality(QualityTag::BestEffort)
+                    .with_shed(ShedTag::Expired),
+            );
         } else {
             live.push(e);
         }
@@ -293,6 +316,16 @@ fn dispatch(
         m_eff,
         m_full,
     ));
+    // the live gateway emits BatchFormed in next_batch and ExecStart at
+    // the replica's next clock read; in the simulator the two instants
+    // coincide by construction
+    let base = Event::new(EventKind::BatchFormed, now, obs::NO_SEQ)
+        .with_worker(replica)
+        .with_width(width)
+        .with_m_eff(m_eff)
+        .with_n(live.len());
+    emit(sink, replica + 1, base);
+    emit(sink, replica + 1, Event { kind: EventKind::ExecStart, ..base });
     let batch = SimBatch {
         replica,
         bucket,
@@ -308,6 +341,21 @@ fn dispatch(
 /// Run `trace` through the scheduling core under `cfg`. Deterministic:
 /// identical inputs produce an identical report, bit for bit.
 pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
+    run_traced(cfg, trace, None)
+}
+
+/// [`run`], with flight-recorder events mirrored into `sink`: the same
+/// [`Event`] schema the live gateway emits, stamped with the sim's
+/// virtual [`Tick`]s (lane 0 = admission/sheds, lanes `1..=replicas` =
+/// batch execution), so the reconciliation property test and the Chrome
+/// exporter run unchanged against either executor. Tracing never
+/// changes a scheduling decision: the report is bit-identical to the
+/// untraced run.
+pub fn run_traced(
+    cfg: &SimConfig,
+    trace: &[Arrival],
+    sink: Option<&TraceSink>,
+) -> SimReport {
     let clock = SimClock::new();
     let widths = cfg.buckets.widths().to_vec();
     let widest = *widths.last().expect("non-empty layout");
@@ -317,6 +365,9 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
     // the live gateway's svc_ewma_ms, fed the same way (per-request
     // batch time restated at full quality, explicit warm-up)
     let mut svc_ewma_ms: Option<f64> = None;
+    // the live gateway's ladder hysteresis state: advanced only at
+    // batch formation (`plan_at`), peeked read-only at admission
+    let mut ladder_state = LadderState::default();
 
     // arrivals in time order; equal ticks keep trace order, and seqs
     // are assigned in that order at admission (like the gateway's
@@ -350,6 +401,25 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                 if let Rep::Busy { batch, entries, .. } =
                     std::mem::replace(r, Rep::Idle)
                 {
+                    let m_served = batch.m_eff.clamp(1, m_full);
+                    let quality = if m_served < m_full {
+                        QualityTag::Degraded
+                    } else {
+                        QualityTag::Full
+                    };
+                    emit(
+                        sink,
+                        batch.replica + 1,
+                        Event::new(
+                            EventKind::ExecEnd,
+                            batch.done_at,
+                            obs::NO_SEQ,
+                        )
+                        .with_worker(batch.replica)
+                        .with_width(batch.width)
+                        .with_m_eff(batch.m_eff)
+                        .with_n(entries.len()),
+                    );
                     for e in &entries {
                         report
                             .latencies_ms
@@ -359,6 +429,19 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                         {
                             report.goodput += 1;
                         }
+                        emit(
+                            sink,
+                            batch.replica + 1,
+                            Event::new(
+                                EventKind::Replied,
+                                batch.done_at,
+                                e.seq,
+                            )
+                            .with_worker(batch.replica)
+                            .with_width(batch.width)
+                            .with_quality(quality)
+                            .with_m_eff(m_served),
+                        );
                     }
                     report.completed += entries.len() as u64;
                     if batch.m_eff < m_full {
@@ -381,14 +464,25 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
         while ai < arrivals.len() && arrivals[ai].0 <= now {
             let (at, idx) = arrivals[ai];
             ai += 1;
+            let a = &trace[idx];
+            let bucket = cfg.buckets.bucket_for(a.len);
             if queues.len() >= capacity {
                 report.rejected += 1;
+                emit(
+                    sink,
+                    0,
+                    Event::new(EventKind::Shed, at, obs::NO_SEQ)
+                        .with_width(widths[bucket])
+                        .with_shed(ShedTag::QueueFull),
+                );
                 continue;
             }
-            let a = &trace[idx];
             if cfg.admission_edf {
                 if let Some(d) = a.deadline {
-                    let plan = cfg.degrade.plan(
+                    // read-only peek, like the gateway's admission path:
+                    // a pending hysteresis step-up quotes its held rung
+                    let plan = cfg.degrade.peek_at(
+                        &ladder_state,
                         queues.len(),
                         svc_ewma_ms,
                         replicas,
@@ -396,6 +490,13 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                     );
                     if deadline_infeasible(&plan, d) {
                         report.rejected_infeasible += 1;
+                        emit(
+                            sink,
+                            0,
+                            Event::new(EventKind::Shed, at, obs::NO_SEQ)
+                                .with_width(widths[bucket])
+                                .with_shed(ShedTag::Infeasible),
+                        );
                         continue;
                     }
                 }
@@ -403,7 +504,6 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
             let seq = next_seq;
             next_seq += 1;
             report.accepted += 1;
-            let bucket = cfg.buckets.bucket_for(a.len);
             let entry = Entry {
                 seq,
                 enqueued: at,
@@ -412,11 +512,28 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
             };
             queues.push(bucket, entry);
             report.peak_depth = report.peak_depth.max(queues.len());
+            if sink.is_some() {
+                let base = Event::new(EventKind::Admitted, at, seq)
+                    .with_width(widths[bucket])
+                    .with_quality(QualityTag::BestEffort)
+                    .with_n(a.len);
+                emit(sink, 0, base);
+                emit(sink, 0, Event { kind: EventKind::Queued, ..base });
+            }
         }
 
         // 3. queue-side expiry sheds (live path: shed_expired at the
         // top of every next_batch round)
-        report.shed_deadline += queues.shed_expired(now).len() as u64;
+        for e in queues.shed_expired(now) {
+            report.shed_deadline += 1;
+            emit(
+                sink,
+                0,
+                Event::new(EventKind::Shed, now, e.seq)
+                    .with_quality(QualityTag::BestEffort)
+                    .with_shed(ShedTag::Expired),
+            );
+        }
 
         // 4. dispatch to fixpoint — each pass mirrors one replica's
         // next_batch round; replica index order makes ties deterministic
@@ -452,10 +569,20 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                         reps[r] = if ship {
                             // next_batch's decision point: the rung is
                             // picked off the backlog the batch leaves
-                            // behind it (post-pop queue depth)
+                            // behind it (post-pop queue depth), and this
+                            // is the one site that advances the ladder's
+                            // hysteresis state — exactly like the live
+                            // gateway
                             let m_eff = cfg
                                 .degrade
-                                .plan(queues.len(), svc_ewma_ms, replicas, m_full)
+                                .plan_at(
+                                    &mut ladder_state,
+                                    now,
+                                    queues.len(),
+                                    svc_ewma_ms,
+                                    replicas,
+                                    m_full,
+                                )
                                 .m_eff;
                             dispatch(
                                 r,
@@ -467,6 +594,7 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                                 m_eff,
                                 m_full,
                                 &mut report,
+                                sink,
                             )
                         } else {
                             Rep::Waiting {
@@ -498,7 +626,14 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                         if ship {
                             let m_eff = cfg
                                 .degrade
-                                .plan(queues.len(), svc_ewma_ms, replicas, m_full)
+                                .plan_at(
+                                    &mut ladder_state,
+                                    now,
+                                    queues.len(),
+                                    svc_ewma_ms,
+                                    replicas,
+                                    m_full,
+                                )
                                 .m_eff;
                             reps[r] = dispatch(
                                 r,
@@ -510,6 +645,7 @@ pub fn run(cfg: &SimConfig, trace: &[Arrival]) -> SimReport {
                                 m_eff,
                                 m_full,
                                 &mut report,
+                                sink,
                             );
                             changed = true;
                         } else {

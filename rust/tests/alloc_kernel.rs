@@ -7,6 +7,14 @@
 //! per-forward allocation count is measured alongside (it must be > 0;
 //! the delta is the A/B story EXPERIMENTS.md §Perf tells).
 //!
+//! The window runs twice: once with the flight recorder's kernel phase
+//! probes hard-disabled (the baseline claim, immune to a stray
+//! `YOSO_TRACE` in the environment) and once with them enabled — a warm
+//! traced forward must *also* allocate zero (phase timers write to
+//! preallocated atomics and a fixed-capacity span ring), or the
+//! "tracing is cheap enough to leave on" story is false at the exact
+//! layer it matters.
+//!
 //! Single #[test]: the allocation counter is process-global, and a
 //! concurrent test thread's allocations would pollute the window.
 
@@ -20,6 +28,9 @@ static ALLOC: CountingAlloc = CountingAlloc;
 
 #[test]
 fn fused_steady_state_allocates_zero() {
+    // pin the probe gate off regardless of the environment: the
+    // baseline window measures the kernel alone
+    yoso::obs::set_trace_enabled(false);
     let mut gen = Rng::new(1);
     let n = 96;
     let d = 32;
@@ -46,6 +57,44 @@ fn fused_steady_state_allocates_zero() {
             "fused kernel allocated in steady state (fast={fast})"
         );
     }
+
+    // the same window with the kernel phase probes live: the first
+    // traced pass warms the one-time span-ring storage, after which a
+    // profiled forward must still allocate nothing
+    yoso::obs::set_trace_enabled(true);
+    yoso::obs::reset_kernel_profile();
+    {
+        let att =
+            YosoAttention::new(6, 8, true).with_kernel(KernelVariant::Fused);
+        let mut arena = KernelArena::new();
+        let mut out = Mat::zeros(n, d);
+        let mut rng = Rng::new(7);
+        for _ in 0..2 {
+            att.forward_fused_into(&q, &k, &v, &mut rng, &mut arena, &mut out);
+        }
+        let before = alloc_count();
+        for _ in 0..5 {
+            att.forward_fused_into(&q, &k, &v, &mut rng, &mut arena, &mut out);
+        }
+        let traced_allocs = alloc_count() - before;
+        assert_eq!(
+            traced_allocs, 0,
+            "fused kernel allocated in steady state with tracing enabled"
+        );
+    }
+    yoso::obs::set_trace_enabled(false);
+    // and the probes genuinely fired — the zero-alloc claim above is
+    // about *live* instrumentation, not a silently-closed gate
+    let snap = yoso::obs::kernel_snapshot();
+    assert!(
+        !snap.is_empty(),
+        "trace-enabled window recorded no kernel phases"
+    );
+    assert!(
+        !snap.spans.is_empty(),
+        "trace-enabled window recorded no phase spans"
+    );
+    yoso::obs::reset_kernel_profile();
 
     // the seed kernel allocates every forward (codes, table, unit rows,
     // hasher, output) — the baseline the arena removes

@@ -8,8 +8,9 @@ use std::time::Duration;
 use yoso::attention::{ChunkPolicy, KernelVariant};
 use yoso::model::encoder::EncoderConfig;
 use yoso::serve::{
-    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig, Gateway,
-    GatewayConfig, SchedPolicy, Shed, ShedPolicy,
+    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig,
+    DegradeLadder, Gateway, GatewayConfig, Quality, SchedPolicy, Shed,
+    ShedPolicy,
 };
 use yoso::testing::test_threads;
 
@@ -230,6 +231,48 @@ fn scaled_policy_table_and_conserve_serve_and_reconcile() {
     assert_eq!(stats.shed_deadline, shed);
     assert_eq!(stats.accepted, stats.completed + stats.shed_deadline);
     assert_eq!(stats.accepted, 24);
+}
+
+#[test]
+fn responses_carry_served_at_quality_for_all_three_classes() {
+    // The client-visible half of the degradation contract: `Response`
+    // reports the hash-round count the logits were *actually* computed
+    // with, end to end for every quality class. A rung at threshold 0
+    // pins the ladder permanently engaged (backlog >= 0 always holds),
+    // so BestEffort deterministically serves at m'=4 — no load shaping
+    // required. "yoso_8" puts the full round count at 8.
+    let mut cfg = overload_cfg(17, 64, ShedPolicy::Reject);
+    cfg.degrade = DegradeLadder::steps(vec![(0, 4)]);
+    let gw = Gateway::spawn(cfg);
+    let sub = gw.submitter();
+    let submit = |q: Quality| {
+        sub.submit_with(vec![5i32; 12], vec![0i32; 12], None, q)
+            .expect("admitted")
+    };
+    let full = submit(Quality::Full);
+    let pinned = submit(Quality::Degraded(2));
+    let best = submit(Quality::BestEffort);
+
+    // Full is immune to the engaged ladder
+    let resp = full.recv().expect("reply").expect("served");
+    assert_eq!(resp.m_served, 8);
+    assert_eq!(resp.quality, Quality::Full);
+
+    // a pinned request gets exactly its m', reported as such
+    let resp = pinned.recv().expect("reply").expect("served");
+    assert_eq!(resp.m_served, 2);
+    assert_eq!(resp.quality, Quality::Degraded(2));
+
+    // BestEffort takes the ladder's rung and reports the realized class
+    // (not the class it was submitted under)
+    let resp = best.recv().expect("reply").expect("served");
+    assert_eq!(resp.m_served, 4);
+    assert_eq!(resp.quality, Quality::Degraded(4));
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.served_full, 1, "only the Quality::Full request");
+    assert_eq!(stats.served_degraded, 2, "pinned + stepped-down");
 }
 
 #[test]

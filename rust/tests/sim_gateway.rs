@@ -420,3 +420,93 @@ fn degradation_ladder_beats_shed_only_on_an_overload_burst() {
     assert!(ladder.conservation_violations.is_empty());
     assert!(shed_only.conservation_violations.is_empty());
 }
+
+#[test]
+fn step_up_hysteresis_damps_rung_flapping_on_an_oscillating_trace() {
+    // An oscillating load: three bursts of four requests, each burst
+    // fully drained before the next lands. Same cost model as the
+    // overload test (4 ms full service at m_full=8, 1 ms at m'=2,
+    // EWMA pinned at 4 ms by the full-quality restatement), rung at
+    // 10 ms of backlog. Within a burst the post-pop backlog runs
+    // 12/8/4/0 ms — so a zero-lag ladder steps down for exactly the
+    // first batch of every burst and right back up for the second:
+    // two rung transitions per burst, the flapping the hysteresis
+    // exists to damp.
+    //
+    // With a step-up lag longer than the run, the first step-down
+    // holds: every later batch serves at the held rung (the raw
+    // target never stays above it long enough), and the whole trace
+    // has exactly one transition. Hysteresis trades those five extra
+    // full-quality batches for rung stability — completions and
+    // accounting are untouched.
+    let mk = |degrade: DegradeLadder| SimConfig {
+        replicas: 1,
+        queue_capacity: 64,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::single(8),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }),
+        service: ServiceModel {
+            batch_overhead: Duration::ZERO,
+            per_width: us(500),
+        },
+        degrade,
+        m_full: 8,
+        admission_edf: false,
+    };
+    // warm-up calibrates the EWMA; bursts at 4/20/36 ms (the slowest
+    // arm drains a burst by +13 ms, so the replica is idle again and
+    // the backlog is back to zero before every burst)
+    let mut trace = vec![Arrival { at: ms(0), len: 8, deadline: None }];
+    for burst in 0..3u64 {
+        for _ in 0..4 {
+            trace.push(Arrival {
+                at: ms(4 + 16 * burst),
+                len: 8,
+                deadline: None,
+            });
+        }
+    }
+    let transitions = |report: &yoso::serve::sim::SimReport| {
+        report
+            .batches
+            .windows(2)
+            .filter(|w| w[0].m_eff != w[1].m_eff)
+            .count()
+    };
+
+    let flappy = run(&mk(DegradeLadder::steps(vec![(10, 2)])), &trace);
+    assert_eq!(flappy.completed, 13);
+    assert!(flappy.reconciles());
+    let m_effs: Vec<usize> = flappy.batches.iter().map(|b| b.m_eff).collect();
+    assert_eq!(
+        m_effs,
+        vec![8, 2, 8, 8, 8, 2, 8, 8, 8, 2, 8, 8, 8],
+        "zero lag must flap once per burst (the baseline this test damps)"
+    );
+    assert_eq!(transitions(&flappy), 6);
+    assert_eq!(flappy.served_degraded, 3);
+
+    let damped = run(
+        &mk(DegradeLadder::steps(vec![(10, 2)]).with_step_up_lag(ms(1000))),
+        &trace,
+    );
+    assert_eq!(damped.completed, 13, "hysteresis must not change accounting");
+    assert!(damped.reconciles());
+    let m_effs: Vec<usize> = damped.batches.iter().map(|b| b.m_eff).collect();
+    assert_eq!(
+        m_effs,
+        vec![8, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2],
+        "a held rung serves every batch until the lag elapses"
+    );
+    assert_eq!(transitions(&damped), 1);
+    assert_eq!(damped.served_degraded, 12);
+    assert!(
+        transitions(&damped) < transitions(&flappy),
+        "step-up lag must strictly reduce rung transitions"
+    );
+    assert!(flappy.conservation_violations.is_empty());
+    assert!(damped.conservation_violations.is_empty());
+}

@@ -1,0 +1,433 @@
+//! The flight-recorder contract: the typed event stream both executors
+//! emit is not advisory telemetry — it reconciles *exactly* with the
+//! executor's own accounting, and it is schema-identical between the
+//! live gateway and the simulator.
+//!
+//! * **sim reconciliation** — on randomized adversarial traces (both
+//!   schedulers, ladder on/off, EDF admission on/off), every counter in
+//!   `SimReport` equals the corresponding event count, per-seq
+//!   lifecycles are complete (admitted = replied + expired, no seq
+//!   twice), and the traced run's report is bit-identical to the
+//!   untraced run — tracing never changes a scheduling decision;
+//! * **live reconciliation** — the real gateway under an overload burst
+//!   with a doomed-deadline slice: `GatewayStats` equals the event
+//!   counts kind for kind, shed tag for shed tag, quality for quality,
+//!   cache tag for cache tag;
+//! * **schema identity** — the same request set through both executors
+//!   produces identical per-seq event signatures (kind, quality, cache,
+//!   shed, m', n), so the Chrome exporter and any downstream consumer
+//!   run unchanged against either. Batch-scoped events and timing are
+//!   executor-local (wall clock vs virtual ticks) and deliberately not
+//!   compared.
+//!
+//! CI's scheduler-stress job sweeps this suite across `YOSO_KERNEL` and
+//! `YOSO_TEST_THREADS` alongside the sim suite.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+use yoso::attention::{ChunkPolicy, KernelVariant};
+use yoso::model::encoder::EncoderConfig;
+use yoso::obs::{
+    CacheTag, EventKind, QualityTag, ShedTag, TraceLog, TraceSink, NO_SEQ,
+};
+use yoso::serve::sim::{run, run_traced, Arrival, ServiceModel, SimConfig};
+use yoso::serve::{
+    BatchPolicy, BatchPolicyTable, BucketLayout, CpuServeConfig,
+    DegradeLadder, Gateway, GatewayConfig, SchedPolicy, ShedPolicy,
+};
+use yoso::util::Rng;
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+fn us(v: u64) -> Duration {
+    Duration::from_micros(v)
+}
+
+/// The schema-level identity of one event: everything executor-agnostic
+/// (timing, worker index, and bucket width routing are executor-local).
+type Sig = (EventKind, QualityTag, CacheTag, ShedTag, u32, u32);
+
+/// Per-seq event signatures in drain order (drain sorts by tick, seq,
+/// then lifecycle rank, so same-tick lifecycles stay in order).
+fn per_seq_signatures(log: &TraceLog) -> BTreeMap<u64, Vec<Sig>> {
+    let mut map: BTreeMap<u64, Vec<Sig>> = BTreeMap::new();
+    for e in &log.events {
+        if e.seq != NO_SEQ {
+            map.entry(e.seq)
+                .or_default()
+                .push((e.kind, e.quality, e.cache, e.shed, e.m_eff, e.n));
+        }
+    }
+    map
+}
+
+fn seqs_of(log: &TraceLog, kind: EventKind, shed: ShedTag) -> Vec<u64> {
+    log.events
+        .iter()
+        .filter(|e| e.kind == kind && e.shed == shed)
+        .map(|e| e.seq)
+        .collect()
+}
+
+/// Asserts a seq list has no duplicates and returns it as a set.
+fn unique(seqs: Vec<u64>, what: &str) -> BTreeSet<u64> {
+    let n = seqs.len();
+    let set: BTreeSet<u64> = seqs.into_iter().collect();
+    assert_eq!(set.len(), n, "{what} carries a seq twice");
+    set
+}
+
+fn tiny_cfg(seed: u64) -> CpuServeConfig {
+    CpuServeConfig {
+        attention: "yoso_8".into(),
+        encoder: EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 32,
+            n_classes: 2,
+        },
+        threads: 1,
+        chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
+        seed,
+    }
+}
+
+#[test]
+fn sim_event_stream_reconciles_with_the_report_on_random_traces() {
+    let mut rng = Rng::new(0x0B5E);
+    for case in 0..30u64 {
+        let n = 15 + rng.below(50);
+        let trace: Vec<Arrival> = (0..n)
+            .map(|_| Arrival {
+                at: us(rng.below(120_000) as u64),
+                len: 1 + rng.below(60),
+                deadline: (rng.below(4) == 0)
+                    .then(|| ms(1 + rng.below(30) as u64)),
+            })
+            .collect();
+        let replicas = 1 + rng.below(3);
+        let capacity = 2 + rng.below(30); // small: queue-full sheds happen
+        let base = BatchPolicy {
+            max_batch: 1 + rng.below(6),
+            max_wait: ms(rng.below(15) as u64),
+        };
+        let scaled = rng.below(2) == 0;
+        let rungs = rng.below(3); // 0: ladder off, else rung count
+        let lag = ms(rng.below(4) as u64);
+        let admission_edf = rng.below(2) == 1;
+        let overhead = us(100 + rng.below(1500) as u64);
+        let per_width = us(1 + rng.below(40) as u64);
+        for sched in [SchedPolicy::Conserve, SchedPolicy::Fifo] {
+            let cfg = SimConfig {
+                replicas,
+                queue_capacity: capacity,
+                sched,
+                buckets: BucketLayout::pow2(8, 64),
+                batch: if scaled {
+                    BatchPolicyTable::scaled(base)
+                } else {
+                    BatchPolicyTable::uniform(base)
+                },
+                service: ServiceModel {
+                    batch_overhead: overhead,
+                    per_width,
+                },
+                degrade: match rungs {
+                    0 => DegradeLadder::none(),
+                    1 => DegradeLadder::steps(vec![(5, 8)])
+                        .with_step_up_lag(lag),
+                    _ => DegradeLadder::steps(vec![(3, 8), (10, 4)])
+                        .with_step_up_lag(lag),
+                },
+                m_full: 16,
+                admission_edf,
+            };
+            let sink =
+                TraceSink::new(replicas + 1, TraceSink::DEFAULT_LANE_CAPACITY, 0);
+            let report = run_traced(&cfg, &trace, Some(&sink));
+            let log = sink.drain();
+            assert_eq!(log.dropped, 0, "case {case}: ring overflowed");
+
+            // every report counter equals its event count
+            assert_eq!(log.count(EventKind::Admitted), report.accepted);
+            assert_eq!(log.count(EventKind::Queued), report.accepted);
+            assert_eq!(log.count(EventKind::Replied), report.completed);
+            assert_eq!(log.count_shed(ShedTag::QueueFull), report.rejected);
+            assert_eq!(
+                log.count_shed(ShedTag::Infeasible),
+                report.rejected_infeasible
+            );
+            assert_eq!(log.count_shed(ShedTag::Expired), report.shed_deadline);
+            assert_eq!(log.count_shed(ShedTag::Closed), 0);
+            let batches = report.batches.len() as u64;
+            assert_eq!(log.count(EventKind::BatchFormed), batches);
+            assert_eq!(log.count(EventKind::ExecStart), batches);
+            assert_eq!(log.count(EventKind::ExecEnd), batches);
+            assert_eq!(
+                log.count_replied_quality(QualityTag::Degraded),
+                report.served_degraded,
+                "case {case}"
+            );
+            assert_eq!(
+                log.count_replied_quality(QualityTag::Full),
+                report.completed - report.served_degraded
+            );
+            assert_eq!(
+                log.request_latencies_ms().len() as u64,
+                report.completed
+            );
+
+            // per-seq lifecycle completeness: the admitted set is
+            // partitioned by replies and in-queue expiries
+            let admitted =
+                unique(seqs_of(&log, EventKind::Admitted, ShedTag::Unspecified),
+                    "Admitted");
+            let replied =
+                unique(seqs_of(&log, EventKind::Replied, ShedTag::Unspecified),
+                    "Replied");
+            let expired =
+                unique(seqs_of(&log, EventKind::Shed, ShedTag::Expired),
+                    "Shed(Expired)");
+            assert!(replied.is_disjoint(&expired), "case {case}");
+            let mut union = replied;
+            union.extend(&expired);
+            assert_eq!(union, admitted, "case {case}: a request leaked");
+            assert!(report.reconciles(), "case {case}");
+
+            // tracing is pure observation: the untraced run's report is
+            // bit-identical, batch for batch
+            let untraced = run(&cfg, &trace);
+            assert_eq!(untraced.accepted, report.accepted);
+            assert_eq!(untraced.rejected, report.rejected);
+            assert_eq!(
+                untraced.rejected_infeasible,
+                report.rejected_infeasible
+            );
+            assert_eq!(untraced.shed_deadline, report.shed_deadline);
+            assert_eq!(untraced.completed, report.completed);
+            assert_eq!(untraced.goodput, report.goodput);
+            assert_eq!(untraced.served_degraded, report.served_degraded);
+            assert_eq!(untraced.latencies_ms, report.latencies_ms);
+            let key = |b: &yoso::serve::sim::SimBatch| {
+                (b.replica, b.bucket, b.width, b.m_eff, b.formed_at,
+                 b.done_at, b.seqs.clone())
+            };
+            assert_eq!(
+                untraced.batches.iter().map(key).collect::<Vec<_>>(),
+                report.batches.iter().map(key).collect::<Vec<_>>(),
+                "case {case}: tracing changed a scheduling decision"
+            );
+        }
+    }
+}
+
+#[test]
+fn live_gateway_event_stream_reconciles_with_stats() {
+    let mut cfg = GatewayConfig::new(tiny_cfg(31));
+    cfg.replicas = 1;
+    cfg.queue_capacity = 4;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    });
+    cfg.buckets = BucketLayout::pow2(8, 32);
+    cfg.trace = true;
+    let gw = Gateway::spawn(cfg);
+    let sink = gw.trace_sink().expect("trace was enabled");
+
+    // a doomed slice first (queue is empty, so admission is certain):
+    // zero deadlines always expire before execution
+    let doomed: Vec<_> = (0..3)
+        .map(|_| {
+            gw.submitter()
+                .submit_with_deadline(
+                    vec![9i32; 12],
+                    vec![0i32; 12],
+                    Some(Duration::ZERO),
+                )
+                .expect("queue is empty at submit time")
+        })
+        .collect();
+    // then an un-paced burst against the capacity-4 queue: most of it
+    // sheds at admission (each shed must show up as a QueueFull event)
+    let mut rxs = Vec::new();
+    let mut client_rejected = 0u64;
+    for i in 0..40usize {
+        let len = 4 + (i * 5) % 24;
+        match gw.submit(vec![7i32; len], vec![0i32; len]) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => client_rejected += 1,
+        }
+    }
+    for rx in doomed {
+        assert!(
+            rx.recv().expect("shed is delivered").is_err(),
+            "a zero-deadline request reached execution"
+        );
+    }
+    let mut client_completed = 0u64;
+    for rx in rxs {
+        rx.recv().expect("one reply").expect("no deadline, must serve");
+        client_completed += 1;
+    }
+    let stats = gw.shutdown();
+    let log = sink.drain();
+    assert_eq!(log.dropped, 0);
+
+    assert_eq!(log.count(EventKind::Admitted), stats.accepted);
+    assert_eq!(log.count(EventKind::Queued), stats.accepted);
+    assert_eq!(log.count(EventKind::Replied), stats.completed);
+    assert_eq!(stats.completed, client_completed);
+    assert_eq!(log.count_shed(ShedTag::QueueFull), stats.rejected);
+    assert_eq!(stats.rejected, client_rejected);
+    assert_eq!(
+        log.count_shed(ShedTag::Infeasible),
+        stats.rejected_infeasible
+    );
+    assert_eq!(log.count_shed(ShedTag::Expired), stats.shed_deadline);
+    assert_eq!(stats.shed_deadline, 3, "exactly the doomed slice");
+    assert_eq!(log.count_shed(ShedTag::Closed), 0);
+    assert_eq!(log.count(EventKind::BatchFormed), stats.batches);
+    assert_eq!(log.count(EventKind::ExecStart), stats.batches);
+    assert_eq!(log.count(EventKind::ExecEnd), stats.batches);
+    assert_eq!(
+        log.count_replied_quality(QualityTag::Full),
+        stats.served_full
+    );
+    assert_eq!(
+        log.count_replied_quality(QualityTag::Degraded),
+        stats.served_degraded
+    );
+    // the default config runs the prefix cache, so every completion
+    // carries a definite hit/miss tag
+    assert_eq!(log.count_cache(CacheTag::Hit), stats.cache_hits);
+    assert_eq!(log.count_cache(CacheTag::Miss), stats.cache_misses);
+    assert_eq!(stats.cache_hits + stats.cache_misses, stats.completed);
+    assert_eq!(log.request_latencies_ms().len() as u64, stats.completed);
+
+    let admitted = unique(
+        seqs_of(&log, EventKind::Admitted, ShedTag::Unspecified),
+        "Admitted",
+    );
+    let replied = unique(
+        seqs_of(&log, EventKind::Replied, ShedTag::Unspecified),
+        "Replied",
+    );
+    let expired =
+        unique(seqs_of(&log, EventKind::Shed, ShedTag::Expired), "Expired");
+    assert!(replied.is_disjoint(&expired));
+    let mut union = replied;
+    union.extend(&expired);
+    assert_eq!(union, admitted, "an accepted request left no final event");
+}
+
+#[test]
+fn sim_and_live_per_request_streams_are_schema_identical() {
+    // the same 12 requests through both executors. Ample capacity and
+    // no deadlines keep every lifecycle on the happy path; the live
+    // cache is disabled so reply events carry `Unspecified` cache tags
+    // on both sides (the sim has no cache — the one live-only field).
+    // Batch composition and timing differ between a wall clock and a
+    // virtual one by design and are not part of the signature.
+    let lens: Vec<usize> = (0..12).map(|i| 4 + (i * 3) % 24).collect();
+
+    let sim_cfg = SimConfig {
+        replicas: 2,
+        queue_capacity: 64,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::pow2(8, 32),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 4,
+            max_wait: ms(1),
+        }),
+        service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
+        degrade: DegradeLadder::none(),
+        m_full: 8,
+        admission_edf: false,
+    };
+    let trace: Vec<Arrival> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| Arrival { at: ms(2 * i as u64), len, deadline: None })
+        .collect();
+    let sink = TraceSink::new(3, TraceSink::DEFAULT_LANE_CAPACITY, 0);
+    let report = run_traced(&sim_cfg, &trace, Some(&sink));
+    assert_eq!(report.completed, 12);
+    let sim_log = sink.drain();
+
+    let mut cfg = GatewayConfig::new(tiny_cfg(37));
+    cfg.replicas = 2;
+    cfg.queue_capacity = 64;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.sched = SchedPolicy::Conserve;
+    cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+        max_batch: 4,
+        max_wait: ms(1),
+    });
+    cfg.buckets = BucketLayout::pow2(8, 32);
+    cfg.prefix_cache_bytes = 0;
+    cfg.trace = true;
+    let gw = Gateway::spawn(cfg);
+    let sink = gw.trace_sink().expect("trace was enabled");
+    let rxs: Vec<_> = lens
+        .iter()
+        .map(|&len| {
+            gw.submit(vec![5i32; len], vec![0i32; len])
+                .expect("capacity is ample")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("one reply").expect("served");
+    }
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 12);
+    let live_log = sink.drain();
+
+    let sim_sigs = per_seq_signatures(&sim_log);
+    let live_sigs = per_seq_signatures(&live_log);
+    assert_eq!(sim_sigs.len(), 12);
+    assert_eq!(
+        sim_sigs, live_sigs,
+        "per-request event signatures diverged between executors"
+    );
+    // and the shared shape is the full happy-path lifecycle, served at
+    // the configured m (yoso_8 -> 8 rounds), tagged best-effort at
+    // admission and full at reply
+    for (seq, sig) in &sim_sigs {
+        let n = lens[*seq as usize] as u32;
+        let expect: Vec<Sig> = vec![
+            (
+                EventKind::Admitted,
+                QualityTag::BestEffort,
+                CacheTag::Unspecified,
+                ShedTag::Unspecified,
+                0,
+                n,
+            ),
+            (
+                EventKind::Queued,
+                QualityTag::BestEffort,
+                CacheTag::Unspecified,
+                ShedTag::Unspecified,
+                0,
+                n,
+            ),
+            (
+                EventKind::Replied,
+                QualityTag::Full,
+                CacheTag::Unspecified,
+                ShedTag::Unspecified,
+                8,
+                0,
+            ),
+        ];
+        assert_eq!(sig, &expect, "seq {seq}");
+    }
+}
