@@ -35,6 +35,12 @@
 //!   serve *fewer* users than shedding them. Rows land in
 //!   results/fig9_overload_ab.csv with the per-quality counters
 //!   (`served_full`/`served_degraded`) from [`GatewayStats`];
+//! * **supervision gate** — the same fault-free closed loop runs with
+//!   replica supervision on (the default: per-request panic isolation +
+//!   the restart trampoline) and off (the PR-8 baseline), best-of-3
+//!   mean each; the supervised arm must stay within the same 5% margin
+//!   — fault tolerance is not allowed to tax the fault-free fast path.
+//!   Rows land in results/fig9_robustness_ab.csv;
 //! * **flight-recorder gate** — the same closed loop runs with tracing
 //!   off and on (`obs::set_trace_enabled`, best-of-3 mean each);
 //!   traced mean latency must stay within the same 5% margin. The
@@ -99,6 +105,7 @@ fn spawn_gateway(
     bucketing: bool,
     sched: SchedPolicy,
     max_wait_ms: u64,
+    supervised: bool,
     encoder: &EncoderConfig,
 ) -> Gateway {
     let mut cfg = GatewayConfig::new(CpuServeConfig {
@@ -122,6 +129,7 @@ fn spawn_gateway(
     cfg.buckets = BucketLayout::pow2(8, encoder.max_len);
     cfg.sched = sched;
     cfg.bucketing = bucketing;
+    cfg.supervised = supervised;
     Gateway::spawn(cfg)
 }
 
@@ -171,7 +179,7 @@ fn open_loop(
     reqs: &[Req],
     rps: f64,
 ) -> RunResult {
-    let gw = spawn_gateway(replicas, bucketing, sched, 1, encoder);
+    let gw = spawn_gateway(replicas, bucketing, sched, 1, true, encoder);
     let gap = Duration::from_secs_f64(1.0 / rps);
     let start = Instant::now();
     let mut rxs = Vec::with_capacity(reqs.len());
@@ -203,7 +211,28 @@ fn closed_loop(
     reqs: &[Req],
     workers: usize,
 ) -> RunResult {
-    let gw = spawn_gateway(replicas, bucketing, sched, max_wait_ms, encoder);
+    closed_loop_supervised(
+        replicas, bucketing, sched, max_wait_ms, true, encoder, reqs, workers,
+    )
+}
+
+/// [`closed_loop`] with the replica supervision knob exposed — the
+/// fault-free robustness A/B compares `supervised` on (the default)
+/// against the pre-supervision baseline on identical work.
+#[allow(clippy::too_many_arguments)]
+fn closed_loop_supervised(
+    replicas: usize,
+    bucketing: bool,
+    sched: SchedPolicy,
+    max_wait_ms: u64,
+    supervised: bool,
+    encoder: &EncoderConfig,
+    reqs: &[Req],
+    workers: usize,
+) -> RunResult {
+    let gw = spawn_gateway(
+        replicas, bucketing, sched, max_wait_ms, supervised, encoder,
+    );
     let start = Instant::now();
     let mut joins = Vec::new();
     for w in 0..workers {
@@ -550,6 +579,51 @@ fn main() {
         failed = failed || smoke();
     }
 
+    // supervision overhead gate: identical fault-free closed loops,
+    // supervised (catch_unwind per request + the restart trampoline +
+    // recovering lock helpers) vs the pre-supervision baseline.
+    // Best-of-3 mean per arm, standard 5% noisy-runner margin.
+    let robust_reqs = make_requests(smoke_or(40, 160), 4, 20, 29);
+    let robust_arm = |supervised: bool| -> f64 {
+        let mut means: Vec<f64> = (0..3)
+            .map(|_| {
+                closed_loop_supervised(
+                    1,
+                    true,
+                    SchedPolicy::Conserve,
+                    1,
+                    supervised,
+                    &encoder,
+                    &robust_reqs,
+                    4,
+                )
+                .mean
+            })
+            .collect();
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        means[0]
+    };
+    let unsup_mean = robust_arm(false);
+    let sup_mean = robust_arm(true);
+    let mut rob =
+        std::fs::File::create("results/fig9_robustness_ab.csv").unwrap();
+    writeln!(rob, "supervised,mean_ms").unwrap();
+    writeln!(rob, "off,{unsup_mean:.3}").unwrap();
+    writeln!(rob, "on,{sup_mean:.3}").unwrap();
+    println!(
+        "\nsupervision gate: mean ms supervised {sup_mean:.3} vs \
+         unsupervised {unsup_mean:.3} ({:.2}x)",
+        sup_mean / unsup_mean.max(1e-9)
+    );
+    println!("-> results/fig9_robustness_ab.csv");
+    if sup_mean > unsup_mean * 1.05 {
+        println!(
+            "WARNING: replica supervision cost more than 5% mean latency \
+             on the fault-free closed loop"
+        );
+        failed = failed || smoke();
+    }
+
     // flight-recorder overhead gate: the same single-replica closed
     // loop, tracing off vs on (the process gate also flips every
     // gateway spawned inside the arm — `GatewayConfig::new` defaults
@@ -594,7 +668,7 @@ fn main() {
 
     // one more traced run feeds the Chrome timeline artifact — this one
     // keeps its gateway in scope so the sink survives shutdown
-    let gw = spawn_gateway(1, true, SchedPolicy::Conserve, 1, &encoder);
+    let gw = spawn_gateway(1, true, SchedPolicy::Conserve, 1, true, &encoder);
     let sub = gw.submitter();
     let mut rxs = Vec::with_capacity(trace_reqs.len());
     for (ids, segs) in &trace_reqs {

@@ -138,10 +138,17 @@ pub enum EventKind {
     Replied,
     /// The request was shed; see [`Event::shed`] for the reason.
     Shed,
+    /// The request was pulled back out of a dying replica's batch and
+    /// re-inserted into its bucket queue (retry counter bumped).
+    Requeued,
+    /// A replica worker's serve loop panicked; the supervisor caught it.
+    ReplicaDied,
+    /// The supervisor restarted a dead replica worker's serve loop.
+    ReplicaRestarted,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 7] = [
+    pub const ALL: [EventKind; 10] = [
         EventKind::Admitted,
         EventKind::Queued,
         EventKind::BatchFormed,
@@ -149,6 +156,9 @@ impl EventKind {
         EventKind::ExecEnd,
         EventKind::Replied,
         EventKind::Shed,
+        EventKind::Requeued,
+        EventKind::ReplicaDied,
+        EventKind::ReplicaRestarted,
     ];
 
     pub fn label(self) -> &'static str {
@@ -160,6 +170,9 @@ impl EventKind {
             EventKind::ExecEnd => "exec_end",
             EventKind::Replied => "replied",
             EventKind::Shed => "shed",
+            EventKind::Requeued => "requeued",
+            EventKind::ReplicaDied => "replica_died",
+            EventKind::ReplicaRestarted => "replica_restarted",
         }
     }
 }
@@ -218,6 +231,9 @@ pub enum ShedTag {
     Expired,
     /// Gateway shut down with the request in flight.
     Closed,
+    /// Admitted but failed terminally: the request's own execution
+    /// panicked, or repeated replica crashes exhausted its retry budget.
+    Internal,
     /// Not applicable (non-shed events).
     Unspecified,
 }
@@ -229,6 +245,7 @@ impl ShedTag {
             ShedTag::Infeasible => "deadline_infeasible",
             ShedTag::Expired => "deadline_expired",
             ShedTag::Closed => "closed",
+            ShedTag::Internal => "internal_error",
             ShedTag::Unspecified => "unspecified",
         }
     }
@@ -330,6 +347,9 @@ impl Event {
             EventKind::ExecEnd => 4,
             EventKind::Replied => 5,
             EventKind::Shed => 6,
+            EventKind::Requeued => 7,
+            EventKind::ReplicaDied => 8,
+            EventKind::ReplicaRestarted => 9,
         }
     }
 }
@@ -417,10 +437,17 @@ impl TraceSink {
     }
 
     /// Record `e` on `lane` (clamped into range). Constant-time, never
-    /// allocates, never blocks on any other lane.
+    /// allocates, never blocks on any other lane. Lane locks recover
+    /// from poisoning: a replica that panics mid-emit leaves a ring in
+    /// a consistent state (`RingBuf::push` has no partial step worth
+    /// losing the whole trace over), so tracing keeps working while the
+    /// supervisor restarts the worker.
     pub fn emit(&self, lane: usize, e: Event) {
         let lane = lane.min(self.lanes.len() - 1);
-        self.lanes[lane].lock().unwrap().push(e);
+        self.lanes[lane]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(e);
     }
 
     /// Merge every lane into one stream ordered by `(at, seq, kind)`
@@ -429,7 +456,7 @@ impl TraceSink {
         let mut events = Vec::new();
         let mut dropped = 0;
         for lane in &self.lanes {
-            let mut g = lane.lock().unwrap();
+            let mut g = lane.lock().unwrap_or_else(|p| p.into_inner());
             g.drain_into(&mut events);
             dropped += g.dropped;
         }
@@ -869,6 +896,37 @@ pub fn chrome_trace_json(log: &TraceLog, kernel: &KernelSnapshot) -> String {
                     push_event(&mut out, &b);
                 }
             }
+            EventKind::Requeued => {
+                // fault recovery: an entry pulled out of a dying
+                // replica's batch, marked on the worker's row
+                let mut b = String::new();
+                let _ = write!(
+                    b,
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"cat\":\"fault\",\"pid\":2,\"tid\":{},\"ts\":{:.3},\"name\":\"requeued\",\"args\":{{\"seq\":{},\"width\":{}}}}}",
+                    e.worker,
+                    tick_us(e.at),
+                    e.seq,
+                    e.width
+                );
+                push_event(&mut out, &b);
+            }
+            EventKind::ReplicaDied | EventKind::ReplicaRestarted => {
+                // a crashed ExecStart never gets its ExecEnd: drop the
+                // dangling open span so the next exec on the respawned
+                // worker doesn't inherit a bogus start instant
+                if e.kind == EventKind::ReplicaDied {
+                    exec_open.remove(&e.worker);
+                }
+                let mut b = String::new();
+                let _ = write!(
+                    b,
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"cat\":\"fault\",\"pid\":2,\"tid\":{},\"ts\":{:.3},\"name\":\"{}\"}}",
+                    e.worker,
+                    tick_us(e.at),
+                    e.kind.label()
+                );
+                push_event(&mut out, &b);
+            }
         }
     }
 
@@ -917,7 +975,13 @@ pub fn prometheus_text(log: &TraceLog, kernel: &KernelSnapshot) -> String {
         let _ = writeln!(out, "yoso_trace_events_total{{kind=\"{}\"}} {}", k.label(), log.count(k));
     }
     out.push_str("# TYPE yoso_trace_shed_total counter\n");
-    for t in [ShedTag::QueueFull, ShedTag::Infeasible, ShedTag::Expired, ShedTag::Closed] {
+    for t in [
+        ShedTag::QueueFull,
+        ShedTag::Infeasible,
+        ShedTag::Expired,
+        ShedTag::Closed,
+        ShedTag::Internal,
+    ] {
         let _ = writeln!(out, "yoso_trace_shed_total{{reason=\"{}\"}} {}", t.label(), log.count_shed(t));
     }
     out.push_str("# TYPE yoso_trace_cache_total counter\n");

@@ -22,6 +22,8 @@
 use crate::attention::YosoAttention;
 use crate::model::encoder::EncoderStream;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// One cached session, stored under its full-content prefix key.
 struct CacheEntry {
@@ -44,6 +46,54 @@ pub struct PrefixCache {
     pub hits: u64,
     /// requests that started a fresh stream
     pub misses: u64,
+    /// sessions discarded by a dropped [`SessionLease`] (a replica died
+    /// between checkout and publish); shared with the leases by handle
+    /// so the drop-guard never needs the cache lock
+    abandoned: Arc<AtomicU64>,
+}
+
+/// Drop-guard around a checked-out (or freshly started) session: the
+/// replica holds the stream through this lease while it appends and
+/// classifies, and `complete` hands the stream back for publishing. A
+/// lease dropped any other way — the owning request panicked, the
+/// replica died mid-encode — **discards** the session and bumps the
+/// cache's abandoned counter, so a half-appended stream is never
+/// published back as if it were a valid cached prefix. Checkout already
+/// removed the entry, so discarding loses a warm session (a later
+/// request re-encodes from scratch: correctness by the bit-identity
+/// contract, only wall-clock is lost), never corrupts one.
+pub struct SessionLease {
+    stream: Option<EncoderStream>,
+    abandoned: Arc<AtomicU64>,
+}
+
+impl SessionLease {
+    /// Wrap a session in a lease. `abandoned` is the owning cache's
+    /// counter handle ([`PrefixCache::abandoned_handle`]).
+    pub fn new(
+        stream: EncoderStream,
+        abandoned: Arc<AtomicU64>,
+    ) -> SessionLease {
+        SessionLease { stream: Some(stream), abandoned }
+    }
+
+    /// The leased session (present until `complete` consumes the lease).
+    pub fn stream(&mut self) -> &mut EncoderStream {
+        self.stream.as_mut().expect("lease already completed")
+    }
+
+    /// Defuse the guard and hand the session back for publishing.
+    pub fn complete(mut self) -> EncoderStream {
+        self.stream.take().expect("lease already completed")
+    }
+}
+
+impl Drop for SessionLease {
+    fn drop(&mut self) {
+        if self.stream.take().is_some() {
+            self.abandoned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Rolling FNV over the width prefix.
@@ -75,12 +125,44 @@ impl PrefixCache {
             tick: 0,
             hits: 0,
             misses: 0,
+            abandoned: Arc::new(AtomicU64::new(0)),
         }
     }
 
     /// The attention template for constructing fresh sessions on a miss.
     pub fn template(&self) -> YosoAttention {
         self.att.clone()
+    }
+
+    /// A clonable handle to the abandoned-lease counter, for wrapping
+    /// checked-out sessions in a [`SessionLease`] without re-taking the
+    /// cache lock at drop time.
+    pub fn abandoned_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.abandoned)
+    }
+
+    /// Sessions discarded by dropped leases (never published back).
+    pub fn abandoned(&self) -> u64 {
+        self.abandoned.load(Ordering::Relaxed)
+    }
+
+    /// Consistency sweep after mutex-poison recovery: recompute the
+    /// resident byte total from the entries themselves (the only
+    /// derived field a half-completed mutation could have skewed) and
+    /// re-run eviction so the budget invariant holds again. Counters
+    /// are monotone telemetry and are left as-is.
+    pub fn repair(&mut self) {
+        self.bytes = self.entries.values().map(|e| e.bytes).sum();
+        while self.bytes > self.budget && !self.entries.is_empty() {
+            let lru = *self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .unwrap()
+                .0;
+            let evicted = self.entries.remove(&lru).unwrap();
+            self.bytes -= evicted.bytes;
+        }
     }
 
     /// Resident sessions.
@@ -235,5 +317,130 @@ mod tests {
         tiny.publish(session(&enc, &att, &[1, 2]));
         assert!(tiny.is_empty());
         assert_eq!(tiny.bytes(), 0);
+    }
+
+    #[test]
+    fn dropped_lease_discards_session_and_counts_abandonment() {
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = Encoder::new(cfg, &params);
+        let att = YosoAttention::new(4, 2, false);
+        let mut cache = PrefixCache::new(att.clone(), usize::MAX);
+        cache.publish(session(&enc, &att, &[5, 6]));
+
+        // a completed lease hands the session back and counts nothing
+        let got = cache.checkout(&[5, 6], &[0, 0], 16).expect("hit");
+        let mut lease = SessionLease::new(got, cache.abandoned_handle());
+        assert_eq!(lease.stream().len(), 2);
+        cache.publish(lease.complete());
+        assert_eq!(cache.abandoned(), 0);
+        assert_eq!(cache.len(), 1, "completed session published back");
+
+        // a dropped lease discards the session and counts once
+        let got = cache.checkout(&[5, 6], &[0, 0], 16).expect("hit");
+        drop(SessionLease::new(got, cache.abandoned_handle()));
+        assert_eq!(cache.abandoned(), 1);
+        assert!(cache.is_empty(), "abandoned session never re-published");
+        assert!(
+            cache.checkout(&[5, 6], &[0, 0], 16).is_none(),
+            "next request re-encodes from scratch"
+        );
+    }
+
+    #[test]
+    fn repair_recomputes_bytes_and_reapplies_the_budget() {
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = Encoder::new(cfg, &params);
+        let att = YosoAttention::new(4, 2, false);
+        let one = session(&enc, &att, &[1, 2]).approx_bytes();
+        let mut cache = PrefixCache::new(att.clone(), one + one / 2);
+        cache.publish(session(&enc, &att, &[1, 2]));
+        // simulate the skew a half-completed mutation leaves behind
+        cache.bytes = 0;
+        cache.repair();
+        assert_eq!(cache.bytes(), one, "recomputed from residents");
+        assert_eq!(cache.len(), 1, "within budget: nothing evicted");
+
+        // skew the other way: repair must also re-run eviction
+        cache.publish(session(&enc, &att, &[3, 4]));
+        assert_eq!(cache.len(), 1, "budget holds one session");
+        cache.bytes = 0; // hide the overshoot...
+        cache.entries.insert(
+            999,
+            CacheEntry {
+                stream: session(&enc, &att, &[7, 8]),
+                bytes: one,
+                last_used: 0, // ...oldest, so repair evicts it
+            },
+        );
+        cache.repair();
+        assert_eq!(cache.len(), 1, "repair re-applied LRU eviction");
+        assert!(cache.bytes() <= one + one / 2);
+        assert!(
+            cache.checkout(&[3, 4], &[0, 0], 16).is_some(),
+            "the newest session survived the sweep"
+        );
+    }
+
+    /// Stress the checkout/evict race: replicas checking sessions out
+    /// while publishes force LRU eviction. Every hit must verify
+    /// against the stream's own content (no wrong-session hit even
+    /// under key churn), and the byte ledger must balance exactly —
+    /// no double-freed budget bytes.
+    #[test]
+    fn checkout_evict_race_never_mixes_sessions_or_bytes() {
+        use std::sync::Mutex;
+
+        let cfg = EncoderConfig::base(64, 16, 3);
+        let params = ParamSet::init_for(&encoder_abi_spec(&cfg), 0);
+        let enc = std::sync::Arc::new(Encoder::new(cfg, &params));
+        let att = YosoAttention::new(4, 2, false);
+        let one = session(&enc, &att, &[0, 0]).approx_bytes();
+        // room for ~2 sessions while 4 threads publish: constant churn
+        let cache =
+            std::sync::Arc::new(Mutex::new(PrefixCache::new(att, one * 5 / 2)));
+
+        std::thread::scope(|s| {
+            for t in 0..4i32 {
+                let cache = std::sync::Arc::clone(&cache);
+                let enc = std::sync::Arc::clone(&enc);
+                s.spawn(move || {
+                    for i in 0..12i32 {
+                        let key = 10 * ((i + t) % 3); // shared across threads
+                        let ids = [key, key + 1];
+                        let segs = [0, 0];
+                        let got =
+                            cache.lock().unwrap().checkout(&ids, &segs, 16);
+                        let stream = match got {
+                            // a hit must be *our* session, verified by
+                            // content, no matter what eviction did
+                            Some(st) => {
+                                assert_eq!(st.ids(), &ids);
+                                assert_eq!(st.segs(), &segs);
+                                assert_eq!(st.width(), 16);
+                                st
+                            }
+                            None => session(&enc, &att_of(&cache), &ids),
+                        };
+                        cache.lock().unwrap().publish(stream);
+                    }
+                });
+            }
+        });
+
+        let c = cache.lock().unwrap();
+        // the ledger balances: resident bytes are exactly the sum over
+        // surviving entries, and the budget was never double-freed below
+        let expect: usize = c.entries.values().map(|e| e.bytes).sum();
+        assert_eq!(c.bytes(), expect, "byte ledger matches residents");
+        assert!(c.bytes() <= one * 5 / 2, "budget holds after the storm");
+        assert!(!c.is_empty(), "churn ends with live residents");
+    }
+
+    fn att_of(
+        cache: &std::sync::Mutex<PrefixCache>,
+    ) -> YosoAttention {
+        cache.lock().unwrap().template()
     }
 }

@@ -1,0 +1,162 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a small, seed-derived script of failures keyed by
+//! request sequence number. The same plan is honored by both executors:
+//! the live gateway's replica loop (panics, stalls, and abandoned cache
+//! leases really happen, and supervision really recovers) and the
+//! virtual-clock `serve::sim` (the identical accounting is proven with
+//! exact assertions and zero wall-clock sleeps). Keying on the admission
+//! `seq` — not on wall time or replica identity — is what makes a chaos
+//! run reproducible: seqs are assigned deterministically at admission,
+//! so a `(trace, plan)` pair names the same failure schedule on every
+//! run, thread count, and kernel variant.
+//!
+//! The plan is carried by `GatewayConfig::fault` / the `run_faulted`
+//! sim entry points. Production configs leave it empty
+//! ([`FaultPlan::none`]); the empty plan is one `is_empty` branch per
+//! batch on the hot path.
+
+use crate::util::Rng;
+
+/// One injected failure, keyed by request sequence number.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The request's own forward panics (a poisoned request): per-
+    /// request isolation catches it and the request fails terminally
+    /// with `Shed::InternalError`; batch-mates are untouched.
+    PanicOnSeq(u64),
+    /// Any replica holding this seq in a formed batch dies (a crashy
+    /// replica, not a poisoned request): the supervisor respawns the
+    /// worker, the batch requeues under the retry budget, and the seq
+    /// fails terminally only once its budget is exhausted.
+    KillReplicaOnSeq(u64),
+    /// The replica serving this seq stalls for `ns` nanoseconds before
+    /// executing the batch (a slow replica, not a dead one).
+    StallOnSeq { seq: u64, ns: u64 },
+    /// The request panics after checking its session out of the prefix
+    /// cache: the lease drop-guard must discard the session (never
+    /// publish it back) and the request fails terminally. Live gateway
+    /// only — the sim has no cache.
+    AbandonLeaseOnSeq(u64),
+}
+
+/// A deterministic fault-injection script (see the module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<FaultKind>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, and the executors' fault hooks reduce
+    /// to one branch per batch.
+    pub fn none() -> FaultPlan {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    /// A plan built from an explicit fault list (tests that need exact
+    /// schedules).
+    pub fn from_faults(faults: Vec<FaultKind>) -> FaultPlan {
+        FaultPlan { faults }
+    }
+
+    /// A randomized-but-reproducible plan over seqs `0..max_seq`: each
+    /// seq independently draws at most one fault (roughly one seq in
+    /// eight is faulted, split across the four kinds). Identical
+    /// `(seed, max_seq)` always yields an identical plan.
+    pub fn seeded(seed: u64, max_seq: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_7E57_0000_0001);
+        let mut faults = Vec::new();
+        for seq in 0..max_seq {
+            if !rng.bernoulli(0.125) {
+                continue;
+            }
+            faults.push(match rng.below(4) {
+                0 => FaultKind::PanicOnSeq(seq),
+                1 => FaultKind::KillReplicaOnSeq(seq),
+                2 => FaultKind::StallOnSeq {
+                    seq,
+                    ns: 1_000 * (1 + rng.below(2_000) as u64),
+                },
+                _ => FaultKind::AbandonLeaseOnSeq(seq),
+            });
+        }
+        FaultPlan { faults }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[FaultKind] {
+        &self.faults
+    }
+
+    /// Does `seq`'s own execution panic?
+    pub fn panic_for(&self, seq: u64) -> bool {
+        self.faults.iter().any(|f| matches!(f, FaultKind::PanicOnSeq(s) if *s == seq))
+    }
+
+    /// Does a replica holding `seq` die before executing its batch?
+    pub fn kill_for(&self, seq: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultKind::KillReplicaOnSeq(s) if *s == seq))
+    }
+
+    /// Injected stall before executing `seq`, if any.
+    pub fn stall_ns(&self, seq: u64) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            FaultKind::StallOnSeq { seq: s, ns } if *s == seq => Some(*ns),
+            _ => None,
+        })
+    }
+
+    /// Does `seq` abandon its prefix-cache lease mid-encode?
+    pub fn abandon_for(&self, seq: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultKind::AbandonLeaseOnSeq(s) if *s == seq))
+    }
+}
+
+/// The `YOSO_FAULT_SEED` environment knob: an extra seed the chaos
+/// tests fold into every generated fault plan, so CI can sweep fault
+/// schedules the same way it sweeps threads and kernels. Unset or
+/// unparsable means 0 (the default schedule).
+pub fn env_seed() -> u64 {
+    std::env::var("YOSO_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_seed_sensitive() {
+        let a = FaultPlan::seeded(7, 256);
+        let b = FaultPlan::seeded(7, 256);
+        assert_eq!(a, b, "same (seed, max_seq) -> same plan");
+        assert!(!a.is_empty(), "1-in-8 over 256 seqs fires w.h.p.");
+        let c = FaultPlan::seeded(8, 256);
+        assert_ne!(a, c, "different seed -> different schedule");
+    }
+
+    #[test]
+    fn queries_match_the_fault_list() {
+        let plan = FaultPlan::from_faults(vec![
+            FaultKind::PanicOnSeq(3),
+            FaultKind::KillReplicaOnSeq(5),
+            FaultKind::StallOnSeq { seq: 7, ns: 1234 },
+            FaultKind::AbandonLeaseOnSeq(9),
+        ]);
+        assert!(plan.panic_for(3) && !plan.panic_for(5));
+        assert!(plan.kill_for(5) && !plan.kill_for(3));
+        assert_eq!(plan.stall_ns(7), Some(1234));
+        assert_eq!(plan.stall_ns(3), None);
+        assert!(plan.abandon_for(9) && !plan.abandon_for(7));
+        assert!(FaultPlan::none().is_empty());
+    }
+}

@@ -129,13 +129,50 @@
 //! sampled at each dequeue); shutdown merges them into [`GatewayStats`],
 //! which renders p50/p95/p99 per bucket and per replica and can emit
 //! everything into a `metrics::Recorder` for the CSV/JSON reports.
+//!
+//! # Robustness: no admitted request is lost
+//!
+//! At fleet scale replica death is traffic, not an exception, so the
+//! gateway holds a terminal-outcome contract: **every admitted request
+//! reaches exactly one of replied / deadline-shed / failed**, never a
+//! silently dropped reply channel. Four layers enforce it:
+//!
+//! * **Panic isolation** — each per-request forward runs under
+//!   `catch_unwind`, so a poisoned request fails terminally
+//!   ([`Shed::InternalError`], counted in `failed_internal`) while its
+//!   batch-mates complete normally. The reply is sent exactly once, on
+//!   either side of the catch.
+//! * **Replica supervision** (`GatewayConfig::supervised`, default on)
+//!   — a worker thread whose replica loop dies outside the per-request
+//!   catch restarts in place: partial [`ReplicaStats`] survive (they
+//!   live outside the unwind), `ReplicaDied`/`ReplicaRestarted` trace
+//!   events fire, and the batch the dead replica held is **requeued**
+//!   in seq position (EDF ordering and deadline sheds stay correct)
+//!   under a bounded per-request `retry_budget` — a request that keeps
+//!   killing replicas fails terminally instead of crash-looping the
+//!   fleet.
+//! * **Poison-proof shared state** — every lock/condvar wait on the
+//!   shared state recovers from mutex poisoning and runs a consistency
+//!   sweep (`GwState::repair`) before proceeding; the prefix cache
+//!   recovers via [`PrefixCache::repair`], and a session checked out by
+//!   a dying replica is discarded by its [`SessionLease`] drop-guard,
+//!   never published back half-appended.
+//! * **Deterministic fault injection** (`GatewayConfig::fault`) — a
+//!   seeded [`FaultPlan`] injects request panics, replica kills,
+//!   stalls, and abandoned cache leases keyed by admission seq, in both
+//!   this live gateway and the virtual-clock `serve::sim`. The chaos
+//!   property suite (`tests/chaos_gateway.rs`) proves the terminal-
+//!   outcome partition *and* that every delivered reply is bit-identical
+//!   to the fault-free run.
 
 use super::batcher::BatchPolicy;
-use super::cache::PrefixCache;
+use super::cache::{PrefixCache, SessionLease};
 use super::clock::{Clock, SystemClock, Tick};
+use super::fault::FaultPlan;
 use super::sched::{
-    deadline_infeasible, update_ewma, BatchPolicyTable, BucketQueues,
-    DegradeLadder, DegradePlan, Entry, LadderState, SchedPolicy,
+    admission_cap, deadline_infeasible, update_ewma, BatchPolicyTable,
+    BucketQueues, DegradeLadder, DegradePlan, Entry, LadderState,
+    SchedPolicy,
 };
 use super::server::{
     build_attention, canonicalize, resolve_threads, serve_forward,
@@ -152,8 +189,9 @@ use crate::model::encoder::{
 };
 use crate::model::ParamSet;
 use crate::util::threadpool::ThreadPool;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Sequence-length buckets for batch grouping: sorted widths, a request
@@ -256,6 +294,16 @@ pub enum Shed {
     DeadlineExpired,
     /// The gateway has shut down.
     Closed,
+    /// Admitted, but failed terminally inside the gateway: the
+    /// request's own forward panicked (panic isolation caught it), or
+    /// repeated replica crashes exhausted its retry budget. Carries the
+    /// admission seq so operators can cross-reference the trace.
+    InternalError { seq: u64 },
+    /// The reply never arrived within the caller's wait budget
+    /// ([`await_reply`] / `submit_wait`): the bound that turns a lost
+    /// reply channel into a timely client-side error instead of a hang.
+    /// Carries the budget waited, in ms.
+    ReplyLost { waited_ms: u64 },
 }
 
 impl std::fmt::Display for Shed {
@@ -271,6 +319,12 @@ impl std::fmt::Display for Shed {
             ),
             Shed::DeadlineExpired => write!(f, "deadline expired in queue"),
             Shed::Closed => write!(f, "gateway shut down"),
+            Shed::InternalError { seq } => {
+                write!(f, "internal failure serving request seq {seq}")
+            }
+            Shed::ReplyLost { waited_ms } => {
+                write!(f, "no reply within {waited_ms} ms (reply lost)")
+            }
         }
     }
 }
@@ -289,6 +343,26 @@ pub enum ShedPolicy {
 
 /// What a request's reply channel delivers: logits, or the shed reason.
 pub type GatewayReply = Result<Response, Shed>;
+
+/// Deadline-bounded reply wait: the client-side half of the
+/// no-request-lost contract. Blocks at most `timeout` for the reply;
+/// a sender dropped without replying (or a reply that simply never
+/// comes) surfaces as [`Shed::ReplyLost`] instead of hanging the
+/// caller forever. A dropped sender returns immediately — `timeout`
+/// is the worst case, not the wait.
+pub fn await_reply(
+    rx: &Receiver<GatewayReply>,
+    timeout: Duration,
+) -> GatewayReply {
+    match rx.recv_timeout(timeout) {
+        Ok(reply) => reply,
+        Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => {
+            Err(Shed::ReplyLost {
+                waited_ms: timeout.as_millis().min(u64::MAX as u128) as u64,
+            })
+        }
+    }
+}
 
 /// Gateway configuration. `base.threads` is the worker-pool width of
 /// **each replica** (0 = every available core — set it explicitly when
@@ -336,6 +410,25 @@ pub struct GatewayConfig {
     /// the `YOSO_TRACE` env var (see [`obs::trace_enabled`]); the
     /// disabled path emits nothing and allocates nothing
     pub trace: bool,
+    /// fraction of `queue_capacity` reserved for `BestEffort` traffic
+    /// (clamped into [0, 1]; default 0.0 = no reservation): guaranteed
+    /// classes admit only into the unreserved remainder, so `Full`
+    /// traffic cannot crowd best-effort out entirely (see
+    /// `sched::admission_cap`)
+    pub best_effort_reserve: f64,
+    /// how many times one request may be pulled back out of a dying
+    /// replica's batch and requeued before it fails terminally with
+    /// [`Shed::InternalError`] (default 2: the request survives up to
+    /// two replica crashes and rides the third attempt or fails)
+    pub retry_budget: u32,
+    /// true (default): each replica worker supervises its loop —
+    /// a panic that escapes per-request isolation restarts the loop in
+    /// place instead of killing the thread. false is the pre-supervision
+    /// baseline, kept for the fig9 overhead A/B
+    pub supervised: bool,
+    /// deterministic fault-injection plan (empty in production configs
+    /// — [`FaultPlan::none`] — at one branch per batch on the hot path)
+    pub fault: FaultPlan,
 }
 
 impl GatewayConfig {
@@ -354,6 +447,10 @@ impl GatewayConfig {
             degrade: DegradeLadder::none(),
             admission_edf: false,
             trace: obs::trace_enabled(),
+            best_effort_reserve: 0.0,
+            retry_budget: 2,
+            supervised: true,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -401,6 +498,30 @@ struct GwState {
     /// formation (`DegradeLadder::plan_at`); admission-side reads use
     /// the read-only `peek_at`
     ladder_state: LadderState,
+    /// admitted requests that failed terminally
+    /// ([`Shed::InternalError`]): the request's own forward panicked,
+    /// or its retry budget ran out under replica crashes
+    failed_internal: u64,
+    /// requests pulled back out of a dying replica's batch and
+    /// re-inserted in seq position (one per requeue, so a request can
+    /// count up to `retry_budget` times)
+    requeued: u64,
+    /// supervised replica-loop restarts
+    replica_restarts: u64,
+}
+
+impl GwState {
+    /// Consistency sweep after mutex-poison recovery: a panic between
+    /// two related mutations can leave derived state skewed. The queue
+    /// entries themselves are the ground truth — recompute the deadline
+    /// index from them and re-establish `peak >= len`. The monotone
+    /// counters are left as-is: each is incremented only after its
+    /// action completed, so a poisoning panic can at worst under-count
+    /// by the action it interrupted, never corrupt.
+    fn repair(&mut self) {
+        self.queues.recount_deadlined();
+        self.peak_queue_depth = self.peak_queue_depth.max(self.queues.len());
+    }
 }
 
 /// Everything shared between submitters, replicas, and the handle.
@@ -434,9 +555,83 @@ struct GwShared {
     /// flight-recorder event sink; `None` when tracing is off — the
     /// disabled path is one branch per would-be event
     trace: Option<Arc<TraceSink>>,
+    /// queue-capacity fraction reserved for `BestEffort` (see
+    /// `GatewayConfig::best_effort_reserve`)
+    reserve: f64,
+    /// per-request requeue budget under replica crashes
+    retry_budget: u32,
+    /// replica loops restart in place after an escaped panic
+    supervised: bool,
+    /// deterministic fault-injection plan (empty in production)
+    fault: FaultPlan,
 }
 
 impl GwShared {
+    /// Lock the shared state, recovering from poison: a replica that
+    /// panicked while holding the lock must not cascade its death into
+    /// every submitter and peer via `lock().unwrap()`. On recovery the
+    /// consistency sweep (`GwState::repair`) re-validates derived state
+    /// before anyone acts on it.
+    fn lock_state(&self) -> MutexGuard<'_, GwState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.state.clear_poison();
+                let mut g = poisoned.into_inner();
+                g.repair();
+                g
+            }
+        }
+    }
+
+    /// `work_cv.wait` with the same poison recovery as [`lock_state`].
+    fn wait_work<'a>(
+        &self,
+        g: MutexGuard<'a, GwState>,
+    ) -> MutexGuard<'a, GwState> {
+        match self.work_cv.wait(g) {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.state.clear_poison();
+                let mut g = poisoned.into_inner();
+                g.repair();
+                g
+            }
+        }
+    }
+
+    /// `work_cv.wait_timeout` with poison recovery.
+    fn wait_work_timeout<'a>(
+        &self,
+        g: MutexGuard<'a, GwState>,
+        dur: Duration,
+    ) -> MutexGuard<'a, GwState> {
+        match self.work_cv.wait_timeout(g, dur) {
+            Ok((g, _)) => g,
+            Err(poisoned) => {
+                self.state.clear_poison();
+                let (mut g, _) = poisoned.into_inner();
+                g.repair();
+                g
+            }
+        }
+    }
+
+    /// `space_cv.wait` with poison recovery.
+    fn wait_space<'a>(
+        &self,
+        g: MutexGuard<'a, GwState>,
+    ) -> MutexGuard<'a, GwState> {
+        match self.space_cv.wait(g) {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.state.clear_poison();
+                let mut g = poisoned.into_inner();
+                g.repair();
+                g
+            }
+        }
+    }
     /// One ladder decision off the current queue state: the rung for
     /// the full-quality backlog estimate, restated at the degraded
     /// drain rate. Retry hints and admission EDF both read this plan,
@@ -458,6 +653,22 @@ impl GwShared {
     fn emit(&self, lane: usize, e: Event) {
         if let Some(sink) = &self.trace {
             sink.emit(lane, e);
+        }
+    }
+}
+
+/// Lock the prefix cache, recovering from poison via
+/// [`PrefixCache::repair`] (recompute the byte ledger from residents
+/// and re-apply eviction) — a replica dying mid-publish must not take
+/// the cache down with it.
+fn lock_cache(m: &Mutex<PrefixCache>) -> MutexGuard<'_, PrefixCache> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            let mut g = poisoned.into_inner();
+            g.repair();
+            g
         }
     }
 }
@@ -525,7 +736,16 @@ impl GatewaySubmitter {
         // latency would defeat the SLO stats this subsystem exists for
         let submitted = sh.clock.now();
         let abs_deadline = deadline.map(|d| submitted.saturating_add(d));
-        let mut st = sh.state.lock().unwrap();
+        // per-class admission cap: best-effort admits into the full
+        // capacity, guaranteed classes only into the unreserved
+        // remainder — the reservation keeps a slice of the queue that
+        // `Full` traffic can never crowd best-effort out of
+        let cap = admission_cap(
+            sh.capacity,
+            sh.reserve,
+            matches!(quality, Quality::BestEffort),
+        );
+        let mut st = sh.lock_state();
         loop {
             if st.closed {
                 sh.emit(
@@ -535,7 +755,7 @@ impl GatewaySubmitter {
                 );
                 return Err(Shed::Closed);
             }
-            if st.queues.len() < sh.capacity {
+            if st.queues.len() < cap {
                 break;
             }
             match sh.policy {
@@ -554,7 +774,7 @@ impl GatewaySubmitter {
                         retry_after_ms: sh.plan(&st).hint_ms(),
                     });
                 }
-                ShedPolicy::Block => st = sh.space_cv.wait(st).unwrap(),
+                ShedPolicy::Block => st = sh.wait_space(st),
             }
         }
         if sh.admission_edf {
@@ -585,6 +805,7 @@ impl GatewaySubmitter {
             seq,
             enqueued: submitted,
             deadline: abs_deadline,
+            retries: 0,
             payload: GwPayload { ids, segs, quality, reply },
         };
         st.queues.push(bucket, entry);
@@ -645,9 +866,10 @@ impl ReplicaStats {
 
 /// Aggregate gateway statistics, returned at shutdown.
 ///
-/// Reconciliation invariants (asserted by the overload integration
-/// test): `accepted == completed + shed_deadline`; `rejected` counts
-/// admission refusals, which were never accepted.
+/// Reconciliation invariants (asserted by the overload integration and
+/// chaos tests): `accepted == completed + shed_deadline +
+/// failed_internal`; `rejected` counts admission refusals, which were
+/// never accepted.
 #[derive(Clone, Debug)]
 pub struct GatewayStats {
     pub accepted: u64,
@@ -657,6 +879,18 @@ pub struct GatewayStats {
     /// disjoint from `rejected` (queue-full)
     pub rejected_infeasible: u64,
     pub shed_deadline: u64,
+    /// admitted requests that failed terminally
+    /// ([`Shed::InternalError`]): own-forward panic, or retry budget
+    /// exhausted under replica crashes
+    pub failed_internal: u64,
+    /// requeue actions (a request pulled back out of a dying replica's
+    /// batch; one request can count up to `retry_budget` times)
+    pub requeued: u64,
+    /// supervised replica-loop restarts
+    pub replica_restarts: u64,
+    /// prefix-cache sessions discarded by a dropped [`SessionLease`]
+    /// (abandoned mid-encode by a dying request, never published back)
+    pub cache_abandoned: u64,
     /// completions served at the full configured hash-round count
     pub served_full: u64,
     /// completions served at a reduced m' (ladder step-down or pinned
@@ -684,16 +918,18 @@ pub struct GatewayStats {
 impl GatewayStats {
     /// Fraction of offered requests that were shed (either side of
     /// admission — queue-full and infeasible-deadline rejections plus
-    /// in-queue deadline sheds). 0.0 — never NaN — when nothing was
-    /// offered.
+    /// in-queue deadline sheds and terminal internal failures). 0.0 —
+    /// never NaN — when nothing was offered.
     pub fn shed_rate(&self) -> f64 {
         let offered =
             self.accepted + self.rejected + self.rejected_infeasible;
         if offered == 0 {
             0.0
         } else {
-            (self.rejected + self.rejected_infeasible + self.shed_deadline)
-                as f64
+            (self.rejected
+                + self.rejected_infeasible
+                + self.shed_deadline
+                + self.failed_internal) as f64
                 / offered as f64
         }
     }
@@ -720,6 +956,10 @@ impl GatewayStats {
             ("gateway/rejected", self.rejected as f64),
             ("gateway/rejected_infeasible", self.rejected_infeasible as f64),
             ("gateway/shed_deadline", self.shed_deadline as f64),
+            ("gateway/failed_internal", self.failed_internal as f64),
+            ("gateway/requeued", self.requeued as f64),
+            ("gateway/replica_restarts", self.replica_restarts as f64),
+            ("gateway/cache_abandoned", self.cache_abandoned as f64),
             ("gateway/served_full", self.served_full as f64),
             ("gateway/served_degraded", self.served_degraded as f64),
             ("gateway/cache_hits", self.cache_hits as f64),
@@ -787,6 +1027,22 @@ impl std::fmt::Display for GatewayStats {
             self.latency.p99(),
             self.queue_wait.p99(),
         )?;
+        if self.failed_internal
+            + self.requeued
+            + self.replica_restarts
+            + self.cache_abandoned
+            > 0
+        {
+            writeln!(
+                f,
+                "  faults: {} failed internally | {} requeued | \
+                 {} replica restarts | {} cache leases abandoned",
+                self.failed_internal,
+                self.requeued,
+                self.replica_restarts,
+                self.cache_abandoned,
+            )?;
+        }
         if self.cache_hits + self.cache_misses > 0 {
             writeln!(
                 f,
@@ -910,6 +1166,9 @@ impl Gateway {
                 peak_queue_depth: 0,
                 svc_ewma_ms: None,
                 ladder_state: LadderState::default(),
+                failed_internal: 0,
+                requeued: 0,
+                replica_restarts: 0,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -927,6 +1186,10 @@ impl Gateway {
             m_full,
             admission_edf: cfg.admission_edf,
             trace,
+            reserve: cfg.best_effort_reserve,
+            retry_budget: cfg.retry_budget,
+            supervised: cfg.supervised,
+            fault: cfg.fault.clone(),
         });
         // one weight init shared by value semantics: every replica holds
         // its own Arc handle onto identical bytes
@@ -953,7 +1216,9 @@ impl Gateway {
                 let shared = Arc::clone(&shared);
                 let cfg = cfg.clone();
                 let params = Arc::clone(&params);
-                std::thread::spawn(move || replica_loop(id, shared, cfg, params))
+                std::thread::spawn(move || {
+                    replica_worker(id, shared, cfg, params)
+                })
             })
             .collect();
         Gateway { shared, workers, started }
@@ -974,7 +1239,7 @@ impl Gateway {
 
     /// Live queue-depth gauge (admitted, not yet dequeued).
     pub fn queue_depth(&self) -> usize {
-        self.shared.state.lock().unwrap().queues.len()
+        self.shared.lock_state().queues.len()
     }
 
     /// The flight-recorder event sink, when `GatewayConfig::trace` is
@@ -991,7 +1256,7 @@ impl Gateway {
     /// second call (e.g. `Drop` after `shutdown`) finds `workers` empty.
     fn close_and_join(&mut self) -> Vec<std::thread::Result<ReplicaStats>> {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.lock_state();
             st.closed = true;
         }
         self.shared.work_cv.notify_all();
@@ -1003,10 +1268,16 @@ impl Gateway {
     /// replicas, and merge their stats. Returns even while
     /// `GatewaySubmitter` clones are alive — the close is explicit.
     pub fn shutdown(mut self) -> GatewayStats {
+        // a replica thread that somehow died outside supervision (or
+        // with supervision disabled) must not take shutdown down with
+        // it: fold an empty stats record in its place — the no-request-
+        // lost accounting lives in GwState, not in the thread result
+        let n_buckets = self.shared.route.widths.len();
         let per_replica: Vec<ReplicaStats> = self
             .close_and_join()
             .into_iter()
-            .map(|r| r.expect("gateway replica thread panicked"))
+            .enumerate()
+            .map(|(id, r)| r.unwrap_or_else(|_| ReplicaStats::new(id, n_buckets)))
             .collect();
         let elapsed_secs = self
             .shared
@@ -1035,20 +1306,25 @@ impl Gateway {
                 acc.merge(h);
             }
         }
-        let (cache_hits, cache_misses) = match &self.shared.cache {
-            Some(c) => {
-                let c = c.lock().unwrap();
-                (c.hits, c.misses)
-            }
-            None => (0, 0),
-        };
-        let st = self.shared.state.lock().unwrap();
+        let (cache_hits, cache_misses, cache_abandoned) =
+            match &self.shared.cache {
+                Some(c) => {
+                    let c = lock_cache(c);
+                    (c.hits, c.misses, c.abandoned())
+                }
+                None => (0, 0, 0),
+            };
+        let st = self.shared.lock_state();
         GatewayStats {
             accepted: st.accepted,
             completed,
             rejected: st.rejected,
             rejected_infeasible: st.rejected_infeasible,
             shed_deadline: st.shed_deadline,
+            failed_internal: st.failed_internal,
+            requeued: st.requeued,
+            replica_restarts: st.replica_restarts,
+            cache_abandoned,
             served_full,
             served_degraded,
             cache_hits,
@@ -1113,7 +1389,7 @@ fn next_batch(
     replica: usize,
 ) -> Option<(usize, usize, Vec<GwEntry>)> {
     let widest = *shared.route.widths.last().expect("non-empty layout");
-    let mut st = shared.state.lock().unwrap();
+    let mut st = shared.lock_state();
     loop {
         // one timestamp pins the whole scheduling round (re-pinned only
         // after a park): every shed/fill/aging decision in a pass reads
@@ -1185,11 +1461,8 @@ fn next_batch(
                     shared.space_cv.notify_all();
                     freed = false;
                 }
-                let (guard, _) = shared
-                    .work_cv
-                    .wait_timeout(st, age_deadline.duration_since(now))
-                    .unwrap();
-                st = guard;
+                st = shared
+                    .wait_work_timeout(st, age_deadline.duration_since(now));
                 // woke from the park: a new decision pass begins on a
                 // freshly pinned instant
                 now = shared.clock.now();
@@ -1245,19 +1518,123 @@ fn next_batch(
         if st.closed {
             return None;
         }
-        st = shared.work_cv.wait(st).unwrap();
+        st = shared.wait_work(st);
     }
 }
 
-/// One replica: pull single-bucket batches, fan requests across the
-/// replica's own work-stealing pool (heads stay serial inside each
-/// request job — one parallelism grain per pool), record latencies.
-fn replica_loop(
+/// Replica worker thread body: owns this replica's [`ReplicaStats`]
+/// across restarts and supervises the serving loop. A panic that
+/// escapes per-request isolation (a real bug, or an injected replica
+/// kill) lands here instead of killing the thread: the stats survive
+/// (they live outside the unwind), `ReplicaDied`/`ReplicaRestarted`
+/// fire on this replica's trace lane, and the loop restarts in place
+/// with a fresh attention instance and thread pool — the old pool's
+/// sticky panic flag dies with the old loop. With
+/// `GatewayConfig::supervised` off (the fig9 overhead baseline), the
+/// loop runs exactly once, pre-supervision semantics.
+fn replica_worker(
     id: usize,
     shared: Arc<GwShared>,
     cfg: GatewayConfig,
     params: Arc<ParamSet>,
 ) -> ReplicaStats {
+    let mut stats = ReplicaStats::new(id, shared.route.widths.len());
+    if !shared.supervised {
+        replica_loop(id, &shared, &cfg, &params, &mut stats);
+        return stats;
+    }
+    loop {
+        // AssertUnwindSafe: on a caught panic the only state reused is
+        // `stats` (monotone counters and histograms — a torn batch
+        // under-counts, never corrupts) and the shared mutexes, which
+        // every locker recovers and repairs (`lock_state`/`lock_cache`)
+        let done = catch_unwind(AssertUnwindSafe(|| {
+            replica_loop(id, &shared, &cfg, &params, &mut stats)
+        }));
+        match done {
+            // closed and drained: the one non-panic way out
+            Ok(()) => return stats,
+            Err(_) => {
+                let now = shared.clock.now();
+                shared.lock_state().replica_restarts += 1;
+                shared.emit(
+                    id + 1,
+                    Event::new(EventKind::ReplicaDied, now, obs::NO_SEQ)
+                        .with_worker(id),
+                );
+                shared.emit(
+                    id + 1,
+                    Event::new(EventKind::ReplicaRestarted, now, obs::NO_SEQ)
+                        .with_worker(id),
+                );
+                // peers or submitters may have missed a wake-up while
+                // the dying replica held (and poisoned) the state lock
+                shared.work_cv.notify_all();
+                shared.space_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// The injected replica-kill path: under the state lock, return every
+/// batch member to its queue in seq position (original enqueue stamp
+/// and deadline intact, so EDF ordering and deadline sheds stay
+/// correct) — or, once a member's retry budget is spent, fail it
+/// terminally with [`Shed::InternalError`] so a request that keeps
+/// killing replicas cannot crash-loop the fleet forever. Then panic:
+/// supervision restarts the loop and re-dispatches the requeued work.
+fn die_with_batch(
+    shared: &GwShared,
+    replica: usize,
+    bucket: usize,
+    batch: Vec<GwEntry>,
+) -> ! {
+    let now = shared.clock.now();
+    {
+        let mut st = shared.lock_state();
+        for mut e in batch {
+            if e.retries >= shared.retry_budget {
+                st.failed_internal += 1;
+                shared.emit(
+                    0,
+                    Event::new(EventKind::Shed, now, e.seq)
+                        .with_worker(replica)
+                        .with_quality(quality_tag(e.payload.quality))
+                        .with_shed(ShedTag::Internal),
+                );
+                let seq = e.seq;
+                let _ =
+                    e.payload.reply.send(Err(Shed::InternalError { seq }));
+            } else {
+                e.retries += 1;
+                st.requeued += 1;
+                shared.emit(
+                    replica + 1,
+                    Event::new(EventKind::Requeued, now, e.seq)
+                        .with_worker(replica)
+                        .with_width(shared.route.widths[bucket]),
+                );
+                st.queues.requeue(bucket, e);
+            }
+        }
+        // hand the requeued work to a live peer before dying
+        shared.work_cv.notify_all();
+    }
+    panic!("injected fault: replica {replica} killed while holding a batch");
+}
+
+/// One replica: pull single-bucket batches, fan requests across the
+/// replica's own work-stealing pool (heads stay serial inside each
+/// request job — one parallelism grain per pool), record latencies.
+/// Returns when the gateway is closed and drained; panics escape to
+/// the supervising [`replica_worker`].
+fn replica_loop(
+    id: usize,
+    shared: &Arc<GwShared>,
+    cfg: &GatewayConfig,
+    params: &Arc<ParamSet>,
+    stats: &mut ReplicaStats,
+) {
     let attn = build_attention(&cfg.base);
     // streamable template for degraded execution on the non-cache path:
     // an `m_req`-round clone forwards bit-identically to the stream's
@@ -1267,12 +1644,34 @@ fn replica_loop(
         a
     });
     let pool = ThreadPool::new(resolve_threads(cfg.base.threads));
-    let mut stats = ReplicaStats::new(id, shared.route.widths.len());
+    // the lease drop-guards share the cache's abandonment counter by
+    // handle, so a dying request never needs the cache lock to be
+    // counted
+    let abandoned =
+        shared.cache.as_ref().map(|c| lock_cache(c).abandoned_handle());
     let max_len = cfg.base.encoder.max_len;
-    while let Some((bucket, m_eff, batch)) = next_batch(&shared, id) {
+    while let Some((bucket, m_eff, batch)) = next_batch(shared, id) {
+        if !shared.fault.is_empty() {
+            // injected stall: this batch executes late, not never —
+            // deadline sheds and aging must absorb it
+            let stall = batch
+                .iter()
+                .filter_map(|e| shared.fault.stall_ns(e.seq))
+                .max();
+            if let Some(ns) = stall {
+                std::thread::sleep(Duration::from_nanos(ns));
+            }
+            // injected replica kill: requeue the batch and die;
+            // supervision restarts this loop. The killing seq requeues
+            // like its mates, so it fails terminally once its retry
+            // budget is spent — the crash loop is bounded
+            if batch.iter().any(|e| shared.fault.kill_for(e.seq)) {
+                die_with_batch(shared, id, bucket, batch);
+            }
+        }
         let exec_start = shared.clock.now();
         {
-            let st = shared.state.lock().unwrap();
+            let st = shared.lock_state();
             stats.queue_depth.record(st.queues.len() as f64);
         }
         let n = batch.len();
@@ -1286,119 +1685,157 @@ fn replica_loop(
                 .with_n(n),
         );
         let m_full = shared.m_full;
-        let params = Arc::clone(&params);
+        let params = Arc::clone(params);
         let attn = Arc::clone(&attn);
         let template = degrade_template.clone();
         let clock = Arc::clone(&shared.clock);
-        let gw = Arc::clone(&shared);
+        let gw = Arc::clone(shared);
+        let abandoned = abandoned.clone();
         let ecfg = cfg.base.encoder.clone();
         let (seed, chunk) = (cfg.base.seed, cfg.base.chunk_policy);
         let bucketing = cfg.bucketing;
         let timings = pool.map(batch, move |e| {
-            let width = if bucketing {
-                bucket_len(e.payload.ids.len(), max_len)
-            } else {
-                max_len
-            };
-            // quality resolution: Full pins the configured m even in a
-            // stepped-down batch; Degraded pins its own m' regardless
-            // of load; BestEffort takes the batch's ladder decision
-            let m_req = match e.payload.quality {
-                Quality::Full => m_full,
-                Quality::Degraded(m) => m.clamp(1, m_full),
-                Quality::BestEffort => m_eff.clamp(1, m_full),
-            };
-            let degraded = m_req < m_full;
-            let enc = Encoder::new(ecfg.clone(), &params);
-            let (logits, cache_tag) = if let Some(cache) = &gw.cache {
-                // checkout/compute/publish: the cache lock is never
-                // held across the encode itself, so replicas stream
-                // concurrently and only serialize on the cheap probe
-                // and insert. Bit-identity of the streamed path to
-                // `serve_forward` makes hit vs miss vs batch
-                // unobservable in the logits.
-                let (hit, att) = {
-                    let mut c = cache.lock().unwrap();
-                    let hit =
-                        c.checkout(&e.payload.ids, &e.payload.segs, width);
-                    (hit, c.template())
-                };
-                let was_hit = hit.is_some();
-                let mut stream = hit.unwrap_or_else(|| {
-                    EncoderStream::new(&enc, &att, seed, width)
-                });
-                let done = stream.len();
-                if done < e.payload.ids.len() {
-                    stream.append(
-                        &enc,
-                        &e.payload.ids[done..],
-                        &e.payload.segs[done..],
-                    );
+            // destructure before the catch: the reply sender must
+            // survive a panic inside the forward, so the terminal
+            // outcome is sent exactly once — on whichever side of the
+            // catch we land. The pool's own sticky panic handler never
+            // sees an isolated request panic.
+            let Entry { seq, enqueued, payload, .. } = e;
+            let GwPayload { ids, segs, quality, reply } = payload;
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                if gw.fault.panic_for(seq) {
+                    panic!("injected fault: request seq {seq} poisoned");
                 }
-                // the session is absorbed (and published) at full m;
-                // only the readout narrows to the m'-prefix, so a
-                // degraded hit costs nothing on a later full-quality
-                // reuse of the same session
-                let logits = stream.classify_at(&enc, m_req);
-                cache.lock().unwrap().publish(stream);
-                let tag =
-                    if was_hit { CacheTag::Hit } else { CacheTag::Miss };
-                (logits, tag)
-            } else if degraded {
-                let att: Arc<dyn Attention> = Arc::new(YosoAttention {
-                    m: m_req,
-                    ..template.clone().expect("degraded implies streamable")
-                });
-                let logits = serve_forward(
-                    &enc,
-                    &att,
-                    chunk,
-                    seed,
-                    &e.payload.ids,
-                    &e.payload.segs,
-                    width,
-                );
-                (logits, CacheTag::Unspecified)
-            } else {
-                let logits = serve_forward(
-                    &enc,
-                    &attn,
-                    chunk,
-                    seed,
-                    &e.payload.ids,
-                    &e.payload.segs,
-                    width,
-                );
-                (logits, CacheTag::Unspecified)
-            };
-            let done = clock.now();
-            let queue_ms = exec_start.ms_since(e.enqueued);
-            let total_ms = done.ms_since(e.enqueued);
-            // the served-at quality: what the logits were actually
-            // computed with, not what was asked for — a BestEffort
-            // request served at full rounds reports Full
-            let quality = if degraded {
-                Quality::Degraded(m_req)
-            } else {
-                Quality::Full
-            };
-            gw.emit(
-                id + 1,
-                Event::new(EventKind::Replied, done, e.seq)
-                    .with_worker(id)
-                    .with_width(width)
-                    .with_quality(quality_tag(quality))
-                    .with_m_eff(m_req)
-                    .with_cache(cache_tag),
-            );
-            let _ = e.payload.reply.send(Ok(Response {
-                logits,
-                queue_ms,
-                total_ms,
-                m_served: m_req,
-                quality,
+                let width = if bucketing {
+                    bucket_len(ids.len(), max_len)
+                } else {
+                    max_len
+                };
+                // quality resolution: Full pins the configured m even
+                // in a stepped-down batch; Degraded pins its own m'
+                // regardless of load; BestEffort takes the batch's
+                // ladder decision
+                let m_req = match quality {
+                    Quality::Full => m_full,
+                    Quality::Degraded(m) => m.clamp(1, m_full),
+                    Quality::BestEffort => m_eff.clamp(1, m_full),
+                };
+                let degraded = m_req < m_full;
+                let enc = Encoder::new(ecfg.clone(), &params);
+                let (logits, cache_tag) = if let Some(cache) = &gw.cache {
+                    // checkout/compute/publish: the cache lock is never
+                    // held across the encode itself, so replicas stream
+                    // concurrently and only serialize on the cheap
+                    // probe and insert. Bit-identity of the streamed
+                    // path to `serve_forward` makes hit vs miss vs
+                    // batch unobservable in the logits.
+                    let (hit, att) = {
+                        let mut c = lock_cache(cache);
+                        let hit = c.checkout(&ids, &segs, width);
+                        (hit, c.template())
+                    };
+                    let was_hit = hit.is_some();
+                    let stream = hit.unwrap_or_else(|| {
+                        EncoderStream::new(&enc, &att, seed, width)
+                    });
+                    // lease guard from here: a panic below this line
+                    // discards the session instead of publishing a
+                    // half-appended stream back as a valid prefix
+                    let mut lease = SessionLease::new(
+                        stream,
+                        Arc::clone(
+                            abandoned.as_ref().expect("cache implies handle"),
+                        ),
+                    );
+                    if gw.fault.abandon_for(seq) {
+                        panic!(
+                            "injected fault: seq {seq} abandons its \
+                             cache lease"
+                        );
+                    }
+                    let done = lease.stream().len();
+                    if done < ids.len() {
+                        lease.stream().append(
+                            &enc,
+                            &ids[done..],
+                            &segs[done..],
+                        );
+                    }
+                    // the session is absorbed (and published) at full
+                    // m; only the readout narrows to the m'-prefix, so
+                    // a degraded hit costs nothing on a later
+                    // full-quality reuse of the same session
+                    let logits = lease.stream().classify_at(&enc, m_req);
+                    lock_cache(cache).publish(lease.complete());
+                    let tag =
+                        if was_hit { CacheTag::Hit } else { CacheTag::Miss };
+                    (logits, tag)
+                } else if degraded {
+                    let att: Arc<dyn Attention> = Arc::new(YosoAttention {
+                        m: m_req,
+                        ..template
+                            .clone()
+                            .expect("degraded implies streamable")
+                    });
+                    let logits = serve_forward(
+                        &enc, &att, chunk, seed, &ids, &segs, width,
+                    );
+                    (logits, CacheTag::Unspecified)
+                } else {
+                    let logits = serve_forward(
+                        &enc, &attn, chunk, seed, &ids, &segs, width,
+                    );
+                    (logits, CacheTag::Unspecified)
+                };
+                (logits, m_req, degraded, cache_tag, width)
             }));
-            (queue_ms, total_ms, degraded)
+            match outcome {
+                Ok((logits, m_req, degraded, cache_tag, width)) => {
+                    let done = clock.now();
+                    let queue_ms = exec_start.ms_since(enqueued);
+                    let total_ms = done.ms_since(enqueued);
+                    // the served-at quality: what the logits were
+                    // actually computed with, not what was asked for —
+                    // a BestEffort request served at full rounds
+                    // reports Full
+                    let quality = if degraded {
+                        Quality::Degraded(m_req)
+                    } else {
+                        Quality::Full
+                    };
+                    gw.emit(
+                        id + 1,
+                        Event::new(EventKind::Replied, done, seq)
+                            .with_worker(id)
+                            .with_width(width)
+                            .with_quality(quality_tag(quality))
+                            .with_m_eff(m_req)
+                            .with_cache(cache_tag),
+                    );
+                    let _ = reply.send(Ok(Response {
+                        logits,
+                        queue_ms,
+                        total_ms,
+                        m_served: m_req,
+                        quality,
+                    }));
+                    Ok((queue_ms, total_ms, degraded))
+                }
+                // panic isolation: this request fails terminally with
+                // its admission seq; its batch-mates complete normally
+                Err(_) => {
+                    let now = clock.now();
+                    gw.emit(
+                        0,
+                        Event::new(EventKind::Shed, now, seq)
+                            .with_worker(id)
+                            .with_quality(quality_tag(quality))
+                            .with_shed(ShedTag::Internal),
+                    );
+                    let _ = reply.send(Err(Shed::InternalError { seq }));
+                    Err(seq)
+                }
+            }
         });
         let exec_end = shared.clock.now();
         shared.emit(
@@ -1410,16 +1847,27 @@ fn replica_loop(
                 .with_n(n),
         );
         stats.batches += 1;
-        for (queue_ms, total_ms, degraded) in timings {
-            stats.requests += 1;
-            if degraded {
-                stats.served_degraded += 1;
-            } else {
-                stats.served_full += 1;
+        let mut failed = 0u64;
+        for t in timings {
+            match t {
+                Ok((queue_ms, total_ms, degraded)) => {
+                    stats.requests += 1;
+                    if degraded {
+                        stats.served_degraded += 1;
+                    } else {
+                        stats.served_full += 1;
+                    }
+                    stats.queue_wait.record(queue_ms);
+                    stats.latency.record(total_ms);
+                    stats.per_bucket[bucket].record(total_ms);
+                }
+                // the job already sent InternalError and emitted the
+                // shed event; only the aggregate counter is folded here
+                Err(_) => failed += 1,
             }
-            stats.queue_wait.record(queue_ms);
-            stats.latency.record(total_ms);
-            stats.per_bucket[bucket].record(total_ms);
+        }
+        if failed > 0 {
+            shared.lock_state().failed_internal += failed;
         }
         // feed the admission retry hint and the ladder. The EWMA keeps
         // one meaning — full-quality per-request ms — so a degraded
@@ -1431,10 +1879,9 @@ fn replica_loop(
         // overload.
         let per_req_ms = exec_end.ms_since(exec_start) / n.max(1) as f64;
         let sample = per_req_ms * m_full as f64 / m_eff.clamp(1, m_full) as f64;
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.lock_state();
         st.svc_ewma_ms = Some(update_ewma(st.svc_ewma_ms, sample));
     }
-    stats
 }
 
 #[cfg(test)]
@@ -1525,6 +1972,9 @@ mod tests {
                 peak_queue_depth: 0,
                 svc_ewma_ms: None,
                 ladder_state: LadderState::default(),
+                failed_internal: 0,
+                requeued: 0,
+                replica_restarts: 0,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -1545,6 +1995,10 @@ mod tests {
             m_full: 1,
             admission_edf: false,
             trace: None,
+            reserve: 0.0,
+            retry_budget: 2,
+            supervised: true,
+            fault: FaultPlan::none(),
         }
     }
 
@@ -1683,6 +2137,7 @@ mod tests {
             seq,
             enqueued: Tick::ZERO,
             deadline,
+            retries: 0,
             payload: GwPayload {
                 ids: vec![1],
                 segs: vec![0],
@@ -1704,6 +2159,69 @@ mod tests {
     }
 
     #[test]
+    fn best_effort_reserve_caps_full_admission() {
+        // capacity 8, 25% reserved for best-effort: guaranteed classes
+        // admit into 6 slots, best-effort into all 8
+        let mut sh = test_shared(FrozenClock);
+        sh.reserve = 0.25;
+        let sub = GatewaySubmitter { shared: Arc::new(sh) };
+        let full = |sub: &GatewaySubmitter| {
+            sub.submit_with(vec![1], vec![0], None, Quality::Full)
+        };
+        let be = |sub: &GatewaySubmitter| {
+            sub.submit_with(vec![1], vec![0], None, Quality::BestEffort)
+        };
+        for i in 0..6 {
+            full(&sub).unwrap_or_else(|s| {
+                panic!("Full submit {i} under the cap: {s}")
+            });
+        }
+        for _ in 0..2 {
+            assert!(
+                matches!(full(&sub), Err(Shed::QueueFull { .. })),
+                "Full traffic stops at the unreserved remainder"
+            );
+        }
+        // the reserved slice admits best-effort right up to capacity
+        be(&sub).expect("reserved slot 7");
+        be(&sub).expect("reserved slot 8");
+        assert!(
+            matches!(be(&sub), Err(Shed::QueueFull { .. })),
+            "capacity is still the hard bound for every class"
+        );
+        let st = sub.shared.lock_state();
+        assert_eq!(st.accepted, 8);
+        assert_eq!(st.rejected, 3);
+    }
+
+    #[test]
+    fn await_reply_bounds_the_wait_and_flags_a_dropped_sender() {
+        // dropped sender: immediate ReplyLost, no hang
+        let (tx, rx) = channel::<GatewayReply>();
+        drop(tx);
+        match await_reply(&rx, Duration::from_secs(60)) {
+            Err(Shed::ReplyLost { waited_ms }) => {
+                assert_eq!(waited_ms, 60_000, "reports the wait budget")
+            }
+            other => panic!("expected ReplyLost, got {other:?}"),
+        }
+        // live-but-silent sender: bounded by the timeout
+        let (tx, rx) = channel::<GatewayReply>();
+        let t0 = std::time::Instant::now();
+        assert!(matches!(
+            await_reply(&rx, Duration::from_millis(50)),
+            Err(Shed::ReplyLost { waited_ms: 50 })
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+        // a reply already in the channel passes straight through
+        tx.send(Err(Shed::DeadlineExpired)).unwrap();
+        assert!(matches!(
+            await_reply(&rx, Duration::from_millis(1)),
+            Err(Shed::DeadlineExpired)
+        ));
+    }
+
+    #[test]
     fn shed_rate_zero_offered_is_zero_not_nan() {
         // a gateway that served nothing (shutdown before any submit)
         // must report 0.0, not 0/0 = NaN, through every stats surface
@@ -1713,6 +2231,10 @@ mod tests {
             rejected: 0,
             rejected_infeasible: 0,
             shed_deadline: 0,
+            failed_internal: 0,
+            requeued: 0,
+            replica_restarts: 0,
+            cache_abandoned: 0,
             served_full: 0,
             served_degraded: 0,
             cache_hits: 0,

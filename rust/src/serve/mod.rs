@@ -103,6 +103,22 @@
 //! `Mat`, encoder activations, the logits vec) are still allocated per
 //! forward.
 //!
+//! # Robustness
+//!
+//! No admitted request is lost. A panic inside one request's forward is
+//! caught at the request boundary (the submitter gets a terminal
+//! [`gateway::Shed::InternalError`]; batch-mates are unaffected); a
+//! dead replica worker is detected by its supervisor, its in-flight
+//! batch requeued under a bounded per-request retry budget, and the
+//! worker respawned; poisoned shared state (queue mutex, prefix cache)
+//! is recovered with a consistency sweep instead of cascading the
+//! panic; and a prefix-cache session abandoned mid-encode is discarded
+//! via its [`cache::SessionLease`] drop-guard, never published
+//! corrupted. The whole contract is exercised deterministically by the
+//! seeded [`fault::FaultPlan`] injection harness (`YOSO_FAULT_SEED`),
+//! in both the live gateway and [`sim::run_faulted`]
+//! (`tests/chaos_gateway.rs`).
+//!
 //! # Shutdown
 //!
 //! `shutdown` closes admission explicitly and drains what was accepted:
@@ -112,6 +128,7 @@
 pub mod batcher;
 pub mod cache;
 pub mod clock;
+pub mod fault;
 pub mod gateway;
 pub mod sched;
 pub mod server;
@@ -120,9 +137,11 @@ pub mod sim;
 pub use batcher::{BatchPolicy, Batcher};
 pub use cache::PrefixCache;
 pub use clock::{Clock, SimClock, SystemClock, Tick};
+pub use fault::{FaultKind, FaultPlan};
 pub use gateway::{
-    BucketLayout, Gateway, GatewayConfig, GatewayReply, GatewayStats,
-    GatewaySubmitter, Quality, ReplicaStats, Shed, ShedPolicy,
+    await_reply, BucketLayout, Gateway, GatewayConfig, GatewayReply,
+    GatewayStats, GatewaySubmitter, Quality, ReplicaStats, Shed,
+    ShedPolicy,
 };
 pub use sched::{BatchPolicyTable, DegradeLadder, DegradePlan, LadderState, SchedPolicy};
 pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};

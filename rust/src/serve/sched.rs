@@ -485,6 +485,11 @@ pub struct Entry<T> {
     pub seq: u64,
     pub enqueued: Tick,
     pub deadline: Option<Tick>,
+    /// times this entry was pulled back out of a dying replica's batch
+    /// and requeued ([`BucketQueues::requeue`]); admission starts it at
+    /// 0 and the gateway fails the request terminally once it exceeds
+    /// the configured retry budget
+    pub retries: u32,
     pub payload: T,
 }
 
@@ -546,6 +551,43 @@ impl<T> BucketQueues<T> {
             self.deadlined += 1;
         }
         self.queues[bucket].push_back(entry);
+    }
+
+    /// Re-insert an entry that was already dequeued (pulled back out of
+    /// a dying replica's batch) **in seq position**, not at the back:
+    /// `push`'s per-queue seq-order invariant — each queue's front is
+    /// its oldest entry — is what `Fifo`'s oldest-head pick and the
+    /// deadline-free EDF fast path (`pop_front`) rely on, so a requeue
+    /// that appended would let younger arrivals overtake the victim.
+    /// The entry keeps its original `enqueued` stamp and deadline, so
+    /// EDF urgency and expiry sheds judge it exactly as before the
+    /// crash.
+    pub fn requeue(&mut self, bucket: usize, entry: Entry<T>) {
+        if entry.deadline.is_some() {
+            self.deadlined += 1;
+        }
+        let q = &mut self.queues[bucket];
+        let pos =
+            q.iter().position(|e| e.seq > entry.seq).unwrap_or(q.len());
+        q.insert(pos, entry);
+    }
+
+    /// Consistency sweep for poisoned-lock recovery: re-derive the
+    /// `deadlined` fast-path counter from the queues themselves (a
+    /// panic between a pop and its counter decrement would otherwise
+    /// leave it stale forever — an overcount only costs the O(1)
+    /// shortcut, an undercount would skip expiry sheds). Returns true
+    /// when the counter was stale.
+    pub fn recount_deadlined(&mut self) -> bool {
+        let actual = self
+            .queues
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|e| e.deadline.is_some())
+            .count();
+        let stale = actual != self.deadlined;
+        self.deadlined = actual;
+        stale
     }
 
     /// Remove every expired entry — anywhere in a queue, not only the
@@ -676,6 +718,27 @@ impl<T> BucketQueues<T> {
     }
 }
 
+/// Per-class admission capacity: the queue slots a request of the given
+/// class may fill. `reserve` is the fraction of total capacity held
+/// back for `BestEffort` traffic (rounded to whole slots, clamped into
+/// [0, 1]); best-effort requests see the full queue, while
+/// `Full`/`Degraded` requests stop `round(capacity x reserve)` slots
+/// early — so latency-insensitive traffic cannot be crowded out
+/// entirely by reserved-quality clients. `reserve == 0.0` (the default)
+/// is exactly the classless bounded queue.
+pub fn admission_cap(
+    capacity: usize,
+    reserve: f64,
+    best_effort: bool,
+) -> usize {
+    if best_effort {
+        return capacity;
+    }
+    let reserved =
+        (capacity as f64 * reserve.clamp(0.0, 1.0)).round() as usize;
+    capacity - reserved.min(capacity)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -686,8 +749,58 @@ mod tests {
             seq,
             enqueued: Tick::from_ms(seq),
             deadline: deadline_ms.map(Tick::from_ms),
+            retries: 0,
             payload: (),
         }
+    }
+
+    #[test]
+    fn requeue_restores_seq_position_and_deadline_count() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(1);
+        for seq in 0..4 {
+            qs.push(0, entry(seq, (seq == 2).then_some(100)));
+        }
+        // pull seq 1 (deadline-free) and seq 2 (deadlined) out the way
+        // a dying replica's batch would hold them, then requeue
+        let a = qs.pop_next(0, SchedPolicy::Fifo).unwrap();
+        let b = qs.pop_next(0, SchedPolicy::Fifo).unwrap();
+        let c = qs.pop_next(0, SchedPolicy::Fifo).unwrap();
+        assert_eq!((a.seq, b.seq, c.seq), (0, 1, 2));
+        qs.requeue(0, b);
+        qs.requeue(0, c);
+        // seq order restored: 1, 2, 3 — the requeued entries sit ahead
+        // of the younger arrival, not behind it
+        assert_eq!(qs.pop_next(0, SchedPolicy::Fifo).unwrap().seq, 1);
+        assert_eq!(qs.deadlined, 1, "requeue re-counted the deadline");
+        assert_eq!(qs.pop_next(0, SchedPolicy::Fifo).unwrap().seq, 2);
+        assert_eq!(qs.deadlined, 0);
+        assert_eq!(qs.pop_next(0, SchedPolicy::Fifo).unwrap().seq, 3);
+    }
+
+    #[test]
+    fn recount_deadlined_repairs_a_stale_counter() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(2);
+        qs.push(0, entry(0, Some(50)));
+        qs.push(1, entry(1, None));
+        assert!(!qs.recount_deadlined(), "consistent counter is a no-op");
+        qs.deadlined = 7; // a panic between pop and decrement
+        assert!(qs.recount_deadlined());
+        assert_eq!(qs.deadlined, 1);
+    }
+
+    #[test]
+    fn admission_cap_reserves_whole_slots_for_best_effort() {
+        // best-effort always sees the full queue
+        assert_eq!(admission_cap(8, 0.25, true), 8);
+        // reserved classes stop round(8 x 0.25) = 2 slots early
+        assert_eq!(admission_cap(8, 0.25, false), 6);
+        // zero reserve is the classless bounded queue
+        assert_eq!(admission_cap(8, 0.0, false), 8);
+        // clamped: a nonsense reserve never underflows
+        assert_eq!(admission_cap(8, 2.0, false), 0);
+        assert_eq!(admission_cap(8, -1.0, false), 8);
+        // rounding, not truncation: 10 x 0.25 = 2.5 -> 3 slots
+        assert_eq!(admission_cap(10, 0.25, false), 7);
     }
 
     #[test]

@@ -128,6 +128,26 @@ impl Submitter {
         }
         rx
     }
+
+    /// Submit one sequence and wait at most `timeout` for its response.
+    /// The deadline-bounded client path: a reply sender dropped by a
+    /// dying or shut-down server surfaces as a timely error — never an
+    /// unbounded hang. (A submit against a closed server errors
+    /// immediately; `timeout` is the worst case, not the wait.)
+    pub fn submit_wait(
+        &self,
+        input_ids: Vec<i32>,
+        segment_ids: Vec<i32>,
+        timeout: std::time::Duration,
+    ) -> Result<Response> {
+        let rx = self.submit(input_ids, segment_ids);
+        rx.recv_timeout(timeout).with_context(|| {
+            format!(
+                "no server response within {} ms (reply lost or timed out)",
+                timeout.as_millis()
+            )
+        })
+    }
 }
 
 /// Configuration for the artifact-free CPU fallback server.
@@ -222,6 +242,17 @@ impl ServerHandle {
     pub fn submit(&self, input_ids: Vec<i32>, segment_ids: Vec<i32>)
         -> Receiver<Response> {
         self.submitter().submit(input_ids, segment_ids)
+    }
+
+    /// Submit and wait at most `timeout` for the response (see
+    /// [`Submitter::submit_wait`]).
+    pub fn submit_wait(
+        &self,
+        input_ids: Vec<i32>,
+        segment_ids: Vec<i32>,
+        timeout: std::time::Duration,
+    ) -> Result<Response> {
+        self.submitter().submit_wait(input_ids, segment_ids, timeout)
     }
 
     /// Close the queue, drain what was admitted, and collect stats.

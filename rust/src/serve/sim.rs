@@ -56,10 +56,11 @@
 //! lock contention. Service time is the declared [`ServiceModel`].
 
 use super::clock::{Clock, SimClock, Tick};
-use super::gateway::BucketLayout;
+use super::fault::FaultPlan;
+use super::gateway::{BucketLayout, Quality};
 use super::sched::{
-    deadline_infeasible, update_ewma, BatchPolicyTable, BucketQueues,
-    DegradeLadder, Entry, LadderState, SchedPolicy,
+    admission_cap, deadline_infeasible, update_ewma, BatchPolicyTable,
+    BucketQueues, DegradeLadder, Entry, LadderState, SchedPolicy,
 };
 use crate::obs::{self, Event, EventKind, QualityTag, ShedTag, TraceSink};
 use std::time::Duration;
@@ -190,6 +191,19 @@ pub struct SimReport {
     /// `SchedPolicy::Conserve`; non-empty ticks under `Fifo` are the
     /// idle-replica-parked-on-a-foreign-bucket behavior this PR retires.
     pub conservation_violations: Vec<Tick>,
+    /// admitted requests that failed terminally under injected faults
+    /// (own panic, or retry budget exhausted by replica kills) — the
+    /// sim's `Shed::InternalError` ledger
+    pub failed_internal: u64,
+    /// requeue actions: a request pulled back out of a killed replica's
+    /// batch (one per requeue; a request can count several times)
+    pub requeued: u64,
+    /// injected replica deaths survived by supervision
+    pub replica_restarts: u64,
+    /// admissions of `BestEffort`-class arrivals ([`run_classed`])
+    pub accepted_best_effort: u64,
+    /// queue-full rejections of `BestEffort`-class arrivals
+    pub rejected_best_effort: u64,
 }
 
 impl SimReport {
@@ -209,9 +223,12 @@ impl SimReport {
         crate::util::stats::quantile_exact(&s, 0.99)
     }
 
-    /// The accounting identity every trace must satisfy.
+    /// The accounting identity every trace must satisfy: every admitted
+    /// request reaches exactly one terminal outcome — replied, shed on
+    /// deadline, or failed terminally under injected faults.
     pub fn reconciles(&self) -> bool {
-        self.accepted == self.completed + self.shed_deadline
+        self.accepted
+            == self.completed + self.shed_deadline + self.failed_internal
     }
 }
 
@@ -277,8 +294,17 @@ fn should_ship(
 }
 
 /// Ship a batch on `replica`: re-check member expiry (the live path's
-/// post-park re-check), then go busy for the modeled service time. All
-/// members expired -> back to idle (the live loop's "pick again").
+/// post-park re-check), apply any injected faults, then go busy for the
+/// modeled service time. All members expired -> back to idle (the live
+/// loop's "pick again").
+///
+/// Fault order mirrors the live replica loop: stall first (the batch
+/// runs late), then a replica kill (the batch never runs — every member
+/// is requeued, or fails terminally once its retry budget is spent),
+/// then per-request panics (the poisoned member fails terminally, its
+/// batch-mates execute). `AbandonLeaseOnSeq` is a no-op here: the sim
+/// models scheduling, not the prefix cache, and an abandoned lease only
+/// costs a warm session, never a scheduling outcome.
 #[allow(clippy::too_many_arguments)]
 fn dispatch(
     replica: usize,
@@ -289,6 +315,9 @@ fn dispatch(
     width: usize,
     m_eff: usize,
     m_full: usize,
+    queues: &mut BucketQueues<()>,
+    plan: &FaultPlan,
+    retry_budget: u32,
     report: &mut SimReport,
     sink: Option<&TraceSink>,
 ) -> Rep {
@@ -310,12 +339,83 @@ fn dispatch(
     if live.is_empty() {
         return Rep::Idle;
     }
-    let done = now.saturating_add(service.batch_duration_at(
-        width,
-        live.len(),
-        m_eff,
-        m_full,
-    ));
+    let mut stall = Duration::ZERO;
+    if !plan.is_empty() {
+        if let Some(ns) =
+            live.iter().filter_map(|e| plan.stall_ns(e.seq)).max()
+        {
+            stall = Duration::from_nanos(ns);
+        }
+        if live.iter().any(|e| plan.kill_for(e.seq)) {
+            // the replica dies holding this batch: requeue each member
+            // under the retry budget (the doomed ones fail terminally),
+            // then restart — a re-pick at this same tick retries the
+            // batch, so a sticky kill seq burns one retry per round
+            // until it (and any mates still aboard) runs out of budget
+            for mut e in live {
+                if e.retries >= retry_budget {
+                    report.failed_internal += 1;
+                    emit(
+                        sink,
+                        0,
+                        Event::new(EventKind::Shed, now, e.seq)
+                            .with_worker(replica)
+                            .with_shed(ShedTag::Internal),
+                    );
+                } else {
+                    e.retries += 1;
+                    report.requeued += 1;
+                    emit(
+                        sink,
+                        replica + 1,
+                        Event::new(EventKind::Requeued, now, e.seq)
+                            .with_worker(replica)
+                            .with_width(width),
+                    );
+                    queues.requeue(bucket, e);
+                }
+            }
+            report.replica_restarts += 1;
+            emit(
+                sink,
+                replica + 1,
+                Event::new(EventKind::ReplicaDied, now, obs::NO_SEQ)
+                    .with_worker(replica),
+            );
+            emit(
+                sink,
+                replica + 1,
+                Event::new(EventKind::ReplicaRestarted, now, obs::NO_SEQ)
+                    .with_worker(replica),
+            );
+            return Rep::Idle;
+        }
+        // per-request panic isolation: the poisoned member fails
+        // terminally, its batch-mates keep executing
+        let mut survivors = Vec::with_capacity(live.len());
+        for e in live {
+            if plan.panic_for(e.seq) {
+                report.failed_internal += 1;
+                emit(
+                    sink,
+                    0,
+                    Event::new(EventKind::Shed, now, e.seq)
+                        .with_worker(replica)
+                        .with_shed(ShedTag::Internal),
+                );
+            } else {
+                survivors.push(e);
+            }
+        }
+        live = survivors;
+        if live.is_empty() {
+            return Rep::Idle;
+        }
+    }
+    let done = now.saturating_add(
+        stall
+            + service.batch_duration_at(width, live.len(), m_eff, m_full),
+    );
     // the live gateway emits BatchFormed in next_batch and ExecStart at
     // the replica's next clock read; in the simulator the two instants
     // coincide by construction
@@ -355,6 +455,67 @@ pub fn run_traced(
     cfg: &SimConfig,
     trace: &[Arrival],
     sink: Option<&TraceSink>,
+) -> SimReport {
+    run_inner(cfg, trace, sink, &FaultPlan::none(), 0, &[], 0.0)
+}
+
+/// [`run`], with `plan`'s injected faults applied by the simulated
+/// replicas under a per-request `retry_budget` — the deterministic twin
+/// of the live gateway's supervised fault path. A fault-free plan makes
+/// this identical to [`run`].
+pub fn run_faulted(
+    cfg: &SimConfig,
+    trace: &[Arrival],
+    plan: &FaultPlan,
+    retry_budget: u32,
+) -> SimReport {
+    run_faulted_traced(cfg, trace, plan, retry_budget, None)
+}
+
+/// [`run_faulted`] with flight-recorder events mirrored into `sink`,
+/// including the fault-path kinds (`Requeued`, `ReplicaDied`,
+/// `ReplicaRestarted`, and `Shed`/`internal_error`).
+pub fn run_faulted_traced(
+    cfg: &SimConfig,
+    trace: &[Arrival],
+    plan: &FaultPlan,
+    retry_budget: u32,
+    sink: Option<&TraceSink>,
+) -> SimReport {
+    run_inner(cfg, trace, sink, plan, retry_budget, &[], 0.0)
+}
+
+/// [`run`], with per-arrival admission classes: `classes[i]` is the
+/// class of `trace[i]` (missing entries default to `BestEffort`), and
+/// `reserve` is the fraction of queue capacity held back from
+/// non-`BestEffort` admissions — the sim twin of
+/// `GatewayConfig::best_effort_reserve`. The per-class admit/reject
+/// tallies land in `accepted_best_effort` / `rejected_best_effort`.
+pub fn run_classed(
+    cfg: &SimConfig,
+    trace: &[Arrival],
+    classes: &[Quality],
+    reserve: f64,
+) -> SimReport {
+    run_inner(cfg, trace, None, &FaultPlan::none(), 0, classes, reserve)
+}
+
+fn quality_of(class: Quality) -> QualityTag {
+    match class {
+        Quality::Full => QualityTag::Full,
+        Quality::Degraded(_) => QualityTag::Degraded,
+        Quality::BestEffort => QualityTag::BestEffort,
+    }
+}
+
+fn run_inner(
+    cfg: &SimConfig,
+    trace: &[Arrival],
+    sink: Option<&TraceSink>,
+    plan: &FaultPlan,
+    retry_budget: u32,
+    classes: &[Quality],
+    reserve: f64,
 ) -> SimReport {
     let clock = SimClock::new();
     let widths = cfg.buckets.widths().to_vec();
@@ -460,14 +621,23 @@ pub fn run_traced(
             }
         }
 
-        // 2. admissions due now (bounded queue: at capacity -> reject)
+        // 2. admissions due now (bounded queue: at capacity -> reject;
+        // non-BestEffort classes see the reserve-shrunk cap, like
+        // `submit_with` under `best_effort_reserve`)
         while ai < arrivals.len() && arrivals[ai].0 <= now {
             let (at, idx) = arrivals[ai];
             ai += 1;
             let a = &trace[idx];
+            let class =
+                classes.get(idx).copied().unwrap_or(Quality::BestEffort);
+            let best_effort = matches!(class, Quality::BestEffort);
+            let cap = admission_cap(capacity, reserve, best_effort);
             let bucket = cfg.buckets.bucket_for(a.len);
-            if queues.len() >= capacity {
+            if queues.len() >= cap {
                 report.rejected += 1;
+                if best_effort {
+                    report.rejected_best_effort += 1;
+                }
                 emit(
                     sink,
                     0,
@@ -504,10 +674,14 @@ pub fn run_traced(
             let seq = next_seq;
             next_seq += 1;
             report.accepted += 1;
+            if best_effort {
+                report.accepted_best_effort += 1;
+            }
             let entry = Entry {
                 seq,
                 enqueued: at,
                 deadline: a.deadline.map(|d| at.saturating_add(d)),
+                retries: 0,
                 payload: (),
             };
             queues.push(bucket, entry);
@@ -515,7 +689,7 @@ pub fn run_traced(
             if sink.is_some() {
                 let base = Event::new(EventKind::Admitted, at, seq)
                     .with_width(widths[bucket])
-                    .with_quality(QualityTag::BestEffort)
+                    .with_quality(quality_of(class))
                     .with_n(a.len);
                 emit(sink, 0, base);
                 emit(sink, 0, Event { kind: EventKind::Queued, ..base });
@@ -593,6 +767,9 @@ pub fn run_traced(
                                 widths[b],
                                 m_eff,
                                 m_full,
+                                &mut queues,
+                                plan,
+                                retry_budget,
                                 &mut report,
                                 sink,
                             )
@@ -644,6 +821,9 @@ pub fn run_traced(
                                 widths[bucket],
                                 m_eff,
                                 m_full,
+                                &mut queues,
+                                plan,
+                                retry_budget,
                                 &mut report,
                                 sink,
                             );

@@ -1,0 +1,463 @@
+//! The fault-tolerance contract, end to end: **no admitted request is
+//! lost**. Under a deterministic [`FaultPlan`] — poisoned requests that
+//! panic mid-forward, replicas killed while holding a batch, injected
+//! stalls, abandoned prefix-cache leases — every admitted seq reaches
+//! exactly one terminal outcome (replied, shed on deadline, or a
+//! terminal `Shed::InternalError`), and every reply that *is* delivered
+//! is bit-identical to the fault-free run. The same plan drives both
+//! executors: the virtual-clock simulator (exact counter assertions,
+//! zero wall-clock sleeps) and the live supervised gateway (panics,
+//! restarts, and lease discards really happen).
+//!
+//! CI's scheduler-stress job sweeps this suite across `YOSO_KERNEL`,
+//! `YOSO_TEST_THREADS`, and fault schedules via `YOSO_FAULT_SEED`
+//! (folded into every generated plan by [`env_seed`]).
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::channel;
+use std::sync::Once;
+use std::time::{Duration, Instant};
+use yoso::attention::{ChunkPolicy, KernelVariant};
+use yoso::model::encoder::EncoderConfig;
+use yoso::obs::{EventKind, ShedTag, TraceLog, TraceSink};
+use yoso::serve::fault::env_seed;
+use yoso::serve::sim::{
+    run, run_faulted, run_faulted_traced, Arrival, ServiceModel, SimConfig,
+};
+use yoso::serve::{
+    await_reply, BatchPolicy, BatchPolicyTable, BucketLayout,
+    CpuServeConfig, DegradeLadder, FaultKind, FaultPlan, Gateway,
+    GatewayConfig, GatewayReply, SchedPolicy, ServerHandle, Shed,
+    ShedPolicy,
+};
+use yoso::testing::test_threads;
+use yoso::util::Rng;
+
+/// Injected faults panic on purpose; the default hook would spray every
+/// expected panic's message and backtrace into the test log. Suppress
+/// exactly those (the payloads this suite plants all contain
+/// "injected fault") and delegate everything else untouched.
+fn silence_injected_panics() {
+    static SILENCE: Once = Once::new();
+    SILENCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let injected = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    payload
+                        .downcast_ref::<String>()
+                        .map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+fn us(v: u64) -> Duration {
+    Duration::from_micros(v)
+}
+
+fn tiny_cfg(seed: u64) -> CpuServeConfig {
+    CpuServeConfig {
+        attention: "yoso_8".into(),
+        encoder: EncoderConfig {
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            vocab_size: 2005,
+            max_len: 32,
+            n_classes: 2,
+        },
+        threads: test_threads(2),
+        chunk_policy: ChunkPolicy::default(),
+        kernel: KernelVariant::from_env(),
+        seed,
+    }
+}
+
+fn seqs_of(log: &TraceLog, kind: EventKind, shed: ShedTag) -> Vec<u64> {
+    log.events
+        .iter()
+        .filter(|e| e.kind == kind && e.shed == shed)
+        .map(|e| e.seq)
+        .collect()
+}
+
+/// Asserts a seq list has no duplicates and returns it as a set.
+fn unique(seqs: Vec<u64>, what: &str) -> BTreeSet<u64> {
+    let n = seqs.len();
+    let set: BTreeSet<u64> = seqs.into_iter().collect();
+    assert_eq!(set.len(), n, "{what} carries a seq twice");
+    set
+}
+
+/// The headline chaos property, in the simulator: across randomized
+/// traces x seeded fault plans x both schedulers, the admitted set is
+/// exactly partitioned by replied / expired / failed-internal, every
+/// report counter equals its event count, and the whole run is
+/// deterministic (same `(trace, plan)` -> same report, bit for bit).
+#[test]
+fn sim_chaos_every_admitted_seq_reaches_exactly_one_terminal_outcome() {
+    let mut rng = Rng::new(0xC4A0 ^ env_seed());
+    for case in 0..20u64 {
+        let n = 15 + rng.below(50);
+        let trace: Vec<Arrival> = (0..n)
+            .map(|_| Arrival {
+                at: us(rng.below(100_000) as u64),
+                len: 1 + rng.below(60),
+                deadline: (rng.below(4) == 0)
+                    .then(|| ms(1 + rng.below(30) as u64)),
+            })
+            .collect();
+        let plan =
+            FaultPlan::seeded(env_seed() ^ (0xFA0 + case), n as u64);
+        let retry_budget = rng.below(3) as u32;
+        let replicas = 1 + rng.below(3);
+        for sched in [SchedPolicy::Conserve, SchedPolicy::Fifo] {
+            let cfg = SimConfig {
+                replicas,
+                queue_capacity: 2 + rng.below(30),
+                sched,
+                buckets: BucketLayout::pow2(8, 64),
+                batch: BatchPolicyTable::uniform(BatchPolicy {
+                    max_batch: 1 + rng.below(5),
+                    max_wait: ms(rng.below(12) as u64),
+                }),
+                service: ServiceModel {
+                    batch_overhead: us(100 + rng.below(1000) as u64),
+                    per_width: us(1 + rng.below(30) as u64),
+                },
+                degrade: DegradeLadder::none(),
+                m_full: 16,
+                admission_edf: false,
+            };
+            let sink = TraceSink::new(
+                replicas + 1,
+                TraceSink::DEFAULT_LANE_CAPACITY,
+                0,
+            );
+            let report = run_faulted_traced(
+                &cfg,
+                &trace,
+                &plan,
+                retry_budget,
+                Some(&sink),
+            );
+            let log = sink.drain();
+            assert_eq!(log.dropped, 0, "case {case}: ring overflowed");
+
+            // the accounting identity, then counter == event count for
+            // every fault-path series
+            assert!(report.reconciles(), "case {case}");
+            assert_eq!(log.count(EventKind::Admitted), report.accepted);
+            assert_eq!(log.count(EventKind::Replied), report.completed);
+            assert_eq!(
+                log.count_shed(ShedTag::Expired),
+                report.shed_deadline
+            );
+            assert_eq!(
+                log.count_shed(ShedTag::Internal),
+                report.failed_internal,
+                "case {case}"
+            );
+            assert_eq!(log.count(EventKind::Requeued), report.requeued);
+            assert_eq!(
+                log.count(EventKind::ReplicaDied),
+                report.replica_restarts
+            );
+            assert_eq!(
+                log.count(EventKind::ReplicaRestarted),
+                report.replica_restarts
+            );
+            assert_eq!(
+                log.count(EventKind::BatchFormed),
+                report.batches.len() as u64
+            );
+
+            // per-seq lifecycles: terminal outcomes are unique per seq
+            // and together partition the admitted set exactly
+            let admitted = unique(
+                seqs_of(&log, EventKind::Admitted, ShedTag::Unspecified),
+                "Admitted",
+            );
+            let replied = unique(
+                seqs_of(&log, EventKind::Replied, ShedTag::Unspecified),
+                "Replied",
+            );
+            let expired = unique(
+                seqs_of(&log, EventKind::Shed, ShedTag::Expired),
+                "Shed(Expired)",
+            );
+            let failed = unique(
+                seqs_of(&log, EventKind::Shed, ShedTag::Internal),
+                "Shed(Internal)",
+            );
+            assert!(replied.is_disjoint(&expired), "case {case}");
+            assert!(replied.is_disjoint(&failed), "case {case}");
+            assert!(expired.is_disjoint(&failed), "case {case}");
+            let mut union = replied;
+            union.extend(&expired);
+            union.extend(&failed);
+            assert_eq!(union, admitted, "case {case}: a request leaked");
+
+            // chaos is reproducible: the same (trace, plan) again is
+            // bit-identical, and the empty plan is exactly `run`
+            let again = run_faulted(&cfg, &trace, &plan, retry_budget);
+            assert_eq!(again, report, "case {case}: chaos not reproducible");
+            let clean =
+                run_faulted(&cfg, &trace, &FaultPlan::none(), retry_budget);
+            assert_eq!(clean, run(&cfg, &trace), "case {case}");
+        }
+    }
+}
+
+/// The same property on the live supervised gateway: submit a request
+/// set fault-free for reference logits, then re-run it under a seeded
+/// plan. Every receiver resolves within the deadline-bounded wait —
+/// never a lost reply — as either logits bit-identical to the reference
+/// or a terminal `InternalError` carrying its own seq; the directly
+/// faulted seqs all fail; stats reconcile with the trace stream.
+#[test]
+fn live_gateway_chaos_never_loses_an_admitted_request() {
+    silence_injected_panics();
+    let n = 32usize;
+    let mut rng = Rng::new(0xB0B);
+    let reqs: Vec<(Vec<i32>, Vec<i32>)> = (0..n)
+        .map(|_| {
+            let len = 3 + rng.below(29);
+            let ids: Vec<i32> =
+                (0..len).map(|_| 5 + rng.below(1990) as i32).collect();
+            let segs = vec![0i32; len];
+            (ids, segs)
+        })
+        .collect();
+    let gw_cfg = |fault: FaultPlan| {
+        let mut cfg = GatewayConfig::new(tiny_cfg(23));
+        cfg.replicas = 2;
+        cfg.queue_capacity = 64;
+        cfg.shed = ShedPolicy::Reject;
+        cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+        });
+        cfg.buckets = BucketLayout::pow2(8, 32);
+        cfg.trace = true;
+        cfg.fault = fault;
+        cfg
+    };
+
+    // fault-free reference logits, submitted sequentially so admission
+    // seq == request index in both runs
+    let gw = Gateway::spawn(gw_cfg(FaultPlan::none()));
+    let reference: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|(ids, segs)| {
+            let rx = gw.submit(ids.clone(), segs.clone()).expect("admitted");
+            await_reply(&rx, Duration::from_secs(120))
+                .expect("fault-free run serves everything")
+                .logits
+        })
+        .collect();
+    gw.shutdown();
+
+    let plan = FaultPlan::seeded(env_seed() ^ 0x11FE, n as u64);
+    let mut panics = BTreeSet::new();
+    let mut kills = BTreeSet::new();
+    let mut abandons = BTreeSet::new();
+    for f in plan.faults() {
+        match *f {
+            FaultKind::PanicOnSeq(s) => {
+                panics.insert(s);
+            }
+            FaultKind::KillReplicaOnSeq(s) => {
+                kills.insert(s);
+            }
+            FaultKind::AbandonLeaseOnSeq(s) => {
+                abandons.insert(s);
+            }
+            FaultKind::StallOnSeq { .. } => {}
+        }
+    }
+    let must_fail: BTreeSet<u64> =
+        panics.iter().chain(&kills).chain(&abandons).copied().collect();
+
+    let gw = Gateway::spawn(gw_cfg(plan));
+    let sink = gw.trace_sink().expect("trace was enabled");
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(ids, segs)| {
+            gw.submit(ids.clone(), segs.clone()).expect("admitted")
+        })
+        .collect();
+    let mut failed = BTreeSet::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // the deadline-bounded client wait: a faulted gateway answers
+        // with a terminal error — it never leaves a receiver hanging
+        match await_reply(&rx, Duration::from_secs(120)) {
+            Ok(resp) => {
+                assert!(
+                    !must_fail.contains(&(i as u64)),
+                    "seq {i} was directly faulted but served"
+                );
+                assert_eq!(reference[i].len(), resp.logits.len());
+                for (a, b) in reference[i].iter().zip(&resp.logits) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "seq {i}: delivered reply diverged from the \
+                         fault-free run"
+                    );
+                }
+            }
+            Err(Shed::InternalError { seq }) => {
+                assert_eq!(seq, i as u64, "InternalError names the wrong seq");
+                failed.insert(seq);
+            }
+            Err(other) => panic!("seq {i}: unexpected shed {other}"),
+        }
+    }
+    assert!(
+        failed.is_superset(&must_fail),
+        "a directly faulted seq escaped terminal failure: \
+         failed={failed:?} must_fail={must_fail:?}"
+    );
+
+    let stats = gw.shutdown();
+    let log = sink.drain();
+    assert_eq!(stats.accepted, n as u64);
+    assert_eq!(stats.failed_internal, failed.len() as u64);
+    assert_eq!(stats.completed, (n - failed.len()) as u64);
+    assert_eq!(stats.shed_deadline, 0);
+    assert_eq!(
+        stats.accepted,
+        stats.completed + stats.shed_deadline + stats.failed_internal,
+        "no-request-lost accounting broke"
+    );
+    if !kills.is_empty() {
+        assert!(stats.replica_restarts >= 1, "a kill left no restart");
+        assert!(stats.requeued >= 1, "a kill requeued nothing");
+    }
+    // every abandoned lease is a discarded session; a kill can doom an
+    // abandon seq before it ever checks out, so <= — and exactly ==
+    // when no kill interferes
+    assert!(stats.cache_abandoned <= abandons.len() as u64);
+    if kills.is_empty() {
+        assert_eq!(stats.cache_abandoned, abandons.len() as u64);
+    }
+    // stats reconcile with the flight recorder, fault kinds included
+    assert_eq!(log.count(EventKind::Admitted), stats.accepted);
+    assert_eq!(log.count(EventKind::Replied), stats.completed);
+    assert_eq!(log.count_shed(ShedTag::Internal), stats.failed_internal);
+    assert_eq!(log.count(EventKind::Requeued), stats.requeued);
+    assert_eq!(log.count(EventKind::ReplicaDied), stats.replica_restarts);
+    assert_eq!(
+        log.count(EventKind::ReplicaRestarted),
+        stats.replica_restarts
+    );
+}
+
+/// The retry budget, exactly: one crashy seq on a single replica with
+/// singleton batches dies `budget + 1` times (each pick kills the
+/// replica; the last one dooms the seq), while its neighbors ride the
+/// respawned worker to completion.
+#[test]
+fn retry_budget_bounds_the_crash_loop_exactly() {
+    silence_injected_panics();
+    let mut cfg = GatewayConfig::new(tiny_cfg(7));
+    cfg.replicas = 1;
+    cfg.queue_capacity = 8;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+    });
+    cfg.buckets = BucketLayout::single(32);
+    cfg.retry_budget = 2;
+    cfg.fault =
+        FaultPlan::from_faults(vec![FaultKind::KillReplicaOnSeq(1)]);
+    let gw = Gateway::spawn(cfg);
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            gw.submit(vec![10 + i; 8], vec![0; 8]).expect("admitted")
+        })
+        .collect();
+    let outcomes: Vec<GatewayReply> = rxs
+        .iter()
+        .map(|rx| await_reply(rx, Duration::from_secs(120)))
+        .collect();
+    assert!(outcomes[0].is_ok(), "seq 0 rides the healthy replica");
+    assert!(
+        matches!(outcomes[1], Err(Shed::InternalError { seq: 1 })),
+        "seq 1 must fail terminally once its budget is spent"
+    );
+    assert!(outcomes[2].is_ok(), "seq 2 rides the respawned replica");
+    let stats = gw.shutdown();
+    assert_eq!(stats.accepted, 3);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed_internal, 1);
+    // budget 2: two requeues, then the third pick dooms it — and every
+    // pick killed the replica once
+    assert_eq!(stats.requeued, 2);
+    assert_eq!(stats.replica_restarts, 3);
+}
+
+/// The client-side hang fix: a reply wait is always deadline-bounded.
+/// A dropped sender (dead server) errors immediately; a silent one
+/// errors at the deadline; and the single-loop server's `submit_wait`
+/// both serves within the bound and fails fast after shutdown.
+#[test]
+fn reply_waits_are_deadline_bounded_never_hangs() {
+    // dropped sender: the regression this PR fixes — previously a bare
+    // `recv()` here blocked forever on a replica that died un-supervised
+    let (tx, rx) = channel::<GatewayReply>();
+    drop(tx);
+    let t0 = Instant::now();
+    let got = await_reply(&rx, Duration::from_secs(30));
+    assert!(matches!(got, Err(Shed::ReplyLost { .. })));
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "dropped sender must error immediately, not at the deadline"
+    );
+
+    // silent sender: bounded by the timeout, not unbounded
+    let (_tx, rx) = channel::<GatewayReply>();
+    let t0 = Instant::now();
+    match await_reply(&rx, Duration::from_millis(50)) {
+        Err(Shed::ReplyLost { waited_ms }) => assert_eq!(waited_ms, 50),
+        other => panic!("expected ReplyLost, got {other:?}"),
+    }
+    assert!(t0.elapsed() >= Duration::from_millis(50));
+
+    // live single-loop server: served within the bound...
+    let handle = ServerHandle::spawn_cpu(
+        tiny_cfg(5),
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+    );
+    let sub = handle.submitter();
+    let resp = sub
+        .submit_wait(vec![7; 10], vec![0; 10], Duration::from_secs(120))
+        .expect("a healthy server answers");
+    assert!(!resp.logits.is_empty());
+    handle.shutdown().expect("stats");
+    // ...and a submit against the shut-down server errors promptly
+    // (dead receiver), not after the full timeout
+    let t0 = Instant::now();
+    assert!(sub
+        .submit_wait(vec![7; 10], vec![0; 10], Duration::from_secs(30))
+        .is_err());
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "post-shutdown submit_wait must fail fast"
+    );
+}

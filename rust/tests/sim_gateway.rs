@@ -29,9 +29,10 @@
 //! sweep runs this suite across both to enforce exactly that.
 
 use std::time::Duration;
-use yoso::serve::sim::{run, Arrival, ServiceModel, SimConfig};
+use yoso::serve::sim::{run, run_classed, Arrival, ServiceModel, SimConfig};
 use yoso::serve::{
-    BatchPolicy, BatchPolicyTable, BucketLayout, DegradeLadder, SchedPolicy,
+    BatchPolicy, BatchPolicyTable, BucketLayout, DegradeLadder, Quality,
+    SchedPolicy,
 };
 use yoso::util::Rng;
 
@@ -509,4 +510,66 @@ fn step_up_hysteresis_damps_rung_flapping_on_an_oscillating_trace() {
     );
     assert!(flappy.conservation_violations.is_empty());
     assert!(damped.conservation_violations.is_empty());
+}
+
+#[test]
+fn best_effort_reserve_admits_exact_per_class_counts() {
+    // capacity 4 with reserve 0.5: guaranteed (Full) traffic admits
+    // only while the queue is under 4 - round(4 * 0.5) = 2, best-effort
+    // into the full 4. A slow replica (100 ms batches, singleton
+    // batches) keeps the queue static across the burst, so every
+    // admit/reject below is hand-computable.
+    let cfg = SimConfig {
+        replicas: 1,
+        queue_capacity: 4,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::single(8),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }),
+        service: ServiceModel {
+            batch_overhead: ms(100),
+            per_width: us(1),
+        },
+        degrade: DegradeLadder::none(),
+        m_full: 8,
+        admission_edf: false,
+    };
+    // t=0: one Full request, immediately picked up (queue drops back to
+    // empty). t=1ms, in trace order against the now-busy replica:
+    //   F1 (q=0 < 2, admit) F2 (q=1 < 2, admit) F3, F4 (q=2 -> reject)
+    //   B1 (q=2 < 4, admit) B2 (q=3 < 4, admit) B3 (q=4 -> reject)
+    let mut trace = vec![Arrival { at: ms(0), len: 8, deadline: None }];
+    trace.extend((0..7).map(|_| Arrival {
+        at: ms(1),
+        len: 8,
+        deadline: None,
+    }));
+    let classes = [
+        Quality::Full,
+        Quality::Full,
+        Quality::Full,
+        Quality::Full,
+        Quality::Full,
+        Quality::BestEffort,
+        Quality::BestEffort,
+        Quality::BestEffort,
+    ];
+    let report = run_classed(&cfg, &trace, &classes, 0.5);
+    assert_eq!(report.accepted, 5);
+    assert_eq!(report.rejected, 3);
+    assert_eq!(report.accepted_best_effort, 2);
+    assert_eq!(report.rejected_best_effort, 1);
+    assert_eq!(report.completed, 5, "everything admitted is served");
+    assert!(report.reconciles());
+
+    // reserve 0 is the pre-quota behavior: one shared cap, first come
+    // first served — the three late arrivals shed regardless of class
+    let flat = run_classed(&cfg, &trace, &classes, 0.0);
+    assert_eq!(flat.accepted, 5);
+    assert_eq!(flat.rejected, 3);
+    assert_eq!(flat.accepted_best_effort, 0, "Full filled the queue first");
+    assert_eq!(flat.rejected_best_effort, 3);
+    assert!(flat.reconciles());
 }
