@@ -1,0 +1,174 @@
+//! Capacity-planning frontier off the scheduler-exact simulator.
+//!
+//! The sharded scheduling core is payload-generic, so `serve::sim` runs
+//! the *same* decision procedures as the live gateway (the bit-identity
+//! gate in `tests/sim_gateway.rs` and `serve::gateway`'s
+//! `live_schedule_matches_the_sim_bit_for_bit` pin this) — which turns
+//! the simulator into a capacity-planning instrument: a million-request
+//! day costs zero wall-clock service time, so the whole replica-count
+//! sweep runs in CI.
+//!
+//! Two synthetic traces exercise the two planning regimes:
+//!
+//! * **diurnal** — arrival rate swings sinusoidally 19:1 over a "day";
+//!   sizing for the peak vs the mean is the frontier's whole story;
+//! * **flash-crowd** — a steady baseline with a contiguous 8x burst
+//!   mid-trace; the regime where cross-replica stealing earns its keep
+//!   by draining the wedge instead of letting one lane absorb it.
+//!
+//! Each trace runs at every replica count, stealing off and on, and the
+//! resulting [`FrontierPoint`]s land in results/cap_frontier.csv with
+//! columns `trace,steal,replicas,offered,accepted,rejected,completed,
+//! goodput,shed_deadline,mean_ms,p99_ms,peak_depth,stolen` — the
+//! replica-count vs p99/goodput curves EXPERIMENTS.md reads deployment
+//! sizes off.
+//!
+//! Gates (hard in `YOSO_BENCH_SMOKE=1`, warn on full runs, matching the
+//! fig9 pattern): the no-request-lost accounting identity `accepted ==
+//! completed + shed_deadline` must hold at every point (the sim injects
+//! no faults here), and goodput at the largest deployment must not fall
+//! below goodput at one replica — a frontier that bends down with
+//! added capacity means the scheduler, not the capacity, is the
+//! bottleneck.
+
+use std::io::Write;
+use std::time::Duration;
+use yoso::bench_support::{smoke, smoke_or};
+use yoso::serve::sim::{
+    diurnal_trace, flash_crowd_trace, frontier, Arrival, FrontierPoint,
+    ServiceModel, SimConfig,
+};
+use yoso::serve::{
+    BatchPolicy, BatchPolicyTable, BucketLayout, DegradeLadder, SchedPolicy,
+};
+
+fn base_cfg(steal: bool) -> SimConfig {
+    SimConfig {
+        replicas: 1,
+        queue_capacity: 4096,
+        sched: SchedPolicy::Conserve,
+        buckets: BucketLayout::pow2(8, 64),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        }),
+        // calibrated so one replica's ceiling sits near 6k rps against
+        // the ~12k rps diurnal mean: the sweep crosses the knee instead
+        // of starting past it
+        service: ServiceModel {
+            batch_overhead: Duration::from_micros(400),
+            per_width: Duration::from_micros(4),
+        },
+        degrade: DegradeLadder::none(),
+        m_full: 16,
+        admission_edf: false,
+        steal,
+        ..SimConfig::default()
+    }
+}
+
+fn main() {
+    yoso::util::log::init_from_env();
+    let n = smoke_or(1_000_000, 2_000_000);
+    let replica_counts = smoke_or(vec![1, 2, 4, 8], vec![1, 2, 3, 4, 6, 8]);
+    let deadline = Some(Duration::from_millis(25));
+    let diurnal = diurnal_trace(
+        n,
+        Duration::from_micros(80),
+        Duration::from_secs(20),
+        deadline,
+    );
+    let crowd = flash_crowd_trace(
+        n,
+        Duration::from_micros(120),
+        0.15,
+        8.0,
+        deadline,
+    );
+    let traces: [(&str, &[Arrival]); 2] =
+        [("diurnal", &diurnal), ("flash_crowd", &crowd)];
+
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = std::fs::File::create("results/cap_frontier.csv").unwrap();
+    writeln!(
+        csv,
+        "trace,steal,replicas,offered,accepted,rejected,completed,goodput,\
+         shed_deadline,mean_ms,p99_ms,peak_depth,stolen"
+    )
+    .unwrap();
+
+    println!("Capacity frontier — {n} simulated requests per trace\n");
+    println!(
+        "{:>12} {:>6} {:>5} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "trace", "steal", "repl", "accepted", "rejected", "goodput",
+        "shed_ddl", "p99_ms", "peak_q", "stolen"
+    );
+    let mut failed = false;
+    for (name, trace) in traces {
+        for steal in [false, true] {
+            let cfg = base_cfg(steal);
+            let points: Vec<FrontierPoint> =
+                frontier(&cfg, trace, &replica_counts);
+            for p in &points {
+                // no faults injected: every admitted request completes
+                // or sheds on deadline, at every deployment size
+                assert_eq!(
+                    p.accepted,
+                    p.completed + p.shed_deadline,
+                    "{name} steal={steal} replicas={}: \
+                     accounting identity broke",
+                    p.replicas
+                );
+                writeln!(
+                    csv,
+                    "{name},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{}",
+                    if steal { "on" } else { "off" },
+                    p.replicas,
+                    p.offered,
+                    p.accepted,
+                    p.rejected,
+                    p.completed,
+                    p.goodput,
+                    p.shed_deadline,
+                    p.mean_ms,
+                    p.p99_ms,
+                    p.peak_depth,
+                    p.stolen,
+                )
+                .unwrap();
+                println!(
+                    "{name:>12} {:>6} {:>5} {:>9} {:>9} {:>9} {:>9} \
+                     {:>9.3} {:>9} {:>10}",
+                    if steal { "on" } else { "off" },
+                    p.replicas,
+                    p.accepted,
+                    p.rejected,
+                    p.goodput,
+                    p.shed_deadline,
+                    p.p99_ms,
+                    p.peak_depth,
+                    p.stolen,
+                );
+            }
+            let first = points.first().expect("non-empty sweep");
+            let last = points.last().expect("non-empty sweep");
+            if last.goodput < first.goodput {
+                println!(
+                    "WARNING: {name} steal={steal}: goodput fell from \
+                     {} at {} replicas to {} at {} — capacity is not \
+                     the bottleneck",
+                    first.goodput,
+                    first.replicas,
+                    last.goodput,
+                    last.replicas
+                );
+                failed = failed || smoke();
+            }
+        }
+    }
+    println!("-> results/cap_frontier.csv");
+    if failed {
+        // the bench-smoke CI job is the regression gate
+        std::process::exit(1);
+    }
+}

@@ -145,10 +145,15 @@ pub enum EventKind {
     ReplicaDied,
     /// The supervisor restarted a dead replica worker's serve loop.
     ReplicaRestarted,
+    /// A batch (or the tail of one) changed replicas: an idle peer took
+    /// work a victim replica had formed but not started executing.
+    /// Emitted once per steal on the thief's lane, with `n` = entries
+    /// taken and `worker` = the thief.
+    Stolen,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 10] = [
+    pub const ALL: [EventKind; 11] = [
         EventKind::Admitted,
         EventKind::Queued,
         EventKind::BatchFormed,
@@ -159,6 +164,7 @@ impl EventKind {
         EventKind::Requeued,
         EventKind::ReplicaDied,
         EventKind::ReplicaRestarted,
+        EventKind::Stolen,
     ];
 
     pub fn label(self) -> &'static str {
@@ -173,6 +179,7 @@ impl EventKind {
             EventKind::Requeued => "requeued",
             EventKind::ReplicaDied => "replica_died",
             EventKind::ReplicaRestarted => "replica_restarted",
+            EventKind::Stolen => "stolen",
         }
     }
 }
@@ -350,6 +357,7 @@ impl Event {
             EventKind::Requeued => 7,
             EventKind::ReplicaDied => 8,
             EventKind::ReplicaRestarted => 9,
+            EventKind::Stolen => 10,
         }
     }
 }
@@ -907,6 +915,20 @@ pub fn chrome_trace_json(log: &TraceLog, kernel: &KernelSnapshot) -> String {
                     tick_us(e.at),
                     e.seq,
                     e.width
+                );
+                push_event(&mut out, &b);
+            }
+            EventKind::Stolen => {
+                // work changed replicas before execution: mark the
+                // thief's row with how much it took
+                let mut b = String::new();
+                let _ = write!(
+                    b,
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"cat\":\"steal\",\"pid\":2,\"tid\":{},\"ts\":{:.3},\"name\":\"stolen\",\"args\":{{\"width\":{},\"n\":{}}}}}",
+                    e.worker,
+                    tick_us(e.at),
+                    e.width,
+                    e.n
                 );
                 push_event(&mut out, &b);
             }

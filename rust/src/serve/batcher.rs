@@ -8,6 +8,13 @@
 //! wall clock — it drains what is queued and *advances virtual time* to
 //! the aging deadline — so the aging tests below assert exact virtual
 //! durations instead of sleeping and hoping.
+//!
+//! This is the single-queue batcher behind the plain `serve::Server`.
+//! The multi-bucket gateway applies the same max-batch-or-max-wait
+//! policy per bucket (`BatchPolicyTable`), but schedules over the
+//! sharded per-bucket lanes in [`super::sched::ShardedQueues`] — one
+//! lock per bucket, not one queue — so its aging waits park on a
+//! condvar other replicas (and thieves) can preempt.
 
 use super::clock::{Clock, SystemClock};
 use super::Request;

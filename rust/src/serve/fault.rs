@@ -31,7 +31,11 @@ pub enum FaultKind {
     /// fails terminally only once its budget is exhausted.
     KillReplicaOnSeq(u64),
     /// The replica serving this seq stalls for `ns` nanoseconds before
-    /// executing the batch (a slow replica, not a dead one).
+    /// executing the batch (a slow replica, not a dead one). With
+    /// cross-replica stealing enabled (`GatewayConfig::steal` /
+    /// `SimConfig::steal`), the wedged replica posts its batch to the
+    /// steal board first, so an idle peer whole-steals and serves it
+    /// within one heartbeat instead of the full stall.
     StallOnSeq { seq: u64, ns: u64 },
     /// The request panics after checking its session out of the prefix
     /// cache: the lease drop-guard must discard the session (never

@@ -143,7 +143,10 @@ pub use gateway::{
     GatewayStats, GatewaySubmitter, Quality, ReplicaStats, Shed,
     ShedPolicy,
 };
-pub use sched::{BatchPolicyTable, DegradeLadder, DegradePlan, LadderState, SchedPolicy};
+pub use sched::{
+    BatchPolicyTable, DegradeLadder, DegradePlan, LadderState, SchedPolicy,
+    Sharding,
+};
 pub use server::{CpuServeConfig, ServeStats, ServerHandle, Submitter};
 
 /// One inference request: token ids + segments for a single sequence.
@@ -177,4 +180,10 @@ pub struct Response {
     /// configured full `m`, otherwise `Degraded(m_served)`. A
     /// `BestEffort` submission served at full rounds reports `Full`.
     pub quality: Quality,
+    /// How many times this request was pulled back out of a dying
+    /// replica's batch and requeued before it was served. 0 on the
+    /// clean path; a non-zero count tells the client its latency
+    /// included supervised recovery, not just queueing. The single-loop
+    /// `server` paths never requeue and always report 0.
+    pub retries: u32,
 }

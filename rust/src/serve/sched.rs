@@ -59,10 +59,25 @@
 //! ([`DegradeLadder::with_step_up_lag`], state in [`LadderState`])
 //! damps rung flapping under oscillating backlog: step-downs stay
 //! immediate, step-ups wait out the lag.
+//!
+//! # Sharded lanes
+//!
+//! Each bucket's queue is a [`Lane`]: entries seq-keyed in a B-tree
+//! (admission and supervised requeue are the same O(log n) insert)
+//! with a lazily-pruned per-lane deadline min-heap (O(log n) EDF pops,
+//! O(buckets) cross-bucket urgency scans). [`BucketQueues`] keeps all
+//! lanes under the caller's one lock domain — the simulator's default;
+//! [`ShardedQueues`] gives each lane its own mutex plus atomic
+//! aggregate gauges so live admission only contends on its own bucket.
+//! Both run the same decision procedures, and the sim sweeps the
+//! [`Sharding`] knob to prove the schedules bit-identical.
 
 use super::batcher::BatchPolicy;
 use super::clock::Tick;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Cross-bucket scheduling policy. Dequeue *within* a bucket and the
@@ -144,12 +159,22 @@ impl BatchPolicyTable {
         let mut halvings = 0u32;
         let mut w = width.max(1);
         while w < widest && halvings < 3 {
-            w *= 2;
+            w = w.saturating_mul(2);
             halvings += 1;
         }
+        // The loop above caps `halvings` at 3 (the documented 8x), but a
+        // shift must never be able to panic in debug builds (or wrap in
+        // release) if that cap is ever raised: clamp both shifts below
+        // the operand width instead of trusting the loop bound.
+        let batch_shift = halvings.min(usize::BITS - 1);
+        let wait_shift = halvings.min(u32::BITS - 1);
         BatchPolicy {
-            max_batch: self.base.max_batch.saturating_mul(1usize << halvings).max(1),
-            max_wait: self.base.max_wait / (1u32 << halvings),
+            max_batch: self
+                .base
+                .max_batch
+                .saturating_mul(1usize << batch_shift)
+                .max(1),
+            max_wait: self.base.max_wait / (1u32 << wait_shift),
         }
     }
 }
@@ -506,108 +531,238 @@ impl<T> Entry<T> {
     }
 }
 
+/// One bucket's queue lane: entries keyed by arrival seq in a B-tree
+/// (lane order **is** seq order by construction, so admission and
+/// seq-position requeue are the same O(log n) insert — the old
+/// `VecDeque` layout needed a linear position scan to requeue and
+/// silently relied on in-order pushes), plus a lazily-pruned min-heap
+/// of `(deadline_ns, seq)` keys so EDF pops cost O(log n) and the
+/// cross-bucket urgency scan reads one heap top per bucket instead of
+/// walking every queued entry.
+///
+/// Heap nodes are never removed eagerly. A node is live iff its seq is
+/// still queued: a seq's deadline is assigned once at admission and
+/// survives requeues unchanged, so the seq alone identifies the node
+/// (requeues push equal duplicates — same key, harmless). Stale nodes
+/// are discarded when they surface at the top.
+#[derive(Clone, Debug)]
+struct Lane<T> {
+    entries: BTreeMap<u64, Entry<T>>,
+    dheap: BinaryHeap<Reverse<(u64, u64)>>,
+    /// queued entries in this lane carrying a deadline
+    deadlined: usize,
+}
+
+impl<T> Lane<T> {
+    fn new() -> Lane<T> {
+        Lane {
+            entries: BTreeMap::new(),
+            dheap: BinaryHeap::new(),
+            deadlined: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Oldest queued seq — the lane's front.
+    fn front_seq(&self) -> Option<u64> {
+        self.entries.keys().next().copied()
+    }
+
+    /// Insert in seq position, wherever in the lane that lands.
+    fn insert(&mut self, entry: Entry<T>) {
+        if let Some(d) = entry.deadline {
+            self.deadlined += 1;
+            self.dheap.push(Reverse((d.as_nanos(), entry.seq)));
+        }
+        let _clash = self.entries.insert(entry.seq, entry);
+        debug_assert!(_clash.is_none(), "arrival seqs are unique");
+    }
+
+    fn pop_front(&mut self) -> Option<Entry<T>> {
+        let (_, e) = self.entries.pop_first()?;
+        if e.deadline.is_some() {
+            self.deadlined -= 1;
+        }
+        Some(e)
+    }
+
+    fn remove_seq(&mut self, seq: u64) -> Option<Entry<T>> {
+        let e = self.entries.remove(&seq)?;
+        if e.deadline.is_some() {
+            self.deadlined -= 1;
+        }
+        Some(e)
+    }
+
+    /// The live minimum `(deadline_ns, seq)` among this lane's
+    /// deadline-bearing entries, pruning stale heap tops on the way.
+    fn urgent_deadline(&mut self) -> Option<(u64, u64)> {
+        while let Some(&Reverse((d, seq))) = self.dheap.peek() {
+            if self.entries.contains_key(&seq) {
+                return Some((d, seq));
+            }
+            self.dheap.pop();
+        }
+        None
+    }
+
+    /// The lane's most urgent entry key — exactly the minimum of
+    /// [`Entry::urgency`] over the whole lane: deadline-bearing entries
+    /// compete via the heap top, deadline-free ones rank
+    /// `(u64::MAX, seq)` so the front seq stands in for all of them.
+    fn min_urgency(&mut self) -> Option<(u64, u64)> {
+        let front = self.front_seq()?;
+        Some(match self.urgent_deadline() {
+            Some(k) => k.min((u64::MAX, front)),
+            None => (u64::MAX, front),
+        })
+    }
+
+    /// Pop the lane's most urgent entry (EDF within the bucket).
+    fn pop_urgent(&mut self) -> Option<Entry<T>> {
+        let (_, seq) = self.min_urgency()?;
+        self.remove_seq(seq)
+    }
+
+    /// Move every expired entry into `shed`: earliest deadlines pop off
+    /// the heap, then the reaped slice is restored to seq order — the
+    /// order the legacy position scan produced and observers assert on.
+    fn shed_expired(&mut self, now: Tick, shed: &mut Vec<Entry<T>>) {
+        if self.deadlined == 0 {
+            return;
+        }
+        let start = shed.len();
+        while let Some((d, seq)) = self.urgent_deadline() {
+            if d > now.as_nanos() {
+                // the heap top is the earliest live deadline; nothing
+                // else in the lane can be expired
+                break;
+            }
+            let e = self.remove_seq(seq).expect("urgent seq is queued");
+            shed.push(e);
+        }
+        shed[start..].sort_by_key(|e| e.seq);
+    }
+
+    /// Re-derive the counter and rebuild the heap from the entries
+    /// themselves (poisoned-lock recovery). Returns true when the
+    /// counter was stale.
+    fn recount(&mut self) -> bool {
+        let actual =
+            self.entries.values().filter(|e| e.deadline.is_some()).count();
+        let stale = actual != self.deadlined;
+        self.deadlined = actual;
+        self.dheap = self
+            .entries
+            .values()
+            .filter_map(|e| e.deadline.map(|d| Reverse((d.as_nanos(), e.seq))))
+            .collect();
+        stale
+    }
+}
+
 /// Per-bucket queues plus the pick/pop/shed decisions — the data half
 /// of the scheduler, shared bit-for-bit by the live gateway and the
-/// simulator.
+/// simulator. One [`Lane`] per bucket; this variant keeps all lanes
+/// under the caller's single lock domain (the simulator's default, and
+/// the layout every schedule property was originally proven on — see
+/// [`ShardedQueues`] for the per-bucket-locked twin the live gateway
+/// runs).
 #[derive(Clone, Debug)]
 pub struct BucketQueues<T> {
-    queues: Vec<VecDeque<Entry<T>>>,
+    lanes: Vec<Lane<T>>,
     /// queued entries carrying a deadline (maintained by push/pop/shed):
     /// lets the expiry sweep and the Conserve urgency scan short-circuit
-    /// to O(1) on the common deadline-free workload instead of walking
-    /// every queued entry under the gateway lock each round
+    /// to O(1) on the common deadline-free workload
     deadlined: usize,
 }
 
 impl<T> BucketQueues<T> {
     pub fn new(n_buckets: usize) -> BucketQueues<T> {
         BucketQueues {
-            queues: (0..n_buckets.max(1)).map(|_| VecDeque::new()).collect(),
+            lanes: (0..n_buckets.max(1)).map(|_| Lane::new()).collect(),
             deadlined: 0,
         }
     }
 
     pub fn n_buckets(&self) -> usize {
-        self.queues.len()
+        self.lanes.len()
     }
 
     pub fn depth(&self, bucket: usize) -> usize {
-        self.queues[bucket].len()
+        self.lanes[bucket].len()
     }
 
     /// Total queued entries across buckets (the admission gauge).
     pub fn len(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.lanes.iter().map(|l| l.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queues.iter().all(|q| q.is_empty())
+        self.lanes.iter().all(|l| l.is_empty())
     }
 
-    /// Entries arrive in seq order per bucket (admission holds the
-    /// gateway lock), so each queue's front is its oldest entry.
+    /// Admit an entry to its bucket's lane. Lanes are seq-keyed, so the
+    /// lane's front is its oldest entry whether or not pushes arrive in
+    /// seq order (sharded admission assigns seqs before lane locks, so
+    /// they may not).
     pub fn push(&mut self, bucket: usize, entry: Entry<T>) {
         if entry.deadline.is_some() {
             self.deadlined += 1;
         }
-        self.queues[bucket].push_back(entry);
+        self.lanes[bucket].insert(entry);
     }
 
     /// Re-insert an entry that was already dequeued (pulled back out of
     /// a dying replica's batch) **in seq position**, not at the back:
-    /// `push`'s per-queue seq-order invariant — each queue's front is
-    /// its oldest entry — is what `Fifo`'s oldest-head pick and the
-    /// deadline-free EDF fast path (`pop_front`) rely on, so a requeue
-    /// that appended would let younger arrivals overtake the victim.
-    /// The entry keeps its original `enqueued` stamp and deadline, so
-    /// EDF urgency and expiry sheds judge it exactly as before the
-    /// crash.
+    /// `Fifo`'s oldest-head pick and the deadline-free EDF fast path
+    /// (`pop_front`) rely on front-is-oldest, so a requeue that
+    /// appended would let younger arrivals overtake the victim. With
+    /// seq-keyed lanes this is the same O(log n) insert as admission —
+    /// the old linear position scan is gone. The entry keeps its
+    /// original `enqueued` stamp and deadline, so EDF urgency and
+    /// expiry sheds judge it exactly as before the crash.
     pub fn requeue(&mut self, bucket: usize, entry: Entry<T>) {
-        if entry.deadline.is_some() {
-            self.deadlined += 1;
-        }
-        let q = &mut self.queues[bucket];
-        let pos =
-            q.iter().position(|e| e.seq > entry.seq).unwrap_or(q.len());
-        q.insert(pos, entry);
+        self.push(bucket, entry);
     }
 
     /// Consistency sweep for poisoned-lock recovery: re-derive the
-    /// `deadlined` fast-path counter from the queues themselves (a
+    /// `deadlined` fast-path counters (aggregate and per-lane) and
+    /// rebuild the deadline heaps from the queued entries themselves (a
     /// panic between a pop and its counter decrement would otherwise
-    /// leave it stale forever — an overcount only costs the O(1)
+    /// leave them stale forever — an overcount only costs the O(1)
     /// shortcut, an undercount would skip expiry sheds). Returns true
-    /// when the counter was stale.
+    /// when anything was stale.
     pub fn recount_deadlined(&mut self) -> bool {
-        let actual = self
-            .queues
-            .iter()
-            .flat_map(|q| q.iter())
-            .filter(|e| e.deadline.is_some())
-            .count();
-        let stale = actual != self.deadlined;
+        let mut stale = false;
+        for lane in &mut self.lanes {
+            stale |= lane.recount();
+        }
+        let actual: usize = self.lanes.iter().map(|l| l.deadlined).sum();
+        stale |= actual != self.deadlined;
         self.deadlined = actual;
         stale
     }
 
-    /// Remove every expired entry — anywhere in a queue, not only the
+    /// Remove every expired entry — anywhere in a lane, not only the
     /// heads, so an EDF pop never has to step over corpses — and return
     /// them for shed accounting/reply delivery. O(1) when no queued
-    /// entry carries a deadline.
+    /// entry carries a deadline; otherwise each lane reaps off its
+    /// deadline heap instead of scanning entries.
     pub fn shed_expired(&mut self, now: Tick) -> Vec<Entry<T>> {
         if self.deadlined == 0 {
             return Vec::new();
         }
         let mut shed = Vec::new();
-        for q in &mut self.queues {
-            let mut i = 0;
-            while i < q.len() {
-                if q[i].expired(now) {
-                    shed.push(q.remove(i).unwrap());
-                } else {
-                    i += 1;
-                }
-            }
+        for lane in &mut self.lanes {
+            lane.shed_expired(now, &mut shed);
         }
         // only deadline-bearing entries can expire
         self.deadlined -= shed.len();
@@ -618,20 +773,22 @@ impl<T> BucketQueues<T> {
     /// first. `Conserve`: while any queued entry carries a deadline,
     /// the bucket holding the globally most urgent one (deadline-EDF
     /// across buckets — depth must never starve another bucket's
-    /// deadline); otherwise the deepest bucket, ties toward the oldest
-    /// head, then the lowest index. Fully deterministic either way.
-    pub fn pick_bucket(&self, policy: SchedPolicy) -> Option<usize> {
+    /// deadline), found by comparing per-lane heap tops in O(buckets);
+    /// otherwise the deepest bucket, ties toward the oldest head, then
+    /// the lowest index. Fully deterministic either way. (`&mut`
+    /// because reading a heap top may prune stale nodes.)
+    pub fn pick_bucket(&mut self, policy: SchedPolicy) -> Option<usize> {
         match policy {
             SchedPolicy::Fifo => {
                 let mut best: Option<(u64, usize)> = None;
-                for (b, q) in self.queues.iter().enumerate() {
-                    if let Some(head) = q.front() {
+                for (b, lane) in self.lanes.iter().enumerate() {
+                    if let Some(head) = lane.front_seq() {
                         let better = match best {
                             None => true,
-                            Some((s, _)) => head.seq < s,
+                            Some((s, _)) => head < s,
                         };
                         if better {
-                            best = Some((head.seq, b));
+                            best = Some((head, b));
                         }
                     }
                 }
@@ -642,19 +799,16 @@ impl<T> BucketQueues<T> {
                     // global EDF: serve the most urgent deadline first,
                     // wherever it queues
                     let mut best: Option<((u64, u64), usize)> = None;
-                    for (b, q) in self.queues.iter().enumerate() {
-                        for e in q {
-                            if e.deadline.is_none() {
-                                continue;
-                            }
-                            let k = e.urgency();
-                            let better = match best {
-                                None => true,
-                                Some((bk, _)) => k < bk,
-                            };
-                            if better {
-                                best = Some((k, b));
-                            }
+                    for (b, lane) in self.lanes.iter_mut().enumerate() {
+                        let Some(k) = lane.urgent_deadline() else {
+                            continue;
+                        };
+                        let better = match best {
+                            None => true,
+                            Some((bk, _)) => k < bk,
+                        };
+                        if better {
+                            best = Some((k, b));
                         }
                     }
                     if let Some((_, b)) = best {
@@ -663,20 +817,20 @@ impl<T> BucketQueues<T> {
                 }
                 // no deadlines queued: deepest backlog wins; for
                 // deadline-free entries EDF pops in seq order, so each
-                // queue's front is its oldest — head seq breaks ties
+                // lane's front is its oldest — head seq breaks ties
                 let mut best: Option<(usize, u64, usize)> = None;
-                for (b, q) in self.queues.iter().enumerate() {
-                    let Some(head) = q.front() else {
+                for (b, lane) in self.lanes.iter().enumerate() {
+                    let Some(head) = lane.front_seq() else {
                         continue;
                     };
                     let better = match best {
                         None => true,
                         Some((d, s, _)) => {
-                            q.len() > d || (q.len() == d && head.seq < s)
+                            lane.len() > d || (lane.len() == d && head < s)
                         }
                     };
                     if better {
-                        best = Some((q.len(), head.seq, b));
+                        best = Some((lane.len(), head, b));
                     }
                 }
                 best.map(|(_, _, b)| b)
@@ -691,21 +845,16 @@ impl<T> BucketQueues<T> {
         bucket: usize,
         policy: SchedPolicy,
     ) -> Option<Entry<T>> {
+        let lane = &mut self.lanes[bucket];
         let popped = match policy {
-            SchedPolicy::Fifo => self.queues[bucket].pop_front(),
+            SchedPolicy::Fifo => lane.pop_front(),
             SchedPolicy::Conserve => {
-                let q = &mut self.queues[bucket];
-                if self.deadlined == 0 {
-                    // no deadlines anywhere: EDF degenerates to seq
-                    // order, and entries are pushed in seq order
-                    q.pop_front()
+                if lane.deadlined == 0 {
+                    // no deadlines in this lane: EDF degenerates to seq
+                    // order, and the lane is seq-keyed
+                    lane.pop_front()
                 } else {
-                    let idx = q
-                        .iter()
-                        .enumerate()
-                        .min_by_key(|(_, e)| e.urgency())
-                        .map(|(i, _)| i);
-                    idx.and_then(|i| q.remove(i))
+                    lane.pop_urgent()
                 }
             }
         };
@@ -715,6 +864,273 @@ impl<T> BucketQueues<T> {
             }
         }
         popped
+    }
+}
+
+/// Which queue layout schedules a run. The live gateway always runs
+/// [`Sharding::PerBucket`]; the simulator defaults to
+/// [`Sharding::Unsharded`] and sweeps both to prove the schedules
+/// bit-identical (`tests/sim_gateway.rs`) — which is what licenses the
+/// sharded layout in production: same decision procedure, only the
+/// lock domain changed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Sharding {
+    /// all lanes under one logical lock (the PR 5 layout)
+    #[default]
+    Unsharded,
+    /// one locked lane per bucket plus atomic aggregate gauges
+    PerBucket,
+}
+
+impl Sharding {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Sharding::Unsharded => "unsharded",
+            Sharding::PerBucket => "per-bucket",
+        }
+    }
+
+    /// Resolve the layout from `YOSO_SHARDS` (`per-bucket` / `sharded`
+    /// select [`Sharding::PerBucket`]; anything else, or unset, keeps
+    /// [`Sharding::Unsharded`]). CI's scheduler-stress sweep drives this
+    /// knob so every simulator property runs under both lock domains —
+    /// [`crate::serve::sim::SimConfig::default`] picks it up.
+    pub fn from_env() -> Sharding {
+        match std::env::var("YOSO_SHARDS").as_deref() {
+            Ok("per-bucket") | Ok("per_bucket") | Ok("sharded") => {
+                Sharding::PerBucket
+            }
+            _ => Sharding::Unsharded,
+        }
+    }
+}
+
+/// The sharded twin of [`BucketQueues`]: one independently locked
+/// [`Lane`] per bucket plus atomic aggregate gauges, so admission into
+/// bucket `b` contends only with consumers of bucket `b` — never with
+/// admissions or pops elsewhere — and the hot gauges (`len`, the
+/// `deadlined` fast-path check) read without any lock.
+///
+/// Every decision runs the same per-lane procedures as `BucketQueues`,
+/// so a single-threaded caller gets bit-identical schedules from
+/// either layout (the sim sweep in `tests/sim_gateway.rs` proves it).
+/// Under concurrency, `pick_bucket` reads each lane's top briefly in
+/// index order rather than holding a global snapshot; a pick can race
+/// a pop, in which case `pop_next` comes back `None` and the caller
+/// simply re-picks.
+///
+/// Seqs are assigned before lane locks are taken, so two admissions
+/// may land in a lane out of seq order; the seq-keyed lanes make that
+/// a non-event — lane order is seq order by construction.
+#[derive(Debug)]
+pub struct ShardedQueues<T> {
+    lanes: Vec<Mutex<Lane<T>>>,
+    len: AtomicUsize,
+    deadlined: AtomicUsize,
+}
+
+impl<T> ShardedQueues<T> {
+    pub fn new(n_buckets: usize) -> ShardedQueues<T> {
+        ShardedQueues {
+            lanes: (0..n_buckets.max(1))
+                .map(|_| Mutex::new(Lane::new()))
+                .collect(),
+            len: AtomicUsize::new(0),
+            deadlined: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lock one lane, recovering from poison. Lane operations never
+    /// run caller code while holding the lock, so poisoning requires a
+    /// panic elsewhere unwinding through a guard — recover rather than
+    /// wedge the scheduler, and let the supervisor's
+    /// [`recount_deadlined`](ShardedQueues::recount_deadlined) resync
+    /// the gauges.
+    fn lane(&self, bucket: usize) -> MutexGuard<'_, Lane<T>> {
+        match self.lanes[bucket].lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.lanes[bucket].clear_poison();
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn depth(&self, bucket: usize) -> usize {
+        self.lane(bucket).len()
+    }
+
+    /// Total queued entries (the admission gauge) — a lock-free read.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit an entry to its bucket's lane, touching only that lane's
+    /// lock (see [`BucketQueues::push`] for the ordering contract).
+    pub fn push(&self, bucket: usize, entry: Entry<T>) {
+        if entry.deadline.is_some() {
+            self.deadlined.fetch_add(1, Ordering::SeqCst);
+        }
+        self.lane(bucket).insert(entry);
+        self.len.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Seq-position requeue — identical to [`push`](ShardedQueues::push)
+    /// now that lanes are seq-keyed: position is where the seq was all
+    /// along (see [`BucketQueues::requeue`]).
+    pub fn requeue(&self, bucket: usize, entry: Entry<T>) {
+        self.push(bucket, entry);
+    }
+
+    /// Remove a specific queued seq (the gateway uses this to un-admit
+    /// an entry that raced shutdown). `None` if a consumer already
+    /// popped it.
+    pub fn remove(&self, bucket: usize, seq: u64) -> Option<Entry<T>> {
+        let removed = self.lane(bucket).remove_seq(seq);
+        if let Some(e) = &removed {
+            self.len.fetch_sub(1, Ordering::SeqCst);
+            if e.deadline.is_some() {
+                self.deadlined.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        removed
+    }
+
+    /// Reap expired entries across all lanes (see
+    /// [`BucketQueues::shed_expired`]). O(1) when nothing queued
+    /// carries a deadline.
+    pub fn shed_expired(&self, now: Tick) -> Vec<Entry<T>> {
+        if self.deadlined.load(Ordering::SeqCst) == 0 {
+            return Vec::new();
+        }
+        let mut shed = Vec::new();
+        for bucket in 0..self.lanes.len() {
+            self.lane(bucket).shed_expired(now, &mut shed);
+        }
+        if !shed.is_empty() {
+            self.len.fetch_sub(shed.len(), Ordering::SeqCst);
+            self.deadlined.fetch_sub(shed.len(), Ordering::SeqCst);
+        }
+        shed
+    }
+
+    /// Cross-bucket pick — the [`BucketQueues::pick_bucket`] procedure
+    /// over per-lane tops, locking one lane at a time.
+    pub fn pick_bucket(&self, policy: SchedPolicy) -> Option<usize> {
+        match policy {
+            SchedPolicy::Fifo => {
+                let mut best: Option<(u64, usize)> = None;
+                for b in 0..self.lanes.len() {
+                    let Some(head) = self.lane(b).front_seq() else {
+                        continue;
+                    };
+                    let better = match best {
+                        None => true,
+                        Some((s, _)) => head < s,
+                    };
+                    if better {
+                        best = Some((head, b));
+                    }
+                }
+                best.map(|(_, b)| b)
+            }
+            SchedPolicy::Conserve => {
+                if self.deadlined.load(Ordering::SeqCst) > 0 {
+                    let mut best: Option<((u64, u64), usize)> = None;
+                    for b in 0..self.lanes.len() {
+                        let Some(k) = self.lane(b).urgent_deadline() else {
+                            continue;
+                        };
+                        let better = match best {
+                            None => true,
+                            Some((bk, _)) => k < bk,
+                        };
+                        if better {
+                            best = Some((k, b));
+                        }
+                    }
+                    if let Some((_, b)) = best {
+                        return Some(b);
+                    }
+                }
+                let mut best: Option<(usize, u64, usize)> = None;
+                for b in 0..self.lanes.len() {
+                    let lane = self.lane(b);
+                    let Some(head) = lane.front_seq() else {
+                        continue;
+                    };
+                    let depth = lane.len();
+                    drop(lane);
+                    let better = match best {
+                        None => true,
+                        Some((d, s, _)) => {
+                            depth > d || (depth == d && head < s)
+                        }
+                    };
+                    if better {
+                        best = Some((depth, head, b));
+                    }
+                }
+                best.map(|(_, _, b)| b)
+            }
+        }
+    }
+
+    /// Pop bucket `b`'s next entry in policy order (see
+    /// [`BucketQueues::pop_next`]). May return `None` even after a
+    /// successful pick when a concurrent consumer drained the lane
+    /// first — callers re-pick.
+    pub fn pop_next(
+        &self,
+        bucket: usize,
+        policy: SchedPolicy,
+    ) -> Option<Entry<T>> {
+        let mut lane = self.lane(bucket);
+        let popped = match policy {
+            SchedPolicy::Fifo => lane.pop_front(),
+            SchedPolicy::Conserve => {
+                if lane.deadlined == 0 {
+                    lane.pop_front()
+                } else {
+                    lane.pop_urgent()
+                }
+            }
+        };
+        drop(lane);
+        if let Some(e) = &popped {
+            self.len.fetch_sub(1, Ordering::SeqCst);
+            if e.deadline.is_some() {
+                self.deadlined.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        popped
+    }
+
+    /// Re-derive both aggregate gauges and every lane's heap/counter
+    /// from the queued entries themselves (poisoned-lock recovery,
+    /// mirroring [`BucketQueues::recount_deadlined`]). Returns true
+    /// when anything was stale.
+    pub fn recount_deadlined(&self) -> bool {
+        let mut stale = false;
+        let mut len = 0usize;
+        let mut deadlined = 0usize;
+        for bucket in 0..self.lanes.len() {
+            let mut lane = self.lane(bucket);
+            stale |= lane.recount();
+            len += lane.len();
+            deadlined += lane.deadlined;
+        }
+        stale |= self.len.swap(len, Ordering::SeqCst) != len;
+        stale |= self.deadlined.swap(deadlined, Ordering::SeqCst) != deadlined;
+        stale
     }
 }
 
@@ -1101,5 +1517,167 @@ mod tests {
         assert!(a.expired(Tick::from_ms(10)), "expiry is inclusive");
         assert!(!a.expired(Tick::from_ms(9)));
         assert!(!c.expired(Tick::from_nanos(u64::MAX)));
+    }
+
+    /// Satellite regression: the width-scaling shift must be total — no
+    /// panic (debug) or wrap (release) at any width ratio, however the
+    /// halvings cap evolves. The documented 8x cap still holds.
+    #[test]
+    fn policy_table_scaling_never_overflows_at_extreme_width_ratios() {
+        let base = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(8),
+        };
+        let scaled = BatchPolicyTable::scaled(base);
+        // the most extreme spread expressible: width 1 vs usize::MAX
+        let p = scaled.policy_for(1, usize::MAX);
+        assert_eq!(p.max_batch, 64, "8x cap holds at any ratio");
+        assert_eq!(p.max_wait, Duration::from_millis(1));
+        // width 0 normalizes to 1 first
+        assert_eq!(scaled.policy_for(0, usize::MAX).max_batch, 64);
+        // a huge base cap saturates instead of wrapping
+        let big = BatchPolicyTable::scaled(BatchPolicy {
+            max_batch: usize::MAX,
+            max_wait: Duration::ZERO,
+        });
+        assert_eq!(big.policy_for(1, usize::MAX).max_batch, usize::MAX);
+        assert_eq!(big.policy_for(1, usize::MAX).max_wait, Duration::ZERO);
+    }
+
+    /// Satellite regression: with sharded admission, seqs are assigned
+    /// before lane locks, so pushes can land out of seq order — and a
+    /// supervised requeue must still land in seq position among them.
+    #[test]
+    fn requeue_lands_in_seq_position_amid_out_of_order_admissions() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(1);
+        // out-of-order admission: 0, 20, then 10
+        qs.push(0, entry(0, None));
+        qs.push(0, entry(20, Some(500)));
+        qs.push(0, entry(10, None));
+        assert_eq!(qs.pop_next(0, SchedPolicy::Fifo).unwrap().seq, 0);
+        let victim = qs.pop_next(0, SchedPolicy::Fifo).unwrap();
+        assert_eq!(victim.seq, 10);
+        // younger arrival shows up while the victim is in-flight
+        qs.push(0, entry(15, None));
+        qs.requeue(0, victim);
+        assert_eq!(qs.deadlined, 1);
+        let order: Vec<u64> = std::iter::from_fn(|| {
+            qs.pop_next(0, SchedPolicy::Fifo).map(|e| e.seq)
+        })
+        .collect();
+        assert_eq!(order, vec![10, 15, 20], "requeue sits ahead of 15");
+        assert_eq!(qs.deadlined, 0);
+    }
+
+    /// A deadline-bearing requeue must re-arm the lane's deadline heap:
+    /// EDF pops and expiry sheds see the requeued entry exactly as
+    /// before the crash.
+    #[test]
+    fn requeued_deadline_entry_keeps_edf_and_shed_behavior() {
+        let mut qs: BucketQueues<()> = BucketQueues::new(1);
+        qs.push(0, entry(0, None));
+        qs.push(0, entry(1, Some(100)));
+        qs.push(0, entry(2, Some(50)));
+        // EDF pops the most urgent; pretend its replica died twice
+        for _ in 0..2 {
+            let victim = qs.pop_next(0, SchedPolicy::Conserve).unwrap();
+            assert_eq!(victim.seq, 2);
+            qs.requeue(0, victim);
+        }
+        assert_eq!(qs.deadlined, 2);
+        // the duplicate heap nodes from the requeues are harmless:
+        // expiry at t=50 reaps exactly seq 2, once
+        let shed = qs.shed_expired(Tick::from_ms(50));
+        assert_eq!(shed.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(qs.deadlined, 1);
+        assert_eq!(qs.pop_next(0, SchedPolicy::Conserve).unwrap().seq, 1);
+        assert_eq!(qs.pop_next(0, SchedPolicy::Conserve).unwrap().seq, 0);
+        assert_eq!(qs.deadlined, 0);
+    }
+
+    /// The sharded layout must reproduce the unsharded layout's
+    /// decisions bit for bit when driven single-threaded: same picks,
+    /// same pops, same sheds, same gauges, over a scripted mix of
+    /// admissions, requeues, and expiries under both policies.
+    #[test]
+    fn sharded_queues_match_unsharded_decisions_bit_for_bit() {
+        for policy in [SchedPolicy::Fifo, SchedPolicy::Conserve] {
+            let mut un: BucketQueues<()> = BucketQueues::new(3);
+            let sh: ShardedQueues<()> = ShardedQueues::new(3);
+            // deterministic scripted trace: a spread of buckets,
+            // deadlines, and out-of-order seqs
+            let script: Vec<(usize, u64, Option<u64>)> = vec![
+                (0, 0, None),
+                (2, 1, Some(40)),
+                (2, 3, None),
+                (1, 2, Some(10)),
+                (0, 5, Some(25)),
+                (1, 4, None),
+                (2, 7, Some(40)),
+                (0, 6, None),
+            ];
+            for &(b, seq, dl) in &script {
+                un.push(b, entry(seq, dl));
+                sh.push(b, entry(seq, dl));
+            }
+            assert_eq!(un.len(), sh.len());
+            // interleave picks/pops with an expiry shed and a requeue
+            let mut popped_un = Vec::new();
+            let mut popped_sh = Vec::new();
+            for round in 0..script.len() + 2 {
+                if round == 3 {
+                    let now = Tick::from_ms(25);
+                    let a: Vec<u64> =
+                        un.shed_expired(now).iter().map(|e| e.seq).collect();
+                    let b: Vec<u64> =
+                        sh.shed_expired(now).iter().map(|e| e.seq).collect();
+                    assert_eq!(a, b, "shed order diverged ({policy:?})");
+                }
+                let pick_un = un.pick_bucket(policy);
+                let pick_sh = sh.pick_bucket(policy);
+                assert_eq!(pick_un, pick_sh, "pick diverged ({policy:?})");
+                let Some(b) = pick_un else { break };
+                let e_un = un.pop_next(b, policy).unwrap();
+                let e_sh = sh.pop_next(b, policy).unwrap();
+                assert_eq!(e_un.seq, e_sh.seq, "pop diverged ({policy:?})");
+                if round == 1 {
+                    // a supervised requeue mid-trace
+                    un.requeue(b, e_un);
+                    sh.requeue(b, e_sh);
+                } else {
+                    popped_un.push(e_un.seq);
+                    popped_sh.push(e_sh.seq);
+                }
+                assert_eq!(un.len(), sh.len(), "gauges diverged");
+            }
+            assert_eq!(popped_un, popped_sh);
+            assert!(un.is_empty());
+            assert!(sh.is_empty());
+        }
+    }
+
+    /// Sharded gauges stay exact through push/pop/shed/remove, and the
+    /// recovery recount reports staleness only when there is some.
+    #[test]
+    fn sharded_gauges_track_push_pop_shed_and_remove() {
+        let sh: ShardedQueues<()> = ShardedQueues::new(2);
+        assert!(sh.is_empty());
+        sh.push(0, entry(0, None));
+        sh.push(1, entry(1, Some(10)));
+        sh.push(1, entry(2, Some(20)));
+        assert_eq!((sh.len(), sh.depth(0), sh.depth(1)), (3, 1, 2));
+        // un-admit a specific seq (the shutdown-race path)
+        let removed = sh.remove(1, 2).unwrap();
+        assert_eq!(removed.seq, 2);
+        assert!(sh.remove(1, 2).is_none(), "second take misses");
+        assert_eq!(sh.len(), 2);
+        // expiry reaps the remaining deadline
+        let shed = sh.shed_expired(Tick::from_ms(10));
+        assert_eq!(shed.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(sh.len(), 1);
+        assert!(!sh.recount_deadlined(), "consistent gauges are a no-op");
+        assert_eq!(sh.pop_next(0, SchedPolicy::Conserve).unwrap().seq, 0);
+        assert!(sh.is_empty());
+        assert!(sh.pop_next(0, SchedPolicy::Fifo).is_none());
     }
 }

@@ -345,6 +345,7 @@ fn serve_loop(
                 total_ms,
                 m_served: 0,
                 quality: super::Quality::Full,
+                retries: 0,
             });
         }
     }
@@ -534,6 +535,7 @@ fn serve_loop_cpu(
                 total_ms,
                 m_served: m_full,
                 quality: super::Quality::Full,
+                retries: 0,
             });
             (queue_ms, total_ms)
         });

@@ -48,19 +48,44 @@
 //! * [`run_traced`] mirrors every decision into an `obs::TraceSink`
 //!   with the live gateway's exact event schema and lane layout, and
 //!   tracing never changes a decision (the report is bit-identical to
-//!   the untraced run).
+//!   the untraced run);
+//! * the queue layout is the [`Sharding`] knob: the run schedules over
+//!   either the single-lock [`BucketQueues`] or the per-bucket-locked
+//!   [`ShardedQueues`] the live gateway runs — both execute the same
+//!   per-lane decision procedures, and the sweep in
+//!   `tests/sim_gateway.rs` proves the schedules bit-identical, which
+//!   is what licenses the sharded layout in production;
+//! * with `SimConfig::steal` on, an idle replica with nothing queued
+//!   supervises its peers instead of parking: it whole-steals a stalled
+//!   replica's posted batch once the batch has sat a full
+//!   `SimConfig::heartbeat`, and otherwise splits a peer's parked
+//!   partial batch — taking the *tail* (the younger half in dequeue
+//!   order), so stealing never reorders within a bucket and never
+//!   loses an admitted request.
+//!
+//! # Capacity planning
+//!
+//! Because replicas "execute" in virtual time, the simulator doubles as
+//! a capacity-planning instrument: [`diurnal_trace`] and
+//! [`flash_crowd_trace`] script million-request load shapes, and
+//! [`frontier`] sweeps replica counts over one trace to produce the
+//! replica-count vs p99/goodput frontier curves a planner reads
+//! deployment sizes off (`benches/cap_frontier.rs` emits them as CSV)
+//! — at zero wall-clock service cost.
 //!
 //! What the simulator does *not* model: compute itself (no logits — the
 //! bit-identity half of the contract is `tests/prop_serve_gateway.rs`'s
 //! job against the real gateway), pool fan-out inside a replica, and
 //! lock contention. Service time is the declared [`ServiceModel`].
 
+use super::batcher::BatchPolicy;
 use super::clock::{Clock, SimClock, Tick};
 use super::fault::FaultPlan;
 use super::gateway::{BucketLayout, Quality};
 use super::sched::{
     admission_cap, deadline_infeasible, update_ewma, BatchPolicyTable,
     BucketQueues, DegradeLadder, Entry, LadderState, SchedPolicy,
+    ShardedQueues, Sharding,
 };
 use crate::obs::{self, Event, EventKind, QualityTag, ShedTag, TraceSink};
 use std::time::Duration;
@@ -147,6 +172,39 @@ pub struct SimConfig {
     pub m_full: usize,
     /// mirror of `GatewayConfig::admission_edf`
     pub admission_edf: bool,
+    /// queue layout the run schedules over. Both layouts execute the
+    /// same decision procedures and produce bit-identical schedules
+    /// (the sweep in `tests/sim_gateway.rs`); the default resolves
+    /// `YOSO_SHARDS` so CI can sweep the whole suite across both.
+    pub shards: Sharding,
+    /// cross-replica batch stealing: an idle replica with nothing
+    /// queued whole-steals a stalled peer's posted batch after
+    /// [`heartbeat`](SimConfig::heartbeat), and otherwise takes the
+    /// tail of a peer's parked partial batch. Off by default — every
+    /// non-stealing trace's timings are unchanged.
+    pub steal: bool,
+    /// supervision heartbeat: how long a posted batch may sit on a
+    /// stalled replica before an idle peer may whole-steal it
+    pub heartbeat: Duration,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            replicas: 1,
+            queue_capacity: 64,
+            sched: SchedPolicy::Conserve,
+            buckets: BucketLayout::pow2(8, 64),
+            batch: BatchPolicyTable::uniform(BatchPolicy::default()),
+            service: ServiceModel::default(),
+            degrade: DegradeLadder::none(),
+            m_full: 16,
+            admission_edf: false,
+            shards: Sharding::from_env(),
+            steal: false,
+            heartbeat: Duration::from_millis(5),
+        }
+    }
 }
 
 /// One executed batch: where, when, and exactly which requests in which
@@ -200,6 +258,10 @@ pub struct SimReport {
     pub requeued: u64,
     /// injected replica deaths survived by supervision
     pub replica_restarts: u64,
+    /// cross-replica steal actions ([`SimConfig::steal`]): tail splits
+    /// of a peer's parked partial plus whole-steals of a stalled
+    /// replica's posted batch — one count per action, not per request
+    pub stolen: u64,
     /// admissions of `BestEffort`-class arrivals ([`run_classed`])
     pub accepted_best_effort: u64,
     /// queue-full rejections of `BestEffort`-class arrivals
@@ -232,8 +294,10 @@ impl SimReport {
     }
 }
 
-/// Replica state machine: mirrors a live replica's three observable
-/// modes (idle in `pick`, parked in the aging wait, executing).
+/// Replica state machine: mirrors a live replica's observable modes
+/// (idle in `pick`, parked in the aging wait, executing, and — under
+/// [`SimConfig::steal`] — wedged by an injected stall with its formed
+/// batch posted for supervision).
 enum Rep {
     Idle,
     Waiting {
@@ -247,12 +311,98 @@ enum Rep {
         batch: SimBatch,
         entries: Vec<Entry<()>>,
     },
+    /// Wedged by an injected stall while holding a formed batch
+    /// (`SimConfig::steal` runs only). Peers may whole-steal the batch
+    /// once it has sat [`SimConfig::heartbeat`] past `posted`;
+    /// unstolen, the replica wakes at `wake` and executes with no
+    /// further penalty — the completion tick is then identical to the
+    /// legacy inline-stall path.
+    Stalled {
+        /// `done_at` is a placeholder until execution actually starts
+        batch: SimBatch,
+        entries: Vec<Entry<()>>,
+        wake: Tick,
+        posted: Tick,
+    },
+}
+
+/// The run's queue layout behind one dispatch surface
+/// ([`SimConfig::shards`]): both variants execute the same per-lane
+/// decision procedures, so a sim driven on either produces
+/// bit-identical schedules — the property `tests/sim_gateway.rs`
+/// sweeps.
+enum SimQueues {
+    Unsharded(BucketQueues<()>),
+    PerBucket(ShardedQueues<()>),
+}
+
+impl SimQueues {
+    fn new(shards: Sharding, n_buckets: usize) -> SimQueues {
+        match shards {
+            Sharding::Unsharded => {
+                SimQueues::Unsharded(BucketQueues::new(n_buckets))
+            }
+            Sharding::PerBucket => {
+                SimQueues::PerBucket(ShardedQueues::new(n_buckets))
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SimQueues::Unsharded(q) => q.len(),
+            SimQueues::PerBucket(q) => q.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push(&mut self, bucket: usize, entry: Entry<()>) {
+        match self {
+            SimQueues::Unsharded(q) => q.push(bucket, entry),
+            SimQueues::PerBucket(q) => q.push(bucket, entry),
+        }
+    }
+
+    fn requeue(&mut self, bucket: usize, entry: Entry<()>) {
+        match self {
+            SimQueues::Unsharded(q) => q.requeue(bucket, entry),
+            SimQueues::PerBucket(q) => q.requeue(bucket, entry),
+        }
+    }
+
+    fn shed_expired(&mut self, now: Tick) -> Vec<Entry<()>> {
+        match self {
+            SimQueues::Unsharded(q) => q.shed_expired(now),
+            SimQueues::PerBucket(q) => q.shed_expired(now),
+        }
+    }
+
+    fn pick_bucket(&mut self, policy: SchedPolicy) -> Option<usize> {
+        match self {
+            SimQueues::Unsharded(q) => q.pick_bucket(policy),
+            SimQueues::PerBucket(q) => q.pick_bucket(policy),
+        }
+    }
+
+    fn pop_next(
+        &mut self,
+        bucket: usize,
+        policy: SchedPolicy,
+    ) -> Option<Entry<()>> {
+        match self {
+            SimQueues::Unsharded(q) => q.pop_next(bucket, policy),
+            SimQueues::PerBucket(q) => q.pop_next(bucket, policy),
+        }
+    }
 }
 
 /// Pop bucket entries into `batch` up to `max_batch` — the live
 /// replica's drain loop.
 fn top_up(
-    queues: &mut BucketQueues<()>,
+    queues: &mut SimQueues,
     bucket: usize,
     sched: SchedPolicy,
     batch: &mut Vec<Entry<()>>,
@@ -277,7 +427,7 @@ fn should_ship(
     age_deadline: Tick,
     now: Tick,
     sched: SchedPolicy,
-    queues: &BucketQueues<()>,
+    queues: &SimQueues,
 ) -> bool {
     if batch.len() >= max_batch || now >= age_deadline {
         return true;
@@ -299,9 +449,11 @@ fn should_ship(
 /// loop's "pick again").
 ///
 /// Fault order mirrors the live replica loop: stall first (the batch
-/// runs late), then a replica kill (the batch never runs — every member
-/// is requeued, or fails terminally once its retry budget is spent),
-/// then per-request panics (the poisoned member fails terminally, its
+/// runs late — or, under `steal`, is posted for supervision), then a
+/// replica kill (the batch never runs — the kill-trigger members spend
+/// retry budget and fail terminally once it is gone; innocent
+/// batch-mates always requeue and ride a later batch), then
+/// per-request panics (the poisoned member fails terminally, its
 /// batch-mates execute). `AbandonLeaseOnSeq` is a no-op here: the sim
 /// models scheduling, not the prefix cache, and an abandoned lease only
 /// costs a warm session, never a scheduling outcome.
@@ -315,9 +467,10 @@ fn dispatch(
     width: usize,
     m_eff: usize,
     m_full: usize,
-    queues: &mut BucketQueues<()>,
+    queues: &mut SimQueues,
     plan: &FaultPlan,
     retry_budget: u32,
+    steal: bool,
     report: &mut SimReport,
     sink: Option<&TraceSink>,
 ) -> Rep {
@@ -348,12 +501,15 @@ fn dispatch(
         }
         if live.iter().any(|e| plan.kill_for(e.seq)) {
             // the replica dies holding this batch: requeue each member
-            // under the retry budget (the doomed ones fail terminally),
-            // then restart — a re-pick at this same tick retries the
-            // batch, so a sticky kill seq burns one retry per round
-            // until it (and any mates still aboard) runs out of budget
+            // under the retry budget, then restart — a re-pick at this
+            // same tick retries the batch, so a sticky kill seq burns
+            // one retry per round until it runs out of budget and
+            // fails terminally. Only the members that *are* the kill
+            // trigger can be doomed: an innocent batch-mate always
+            // requeues (its retry count still ticks up in the ledger)
+            // and completes once the cursed seq is out of the bucket.
             for mut e in live {
-                if e.retries >= retry_budget {
+                if plan.kill_for(e.seq) && e.retries >= retry_budget {
                     report.failed_internal += 1;
                     emit(
                         sink,
@@ -411,6 +567,37 @@ fn dispatch(
         if live.is_empty() {
             return Rep::Idle;
         }
+    }
+    if steal && stall > Duration::ZERO {
+        // the replica wedges before ExecStart: post the formed batch
+        // for supervision instead of silently running late. An idle
+        // peer whole-steals it once it has sat a full heartbeat;
+        // unstolen, the victim wakes and executes with no further
+        // penalty — completing at exactly the legacy inline-stall tick.
+        emit(
+            sink,
+            replica + 1,
+            Event::new(EventKind::BatchFormed, now, obs::NO_SEQ)
+                .with_worker(replica)
+                .with_width(width)
+                .with_m_eff(m_eff)
+                .with_n(live.len()),
+        );
+        let batch = SimBatch {
+            replica,
+            bucket,
+            width,
+            m_eff,
+            formed_at: now,
+            done_at: now,
+            seqs: live.iter().map(|e| e.seq).collect(),
+        };
+        return Rep::Stalled {
+            batch,
+            entries: live,
+            wake: now.saturating_add(stall),
+            posted: now,
+        };
     }
     let done = now.saturating_add(
         stall
@@ -508,6 +695,125 @@ fn quality_of(class: Quality) -> QualityTag {
     }
 }
 
+/// Width cycle for the synthetic capacity-planning traces: a
+/// deterministic mix of short interactive and long analytical
+/// requests, repeated round-robin so every run is reproducible.
+const PLAN_WIDTHS: [usize; 8] = [4, 8, 8, 12, 16, 24, 40, 64];
+
+/// Deterministic diurnal arrival trace: `n` requests whose
+/// instantaneous arrival rate swings sinusoidally 19:1 between peak
+/// and trough over each `period` "day", around a mean of one request
+/// per `mean_gap`. Lengths cycle through [`PLAN_WIDTHS`]; every fourth
+/// request carries `deadline`. Pure arithmetic — no RNG — so a
+/// million-request day is bit-reproducible everywhere.
+pub fn diurnal_trace(
+    n: usize,
+    mean_gap: Duration,
+    period: Duration,
+    deadline: Option<Duration>,
+) -> Vec<Arrival> {
+    let period_s = period.as_secs_f64().max(1e-9);
+    let gap_s = mean_gap.as_secs_f64();
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            // rate multiplier in [0.1, 1.9] around the mean
+            let phase = (t / period_s) * std::f64::consts::TAU;
+            let rate = 1.0 + 0.9 * phase.sin();
+            t += gap_s / rate.max(0.1);
+            Arrival {
+                at: Duration::from_secs_f64(t),
+                len: PLAN_WIDTHS[i % PLAN_WIDTHS.len()],
+                deadline: if i % 4 == 0 { deadline } else { None },
+            }
+        })
+        .collect()
+}
+
+/// Deterministic flash-crowd trace: steady one-per-`base_gap`
+/// arrivals, except a contiguous crowd of `crowd_frac` of all requests
+/// lands at `crowd_mult`x the base rate, centered mid-trace. Lengths
+/// and deadlines as in [`diurnal_trace`].
+pub fn flash_crowd_trace(
+    n: usize,
+    base_gap: Duration,
+    crowd_frac: f64,
+    crowd_mult: f64,
+    deadline: Option<Duration>,
+) -> Vec<Arrival> {
+    let gap_s = base_gap.as_secs_f64();
+    let crowd_len = (n as f64 * crowd_frac.clamp(0.0, 1.0)) as usize;
+    let crowd_start = (n - crowd_len) / 2;
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            let in_crowd =
+                i >= crowd_start && i < crowd_start + crowd_len;
+            t += if in_crowd {
+                gap_s / crowd_mult.max(1.0)
+            } else {
+                gap_s
+            };
+            Arrival {
+                at: Duration::from_secs_f64(t),
+                len: PLAN_WIDTHS[i % PLAN_WIDTHS.len()],
+                deadline: if i % 4 == 0 { deadline } else { None },
+            }
+        })
+        .collect()
+}
+
+/// One capacity-planning point: a simulated deployment size and the
+/// service levels one trace achieved at it.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    pub replicas: usize,
+    pub offered: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub goodput: u64,
+    pub shed_deadline: u64,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+    pub peak_depth: usize,
+    pub stolen: u64,
+}
+
+/// Sweep `replica_counts`, running `trace` under `base` (replicas
+/// overridden) at each count: the replica-count vs latency/goodput
+/// frontier a capacity planner reads deployment sizes off. Pure
+/// simulation — a million-request day costs zero wall-clock service
+/// time, so the whole sweep runs in CI (`benches/cap_frontier.rs`
+/// emits it as CSV).
+pub fn frontier(
+    base: &SimConfig,
+    trace: &[Arrival],
+    replica_counts: &[usize],
+) -> Vec<FrontierPoint> {
+    replica_counts
+        .iter()
+        .map(|&n| {
+            let mut cfg = base.clone();
+            cfg.replicas = n.max(1);
+            let r = run(&cfg, trace);
+            FrontierPoint {
+                replicas: cfg.replicas,
+                offered: trace.len() as u64,
+                accepted: r.accepted,
+                rejected: r.rejected + r.rejected_infeasible,
+                completed: r.completed,
+                goodput: r.goodput,
+                shed_deadline: r.shed_deadline,
+                mean_ms: r.mean_ms(),
+                p99_ms: r.p99_ms(),
+                peak_depth: r.peak_depth,
+                stolen: r.stolen,
+            }
+        })
+        .collect()
+}
+
 fn run_inner(
     cfg: &SimConfig,
     trace: &[Arrival],
@@ -540,23 +846,56 @@ fn run_inner(
         .collect();
     arrivals.sort_by_key(|&(t, i)| (t, i));
 
-    let mut queues: BucketQueues<()> = BucketQueues::new(widths.len());
+    let mut queues = SimQueues::new(cfg.shards, widths.len());
     let mut reps: Vec<Rep> = (0..replicas).map(|_| Rep::Idle).collect();
     let mut report = SimReport::default();
     let mut ai = 0usize;
     let mut next_seq = 0u64;
     let mut steps = 0usize;
+    // livelock backstop, scaled so million-request capacity-planning
+    // traces fit: a healthy run takes O(1) event ticks per arrival
+    let step_cap = 1_000_000usize.max(trace.len().saturating_mul(8));
 
     loop {
         steps += 1;
         assert!(
-            steps < 1_000_000,
-            "sim failed to converge after 1M events — scheduling livelock?"
+            steps < step_cap,
+            "sim failed to converge after {step_cap} events — scheduling \
+             livelock?"
         );
         let now = clock.now();
 
-        // 1. completions due now
+        // 1. completions due now — and stalled replicas whose injected
+        // stall has released (no steal arrived in time): they start
+        // executing at the wake tick with no further penalty
         for r in reps.iter_mut() {
+            let waking =
+                matches!(r, Rep::Stalled { wake, .. } if *wake <= now);
+            if waking {
+                if let Rep::Stalled { mut batch, entries, .. } =
+                    std::mem::replace(r, Rep::Idle)
+                {
+                    let done = now.saturating_add(
+                        cfg.service.batch_duration_at(
+                            batch.width,
+                            entries.len(),
+                            batch.m_eff,
+                            m_full,
+                        ),
+                    );
+                    batch.done_at = done;
+                    emit(
+                        sink,
+                        batch.replica + 1,
+                        Event::new(EventKind::ExecStart, now, obs::NO_SEQ)
+                            .with_worker(batch.replica)
+                            .with_width(batch.width)
+                            .with_m_eff(batch.m_eff)
+                            .with_n(entries.len()),
+                    );
+                    *r = Rep::Busy { until: done, batch, entries };
+                }
+            }
             let due = matches!(r, Rep::Busy { until, .. } if *until <= now);
             if due {
                 if let Rep::Busy { batch, entries, .. } =
@@ -717,6 +1056,180 @@ fn run_inner(
                 match std::mem::replace(&mut reps[r], Rep::Idle) {
                     Rep::Idle => {
                         let Some(b) = queues.pick_bucket(cfg.sched) else {
+                            // nothing queued anywhere. With stealing on,
+                            // an idle replica supervises its peers
+                            // instead of parking: first whole-steal a
+                            // stalled replica's posted batch once it has
+                            // sat a full heartbeat, else split a peer's
+                            // parked partial. Lowest victim index wins —
+                            // deterministic, like every other pick.
+                            if cfg.steal {
+                                let hb = cfg.heartbeat;
+                                let stalled = (0..reps.len()).find(|&v| {
+                                    v != r
+                                        && matches!(
+                                            &reps[v],
+                                            Rep::Stalled { posted, .. }
+                                                if now >= posted
+                                                    .saturating_add(hb)
+                                        )
+                                });
+                                if let Some(v) = stalled {
+                                    if let Rep::Stalled {
+                                        mut batch,
+                                        entries,
+                                        ..
+                                    } = std::mem::replace(
+                                        &mut reps[v],
+                                        Rep::Idle,
+                                    ) {
+                                        // whole-steal: the batch was
+                                        // already formed (and fault-
+                                        // checked) on the victim — the
+                                        // thief only executes it, so no
+                                        // second BatchFormed and no
+                                        // fault re-check
+                                        report.stolen += 1;
+                                        let done = now.saturating_add(
+                                            cfg.service.batch_duration_at(
+                                                batch.width,
+                                                entries.len(),
+                                                batch.m_eff,
+                                                m_full,
+                                            ),
+                                        );
+                                        batch.replica = r;
+                                        batch.done_at = done;
+                                        let base = Event::new(
+                                            EventKind::Stolen,
+                                            now,
+                                            obs::NO_SEQ,
+                                        )
+                                        .with_worker(r)
+                                        .with_width(batch.width)
+                                        .with_m_eff(batch.m_eff)
+                                        .with_n(entries.len());
+                                        emit(sink, r + 1, base);
+                                        emit(sink, r + 1, Event {
+                                            kind: EventKind::ExecStart,
+                                            ..base
+                                        });
+                                        reps[r] = Rep::Busy {
+                                            until: done,
+                                            batch,
+                                            entries,
+                                        };
+                                        changed = true;
+                                    }
+                                    continue;
+                                }
+                                let parked = (0..reps.len()).find(|&v| {
+                                    v != r
+                                        && matches!(
+                                            &reps[v],
+                                            Rep::Waiting { batch, .. }
+                                                if batch.len() >= 2
+                                        )
+                                });
+                                if let Some(v) = parked {
+                                    if let Rep::Waiting {
+                                        bucket,
+                                        mut batch,
+                                        ..
+                                    } = std::mem::replace(
+                                        &mut reps[v],
+                                        Rep::Idle,
+                                    ) {
+                                        report.stolen += 1;
+                                        // the victim keeps the older
+                                        // (front) half — every stolen
+                                        // seq comes after every kept
+                                        // seq in dequeue order, so
+                                        // stealing never reorders
+                                        // within the bucket. Both
+                                        // halves ship now (the steal
+                                        // exists to stop work parking
+                                        // while a replica idles):
+                                        // victim first, thief second,
+                                        // each advancing the ladder at
+                                        // its own dispatch like any two
+                                        // back-to-back batches. The
+                                        // tail's first execution is on
+                                        // the thief, so injected faults
+                                        // apply there as usual.
+                                        let keep = (batch.len() + 1) / 2;
+                                        let tail = batch.split_off(keep);
+                                        emit(
+                                            sink,
+                                            r + 1,
+                                            Event::new(
+                                                EventKind::Stolen,
+                                                now,
+                                                obs::NO_SEQ,
+                                            )
+                                            .with_worker(r)
+                                            .with_width(widths[bucket])
+                                            .with_n(tail.len()),
+                                        );
+                                        let m_eff = cfg
+                                            .degrade
+                                            .plan_at(
+                                                &mut ladder_state,
+                                                now,
+                                                queues.len(),
+                                                svc_ewma_ms,
+                                                replicas,
+                                                m_full,
+                                            )
+                                            .m_eff;
+                                        reps[v] = dispatch(
+                                            v,
+                                            bucket,
+                                            batch,
+                                            now,
+                                            &cfg.service,
+                                            widths[bucket],
+                                            m_eff,
+                                            m_full,
+                                            &mut queues,
+                                            plan,
+                                            retry_budget,
+                                            cfg.steal,
+                                            &mut report,
+                                            sink,
+                                        );
+                                        let m_eff = cfg
+                                            .degrade
+                                            .plan_at(
+                                                &mut ladder_state,
+                                                now,
+                                                queues.len(),
+                                                svc_ewma_ms,
+                                                replicas,
+                                                m_full,
+                                            )
+                                            .m_eff;
+                                        reps[r] = dispatch(
+                                            r,
+                                            bucket,
+                                            tail,
+                                            now,
+                                            &cfg.service,
+                                            widths[bucket],
+                                            m_eff,
+                                            m_full,
+                                            &mut queues,
+                                            plan,
+                                            retry_budget,
+                                            cfg.steal,
+                                            &mut report,
+                                            sink,
+                                        );
+                                        changed = true;
+                                    }
+                                    continue;
+                                }
+                            }
                             continue;
                         };
                         let policy = cfg.batch.policy_for(widths[b], widest);
@@ -770,6 +1283,7 @@ fn run_inner(
                                 &mut queues,
                                 plan,
                                 retry_budget,
+                                cfg.steal,
                                 &mut report,
                                 sink,
                             )
@@ -824,6 +1338,7 @@ fn run_inner(
                                 &mut queues,
                                 plan,
                                 retry_budget,
+                                cfg.steal,
                                 &mut report,
                                 sink,
                             );
@@ -850,9 +1365,13 @@ fn run_inner(
 
         // 5. work-conservation audit: after the fixpoint, a non-busy
         // replica alongside live queued work is a conservation breach
-        // (the queues were expiry-swept at this tick, so "work" is live)
+        // (the queues were expiry-swept at this tick, so "work" is
+        // live). A stalled replica is wedged, not idle-by-choice — it
+        // cannot take work, so it does not count against conservation.
         if !queues.is_empty()
-            && reps.iter().any(|r| !matches!(r, Rep::Busy { .. }))
+            && reps.iter().any(|r| {
+                !matches!(r, Rep::Busy { .. } | Rep::Stalled { .. })
+            })
         {
             report.conservation_violations.push(now);
         }
@@ -867,6 +1386,13 @@ fn run_inner(
             let t = match r {
                 Rep::Busy { until, .. } => Some(*until),
                 Rep::Waiting { age_deadline, .. } => Some(*age_deadline),
+                // a stalled replica wakes at `wake`; the heartbeat
+                // expiry is also an event — that is the tick an idle
+                // peer becomes entitled to whole-steal the batch
+                Rep::Stalled { wake, posted, .. } => {
+                    let hb = posted.saturating_add(cfg.heartbeat);
+                    Some(if hb > now { (*wake).min(hb) } else { *wake })
+                }
                 Rep::Idle => None,
             };
             if let Some(t) = t {
@@ -906,7 +1432,7 @@ mod tests {
             },
             degrade: DegradeLadder::none(),
             m_full: 32,
-            admission_edf: false,
+            ..SimConfig::default()
         }
     }
 
@@ -1065,6 +1591,235 @@ mod tests {
         assert_eq!(report.served_degraded, 0);
         // deadline-free completions all count as goodput
         assert_eq!(report.goodput, report.completed);
+    }
+
+    #[test]
+    fn stealing_splits_a_parked_partial_and_preserves_order() {
+        // three same-bucket arrivals at t=0, two replicas, max_batch 4:
+        // replica 0 drains all three into a partial and parks on the
+        // 10 ms aging wait; replica 1 finds nothing queued. With
+        // stealing on it splits the park instead of idling — the
+        // victim keeps the older front half [0, 1], the thief takes
+        // the tail [2], and both ship at t=0. Exact timings: thief
+        // 1 + 1 = 2 ms, victim 1 + 2 = 3 ms.
+        let mut c = cfg(SchedPolicy::Conserve);
+        c.replicas = 2;
+        c.batch = BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(10),
+        });
+        c.steal = true;
+        let trace = [arr(0, 4), arr(0, 4), arr(0, 4)];
+        let report = run(&c, &trace);
+        assert_eq!(report.stolen, 1);
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.goodput, 3);
+        assert!(report.reconciles());
+        assert_eq!(report.batches.len(), 2);
+        // batches land in completion order: the stolen tail first
+        let thief = &report.batches[0];
+        assert_eq!(thief.replica, 1);
+        assert_eq!(thief.seqs, vec![2]);
+        assert_eq!(thief.formed_at, Tick::ZERO);
+        assert_eq!(thief.done_at, Tick::from_ms(2));
+        let victim = &report.batches[1];
+        assert_eq!(victim.replica, 0);
+        assert_eq!(victim.seqs, vec![0, 1], "victim keeps the front half");
+        assert_eq!(victim.done_at, Tick::from_ms(3));
+        assert_eq!(report.latencies_ms, vec![2.0, 3.0, 3.0]);
+
+        // the no-steal baseline parks the full aging wait instead
+        c.steal = false;
+        let parked = run(&c, &trace);
+        assert_eq!(parked.stolen, 0);
+        assert_eq!(parked.batches.len(), 1);
+        assert_eq!(parked.batches[0].formed_at, Tick::from_ms(10));
+        assert!(
+            report.mean_ms() < parked.mean_ms(),
+            "stealing must beat parking on a drained-early peer: {} vs {}",
+            report.mean_ms(),
+            parked.mean_ms()
+        );
+    }
+
+    #[test]
+    fn stalled_batch_is_whole_stolen_within_the_heartbeat() {
+        // one request, two replicas, a 20 ms injected stall on seq 0.
+        // With stealing on, the stalled replica posts its formed batch;
+        // the idle peer whole-steals it at exactly posted + heartbeat
+        // (2 ms) and completes at 2 + 2 = 4 ms — instead of the legacy
+        // 20 + 2 = 22 ms wedge.
+        use crate::serve::fault::FaultKind;
+        let mut c = cfg(SchedPolicy::Conserve);
+        c.replicas = 2;
+        c.batch = BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        });
+        c.steal = true;
+        c.heartbeat = Duration::from_millis(2);
+        let plan = FaultPlan::from_faults(vec![FaultKind::StallOnSeq {
+            seq: 0,
+            ns: 20_000_000,
+        }]);
+        let trace = [arr(0, 4)];
+        let report = run_faulted(&c, &trace, &plan, 0);
+        assert_eq!(report.stolen, 1, "supervision must trip on the stall");
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.failed_internal, 0);
+        assert_eq!(report.requeued, 0);
+        assert!(report.reconciles());
+        let b = &report.batches[0];
+        assert_eq!(b.replica, 1, "the thief executes the stolen batch");
+        assert_eq!(b.seqs, vec![0]);
+        assert_eq!(b.formed_at, Tick::ZERO);
+        // stolen at the heartbeat bound, not a tick later
+        assert_eq!(b.done_at, Tick::from_ms(4));
+
+        // the no-steal baseline rides out the whole stall
+        c.steal = false;
+        let wedged = run_faulted(&c, &trace, &plan, 0);
+        assert_eq!(wedged.stolen, 0);
+        assert_eq!(wedged.batches[0].done_at, Tick::from_ms(22));
+        assert_eq!(wedged.batches[0].replica, 0);
+    }
+
+    #[test]
+    fn innocent_batch_mates_survive_a_neighbors_crash_loop() {
+        // the retry-budget semantics fix, exactly: only the member that
+        // *is* the kill trigger spends budget. Batch [0, 1] with a
+        // sticky kill on seq 1 at budget 0: seq 1 fails terminally on
+        // the first pick, seq 0 requeues once and completes — under
+        // the old rule (every member budget-checked) seq 0 would have
+        // been doomed alongside its neighbor.
+        use crate::serve::fault::FaultKind;
+        let c = cfg(SchedPolicy::Conserve);
+        let plan = FaultPlan::from_faults(vec![
+            FaultKind::KillReplicaOnSeq(1),
+        ]);
+        let trace = [arr(0, 4), arr(0, 4)];
+        let report = run_faulted(&c, &trace, &plan, 0);
+        assert_eq!(report.accepted, 2);
+        assert_eq!(
+            report.completed, 1,
+            "the innocent batch-mate must survive the neighbor's kill"
+        );
+        assert_eq!(report.failed_internal, 1);
+        assert_eq!(report.requeued, 1);
+        assert_eq!(report.replica_restarts, 1);
+        assert!(report.reconciles());
+        // the survivor re-parks alone and ships at its aging deadline
+        assert_eq!(report.batches.len(), 1);
+        assert_eq!(report.batches[0].seqs, vec![0]);
+        assert_eq!(report.batches[0].formed_at, Tick::from_ms(10));
+
+        // budget 2: the cursed seq burns 0, 1, 2 across three picks
+        // (the innocent requeues all three times), then the clean batch
+        // executes
+        let report = run_faulted(&c, &trace, &plan, 2);
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.failed_internal, 1);
+        assert_eq!(report.requeued, 5);
+        assert_eq!(report.replica_restarts, 3);
+        assert!(report.reconciles());
+    }
+
+    #[test]
+    fn capacity_frontier_sweeps_replicas_on_a_flash_crowd() {
+        // a 2000-request flash crowd that overloads one replica (mean
+        // service ~2.7 ms vs a 0.2 ms crowd gap) but not sixteen: the
+        // frontier must show goodput rising and p99 falling with
+        // replica count — the curve a capacity planner reads off.
+        let base = SimConfig {
+            queue_capacity: 64,
+            sched: SchedPolicy::Conserve,
+            buckets: BucketLayout::pow2(8, 64),
+            batch: BatchPolicyTable::uniform(BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            }),
+            service: ServiceModel {
+                batch_overhead: Duration::ZERO,
+                per_width: Duration::from_micros(100),
+            },
+            ..SimConfig::default()
+        };
+        let trace = flash_crowd_trace(
+            2000,
+            Duration::from_millis(2),
+            0.3,
+            10.0,
+            Some(Duration::from_millis(50)),
+        );
+        let counts = [1usize, 2, 4, 8, 16];
+        let pts = frontier(&base, &trace, &counts);
+        assert_eq!(pts.len(), counts.len());
+        for (p, &n) in pts.iter().zip(&counts) {
+            assert_eq!(p.replicas, n);
+            assert_eq!(p.offered, 2000);
+            assert_eq!(p.accepted + p.rejected, p.offered);
+            assert!(p.goodput <= p.completed);
+            assert!(p.completed <= p.accepted);
+        }
+        let first = pts.first().unwrap();
+        let last = pts.last().unwrap();
+        assert!(
+            first.rejected > 0,
+            "one replica must overflow the queue during the crowd"
+        );
+        assert!(
+            last.goodput > first.goodput,
+            "more replicas must raise goodput on an overload trace: \
+             {} at {} replicas vs {} at {}",
+            last.goodput,
+            last.replicas,
+            first.goodput,
+            first.replicas
+        );
+        assert!(
+            last.p99_ms <= first.p99_ms,
+            "more replicas must not worsen p99: {} vs {}",
+            last.p99_ms,
+            first.p99_ms
+        );
+    }
+
+    #[test]
+    fn planning_traces_are_deterministic_and_time_ordered() {
+        let d = diurnal_trace(
+            1000,
+            Duration::from_millis(1),
+            Duration::from_millis(200),
+            Some(Duration::from_millis(30)),
+        );
+        let f = flash_crowd_trace(
+            1000,
+            Duration::from_millis(1),
+            0.2,
+            8.0,
+            Some(Duration::from_millis(30)),
+        );
+        for trace in [&d, &f] {
+            assert_eq!(trace.len(), 1000);
+            for w in trace.windows(2) {
+                assert!(w[0].at <= w[1].at, "arrivals must be time-ordered");
+            }
+            let deadlines =
+                trace.iter().filter(|a| a.deadline.is_some()).count();
+            assert_eq!(deadlines, 250, "every fourth request is deadlined");
+        }
+        // bit-reproducible: the same parameters yield the same trace
+        let d2 = diurnal_trace(
+            1000,
+            Duration::from_millis(1),
+            Duration::from_millis(200),
+            Some(Duration::from_millis(30)),
+        );
+        for (a, b) in d.iter().zip(&d2) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.deadline, b.deadline);
+        }
     }
 
     #[test]

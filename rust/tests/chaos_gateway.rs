@@ -140,7 +140,7 @@ fn sim_chaos_every_admitted_seq_reaches_exactly_one_terminal_outcome() {
                 },
                 degrade: DegradeLadder::none(),
                 m_full: 16,
-                admission_edf: false,
+                ..SimConfig::default()
             };
             let sink = TraceSink::new(
                 replicas + 1,
@@ -320,7 +320,7 @@ fn live_gateway_chaos_never_loses_an_admitted_request() {
                     );
                 }
             }
-            Err(Shed::InternalError { seq }) => {
+            Err(Shed::InternalError { seq, .. }) => {
                 assert_eq!(seq, i as u64, "InternalError names the wrong seq");
                 failed.insert(seq);
             }
@@ -398,8 +398,12 @@ fn retry_budget_bounds_the_crash_loop_exactly() {
         .collect();
     assert!(outcomes[0].is_ok(), "seq 0 rides the healthy replica");
     assert!(
-        matches!(outcomes[1], Err(Shed::InternalError { seq: 1 })),
-        "seq 1 must fail terminally once its budget is spent"
+        matches!(
+            outcomes[1],
+            Err(Shed::InternalError { seq: 1, retries: 2 })
+        ),
+        "seq 1 must fail terminally with its crash count: a budget-2 \
+         loop reports exactly 2 retries, not the raw restart tally"
     );
     assert!(outcomes[2].is_ok(), "seq 2 rides the respawned replica");
     let stats = gw.shutdown();
@@ -410,6 +414,64 @@ fn retry_budget_bounds_the_crash_loop_exactly() {
     // pick killed the replica once
     assert_eq!(stats.requeued, 2);
     assert_eq!(stats.replica_restarts, 3);
+}
+
+/// The stall-supervision fix, live: a replica wedged by an injected
+/// stall posts its batch to the steal board, and the idle peer
+/// whole-steals it within one heartbeat — the stalled seq's reply
+/// arrives in steal time, not stall time, and the stolen batch is
+/// executed (and counted) exactly once.
+#[test]
+fn stalled_batch_is_stolen_within_the_heartbeat_bound() {
+    silence_injected_panics();
+    let mut cfg = GatewayConfig::new(tiny_cfg(31));
+    cfg.replicas = 2;
+    cfg.queue_capacity = 8;
+    cfg.shed = ShedPolicy::Reject;
+    cfg.batch = BatchPolicyTable::uniform(BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+    });
+    cfg.buckets = BucketLayout::single(32);
+    cfg.steal = true;
+    cfg.heartbeat = ms(10);
+    cfg.trace = true;
+    // a 2 s wedge: without stealing, seq 0's reply waits out the whole
+    // stall; with it, the idle peer lifts the posted batch after ~10 ms
+    cfg.fault = FaultPlan::from_faults(vec![FaultKind::StallOnSeq {
+        seq: 0,
+        ns: 2_000_000_000,
+    }]);
+    let gw = Gateway::spawn(cfg);
+    let sink = gw.trace_sink().expect("trace was enabled");
+    let t0 = Instant::now();
+    let rx0 = gw.submit(vec![10; 8], vec![0; 8]).expect("admitted");
+    let rx1 = gw.submit(vec![11; 8], vec![0; 8]).expect("admitted");
+    let r0 = await_reply(&rx0, Duration::from_secs(60));
+    let r1 = await_reply(&rx1, Duration::from_secs(60));
+    assert!(r0.is_ok(), "stalled seq must be served by the thief: {r0:?}");
+    assert!(r1.is_ok(), "the healthy seq rides the other replica");
+    assert!(
+        t0.elapsed() < Duration::from_secs(1),
+        "replies took steal time (heartbeat-bounded), not stall time"
+    );
+    let stats = gw.shutdown();
+    assert_eq!(stats.accepted, 2);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.stolen, 1, "exactly the wedged batch was stolen");
+    assert_eq!(stats.failed_internal, 0);
+    assert_eq!(
+        stats.accepted,
+        stats.completed + stats.shed_deadline + stats.failed_internal,
+        "accounting identity under stealing"
+    );
+    let log = sink.drain();
+    assert_eq!(log.count(EventKind::Stolen), stats.stolen);
+    assert_eq!(
+        log.count(EventKind::BatchFormed),
+        stats.batches,
+        "a whole-stolen batch is formed (and counted) exactly once"
+    );
 }
 
 /// The client-side hang fix: a reply wait is always deadline-bounded.

@@ -32,7 +32,7 @@ use std::time::Duration;
 use yoso::serve::sim::{run, run_classed, Arrival, ServiceModel, SimConfig};
 use yoso::serve::{
     BatchPolicy, BatchPolicyTable, BucketLayout, DegradeLadder, Quality,
-    SchedPolicy,
+    SchedPolicy, Sharding,
 };
 use yoso::util::Rng;
 
@@ -84,7 +84,7 @@ fn conserve_is_work_conserving_on_random_adversarial_traces() {
             },
             degrade: DegradeLadder::none(),
             m_full: 16,
-            admission_edf: false,
+            ..SimConfig::default()
         };
         let report = run(&cfg, &trace);
         assert!(
@@ -158,7 +158,7 @@ fn fifo_parks_on_foreign_buckets_and_conserve_does_not() {
         service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
         degrade: DegradeLadder::none(),
         m_full: 16,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     let fifo = run(&mk(SchedPolicy::Fifo), &trace);
     let conserve = run(&mk(SchedPolicy::Conserve), &trace);
@@ -214,7 +214,7 @@ fn dequeue_within_bucket_is_deadline_earliest_first() {
         service: ServiceModel { batch_overhead: ms(20), per_width: us(10) },
         degrade: DegradeLadder::none(),
         m_full: 16,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     let edf = run(&mk(SchedPolicy::Conserve), &trace);
     assert_eq!(edf.completed, 6);
@@ -261,7 +261,7 @@ fn shed_accounting_is_exact_on_scripted_deadline_traces() {
         service: ServiceModel { batch_overhead: ms(30), per_width: us(10) },
         degrade: DegradeLadder::none(),
         m_full: 16,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     let report = run(&cfg, &trace);
     assert_eq!(report.accepted, 4);
@@ -311,7 +311,7 @@ fn per_bucket_policies_shape_batches_in_the_sim() {
         service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
         degrade: DegradeLadder::none(),
         m_full: 16,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     let report = run(&cfg, &trace);
     assert_eq!(report.completed, 11);
@@ -367,7 +367,7 @@ fn degradation_ladder_beats_shed_only_on_an_overload_burst() {
         },
         degrade,
         m_full: 8,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     let mut trace = vec![Arrival { at: ms(0), len: 8, deadline: None }];
     for _ in 0..6 {
@@ -455,7 +455,7 @@ fn step_up_hysteresis_damps_rung_flapping_on_an_oscillating_trace() {
         },
         degrade,
         m_full: 8,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     // warm-up calibrates the EWMA; bursts at 4/20/36 ms (the slowest
     // arm drains a burst by +13 ms, so the replica is idle again and
@@ -534,7 +534,7 @@ fn best_effort_reserve_admits_exact_per_class_counts() {
         },
         degrade: DegradeLadder::none(),
         m_full: 8,
-        admission_edf: false,
+        ..SimConfig::default()
     };
     // t=0: one Full request, immediately picked up (queue drops back to
     // empty). t=1ms, in trace order against the now-busy replica:
@@ -572,4 +572,118 @@ fn best_effort_reserve_admits_exact_per_class_counts() {
     assert_eq!(flat.accepted_best_effort, 0, "Full filled the queue first");
     assert_eq!(flat.rejected_best_effort, 3);
     assert!(flat.reconciles());
+}
+
+#[test]
+fn sharded_lanes_schedule_bit_identically_on_adversarial_traces() {
+    // the tentpole's license: the per-bucket-locked lane layout the
+    // live gateway runs must reproduce the single-lock schedule bit
+    // for bit. Same 60 randomized adversarial traces as the
+    // conservation property (same seed, same generation), both
+    // schedulers, whole-report equality — batch compositions, ticks,
+    // latencies, and every counter.
+    let mut rng = Rng::new(0x51A7);
+    for case in 0..60u64 {
+        let n = 20 + rng.below(60);
+        let trace: Vec<Arrival> = (0..n)
+            .map(|_| Arrival {
+                at: us(rng.below(150_000) as u64),
+                len: 1 + rng.below(64),
+                deadline: (rng.below(4) == 0)
+                    .then(|| ms(1 + rng.below(40) as u64)),
+            })
+            .collect();
+        let base = BatchPolicy {
+            max_batch: 1 + rng.below(7),
+            max_wait: ms(1 + rng.below(20) as u64),
+        };
+        let mut cfg = SimConfig {
+            replicas: 1 + rng.below(3),
+            queue_capacity: 4 + rng.below(60),
+            sched: SchedPolicy::Conserve,
+            buckets: BucketLayout::pow2(8, 64),
+            batch: if rng.below(2) == 0 {
+                BatchPolicyTable::uniform(base)
+            } else {
+                BatchPolicyTable::scaled(base)
+            },
+            service: ServiceModel {
+                batch_overhead: us(200 + rng.below(2000) as u64),
+                per_width: us(1 + rng.below(50) as u64),
+            },
+            degrade: DegradeLadder::none(),
+            m_full: 16,
+            ..SimConfig::default()
+        };
+        for sched in [SchedPolicy::Conserve, SchedPolicy::Fifo] {
+            cfg.sched = sched;
+            cfg.shards = Sharding::Unsharded;
+            let unsharded = run(&cfg, &trace);
+            cfg.shards = Sharding::PerBucket;
+            let sharded = run(&cfg, &trace);
+            assert_eq!(
+                unsharded, sharded,
+                "case {case} ({sched:?}): sharding changed the schedule"
+            );
+        }
+    }
+}
+
+#[test]
+fn stealing_lifts_goodput_on_a_skewed_trace() {
+    // the skewed shape stealing exists for: two deadline-bearing wide
+    // requests park as a Fifo partial on replica 0 while replica 1
+    // drains eight narrow requests and goes idle with nothing queued.
+    // Without stealing the wide pair ages the full 50 ms park and
+    // expires at dispatch; with stealing the idle peer splits the
+    // parked pair the moment it drains, both halves ship immediately,
+    // and every request completes within deadline.
+    let mut trace = vec![
+        Arrival { at: ms(0), len: 40, deadline: Some(ms(20)) },
+        Arrival { at: ms(0), len: 40, deadline: Some(ms(20)) },
+    ];
+    for _ in 0..8 {
+        trace.push(Arrival { at: ms(0), len: 4, deadline: None });
+    }
+    let mk = |steal: bool| SimConfig {
+        replicas: 2,
+        queue_capacity: 64,
+        sched: SchedPolicy::Fifo,
+        buckets: BucketLayout::pow2(8, 64),
+        batch: BatchPolicyTable::uniform(BatchPolicy {
+            max_batch: 4,
+            max_wait: ms(50),
+        }),
+        service: ServiceModel { batch_overhead: ms(1), per_width: us(10) },
+        degrade: DegradeLadder::none(),
+        m_full: 16,
+        steal,
+        ..SimConfig::default()
+    };
+
+    let parked = run(&mk(false), &trace);
+    assert_eq!(parked.stolen, 0);
+    assert_eq!(parked.shed_deadline, 2, "the parked wide pair must expire");
+    assert_eq!(parked.completed, 8);
+    assert_eq!(parked.goodput, 8);
+    assert!(parked.reconciles());
+
+    let stolen = run(&mk(true), &trace);
+    assert_eq!(stolen.stolen, 1);
+    assert_eq!(stolen.shed_deadline, 0);
+    assert_eq!(stolen.completed, 10, "stealing must rescue the wide pair");
+    assert_eq!(stolen.goodput, 10);
+    assert!(stolen.reconciles());
+    assert!(
+        stolen.goodput > parked.goodput,
+        "stealing must lift goodput on the skewed trace: {} vs {}",
+        stolen.goodput,
+        parked.goodput
+    );
+    // and the accounting identity holds under stealing with requests
+    // crossing replicas mid-flight
+    assert_eq!(
+        stolen.accepted,
+        stolen.completed + stolen.shed_deadline + stolen.failed_internal
+    );
 }

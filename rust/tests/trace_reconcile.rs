@@ -147,6 +147,7 @@ fn sim_event_stream_reconciles_with_the_report_on_random_traces() {
                 },
                 m_full: 16,
                 admission_edf,
+                ..SimConfig::default()
             };
             let sink =
                 TraceSink::new(replicas + 1, TraceSink::DEFAULT_LANE_CAPACITY, 0);
@@ -351,6 +352,7 @@ fn sim_and_live_per_request_streams_are_schema_identical() {
         degrade: DegradeLadder::none(),
         m_full: 8,
         admission_edf: false,
+        ..SimConfig::default()
     };
     let trace: Vec<Arrival> = lens
         .iter()
